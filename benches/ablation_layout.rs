@@ -1,0 +1,76 @@
+//! Ablation bench: where does rdFFT's time go, and what does each design
+//! choice buy? (The DESIGN.md §Perf ablations.)
+//!
+//! * permutation vs butterfly cost (bit-reversal is the memory-bound part)
+//! * forward vs inverse (paper: inverse is faster)
+//! * f32 vs bf16 storage
+//! * plan construction vs cached plan (twiddle caching)
+//! * packed in-place vs out-of-place rfft at equal math
+//!
+//! `cargo bench --bench ablation_layout`
+
+use rdfft::coordinator::benchlib::bench;
+use rdfft::memtrack::Category;
+use rdfft::rdfft::bf16::{rdfft_inplace_bf16, Bf16};
+use rdfft::rdfft::{forward, inverse, plan::cached, plan::Plan, rdfft_inplace};
+
+fn main() {
+    println!("# Ablations — rdFFT cost decomposition (median ns/op)\n");
+    println!(
+        "{:<8}{:>12}{:>12}{:>12}{:>12}{:>12}{:>12}{:>14}",
+        "n", "bitrev", "fwd-stages", "fwd-total", "inv-total", "bf16-fwd", "rfft-oop", "plan-build"
+    );
+    for &n in &[256usize, 1024, 4096] {
+        let plan = cached(n);
+        let x: Vec<f32> = (0..n).map(|i| ((i * 29 + 7) % 83) as f32 / 40.0 - 1.0).collect();
+
+        let mut b1 = x.clone();
+        let perm = bench(200, || {
+            plan.bit_reverse(&mut b1);
+            std::hint::black_box(&b1[0]);
+        });
+        let mut b2 = x.clone();
+        let stages = bench(200, || {
+            forward::forward_stages(&plan, &mut b2);
+            std::hint::black_box(&b2[0]);
+        });
+        let mut b3 = x.clone();
+        let fwd = bench(200, || {
+            rdfft_inplace(&plan, &mut b3);
+            std::hint::black_box(&b3[0]);
+        });
+        let mut b4 = x.clone();
+        let inv = bench(200, || {
+            inverse::irdfft_inplace(&plan, &mut b4);
+            std::hint::black_box(&b4[0]);
+        });
+        let mut bb: Vec<Bf16> = x.iter().map(|&v| Bf16::from_f32(v)).collect();
+        let bf = bench(200, || {
+            rdfft_inplace_bf16(&plan, &mut bb);
+            std::hint::black_box(&bb[0]);
+        });
+        let rf = bench(200, || {
+            let s = rdfft::baselines::rfft::rfft_alloc(&x, Category::Other);
+            std::hint::black_box(&s[0]);
+        });
+        let pb = bench(200, || {
+            let p = Plan::new(n);
+            std::hint::black_box(p.n());
+        });
+        println!(
+            "{:<8}{:>12.0}{:>12.0}{:>12.0}{:>12.0}{:>12.0}{:>12.0}{:>14.0}",
+            n,
+            perm.median_ns,
+            stages.median_ns,
+            fwd.median_ns,
+            inv.median_ns,
+            bf.median_ns,
+            rf.median_ns,
+            pb.median_ns
+        );
+    }
+    println!(
+        "\n(read: fwd-total ≈ bitrev + fwd-stages; rfft-oop pays the extra\n\
+         allocation+copy; plan-build is why plans are cached)"
+    );
+}

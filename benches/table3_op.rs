@@ -1,0 +1,11 @@
+//! Bench: Table 3 — standalone operator runtime and accuracy.
+//!
+//! `cargo bench --bench table3_op` prints the same rows as the paper's
+//! Table 3 (fft / rfft / ours, forward + inverse, p ∈ {512, 1024, 4096},
+//! accuracy vs the f64 oracle). Criterion is unavailable offline; the
+//! in-tree harness (`coordinator::benchlib`) provides warmup + calibrated
+//! medians.
+
+fn main() {
+    rdfft::coordinator::experiments::table3();
+}

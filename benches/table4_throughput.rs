@@ -1,0 +1,9 @@
+//! Bench: Table 4 — fine-tuning throughput and task-accuracy parity
+//! across methods (FF / LoRA / circulant×{fft, rfft, ours}).
+//!
+//! `cargo bench --bench table4_throughput`
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    rdfft::coordinator::experiments::table4(fast);
+}

@@ -1,0 +1,88 @@
+//! Quickstart: the rdFFT public API in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use rdfft::memtrack::{self, Category};
+use rdfft::rdfft::{
+    irdfft_inplace, layout, plan::cached, rdfft_inplace, spectral, BlockCirculant, Circulant,
+};
+
+fn main() {
+    // ------------------------------------------------------------------
+    // 1. A fully in-place transform: N reals -> N reals, same buffer.
+    // ------------------------------------------------------------------
+    let n = 16;
+    let plan = cached(n);
+    let mut buf: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+    let original = buf.clone();
+
+    rdfft_inplace(&plan, &mut buf);
+    println!("packed spectrum (same {n}-float buffer):");
+    println!("  DC = {:.3}, Nyquist = {:.3}", buf[0], buf[n / 2]);
+    for k in 1..4 {
+        let (re, im) = layout::get(&buf, k);
+        println!("  y_{k} = {re:.3} + {im:.3}i  (re at [{k}], im at [{}])", n - k);
+    }
+
+    irdfft_inplace(&plan, &mut buf);
+    let max_err = buf
+        .iter()
+        .zip(&original)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("roundtrip max error: {max_err:.2e}\n");
+
+    // ------------------------------------------------------------------
+    // 2. Circulant matvec in the frequency domain (paper Eq. 4).
+    // ------------------------------------------------------------------
+    let c: Vec<f32> = (0..n).map(|i| 1.0 / (1.0 + i as f32)).collect();
+    let circ = Circulant::from_first_column(&c);
+    let mut x: Vec<f32> = (0..n).map(|i| (i % 3) as f32 - 1.0).collect();
+    circ.matvec_inplace(&mut x); // x := C x, zero allocation
+    println!("C·x (in place) first four: {:?}\n", &x[..4]);
+
+    // ------------------------------------------------------------------
+    // 3. A trainable block-circulant layer with Eq. 5 gradients.
+    // ------------------------------------------------------------------
+    let (rows, cols, p) = (32, 32, 8);
+    let cols_init: Vec<f32> = (0..(rows / p) * (cols / p) * p)
+        .map(|i| ((i * 7 + 3) % 11) as f32 / 11.0 - 0.5)
+        .collect();
+    let mut bc = BlockCirculant::from_block_columns(rows, cols, p, &cols_init);
+    let mut input: Vec<f32> = (0..cols).map(|i| (i as f32 / 5.0).cos()).collect();
+    let mut out = vec![0.0f32; rows];
+    bc.forward_inplace(&mut input, &mut out); // input now holds x̂ (saved!)
+    let mut g = vec![1.0f32; rows];
+    let mut dx = vec![0.0f32; cols];
+    let mut dc = vec![0.0f32; bc.num_params()];
+    bc.backward(&input, &mut g, &mut dx, &mut dc);
+    bc.sgd_step(&dc, 1e-2);
+    println!("block-circulant layer: {} trainable params updated", bc.num_params());
+
+    // ------------------------------------------------------------------
+    // 4. The memory story, measured (what Table 1 automates).
+    // ------------------------------------------------------------------
+    memtrack::reset();
+    let sig: Vec<f32> = (0..1024).map(|i| (i as f32).sin()).collect();
+
+    let before = memtrack::snapshot().alloc_count;
+    let mut ours = sig.clone(); // one working buffer, owned by the caller
+    let plan = cached(1024);
+    memtrack::reset_peak();
+    rdfft_inplace(&plan, &mut ours);
+    let other = ours.clone(); // second spectrum (caller-owned, demo only)
+    spectral::mul_inplace(&mut ours, &other);
+    let ours_allocs = memtrack::snapshot().alloc_count;
+
+    memtrack::reset();
+    memtrack::reset_peak();
+    let spec = rdfft::baselines::rfft::rfft_alloc(&sig, Category::Intermediates);
+    let rfft_peak = memtrack::snapshot().peak_total;
+    drop(spec);
+
+    println!("\nrdFFT transform allocations: {} (beyond caller buffers)", ours_allocs - before);
+    println!("rfft transform transient peak: {rfft_peak} bytes (out-of-place n+2 layout)");
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,108 @@
+//! The paper's Limitations section, demonstrated: the packed layout is
+//! implicit — using the spectrum *explicitly* (here: a low-pass filter)
+//! requires decoding to complex form, which costs the allocation rdFFT
+//! otherwise avoids. Also demos the bf16 path (the capability fft/rfft
+//! libraries lack).
+//!
+//! ```bash
+//! cargo run --release --example spectral_probe
+//! ```
+
+use rdfft::memtrack::{self, Category};
+use rdfft::rdfft::bf16::{irdfft_inplace_bf16, rdfft_inplace_bf16, Bf16};
+use rdfft::rdfft::{irdfft_inplace, layout, plan::cached, rdfft_inplace};
+
+fn main() {
+    let n = 256;
+    let plan = cached(n);
+
+    // A two-tone signal: slow (k=3) + fast (k=60) component.
+    let sig: Vec<f32> = (0..n)
+        .map(|i| {
+            let t = i as f64 / n as f64;
+            ((std::f64::consts::TAU * 3.0 * t).sin()
+                + 0.5 * (std::f64::consts::TAU * 60.0 * t).sin()) as f32
+        })
+        .collect();
+
+    // ------------------------------------------------------------------
+    // 1. IMPLICIT spectral op (filtering by zeroing packed slots): still
+    //    fully in place — both Re(y_k) (index k) and Im(y_k) (index n-k)
+    //    are addressable without decoding.
+    // ------------------------------------------------------------------
+    memtrack::reset();
+    let mut buf = sig.clone();
+    rdfft_inplace(&plan, &mut buf);
+    let cutoff = 20;
+    for k in cutoff..=n / 2 {
+        layout::set(&mut buf, k, 0.0, if k == n / 2 { 0.0 } else { 0.0 });
+    }
+    irdfft_inplace(&plan, &mut buf);
+    println!(
+        "in-place low-pass: allocations = {}, residual fast-tone energy = {:.2e}",
+        memtrack::snapshot().alloc_count,
+        tone_energy(&buf, 60)
+    );
+    println!("  slow-tone energy kept: {:.3} (want ~{:.3})", tone_energy(&buf, 3), tone_energy(&sig, 3));
+
+    // ------------------------------------------------------------------
+    // 2. EXPLICIT complex access (the limitation): decode to (re, im)
+    //    pairs — costs an n+2-real allocation, exactly what the paper
+    //    says you pay when you need the complex spectrum itself.
+    // ------------------------------------------------------------------
+    memtrack::reset();
+    let mut buf2 = sig.clone();
+    rdfft_inplace(&plan, &mut buf2);
+    let decoded = {
+        let _scope = memtrack::ScopedCategory::new(Category::Intermediates);
+        let pairs = layout::unpack_rfft(&buf2); // allocates (untracked Vec)
+        memtrack::on_alloc(pairs.len() * 8, Category::Intermediates); // account it
+        pairs
+    };
+    let dominant = decoded
+        .iter()
+        .enumerate()
+        .max_by(|a, b| mag(a.1).partial_cmp(&mag(b.1)).unwrap())
+        .map(|(k, _)| k)
+        .unwrap();
+    println!(
+        "\nexplicit complex decode: {} extra bytes; dominant bin = {dominant} (expect 3)",
+        memtrack::snapshot().current_total()
+    );
+    memtrack::on_free(decoded.len() * 8, Category::Intermediates);
+
+    // ------------------------------------------------------------------
+    // 3. bf16 path: same transform on 2-byte storage.
+    // ------------------------------------------------------------------
+    let mut bbuf: Vec<Bf16> = sig.iter().map(|&v| Bf16::from_f32(v)).collect();
+    rdfft_inplace_bf16(&plan, &mut bbuf);
+    let bf_dc = bbuf[0].to_f32();
+    irdfft_inplace_bf16(&plan, &mut bbuf);
+    let max_err = bbuf
+        .iter()
+        .zip(&sig)
+        .map(|(a, b)| (a.to_f32() - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "\nbf16 path: buffer is {} bytes (vs {} f32), DC={bf_dc:.3}, roundtrip max err {max_err:.3}",
+        bbuf.len() * 2,
+        sig.len() * 4
+    );
+    println!("\nspectral_probe OK");
+}
+
+fn mag(c: &(f32, f32)) -> f32 {
+    (c.0 * c.0 + c.1 * c.1).sqrt()
+}
+
+/// Goertzel-style single-bin energy probe.
+fn tone_energy(x: &[f32], k: usize) -> f32 {
+    let n = x.len();
+    let (mut re, mut im) = (0.0f64, 0.0f64);
+    for (i, &v) in x.iter().enumerate() {
+        let th = std::f64::consts::TAU * k as f64 * i as f64 / n as f64;
+        re += v as f64 * th.cos();
+        im -= v as f64 * th.sin();
+    }
+    ((re * re + im * im).sqrt() / n as f64) as f32
+}

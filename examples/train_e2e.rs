@@ -1,0 +1,62 @@
+//! End-to-end driver: train the adapted transformer through the full
+//! three-layer stack.
+//!
+//! Rust (L3) drives a PJRT executable compiled from HLO that was lowered
+//! once from the JAX model (L2) whose circulant adapters run the Pallas
+//! rdFFT kernels (L1). Python is not involved at runtime.
+//!
+//! ```bash
+//! make artifacts-e2e
+//! cargo run --release --example train_e2e -- artifacts-e2e [steps]
+//! ```
+//!
+//! Writes `train_e2e_loss.csv` and prints the loss curve; exits non-zero
+//! if the loss fails to drop (so CI can gate on it).
+
+use rdfft::coordinator::{Trainer, TrainerConfig};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let artifacts = PathBuf::from(args.first().map(String::as_str).unwrap_or("artifacts-e2e"));
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    println!("=== rdFFT end-to-end training ===");
+    println!("artifacts: {}", artifacts.display());
+
+    let cfg = TrainerConfig {
+        steps,
+        eval_every: (steps / 10).max(1),
+        eval_batches: 4,
+        corpus_bytes: 1 << 20,
+        seed: 0,
+        log_csv: Some(PathBuf::from("train_e2e_loss.csv")),
+        checkpoint: Some(PathBuf::from("adapter_checkpoint.bin")),
+    };
+    let mut trainer = Trainer::new(&artifacts, cfg)?;
+    let report = trainer.run()?;
+
+    println!("\nloss curve (every ~{}th step):", (report.losses.len() / 20).max(1));
+    let stride = (report.losses.len() / 20).max(1);
+    for (step, loss) in report.losses.iter().step_by(stride) {
+        let bar = "#".repeat(((loss / report.first_loss) * 40.0) as usize);
+        println!("  step {step:>5}  {loss:.4}  {bar}");
+    }
+
+    println!(
+        "\nfinal: {:.4} -> {:.4} ({} steps, {:.0} tok/s, eval {:.4})",
+        report.first_loss,
+        report.final_loss,
+        report.steps,
+        report.tokens_per_sec,
+        report.final_eval_loss.unwrap_or(f32::NAN)
+    );
+    anyhow::ensure!(
+        report.final_loss < report.first_loss * 0.9,
+        "expected >=10% loss reduction, got {:.4} -> {:.4}",
+        report.first_loss,
+        report.final_loss
+    );
+    println!("train_e2e OK");
+    Ok(())
+}

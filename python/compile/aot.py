@@ -1,0 +1,134 @@
+"""AOT compile path (build time only — never on the training path).
+
+Lowers the jitted train/eval steps of ``model.py`` to **HLO text** and
+dumps the initial parameter values, producing everything the Rust
+coordinator needs:
+
+    artifacts/
+      train_step.hlo.txt   SGD step: (frozen…, trainable…, tokens, targets)
+                           -> (new_trainable…, loss)
+      eval_step.hlo.txt    loss only
+      frozen.bin           frozen params, f32 LE, sorted-name order
+      trainable.bin        initial adapter params, f32 LE, sorted-name order
+      manifest.json        shapes/order/config contract for the Rust side
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --preset test --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(cfg: M.Config, out_dir: str, seed: int = 0) -> dict:
+    cfg.validate()
+    os.makedirs(out_dir, exist_ok=True)
+    key = jax.random.PRNGKey(seed)
+    kf, kt = jax.random.split(key)
+    frozen = M.init_frozen(cfg, kf)
+    trainable = M.init_trainable(cfg, kt)
+    frozen_names = sorted(frozen.keys())
+    train_names = sorted(trainable.keys())
+
+    step = M.make_train_step(cfg)
+    eval_step = M.make_eval_step(cfg)
+
+    nf, nt = len(frozen_names), len(train_names)
+
+    def flat_train(*args):
+        fz = dict(zip(frozen_names, args[:nf]))
+        tr = dict(zip(train_names, args[nf : nf + nt]))
+        tokens, targets = args[nf + nt], args[nf + nt + 1]
+        new, loss = step(fz, tr, tokens, targets)
+        return tuple(new[n] for n in train_names) + (loss,)
+
+    def flat_eval(*args):
+        fz = dict(zip(frozen_names, args[:nf]))
+        tr = dict(zip(train_names, args[nf : nf + nt]))
+        tokens, targets = args[nf + nt], args[nf + nt + 1]
+        return (eval_step(fz, tr, tokens, targets),)
+
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    specs = (
+        [jax.ShapeDtypeStruct(frozen[n].shape, jnp.float32) for n in frozen_names]
+        + [jax.ShapeDtypeStruct(trainable[n].shape, jnp.float32) for n in train_names]
+        + [tok_spec, tok_spec]
+    )
+
+    print(f"[aot] lowering train_step ({cfg}) ...")
+    train_hlo = to_hlo_text(jax.jit(flat_train).lower(*specs))
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(train_hlo)
+    print(f"[aot]   train_step.hlo.txt: {len(train_hlo)} chars")
+
+    print("[aot] lowering eval_step ...")
+    eval_hlo = to_hlo_text(jax.jit(flat_eval).lower(*specs))
+    with open(os.path.join(out_dir, "eval_step.hlo.txt"), "w") as f:
+        f.write(eval_hlo)
+    print(f"[aot]   eval_step.hlo.txt: {len(eval_hlo)} chars")
+
+    def dump(names, tree, path):
+        with open(path, "wb") as f:
+            for n in names:
+                f.write(np.asarray(tree[n], dtype=np.float32).tobytes())
+
+    dump(frozen_names, frozen, os.path.join(out_dir, "frozen.bin"))
+    dump(train_names, trainable, os.path.join(out_dir, "trainable.bin"))
+
+    manifest = {
+        "config": dataclasses.asdict(cfg),
+        "frozen": [{"name": n, "shape": list(frozen[n].shape)} for n in frozen_names],
+        "trainable": [
+            {"name": n, "shape": list(trainable[n].shape)} for n in train_names
+        ],
+        "tokens_shape": [cfg.batch, cfg.seq_len],
+        "train_outputs": len(train_names) + 1,  # new params + loss
+        "num_frozen_params": int(sum(np.prod(frozen[n].shape) for n in frozen_names)),
+        "num_trainable_params": int(
+            sum(np.prod(trainable[n].shape) for n in train_names)
+        ),
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"[aot] wrote manifest: {manifest['num_frozen_params']} frozen + "
+        f"{manifest['num_trainable_params']} trainable params"
+    )
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="test", choices=sorted(M.PRESETS.keys()))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build(M.PRESETS[args.preset], args.out_dir, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,306 @@
+"""Pallas rdFFT kernels (Layer 1).
+
+The paper's in-place real-domain FFT, expressed as Pallas kernels so the
+L2 JAX model lowers them into the single AOT HLO module the Rust runtime
+executes.
+
+Hardware adaptation (paper targets CUDA; DESIGN.md §Hardware-Adaptation):
+the CUDA implementation maps butterfly 4-groups to thread blocks with
+explicit ``__syncthreads``. On TPU the whole ``p``-point block fits VMEM,
+so each Cooley–Tukey stage becomes one *vectorized* slice/concat butterfly
+over the block-resident array — log2(n) statically unrolled stages, no
+synchronization, batch tiled over the grid via ``BlockSpec``. The symmetric
+4-element groups of Proposition 1 appear here as mirrored slices
+(``e[..., 1:m//2]`` with ``e[..., :m//2-1:-1]`` etc.), which XLA fuses into
+gather-free reversals.
+
+In-place-ness: expressed via ``input_output_aliases={0: 0}`` on
+``pallas_call`` — the output buffer *is* the input buffer. Kernels run
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls; see
+/opt/xla-example/README.md), so the aliasing is semantic on this testbed
+and physical on a real TPU.
+
+All kernels operate on the last axis; leading axes are batch.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Rows per grid step: batch is tiled over the Pallas grid so each program
+# instance keeps an (BLOCK_ROWS, n) tile in VMEM. With n <= 4096 f32 that
+# is at most 8*4096*4 = 128 KiB, far under the ~16 MiB VMEM budget.
+#
+# On a real TPU the grid pipelines HBM<->VMEM tile transfers; under
+# interpret=True on CPU every grid step lowers to a sequential while-loop
+# iteration, which serializes the batch and destroys XLA's ability to
+# vectorize over it. RDFFT_BLOCK_ROWS=0 (the CPU default) therefore runs
+# the whole array as a single block; set it to 8 when lowering for TPU.
+import os as _os
+
+BLOCK_ROWS = int(_os.environ.get("RDFFT_BLOCK_ROWS", "0"))
+
+
+def _bitrev(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-reversal permutation of the last axis, expressed as a
+    reshape/transpose (no gather, no captured index constants — Pallas
+    kernels may not close over constants, and on TPU this lowers to pure
+    layout ops)."""
+    n = x.shape[-1]
+    bits = n.bit_length() - 1
+    if bits <= 1:
+        return x
+    lead = x.shape[:-1]
+    t = x.reshape(lead + (2,) * bits)
+    axes = tuple(range(len(lead))) + tuple(
+        len(lead) + bits - 1 - i for i in range(bits)
+    )
+    return t.transpose(axes).reshape(lead + (n,))
+
+
+def _twiddles(m: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward twiddles W_{2m}^k = (cos, -sin) for k = 1..m/2-1, computed
+    from an iota so no constant is captured by the kernel."""
+    k = jnp.arange(1, m // 2, dtype=jnp.float32)
+    theta = (2.0 * math.pi / (2 * m)) * k
+    return jnp.cos(theta), -jnp.sin(theta)
+
+
+def _forward_stage(x: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """One DIT stage over a flat (..., n) array: combine packed m-blocks
+    sitting in adjacent halves of each 2m-block into packed 2m-blocks."""
+    nb = n // (2 * m)
+    blk = x.reshape(x.shape[:-1] + (nb, 2 * m))
+    e = blk[..., :m]
+    o = blk[..., m:]
+    # k = 0 lane
+    e0 = e[..., :1] + o[..., :1]
+    o0 = e[..., :1] - o[..., :1]
+    if m == 1:
+        out = jnp.concatenate([e0, o0], axis=-1)
+        return out.reshape(x.shape)
+    # 1 <= k < m/2 four-element groups (empty when m == 2)
+    if m >= 4:
+        wr, wi = _twiddles(m)
+        er = e[..., 1 : m // 2]
+        ei = e[..., : m // 2 : -1]  # e[m-1] .. e[m/2+1] == ei for k=1..m/2-1
+        orr = o[..., 1 : m // 2]
+        oi = o[..., : m // 2 : -1]
+        tr = wr * orr - wi * oi
+        ti = wr * oi + wi * orr
+        ykr = er + tr  # -> e_new[k]
+        ymkr = er - tr  # -> e_new[m-k]
+        yki = ei + ti  # -> o_new[m-k]
+        ymki = ti - ei  # -> o_new[k]
+        e_new = jnp.concatenate(
+            [e0, ykr, e[..., m // 2 : m // 2 + 1], ymkr[..., ::-1]], axis=-1
+        )
+        o_new = jnp.concatenate(
+            [o0, ymki, -o[..., m // 2 : m // 2 + 1], yki[..., ::-1]], axis=-1
+        )
+    else:  # m == 2: only the k=0 and k=m/2 lanes
+        e_new = jnp.concatenate([e0, e[..., 1:2]], axis=-1)
+        o_new = jnp.concatenate([o0, -o[..., 1:2]], axis=-1)
+    out = jnp.concatenate([e_new, o_new], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _inverse_stage(x: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Exact inverse of :func:`_forward_stage` (carries the 1/2 factor)."""
+    nb = n // (2 * m)
+    blk = x.reshape(x.shape[:-1] + (nb, 2 * m))
+    e = blk[..., :m]
+    o = blk[..., m:]
+    e0 = 0.5 * (e[..., :1] + o[..., :1])
+    o0 = 0.5 * (e[..., :1] - o[..., :1])
+    if m == 1:
+        out = jnp.concatenate([e0, o0], axis=-1)
+        return out.reshape(x.shape)
+    if m >= 4:
+        wr, wi = _twiddles(m)
+        a = e[..., 1 : m // 2]  # er + tr
+        b = e[..., : m // 2 : -1]  # er - tr
+        c = o[..., : m // 2 : -1]  # ei + ti
+        d = o[..., 1 : m // 2]  # ti - ei
+        er = 0.5 * (a + b)
+        tr = 0.5 * (a - b)
+        ti = 0.5 * (c + d)
+        ei = 0.5 * (c - d)
+        orr = tr * wr + ti * wi
+        oi = ti * wr - tr * wi
+        e_new = jnp.concatenate(
+            [e0, er, e[..., m // 2 : m // 2 + 1], ei[..., ::-1]], axis=-1
+        )
+        o_new = jnp.concatenate(
+            [o0, orr, -o[..., m // 2 : m // 2 + 1], oi[..., ::-1]], axis=-1
+        )
+    else:  # m == 2
+        e_new = jnp.concatenate([e0, e[..., 1:2]], axis=-1)
+        o_new = jnp.concatenate([o0, -o[..., 1:2]], axis=-1)
+    out = jnp.concatenate([e_new, o_new], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _rdfft_value(x: jnp.ndarray) -> jnp.ndarray:
+    """Forward packed transform on a concrete array (used inside kernels)."""
+    n = x.shape[-1]
+    x = _bitrev(x)
+    m = 1
+    while m < n:
+        x = _forward_stage(x, m, n)
+        m *= 2
+    return x
+
+
+def _irdfft_value(x: jnp.ndarray) -> jnp.ndarray:
+    """Inverse packed transform on a concrete array."""
+    n = x.shape[-1]
+    m = n // 2
+    while m >= 1:
+        x = _inverse_stage(x, m, n)
+        m //= 2
+    return _bitrev(x)
+
+
+# ---------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------
+
+
+def _rdfft_kernel(x_ref, o_ref):
+    """Forward kernel body: whole tile resident in VMEM; butterfly math in
+    f32 regardless of storage dtype (the bf16 path of the paper)."""
+    x = x_ref[...]
+    y = _rdfft_value(x.astype(jnp.float32))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _irdfft_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    y = _irdfft_value(x.astype(jnp.float32))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _mul_kernel(a_ref, b_ref, o_ref):
+    """Packed-domain elementwise complex product kernel (Eq. 4's ⊙),
+    writing into a's buffer (input_output_aliases)."""
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    n = a.shape[-1]
+    a0 = a[..., :1] * b[..., :1]
+    any_ = a[..., n // 2 : n // 2 + 1] * b[..., n // 2 : n // 2 + 1]
+    ar = a[..., 1 : n // 2]
+    ai = a[..., : n // 2 : -1]
+    br = b[..., 1 : n // 2]
+    bi = b[..., : n // 2 : -1]
+    re = ar * br - ai * bi
+    im = ar * bi + ai * br
+    out = jnp.concatenate([a0, re, any_, im[..., ::-1]], axis=-1)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pad_rows(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    """Pad the (flattened) batch dim up to a multiple of BLOCK_ROWS."""
+    rows = x.shape[0]
+    padded = (rows + BLOCK_ROWS - 1) // BLOCK_ROWS * BLOCK_ROWS
+    if padded != rows:
+        x = jnp.concatenate(
+            [x, jnp.zeros((padded - rows,) + x.shape[1:], x.dtype)], axis=0
+        )
+    return x, rows
+
+
+def _tiled_call(kernel, *args: jnp.ndarray) -> jnp.ndarray:
+    """Run `kernel` over (rows, n) arrays, output aliased onto the first
+    input (the in-place contract). Batch is tiled over the grid when
+    BLOCK_ROWS > 0 (TPU); a single whole-array block otherwise (CPU)."""
+    n = args[0].shape[-1]
+    if BLOCK_ROWS <= 0:
+        out = pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(args[0].shape, args[0].dtype),
+            input_output_aliases={0: 0},
+            interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+        )(*args)
+        return out
+    padded_args = []
+    rows = None
+    for a in args:
+        p, rows = _pad_rows(a)
+        padded_args.append(p)
+    grid = (padded_args[0].shape[0] // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, n), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(padded_args[0].shape, padded_args[0].dtype),
+        grid=grid,
+        in_specs=[spec] * len(padded_args),
+        out_specs=spec,
+        input_output_aliases={0: 0},
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(*padded_args)
+    return out[:rows]
+
+
+def _flatten_batch(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
+    lead = x.shape[:-1]
+    flat = x.reshape((-1, x.shape[-1])) if lead else x.reshape((1, x.shape[-1]))
+    return flat, lead
+
+
+def rdfft(x: jnp.ndarray) -> jnp.ndarray:
+    """In-place packed forward rdFFT over the last axis (any leading
+    batch shape; n must be a power of two >= 2)."""
+    n = x.shape[-1]
+    assert n >= 2 and (n & (n - 1)) == 0, f"size must be a power of two, got {n}"
+    flat, lead = _flatten_batch(x)
+    out = _tiled_call(_rdfft_kernel, flat)
+    return out.reshape(lead + (n,))
+
+
+def irdfft(x: jnp.ndarray) -> jnp.ndarray:
+    """In-place packed inverse rdFFT over the last axis."""
+    n = x.shape[-1]
+    assert n >= 2 and (n & (n - 1)) == 0
+    flat, lead = _flatten_batch(x)
+    out = _tiled_call(_irdfft_kernel, flat)
+    return out.reshape(lead + (n,))
+
+
+def spectral_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Packed-domain elementwise complex product (broadcast-free; shapes
+    must match)."""
+    assert a.shape == b.shape
+    n = a.shape[-1]
+    flat_a, lead = _flatten_batch(a)
+    flat_b, _ = _flatten_batch(b)
+    out = _tiled_call(_mul_kernel, flat_a, flat_b)
+    return out.reshape(lead + (n,))
+
+
+def vmem_report(n: int, dtype_bytes: int = 4) -> dict:
+    """Static VMEM/roofline estimate for DESIGN.md: bytes resident per grid
+    step and arithmetic intensity of the fused stage pipeline. Uses the
+    TPU tiling (8 rows) even when the CPU default BLOCK_ROWS=0 is active —
+    the estimate describes the TPU deployment."""
+    rows = BLOCK_ROWS if BLOCK_ROWS > 0 else 8
+    tile = rows * n * dtype_bytes
+    stages = int(math.log2(n))
+    flops = rows * (stages * (n // 2) * 10)  # ~10 flops per 4-group
+    return {
+        "n": n,
+        "block_rows": rows,
+        "vmem_tile_bytes": tile,
+        # stage pipeline keeps the tile resident; HBM traffic is one read +
+        # one write of the tile
+        "hbm_bytes": 2 * tile,
+        "flops": flops,
+        "arith_intensity": flops / (2 * tile),
+        "stages": stages,
+    }

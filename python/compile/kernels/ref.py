@@ -1,0 +1,96 @@
+"""Pure-jnp reference oracle for the rdFFT packed layout.
+
+Everything here is *deliberately naive* (built on ``jnp.fft.rfft``): it is
+the correctness ground truth the Pallas kernels in ``rdfft.py`` are tested
+against (pytest + hypothesis-style sweeps in ``python/tests``), never part
+of the lowered model.
+
+Packed layout (paper §4.1): for a length-``n`` real signal whose rFFT is
+``y_0..y_{n/2}``, the packed real buffer stores ``Re(y_k)`` at index ``k``
+and ``Im(y_k)`` at index ``n-k`` (``1 <= k < n/2``); the always-real DC and
+Nyquist coefficients sit at indices ``0`` and ``n/2``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_spectrum(spec: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Pack an rFFT half-spectrum ``(..., n/2+1)`` complex into the
+    ``(..., n)`` real packed layout."""
+    re = jnp.real(spec)
+    im = jnp.imag(spec)
+    # indices 0..n/2 hold the real parts; indices n/2+1..n-1 hold the
+    # imaginary parts of y_{n/2-1} .. y_1 (i.e. reversed).
+    head = re  # (..., n/2+1)
+    tail = im[..., 1 : n // 2][..., ::-1]  # Im(y_{n/2-1}) .. Im(y_1)
+    return jnp.concatenate([head, tail], axis=-1)
+
+
+def unpack_spectrum(packed: jnp.ndarray) -> jnp.ndarray:
+    """Decode a packed ``(..., n)`` real buffer into the rFFT half-spectrum
+    ``(..., n/2+1)`` complex."""
+    n = packed.shape[-1]
+    re = packed[..., : n // 2 + 1]
+    imag_mid = packed[..., n // 2 + 1 :][..., ::-1]  # Im(y_1)..Im(y_{n/2-1})
+    zeros = jnp.zeros_like(packed[..., :1])
+    im = jnp.concatenate([zeros, imag_mid, zeros], axis=-1)
+    return re + 1j * im
+
+
+def rdfft_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Packed forward transform of a real signal (last axis)."""
+    n = x.shape[-1]
+    return pack_spectrum(jnp.fft.rfft(x.astype(jnp.float32), axis=-1), n)
+
+
+def irdfft_ref(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`rdfft_ref` (last axis)."""
+    n = packed.shape[-1]
+    return jnp.fft.irfft(unpack_spectrum(packed.astype(jnp.float32)), n=n, axis=-1)
+
+
+def spectral_mul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Packed-domain elementwise complex product (paper Eq. 4's ⊙)."""
+    n = a.shape[-1]
+    return pack_spectrum(unpack_spectrum(a) * unpack_spectrum(b), n)
+
+
+def spectral_conj_mul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Packed-domain ``conj(a) ⊙ b`` (paper Eq. 5's backward product)."""
+    n = a.shape[-1]
+    return pack_spectrum(jnp.conj(unpack_spectrum(a)) * unpack_spectrum(b), n)
+
+
+def circulant_matvec_ref(c: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """``y = C x`` for the circulant matrix with first column ``c``
+    (broadcasts over leading axes of ``x``)."""
+    n = c.shape[-1]
+    return jnp.fft.irfft(
+        jnp.fft.rfft(c, axis=-1) * jnp.fft.rfft(x, axis=-1), n=n, axis=-1
+    )
+
+
+def block_circulant_matvec_ref(c: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Block-circulant product.
+
+    ``c``: ``(rb, cb, p)`` first columns of each circulant block.
+    ``x``: ``(..., cb*p)``.
+    Returns ``(..., rb*p)``.
+    """
+    rb, cb, p = c.shape
+    xb = x.reshape(x.shape[:-1] + (cb, p))
+    ch = jnp.fft.rfft(c, axis=-1)  # (rb, cb, p/2+1)
+    xh = jnp.fft.rfft(xb, axis=-1)  # (..., cb, p/2+1)
+    yh = jnp.einsum("ijk,...jk->...ik", ch, xh)
+    y = jnp.fft.irfft(yh, n=p, axis=-1)
+    return y.reshape(x.shape[:-1] + (rb * p,))
+
+
+def circulant_dense_ref(c: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the dense circulant matrix for first column ``c`` —
+    used only by tests."""
+    n = c.shape[0]
+    idx = (jnp.arange(n)[:, None] - jnp.arange(n)[None, :]) % n
+    return c[idx]

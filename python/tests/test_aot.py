@@ -1,0 +1,60 @@
+"""Build-path contract tests: the AOT artifacts must be loadable and the
+manifest must describe them exactly."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(M.PRESETS["test"], str(out))
+    return str(out), manifest
+
+
+def test_all_artifacts_exist(built):
+    out, _ = built
+    for f in ["train_step.hlo.txt", "eval_step.hlo.txt", "frozen.bin", "trainable.bin", "manifest.json"]:
+        assert os.path.exists(os.path.join(out, f)), f
+
+
+def test_hlo_text_is_parseable_module(built):
+    out, _ = built
+    text = open(os.path.join(out, "train_step.hlo.txt")).read()
+    assert text.startswith("HloModule"), "must be HLO text, not a serialized proto"
+    assert "ENTRY" in text
+
+
+def test_manifest_matches_binaries(built):
+    out, manifest = built
+    frozen_elems = sum(int(np.prod(p["shape"])) for p in manifest["frozen"])
+    train_elems = sum(int(np.prod(p["shape"])) for p in manifest["trainable"])
+    assert os.path.getsize(os.path.join(out, "frozen.bin")) == 4 * frozen_elems
+    assert os.path.getsize(os.path.join(out, "trainable.bin")) == 4 * train_elems
+    assert manifest["num_frozen_params"] == frozen_elems
+    assert manifest["num_trainable_params"] == train_elems
+
+
+def test_manifest_names_sorted(built):
+    _, manifest = built
+    for group in ["frozen", "trainable"]:
+        names = [p["name"] for p in manifest[group]]
+        assert names == sorted(names)
+
+
+def test_initial_trainable_is_zero(built):
+    out, _ = built
+    tr = np.fromfile(os.path.join(out, "trainable.bin"), dtype=np.float32)
+    assert np.all(tr == 0.0), "adapters must start at zero (backbone-equivalent init)"
+
+
+def test_parameter_count_ordering(built):
+    _, manifest = built
+    # adapters must be a small fraction of the backbone (the paper's
+    # parameter-efficiency premise)
+    assert manifest["num_trainable_params"] * 10 < manifest["num_frozen_params"]

@@ -1,0 +1,189 @@
+"""L1 correctness: Pallas rdFFT kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/values; fixed cases pin the paper's worked
+examples (Fig. 1's 8/16-point layouts).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import circulant as C
+from compile.kernels import rdfft as K
+from compile.kernels import ref as R
+
+SIZES = [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+
+
+def rand(shape, seed=0, dtype=np.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape), dtype=dtype)
+
+
+# ----------------------------------------------------------------- fixed
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_forward_matches_ref(n):
+    x = rand((3, n), seed=n)
+    got = K.rdfft(x)
+    want = R.rdfft_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * np.sqrt(n))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_roundtrip_identity(n):
+    x = rand((2, n), seed=n + 1)
+    np.testing.assert_allclose(K.irdfft(K.rdfft(x)), x, rtol=1e-4, atol=1e-5 * n)
+
+
+def test_packed_layout_8point_example():
+    # FFT([1..8]) = [36, -4+9.657j, -4+4j, -4+1.657j, -4, ...]
+    # packed: [36, -4, -4, -4, -4, 1.657, 4, 9.657]
+    x = jnp.arange(1.0, 9.0)[None]
+    got = np.asarray(K.rdfft(x))[0]
+    expect = np.array([36, -4, -4, -4, -4, 1.6568542, 4, 9.656854], np.float32)
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-4)
+
+
+def test_dc_and_nyquist_slots_are_real_parts():
+    x = rand((1, 64), seed=9)
+    packed = np.asarray(K.rdfft(x))[0]
+    spec = np.fft.rfft(np.asarray(x)[0])
+    assert abs(packed[0] - spec[0].real) < 1e-4
+    assert abs(packed[32] - spec[32].real) < 1e-4
+    assert abs(spec[0].imag) < 1e-6 and abs(spec[32].imag) < 1e-5
+
+
+def test_batch_shapes_preserved():
+    for shape in [(64,), (3, 64), (2, 3, 64), (2, 1, 2, 64)]:
+        x = rand(shape, seed=1)
+        assert K.rdfft(x).shape == shape
+        assert K.irdfft(x).shape == shape
+
+
+def test_bf16_supported_and_close():
+    # The paper's point: fft/rfft libraries reject bf16; rdFFT supports it.
+    x32 = rand((4, 128), seed=3)
+    xb = x32.astype(jnp.bfloat16)
+    got = K.rdfft(xb)
+    assert got.dtype == jnp.bfloat16
+    want = R.rdfft_ref(x32)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want))) / scale
+    assert err < 0.05, f"bf16 relative error too large: {err}"
+
+
+def test_spectral_mul_matches_complex_product():
+    a = K.rdfft(rand((5, 64), seed=4))
+    b = K.rdfft(rand((5, 64), seed=5))
+    np.testing.assert_allclose(
+        K.spectral_mul(a, b), R.spectral_mul_ref(a, b), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_packed_conj_is_sign_flip_of_upper_half():
+    a = K.rdfft(rand((2, 32), seed=6))
+    c = C.packed_conj(a)
+    np.testing.assert_allclose(np.asarray(c)[:, :17], np.asarray(a)[:, :17])
+    np.testing.assert_allclose(np.asarray(c)[:, 17:], -np.asarray(a)[:, 17:])
+
+
+# ------------------------------------------------------------ hypothesis
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    log_n=st.integers(min_value=1, max_value=9),
+    batch=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_forward_and_roundtrip(log_n, batch, seed):
+    n = 1 << log_n
+    x = rand((batch, n), seed=seed)
+    got = K.rdfft(x)
+    np.testing.assert_allclose(got, R.rdfft_ref(x), rtol=1e-3, atol=1e-3 * np.sqrt(n))
+    np.testing.assert_allclose(K.irdfft(got), x, rtol=1e-3, atol=1e-4 * n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    log_n=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+)
+def test_hypothesis_linearity_and_scaling(log_n, seed, scale):
+    n = 1 << log_n
+    x = rand((2, n), seed=seed)
+    y = rand((2, n), seed=seed + 1)
+    lhs = K.rdfft(x * scale + y)
+    rhs = K.rdfft(x) * scale + K.rdfft(y)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3 * scale * np.sqrt(n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    log_p=st.integers(min_value=1, max_value=6),
+    rb=st.integers(min_value=1, max_value=3),
+    cb=st.integers(min_value=1, max_value=3),
+    b=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_block_circulant_forward(log_p, rb, cb, b, seed):
+    p = 1 << log_p
+    c = rand((rb, cb, p), seed=seed)
+    x = rand((b, cb * p), seed=seed + 1)
+    got = C.block_circulant_apply(c, x)
+    want = R.block_circulant_matvec_ref(c, x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * p)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    log_p=st.integers(min_value=2, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_eq5_gradients_match_autodiff(log_p, seed):
+    """Eq. 5 custom-VJP vs differentiating straight through the oracle."""
+    p = 1 << log_p
+    rb, cb, b = 2, 2, 3
+    c = rand((rb, cb, p), seed=seed)
+    x = rand((b, cb * p), seed=seed + 1)
+    g0 = rand((b, rb * p), seed=seed + 2)
+    f = lambda c, x: jnp.sum(C.block_circulant_apply(c, x) * g0)
+    fr = lambda c, x: jnp.sum(R.block_circulant_matvec_ref(c, x) * g0)
+    dc, dx = jax.grad(f, (0, 1))(c, x)
+    dcr, dxr = jax.grad(fr, (0, 1))(c, x)
+    np.testing.assert_allclose(dc, dcr, rtol=1e-3, atol=1e-3 * p)
+    np.testing.assert_allclose(dx, dxr, rtol=1e-3, atol=1e-3 * p)
+
+
+def test_parseval_energy_preserved():
+    n = 256
+    x = rand((1, n), seed=8)
+    packed = np.asarray(K.rdfft(x))[0]
+    e_time = float(np.sum(np.asarray(x) ** 2))
+    e_freq = packed[0] ** 2 + packed[n // 2] ** 2
+    e_freq += 2 * float(np.sum(packed[1 : n // 2] ** 2) + np.sum(packed[n // 2 + 1 :] ** 2))
+    assert abs(e_time - e_freq / n) / e_time < 1e-4
+
+
+def test_tiled_grid_path_matches_single_block(monkeypatch):
+    """BLOCK_ROWS>0 (the TPU BlockSpec grid path) must agree with the
+    CPU single-block default, including the row-padding logic."""
+    x = rand((5, 64), seed=11)  # 5 rows -> padded to 8
+    want = K.rdfft(x)
+    monkeypatch.setattr(K, "BLOCK_ROWS", 8)
+    got = K.rdfft(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    back = K.irdfft(got)
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_report_fields():
+    rep = K.vmem_report(4096)
+    assert rep["vmem_tile_bytes"] == rep["block_rows"] * 4096 * 4
+    assert rep["block_rows"] >= 1
+    assert rep["stages"] == 12
+    assert rep["arith_intensity"] > 0

@@ -1,0 +1,872 @@
+//! Fine-tuning layers with explicit forward/backward and honest
+//! allocation behaviour.
+//!
+//! Each layer mirrors the allocation profile of its PyTorch counterpart so
+//! the `memtrack` peaks reproduce Table 1 / Fig 2:
+//!
+//! * [`Dense`] (full fine-tune): weight + weight-grad + saved input.
+//! * [`Lora`]: frozen weight, small trainable factors, but an extra
+//!   activation (`x·Aᵀ`) saved for backward.
+//! * [`CirculantLayer`] with [`Backend::Fft`]: every FFT promotes to a
+//!   fresh complex buffer (2n reals); products/conjugations materialize.
+//! * [`CirculantLayer`] with [`Backend::Rfft`]: half-spectra (n+2 reals),
+//!   still out-of-place at every step.
+//! * [`CirculantLayer`] with [`Backend::RdFft`]: the paper's method —
+//!   forward transforms the input inside its own buffer (which *is* the
+//!   saved-for-backward tensor), products accumulate straight into the
+//!   output, backward overwrites grad-output in place. Beyond the output
+//!   tensor any method must produce, **zero** allocations.
+
+use super::tensor::{matmul_nn, matmul_nt, matmul_tn_acc, Tensor};
+use crate::baselines::complex_fft::{fft_out_of_place, ifft_out_of_place, ComplexVec};
+use crate::baselines::rfft::{irfft_alloc, rfft_alloc, rfft_conj, rfft_mul, RfftVec};
+use crate::memtrack::{Category, ScopedCategory};
+use crate::rdfft::plan::cached;
+use crate::rdfft::{irdfft_inplace, rdfft_inplace, spectral};
+use std::sync::Arc;
+
+/// FFT backend selection for [`CirculantLayer`] — the three columns of
+/// Table 1/3/4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// `torch.fft.fft/ifft`: complex, out-of-place.
+    Fft,
+    /// `torch.fft.rfft/irfft`: half-spectrum, out-of-place.
+    Rfft,
+    /// rdFFT: real-domain, fully in-place (ours).
+    RdFft,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Fft => "fft",
+            Backend::Rfft => "rfft",
+            Backend::RdFft => "ours",
+        }
+    }
+}
+
+/// A trainable layer: forward saves what backward needs; backward consumes
+/// the grad w.r.t. the output and returns the grad w.r.t. the input,
+/// accumulating parameter gradients internally.
+pub trait Layer {
+    fn forward(&mut self, x: Tensor) -> Tensor;
+    fn backward(&mut self, grad_out: Tensor) -> Tensor;
+    /// SGD update from accumulated gradients, then zero them.
+    fn sgd_step(&mut self, lr: f32);
+    /// Number of trainable scalars.
+    fn num_trainable(&self) -> usize;
+    /// Drop saved-for-backward state (end of step).
+    fn clear_saved(&mut self);
+}
+
+// ---------------------------------------------------------------------
+// Full fine-tuning
+// ---------------------------------------------------------------------
+
+/// Dense layer trained in full — the paper's "FF" row. The weight itself
+/// is the trainable tensor.
+pub struct Dense {
+    w: Tensor,      // [out, in], Trainable
+    dw: Tensor,     // [out, in], Gradients
+    saved_x: Option<Tensor>,
+}
+
+impl Dense {
+    pub fn new(out_dim: usize, in_dim: usize, seed: u64) -> Self {
+        let scale = (1.0 / in_dim as f32).sqrt();
+        Dense {
+            w: Tensor::rand(out_dim, in_dim, scale, seed, Category::Trainable),
+            dw: Tensor::zeros_cat(out_dim, in_dim, Category::Gradients),
+            saved_x: None,
+        }
+    }
+    pub fn weight(&self) -> &Tensor {
+        &self.w
+    }
+}
+
+impl Layer for Dense {
+    fn forward(&mut self, x: Tensor) -> Tensor {
+        let mut out = Tensor::zeros_cat(x.rows, self.w.rows, Category::Intermediates);
+        matmul_nt(&x, &self.w, &mut out);
+        self.saved_x = Some(x);
+        out
+    }
+
+    fn backward(&mut self, grad_out: Tensor) -> Tensor {
+        let x = self.saved_x.take().expect("forward before backward");
+        matmul_tn_acc(&grad_out, &x, &mut self.dw);
+        let mut dx = Tensor::zeros_cat(grad_out.rows, self.w.cols, Category::Intermediates);
+        matmul_nn(&grad_out, &self.w, &mut dx);
+        dx
+    }
+
+    fn sgd_step(&mut self, lr: f32) {
+        self.w.axpy(&self.dw, -lr);
+        self.dw.fill(0.0);
+    }
+
+    fn num_trainable(&self) -> usize {
+        self.w.len()
+    }
+
+    fn clear_saved(&mut self) {
+        self.saved_x = None;
+    }
+}
+
+/// Frozen dense layer (no gradient to parameters; used as the base model
+/// the adapters ride on, and as the frozen readout of the Table 4 task).
+pub struct FrozenDense {
+    w: Tensor, // [out, in], Weights
+    saved_x_rows: usize,
+}
+
+impl FrozenDense {
+    pub fn new(out_dim: usize, in_dim: usize, seed: u64) -> Self {
+        let scale = (1.0 / in_dim as f32).sqrt();
+        FrozenDense {
+            w: Tensor::rand(out_dim, in_dim, scale, seed, Category::Weights),
+            saved_x_rows: 0,
+        }
+    }
+
+    pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        self.saved_x_rows = x.rows;
+        let mut out = Tensor::zeros_cat(x.rows, self.w.rows, Category::Intermediates);
+        matmul_nt(x, &self.w, &mut out);
+        out
+    }
+
+    pub fn backward(&self, grad_out: &Tensor) -> Tensor {
+        let mut dx = Tensor::zeros_cat(grad_out.rows, self.w.cols, Category::Intermediates);
+        matmul_nn(grad_out, &self.w, &mut dx);
+        dx
+    }
+}
+
+// ---------------------------------------------------------------------
+// LoRA
+// ---------------------------------------------------------------------
+
+/// LoRA adapter over a frozen base weight: `y = x·W₀ᵀ + (x·Aᵀ)·Bᵀ · α/r`.
+pub struct Lora {
+    w0: Tensor,          // frozen [out, in], Weights
+    a: Tensor,           // [r, in], Trainable
+    b: Tensor,           // [out, r], Trainable
+    da: Tensor,          // Gradients
+    db: Tensor,          // Gradients
+    scale: f32,
+    saved_x: Option<Tensor>,
+    saved_xa: Option<Tensor>, // the extra intermediate LoRA must keep
+}
+
+impl Lora {
+    pub fn new(out_dim: usize, in_dim: usize, rank: usize, seed: u64) -> Self {
+        let _g = ScopedCategory::new(Category::Trainable);
+        Lora {
+            w0: Tensor::rand(out_dim, in_dim, (1.0 / in_dim as f32).sqrt(), seed, Category::Weights),
+            a: Tensor::rand(rank, in_dim, (1.0 / in_dim as f32).sqrt(), seed + 1, Category::Trainable),
+            b: Tensor::zeros_cat(out_dim, rank, Category::Trainable), // zero-init B
+            da: Tensor::zeros_cat(rank, in_dim, Category::Gradients),
+            db: Tensor::zeros_cat(out_dim, rank, Category::Gradients),
+            scale: 2.0, // α/r fixed at 2 like common LoRA configs
+            saved_x: None,
+            saved_xa: None,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.a.rows
+    }
+}
+
+impl Layer for Lora {
+    fn forward(&mut self, x: Tensor) -> Tensor {
+        let mut out = Tensor::zeros_cat(x.rows, self.w0.rows, Category::Intermediates);
+        matmul_nt(&x, &self.w0, &mut out);
+        // xa = x·Aᵀ  [b, r] — saved for backward (LoRA's extra activation)
+        let mut xa = Tensor::zeros_cat(x.rows, self.a.rows, Category::Intermediates);
+        matmul_nt(&x, &self.a, &mut xa);
+        // out += (xa·Bᵀ)·scale
+        let mut delta = Tensor::zeros_cat(x.rows, self.b.rows, Category::Intermediates);
+        matmul_nt(&xa, &self.b, &mut delta);
+        out.axpy(&delta, self.scale);
+        self.saved_x = Some(x);
+        self.saved_xa = Some(xa);
+        out
+    }
+
+    fn backward(&mut self, grad_out: Tensor) -> Tensor {
+        let x = self.saved_x.take().expect("forward first");
+        let xa = self.saved_xa.take().expect("forward first");
+        // dB += scale * gᵀ·xa
+        let mut g_scaled = grad_out.clone_as(Category::Intermediates);
+        g_scaled.scale(self.scale);
+        matmul_tn_acc(&g_scaled, &xa, &mut self.db);
+        // d(xa) = scale * g·B    [b, r]
+        let mut dxa = Tensor::zeros_cat(grad_out.rows, self.b.cols, Category::Intermediates);
+        matmul_nn(&g_scaled, &self.b, &mut dxa);
+        // dA += dxaᵀ·x
+        matmul_tn_acc(&dxa, &x, &mut self.da);
+        // dx = g·W0 + dxa·A
+        let mut dx = Tensor::zeros_cat(grad_out.rows, self.w0.cols, Category::Intermediates);
+        matmul_nn(&grad_out, &self.w0, &mut dx);
+        let mut dx2 = Tensor::zeros_cat(grad_out.rows, self.a.cols, Category::Intermediates);
+        matmul_nn(&dxa, &self.a, &mut dx2);
+        dx.axpy(&dx2, 1.0);
+        dx
+    }
+
+    fn sgd_step(&mut self, lr: f32) {
+        self.a.axpy(&self.da, -lr);
+        self.b.axpy(&self.db, -lr);
+        self.da.fill(0.0);
+        self.db.fill(0.0);
+    }
+
+    fn num_trainable(&self) -> usize {
+        self.a.len() + self.b.len()
+    }
+
+    fn clear_saved(&mut self) {
+        self.saved_x = None;
+        self.saved_xa = None;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Block-circulant layer, three FFT backends
+// ---------------------------------------------------------------------
+
+/// Block-circulant trained layer (`rows × cols` weight, circulant blocks
+/// of size `p`), with the FFT backend under test. This is the layer of the
+/// paper's single-layer experiments: the trainable parameters are the
+/// block spectra/columns (`rows/p · cols/p · p` scalars).
+pub struct CirculantLayer {
+    backend: Backend,
+    rows: usize,
+    cols: usize,
+    p: usize,
+    /// Trainable parameters: time-domain first columns of every circulant
+    /// block, for **all** backends (so training trajectories are
+    /// bit-for-bit comparable). The rdFFT backend transforms this buffer
+    /// to packed spectra *in place* during forward and restores it at the
+    /// end of backward; the fft/rfft backends allocate fresh spectra each
+    /// step, exactly like their PyTorch counterparts.
+    c: Tensor,
+    dc: Tensor,
+    /// True while `c` holds packed spectra (between an rdFFT forward and
+    /// the end of the corresponding backward / `ensure_time_domain`).
+    c_in_freq: bool,
+    /// Persistent p·cb workspace for the square-case in-place dx
+    /// (grad-output is overwritten blockwise; each dx block needs all ĝ
+    /// blocks, so one row of scratch is required — the CUDA analogue is
+    /// the kernel's shared-memory tile). Allocated once, tracked.
+    workspace: Tensor,
+    plan: Arc<crate::rdfft::Plan>,
+    // saved-for-backward state (backend-dependent)
+    saved_x: Option<Tensor>,           // rdfft: block spectra of x (in x's own buffer!)
+    saved_rfft_x: Vec<RfftVec>,        // rfft: spectra of x blocks per row
+    saved_rfft_c: Vec<RfftVec>,        // rfft: spectra of c blocks
+    saved_cplx_x: Vec<ComplexVec>,     // fft: complex spectra of x blocks per row
+    saved_cplx_c: Vec<ComplexVec>,     // fft: complex spectra of c blocks
+}
+
+impl CirculantLayer {
+    pub fn new(backend: Backend, rows: usize, cols: usize, p: usize, seed: u64) -> Self {
+        assert!(rows % p == 0 && cols % p == 0, "dims must be multiples of p");
+        let rb = rows / p;
+        let cb = cols / p;
+        // Small random init (adapters typically start near zero; we use a
+        // small scale so the layer is non-degenerate in throughput runs).
+        let scale = 0.1 / (cb as f32 * (p as f32).sqrt());
+        let c = Tensor::rand(1, rb * cb * p, scale, seed, Category::Trainable);
+        let dc = Tensor::zeros_cat(1, rb * cb * p, Category::Gradients);
+        let workspace = if backend == Backend::RdFft && rows == cols {
+            Tensor::zeros_cat(1, cols, Category::Other)
+        } else {
+            Tensor::zeros_cat(0, 0, Category::Other)
+        };
+        CirculantLayer {
+            backend,
+            rows,
+            cols,
+            p,
+            c,
+            dc,
+            c_in_freq: false,
+            workspace,
+            plan: cached(p),
+            saved_x: None,
+            saved_rfft_x: Vec::new(),
+            saved_rfft_c: Vec::new(),
+            saved_cplx_x: Vec::new(),
+            saved_cplx_c: Vec::new(),
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+    pub fn block_size(&self) -> usize {
+        self.p
+    }
+    fn rb(&self) -> usize {
+        self.rows / self.p
+    }
+    fn cb(&self) -> usize {
+        self.cols / self.p
+    }
+
+    // ---------------- rdFFT backend (ours) ----------------
+
+    /// Restore the parameter buffer to the time domain if a forward left
+    /// it holding spectra (eval-only use, or inspection).
+    pub fn ensure_time_domain(&mut self) {
+        if self.c_in_freq {
+            for blk in self.c.as_mut_slice().chunks_exact_mut(self.p) {
+                irdfft_inplace(&self.plan, blk);
+            }
+            self.c_in_freq = false;
+        }
+    }
+
+    fn forward_rdfft(&mut self, mut x: Tensor) -> Tensor {
+        let (p, rb, cb) = (self.p, self.rb(), self.cb());
+        let b = x.rows;
+        // ĉ: transform the parameter buffer itself, in place. It stays in
+        // the frequency domain until the end of backward restores it.
+        if !self.c_in_freq {
+            for blk in self.c.as_mut_slice().chunks_exact_mut(p) {
+                rdfft_inplace(&self.plan, blk);
+            }
+            self.c_in_freq = true;
+        }
+        // Transform every input block in place: x's buffer now holds x̂ and
+        // doubles as the saved-for-backward tensor. No allocation.
+        for r in 0..b {
+            for blk in x.row_mut(r).chunks_exact_mut(p) {
+                rdfft_inplace(&self.plan, blk);
+            }
+        }
+        // The output activation is mandatory for any method.
+        let mut out = Tensor::zeros_cat(b, self.rows, Category::Intermediates);
+        for r in 0..b {
+            let xrow = x.row(r);
+            let orow = out.row_mut(r);
+            for i in 0..rb {
+                let ob = &mut orow[i * p..(i + 1) * p];
+                for j in 0..cb {
+                    let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
+                    spectral::mul_acc(ob, ch, &xrow[j * p..(j + 1) * p]);
+                }
+                irdfft_inplace(&self.plan, ob);
+            }
+        }
+        self.saved_x = Some(x);
+        out
+    }
+
+    fn backward_rdfft(&mut self, mut g: Tensor) -> Tensor {
+        let (p, rb, cb) = (self.p, self.rb(), self.cb());
+        let b = g.rows;
+        let x_hat = self.saved_x.take().expect("forward first");
+        // ĝ: transform grad-output blocks in place (no allocation).
+        for r in 0..b {
+            for blk in g.row_mut(r).chunks_exact_mut(p) {
+                rdfft_inplace(&self.plan, blk);
+            }
+        }
+        // dĉ += conj(x̂) ⊙ ĝ — straight into the (mandatory) grad buffer.
+        for r in 0..b {
+            let xrow = x_hat.row(r);
+            let grow = g.row(r);
+            for i in 0..rb {
+                for j in 0..cb {
+                    let d = &mut self.dc.as_mut_slice()[(i * cb + j) * p..][..p];
+                    spectral::conj_mul_acc(d, &xrow[j * p..(j + 1) * p], &grow[i * p..(i + 1) * p]);
+                }
+            }
+        }
+        // dx: when the layer is square, grad-output's buffer is
+        // overwritten in place with dx (the paper's "overwrite grad_output
+        // at the final stage of the backward pass"), using the layer's
+        // persistent one-row workspace — each dx block needs every ĝ
+        // block, so a row of scratch is unavoidable; it is allocated once
+        // at construction (the CUDA analogue is shared memory).
+        let dx = if self.rows == self.cols {
+            let mut dx = g;
+            for r in 0..b {
+                let row = dx.row_mut(r);
+                let ws = self.workspace.as_mut_slice();
+                for (j, sb) in ws.chunks_exact_mut(p).enumerate() {
+                    sb.fill(0.0);
+                    for i in 0..rb {
+                        let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
+                        spectral::conj_mul_acc(sb, ch, &row[i * p..(i + 1) * p]);
+                    }
+                    irdfft_inplace(&self.plan, sb);
+                }
+                row.copy_from_slice(ws);
+            }
+            dx
+        } else {
+            // Rectangular: dx is a mandatory output allocation.
+            let mut dx = Tensor::zeros_cat(b, self.cols, Category::Intermediates);
+            for r in 0..b {
+                let grow = g.row(r);
+                let dxrow = dx.row_mut(r);
+                for j in 0..cb {
+                    let db = &mut dxrow[j * p..(j + 1) * p];
+                    for i in 0..rb {
+                        let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
+                        spectral::conj_mul_acc(db, ch, &grow[i * p..(i + 1) * p]);
+                    }
+                    irdfft_inplace(&self.plan, db);
+                }
+            }
+            dx
+        };
+        // Leave the frequency domain: gradient blocks IFFT in place
+        // (Eq. 5's final IFFT), parameter blocks IFFT back so SGD happens
+        // on time-domain c, identical to the fft/rfft backends.
+        for blk in self.dc.as_mut_slice().chunks_exact_mut(p) {
+            irdfft_inplace(&self.plan, blk);
+        }
+        for blk in self.c.as_mut_slice().chunks_exact_mut(p) {
+            irdfft_inplace(&self.plan, blk);
+        }
+        self.c_in_freq = false;
+        dx
+    }
+
+    // ---------------- rfft backend ----------------
+
+    fn forward_rfft(&mut self, x: Tensor) -> Tensor {
+        let (p, rb, cb) = (self.p, self.rb(), self.cb());
+        let b = x.rows;
+        // ĉ blocks (out-of-place, n+2 reals each)
+        self.saved_rfft_c = (0..rb * cb)
+            .map(|bi| rfft_alloc(&self.c.as_slice()[bi * p..(bi + 1) * p], Category::Intermediates))
+            .collect();
+        // x̂ blocks per row
+        self.saved_rfft_x = Vec::with_capacity(b * cb);
+        for r in 0..b {
+            for j in 0..cb {
+                self.saved_rfft_x
+                    .push(rfft_alloc(&x.row(r)[j * p..(j + 1) * p], Category::Intermediates));
+            }
+        }
+        let mut out = Tensor::zeros_cat(b, self.rows, Category::Intermediates);
+        for r in 0..b {
+            for i in 0..rb {
+                // accumulate ŷ_i = Σ_j ĉ_ij ⊙ x̂_j in a fresh spectrum
+                let mut acc = RfftVec::zeros(p / 2 + 1, Category::Intermediates);
+                for j in 0..cb {
+                    let prod = rfft_mul(
+                        &self.saved_rfft_c[i * cb + j],
+                        &self.saved_rfft_x[r * cb + j],
+                        Category::Intermediates,
+                    );
+                    for k in 0..acc.len() {
+                        acc[k].0 += prod[k].0;
+                        acc[k].1 += prod[k].1;
+                    }
+                }
+                let y = irfft_alloc(&acc, Category::Intermediates);
+                out.row_mut(r)[i * p..(i + 1) * p].copy_from_slice(&y);
+            }
+        }
+        out
+    }
+
+    fn backward_rfft(&mut self, g: Tensor) -> Tensor {
+        let (p, rb, cb) = (self.p, self.rb(), self.cb());
+        let b = g.rows;
+        // ĝ blocks
+        let g_hat: Vec<RfftVec> = (0..b)
+            .flat_map(|r| {
+                (0..rb)
+                    .map(|i| rfft_alloc(&g.row(r)[i * p..(i + 1) * p], Category::Intermediates))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        // dc_ij = Σ_r irfft(conj(x̂_rj) ⊙ ĝ_ri)
+        for i in 0..rb {
+            for j in 0..cb {
+                let mut acc = RfftVec::zeros(p / 2 + 1, Category::Intermediates);
+                for r in 0..b {
+                    let conj_x = rfft_conj(&self.saved_rfft_x[r * cb + j], Category::Intermediates);
+                    let prod = rfft_mul(&conj_x, &g_hat[r * rb + i], Category::Intermediates);
+                    for k in 0..acc.len() {
+                        acc[k].0 += prod[k].0;
+                        acc[k].1 += prod[k].1;
+                    }
+                }
+                let d = irfft_alloc(&acc, Category::Intermediates);
+                let dst = &mut self.dc.as_mut_slice()[(i * cb + j) * p..][..p];
+                for (a, v) in dst.iter_mut().zip(d.iter()) {
+                    *a += v;
+                }
+            }
+        }
+        // dx_rj = irfft(Σ_i conj(ĉ_ij) ⊙ ĝ_ri)
+        let mut dx = Tensor::zeros_cat(b, self.cols, Category::Intermediates);
+        for r in 0..b {
+            for j in 0..cb {
+                let mut acc = RfftVec::zeros(p / 2 + 1, Category::Intermediates);
+                for i in 0..rb {
+                    let conj_c = rfft_conj(&self.saved_rfft_c[i * cb + j], Category::Intermediates);
+                    let prod = rfft_mul(&conj_c, &g_hat[r * rb + i], Category::Intermediates);
+                    for k in 0..acc.len() {
+                        acc[k].0 += prod[k].0;
+                        acc[k].1 += prod[k].1;
+                    }
+                }
+                let d = irfft_alloc(&acc, Category::Intermediates);
+                dx.row_mut(r)[j * p..(j + 1) * p].copy_from_slice(&d);
+            }
+        }
+        self.saved_rfft_x.clear();
+        self.saved_rfft_c.clear();
+        dx
+    }
+
+    // ---------------- fft backend ----------------
+
+    fn forward_fft(&mut self, x: Tensor) -> Tensor {
+        let (p, rb, cb) = (self.p, self.rb(), self.cb());
+        let b = x.rows;
+        self.saved_cplx_c = (0..rb * cb)
+            .map(|bi| {
+                fft_out_of_place(&self.c.as_slice()[bi * p..(bi + 1) * p], Category::Intermediates)
+            })
+            .collect();
+        self.saved_cplx_x = Vec::with_capacity(b * cb);
+        for r in 0..b {
+            for j in 0..cb {
+                self.saved_cplx_x
+                    .push(fft_out_of_place(&x.row(r)[j * p..(j + 1) * p], Category::Intermediates));
+            }
+        }
+        let mut out = Tensor::zeros_cat(b, self.rows, Category::Intermediates);
+        for r in 0..b {
+            for i in 0..rb {
+                let mut acc = ComplexVec::zeros(p, Category::Intermediates);
+                for j in 0..cb {
+                    // product materializes (as `a*b` on complex tensors does)
+                    let mut prod = ComplexVec::zeros(p, Category::Intermediates);
+                    let ch = &self.saved_cplx_c[i * cb + j];
+                    let xh = &self.saved_cplx_x[r * cb + j];
+                    for k in 0..p {
+                        prod[k] = ch[k].mul(xh[k]);
+                    }
+                    for k in 0..p {
+                        acc[k] = acc[k].add(prod[k]);
+                    }
+                }
+                let y = ifft_out_of_place(&acc, Category::Intermediates);
+                let orow = &mut out.row_mut(r)[i * p..(i + 1) * p];
+                for k in 0..p {
+                    orow[k] = y[k].re; // .real materialization
+                }
+            }
+        }
+        out
+    }
+
+    fn backward_fft(&mut self, g: Tensor) -> Tensor {
+        let (p, rb, cb) = (self.p, self.rb(), self.cb());
+        let b = g.rows;
+        let g_hat: Vec<ComplexVec> = (0..b)
+            .flat_map(|r| {
+                (0..rb)
+                    .map(|i| {
+                        fft_out_of_place(&g.row(r)[i * p..(i + 1) * p], Category::Intermediates)
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        for i in 0..rb {
+            for j in 0..cb {
+                let mut acc = ComplexVec::zeros(p, Category::Intermediates);
+                for r in 0..b {
+                    let xh = &self.saved_cplx_x[r * cb + j];
+                    let gh = &g_hat[r * rb + i];
+                    for k in 0..p {
+                        acc[k] = acc[k].add(xh[k].conj().mul(gh[k]));
+                    }
+                }
+                let d = ifft_out_of_place(&acc, Category::Intermediates);
+                let dst = &mut self.dc.as_mut_slice()[(i * cb + j) * p..][..p];
+                for k in 0..p {
+                    dst[k] += d[k].re;
+                }
+            }
+        }
+        let mut dx = Tensor::zeros_cat(b, self.cols, Category::Intermediates);
+        for r in 0..b {
+            for j in 0..cb {
+                let mut acc = ComplexVec::zeros(p, Category::Intermediates);
+                for i in 0..rb {
+                    let ch = &self.saved_cplx_c[i * cb + j];
+                    let gh = &g_hat[r * rb + i];
+                    for k in 0..p {
+                        acc[k] = acc[k].add(ch[k].conj().mul(gh[k]));
+                    }
+                }
+                let d = ifft_out_of_place(&acc, Category::Intermediates);
+                let dst = &mut dx.row_mut(r)[j * p..(j + 1) * p];
+                for k in 0..p {
+                    dst[k] = d[k].re;
+                }
+            }
+        }
+        self.saved_cplx_x.clear();
+        self.saved_cplx_c.clear();
+        dx
+    }
+}
+
+impl Layer for CirculantLayer {
+    fn forward(&mut self, x: Tensor) -> Tensor {
+        assert_eq!(x.cols, self.cols);
+        match self.backend {
+            Backend::RdFft => self.forward_rdfft(x),
+            Backend::Rfft => self.forward_rfft(x),
+            Backend::Fft => self.forward_fft(x),
+        }
+    }
+
+    fn backward(&mut self, grad_out: Tensor) -> Tensor {
+        assert_eq!(grad_out.cols, self.rows);
+        match self.backend {
+            Backend::RdFft => self.backward_rdfft(grad_out),
+            Backend::Rfft => self.backward_rfft(grad_out),
+            Backend::Fft => self.backward_fft(grad_out),
+        }
+    }
+
+    fn sgd_step(&mut self, lr: f32) {
+        // All backends train the same time-domain parameters with the same
+        // Eq. 5 gradient, so the three training trajectories are
+        // numerically interchangeable (Table 4's accuracy-parity claim).
+        self.ensure_time_domain();
+        self.c.axpy(&self.dc, -1.0 * lr);
+        self.dc.fill(0.0);
+    }
+
+    fn num_trainable(&self) -> usize {
+        self.c.len()
+    }
+
+    fn clear_saved(&mut self) {
+        self.saved_x = None;
+        self.saved_rfft_x.clear();
+        self.saved_rfft_c.clear();
+        self.saved_cplx_x.clear();
+        self.saved_cplx_c.clear();
+        self.ensure_time_domain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memtrack;
+
+    fn input(b: usize, d: usize, seed: u64) -> Tensor {
+        Tensor::rand(b, d, 1.0, seed, Category::Intermediates)
+    }
+
+    fn grad_ones(b: usize, d: usize) -> Tensor {
+        let mut g = Tensor::zeros_cat(b, d, Category::Intermediates);
+        g.fill(1.0);
+        g
+    }
+
+    /// The three FFT backends must be numerically interchangeable:
+    /// identical forward outputs and identical gradients.
+    #[test]
+    fn backends_agree_forward_and_backward() {
+        let (b, d, p) = (3, 64, 16);
+        let mut layers: Vec<CirculantLayer> = [Backend::Fft, Backend::Rfft, Backend::RdFft]
+            .iter()
+            .map(|&bk| CirculantLayer::new(bk, d, d, p, 77))
+            .collect();
+        let mut outs = Vec::new();
+        let mut dxs = Vec::new();
+        let mut dcs = Vec::new();
+        for l in layers.iter_mut() {
+            let y = l.forward(input(b, d, 5));
+            let dx = l.backward(grad_ones(b, d));
+            outs.push(y.as_slice().to_vec());
+            dxs.push(dx.as_slice().to_vec());
+            dcs.push(l.dc.as_slice().to_vec());
+        }
+        for v in 1..3 {
+            for i in 0..outs[0].len() {
+                assert!(
+                    (outs[0][i] - outs[v][i]).abs() < 1e-3,
+                    "forward mismatch backend {v} at {i}: {} vs {}",
+                    outs[0][i],
+                    outs[v][i]
+                );
+            }
+            for i in 0..dxs[0].len() {
+                assert!((dxs[0][i] - dxs[v][i]).abs() < 1e-3, "dx mismatch backend {v} at {i}");
+            }
+            for i in 0..dcs[0].len() {
+                assert!((dcs[0][i] - dcs[v][i]).abs() < 1e-3, "dc mismatch backend {v} at {i}");
+            }
+        }
+    }
+
+    /// After a full train step every backend must land on the same
+    /// parameters (Table 4's accuracy-parity claim, microscopically).
+    #[test]
+    fn backends_training_trajectories_match() {
+        let (b, d, p) = (2, 32, 8);
+        for bk in [Backend::Fft, Backend::Rfft] {
+            let mut a = CirculantLayer::new(bk, d, d, p, 9);
+            let mut o = CirculantLayer::new(Backend::RdFft, d, d, p, 9);
+            for step in 0..3 {
+                let x = input(b, d, 100 + step);
+                let x2 = x.clone_as(Category::Intermediates);
+                let _ = a.forward(x);
+                let _ = o.forward(x2);
+                let _ = a.backward(grad_ones(b, d));
+                let _ = o.backward(grad_ones(b, d));
+                a.sgd_step(0.01);
+                o.sgd_step(0.01);
+            }
+            for i in 0..a.c.len() {
+                assert!(
+                    (a.c.as_slice()[i] - o.c.as_slice()[i]).abs() < 1e-3,
+                    "{} vs rdfft param {i}",
+                    bk.name()
+                );
+            }
+        }
+    }
+
+    /// The paper's headline property: the rdFFT layer's forward performs
+    /// exactly ONE tensor allocation (the mandatory output) and the square
+    /// backward performs ZERO.
+    #[test]
+    fn rdfft_layer_is_allocation_free() {
+        let (b, d, p) = (4, 128, 32);
+        let mut l = CirculantLayer::new(Backend::RdFft, d, d, p, 3);
+        let x = input(b, d, 6);
+        let g = grad_ones(b, d);
+        memtrack::reset_peak();
+        let before = memtrack::snapshot().alloc_count;
+        let _y = l.forward(x);
+        let after_fwd = memtrack::snapshot().alloc_count;
+        assert_eq!(after_fwd - before, 1, "forward must allocate only the output tensor");
+        let _dx = l.backward(g);
+        let after_bwd = memtrack::snapshot().alloc_count;
+        assert_eq!(after_bwd, after_fwd, "square backward must allocate nothing");
+    }
+
+    /// fft / rfft backends allocate intermediates, and fft allocates more
+    /// than rfft (the ordering Table 1 reports).
+    #[test]
+    fn baseline_backends_allocate_and_order_holds() {
+        let (b, d, p) = (4, 128, 32);
+        let mut peaks = Vec::new();
+        for bk in [Backend::Fft, Backend::Rfft, Backend::RdFft] {
+            memtrack::reset();
+            let mut l = CirculantLayer::new(bk, d, d, p, 3);
+            let x = input(b, d, 6);
+            let g = grad_ones(b, d);
+            memtrack::reset_peak();
+            let y = l.forward(x);
+            let dx = l.backward(g);
+            let peak = memtrack::snapshot().peak_total;
+            drop(y);
+            drop(dx);
+            peaks.push(peak);
+        }
+        assert!(peaks[0] > peaks[1], "fft ({}) must exceed rfft ({})", peaks[0], peaks[1]);
+        assert!(peaks[1] > peaks[2], "rfft ({}) must exceed ours ({})", peaks[1], peaks[2]);
+    }
+
+    #[test]
+    fn dense_layer_gradient_descent_reduces_loss() {
+        let (b, d) = (8, 16);
+        let mut layer = Dense::new(d, d, 1);
+        let target = Tensor::rand(b, d, 1.0, 2, Category::Other);
+        let mut last = f32::INFINITY;
+        for step in 0..150 {
+            let x = Tensor::rand(b, d, 1.0, 42, Category::Intermediates); // fixed batch
+            let y = layer.forward(x);
+            // L = 0.5 * ||y - t||^2 ; dL/dy = y - t
+            let mut g = Tensor::zeros_cat(b, d, Category::Intermediates);
+            let mut loss = 0.0f32;
+            for i in 0..y.len() {
+                let e = y.as_slice()[i] - target.as_slice()[i];
+                g.as_mut_slice()[i] = e / b as f32;
+                loss += 0.5 * e * e / b as f32;
+            }
+            let _ = layer.backward(g);
+            layer.sgd_step(0.05);
+            if step > 0 {
+                assert!(loss < last * 1.001, "loss must not increase: {loss} vs {last}");
+            }
+            last = loss;
+        }
+        assert!(last < 0.5, "loss should have dropped substantially, got {last}");
+    }
+
+    #[test]
+    fn lora_trains_and_dense_path_frozen() {
+        let (b, d, r) = (4, 32, 4);
+        let mut layer = Lora::new(d, d, r, 5);
+        let w0_before = layer.w0.as_slice().to_vec();
+        let x = input(b, d, 7);
+        let y = layer.forward(x);
+        // zero-init B means the adapter contributes nothing at step 0:
+        // y == x·W0ᵀ exactly.
+        let x2 = input(b, d, 7);
+        let mut base = Tensor::zeros_cat(b, d, Category::Other);
+        matmul_nt(&x2, &layer.w0, &mut base);
+        for i in 0..y.len() {
+            assert!((y.as_slice()[i] - base.as_slice()[i]).abs() < 1e-5);
+        }
+        let _ = layer.backward(grad_ones(b, d));
+        layer.sgd_step(0.1);
+        assert_eq!(layer.w0.as_slice(), &w0_before[..], "frozen weight must not move");
+        // after one step B is nonzero => adapter active
+        assert!(layer.b.as_slice().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn rectangular_circulant_layer_works() {
+        let (b, rows, cols, p) = (2, 32, 64, 16);
+        for bk in [Backend::Fft, Backend::Rfft, Backend::RdFft] {
+            let mut l = CirculantLayer::new(bk, rows, cols, p, 11);
+            let y = l.forward(input(b, cols, 13));
+            assert_eq!((y.rows, y.cols), (b, rows));
+            let dx = l.backward(grad_ones(b, rows));
+            assert_eq!((dx.rows, dx.cols), (b, cols));
+        }
+    }
+
+    #[test]
+    fn rdfft_param_buffer_restored_after_backward() {
+        let (b, d, p) = (1, 16, 8);
+        let mut l = CirculantLayer::new(Backend::RdFft, d, d, p, 21);
+        let c_before = l.c.as_slice().to_vec();
+        let _ = l.forward(input(b, d, 1));
+        assert!(l.c_in_freq);
+        let _ = l.backward(grad_ones(b, d));
+        assert!(!l.c_in_freq);
+        for i in 0..c_before.len() {
+            assert!((l.c.as_slice()[i] - c_before[i]).abs() < 1e-4, "param i={i} perturbed");
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Minimal training substrate with exact memory accounting.
+//!
+//! The paper's single-layer experiments (Table 1, Fig 2) train one
+//! fine-tuned layer — forward through backward — and record the peak
+//! memory of each method. This module is that measurement substrate: a
+//! layer-granular autograd (explicit `forward` / `backward` with
+//! saved-for-backward state, like `torch.autograd.Function`) whose tensors
+//! all live in [`crate::memtrack`]-tracked storage, so every method's peak
+//! and breakdown is measured on *real executions* of the real math.
+//!
+//! Layers implemented (the paper's Table 1 rows):
+//! * [`layers::Dense`] — full fine-tuning of a dense `out×in` weight;
+//! * [`layers::Lora`] — LoRA with rank `r` over a frozen base weight;
+//! * [`layers::CirculantLayer`] — block-circulant training with a
+//!   selectable FFT backend: `fft` (complex, out-of-place), `rfft`
+//!   (half-spectrum, out-of-place), `rdfft` (the paper's in-place method).
+//!
+//! The same layers power the Table 4 throughput/accuracy runs via
+//! [`train`].
+
+pub mod layers;
+pub mod optim;
+pub mod tensor;
+pub mod train;
+
+pub use layers::{Backend, CirculantLayer, Dense, FrozenDense, Layer, Lora};
+pub use optim::{OptimKind, Optimizer};
+pub use tensor::Tensor;

@@ -1,0 +1,353 @@
+//! Tracked 2-D tensors and the handful of dense ops the experiments need.
+//!
+//! Tensors are row-major `[rows, cols]` over [`crate::memtrack::TrackedVec`]
+//! storage, so their lifetime is visible to the memory profiler exactly
+//! like CUDA allocations are to PyTorch's.
+
+use crate::memtrack::{self, Category, TrackedVec};
+
+/// A tracked row-major 2-D tensor.
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    data: TrackedVec,
+}
+
+impl Tensor {
+    /// Zeros under the current default category (or an explicit one).
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self::zeros_cat(rows, cols, memtrack::default_category())
+    }
+
+    pub fn zeros_cat(rows: usize, cols: usize, cat: Category) -> Self {
+        Tensor { rows, cols, data: TrackedVec::zeros(rows * cols, cat) }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, v: Vec<f32>, cat: Category) -> Self {
+        assert_eq!(v.len(), rows * cols);
+        Tensor { rows, cols, data: TrackedVec::from_vec(v, cat) }
+    }
+
+    /// Deterministic uniform(-scale, scale) init (xorshift-based; the
+    /// experiments need reproducibility, not cryptographic quality).
+    pub fn rand(rows: usize, cols: usize, scale: f32, seed: u64, cat: Category) -> Self {
+        let mut rng = Rng::new(seed);
+        let v: Vec<f32> = (0..rows * cols).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect();
+        Self::from_vec(rows, cols, v, cat)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn category(&self) -> Category {
+        self.data.category()
+    }
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Deep copy into `cat`.
+    pub fn clone_as(&self, cat: Category) -> Tensor {
+        Tensor::from_vec(self.rows, self.cols, self.data.to_vec(), cat)
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        for x in self.as_mut_slice() {
+            *x = v;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in self.as_mut_slice() {
+            *x *= s;
+        }
+    }
+
+    /// `self += other * s` (shapes must match).
+    pub fn axpy(&mut self, other: &Tensor, s: f32) {
+        assert_eq!(self.len(), other.len());
+        for (a, b) in self.as_mut_slice().iter_mut().zip(other.as_slice()) {
+            *a += b * s;
+        }
+    }
+}
+
+impl std::fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tensor[{}x{}, {}]", self.rows, self.cols, self.category().name())
+    }
+}
+
+/// `out = x · wᵀ` — x:[b,in], w:[out,in], out:[b,out]. Blocked over k for
+/// cache locality; this is the hot matmul of the dense/LoRA baselines.
+pub fn matmul_nt(x: &Tensor, w: &Tensor, out: &mut Tensor) {
+    assert_eq!(x.cols, w.cols, "inner dims");
+    assert_eq!(out.rows, x.rows);
+    assert_eq!(out.cols, w.rows);
+    let (b, n_in, n_out) = (x.rows, x.cols, w.rows);
+    let xs = x.as_slice();
+    let ws = w.as_slice();
+    let os = out.as_mut_slice();
+    os.fill(0.0);
+    for i in 0..b {
+        let xrow = &xs[i * n_in..(i + 1) * n_in];
+        let orow = &mut os[i * n_out..(i + 1) * n_out];
+        for o in 0..n_out {
+            let wrow = &ws[o * n_in..(o + 1) * n_in];
+            let mut acc = 0.0f32;
+            for k in 0..n_in {
+                acc += xrow[k] * wrow[k];
+            }
+            orow[o] = acc;
+        }
+    }
+}
+
+/// `out = g · w` — g:[b,out], w:[out,in], out:[b,in]. The dx of a dense
+/// layer.
+pub fn matmul_nn(g: &Tensor, w: &Tensor, out: &mut Tensor) {
+    assert_eq!(g.cols, w.rows);
+    assert_eq!(out.rows, g.rows);
+    assert_eq!(out.cols, w.cols);
+    let (b, n_out, n_in) = (g.rows, g.cols, w.cols);
+    let gs = g.as_slice();
+    let ws = w.as_slice();
+    let os = out.as_mut_slice();
+    os.fill(0.0);
+    for i in 0..b {
+        let grow = &gs[i * n_out..(i + 1) * n_out];
+        let orow = &mut os[i * n_in..(i + 1) * n_in];
+        for o in 0..n_out {
+            let go = grow[o];
+            if go == 0.0 {
+                continue;
+            }
+            let wrow = &ws[o * n_in..(o + 1) * n_in];
+            for k in 0..n_in {
+                orow[k] += go * wrow[k];
+            }
+        }
+    }
+}
+
+/// `dw += gᵀ · x` — g:[b,out], x:[b,in], dw:[out,in]. The dW of a dense
+/// layer (accumulating).
+pub fn matmul_tn_acc(g: &Tensor, x: &Tensor, dw: &mut Tensor) {
+    assert_eq!(g.rows, x.rows);
+    assert_eq!(dw.rows, g.cols);
+    assert_eq!(dw.cols, x.cols);
+    let (b, n_out, n_in) = (g.rows, g.cols, x.cols);
+    let gs = g.as_slice();
+    let xs = x.as_slice();
+    let ds = dw.as_mut_slice();
+    for i in 0..b {
+        let grow = &gs[i * n_out..(i + 1) * n_out];
+        let xrow = &xs[i * n_in..(i + 1) * n_in];
+        for o in 0..n_out {
+            let go = grow[o];
+            if go == 0.0 {
+                continue;
+            }
+            let drow = &mut ds[o * n_in..(o + 1) * n_in];
+            for k in 0..n_in {
+                drow[k] += go * xrow[k];
+            }
+        }
+    }
+}
+
+/// In-place ReLU; returns nothing (mask recomputed in backward from the
+/// saved output, the memory-lean formulation).
+pub fn relu_inplace(x: &mut Tensor) {
+    for v in x.as_mut_slice() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Backward of in-place ReLU given the *output* y: `g := g ⊙ (y > 0)`.
+pub fn relu_backward_inplace(g: &mut Tensor, y: &Tensor) {
+    assert_eq!(g.len(), y.len());
+    for (gv, yv) in g.as_mut_slice().iter_mut().zip(y.as_slice()) {
+        if *yv <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Softmax cross-entropy over logits `[b, classes]` with integer labels.
+/// Returns mean loss; writes `d(loss)/d(logits)` into `grad` (same shape).
+pub fn softmax_xent(logits: &Tensor, labels: &[usize], grad: &mut Tensor) -> f32 {
+    assert_eq!(labels.len(), logits.rows);
+    assert_eq!(grad.rows, logits.rows);
+    assert_eq!(grad.cols, logits.cols);
+    let b = logits.rows;
+    let mut loss = 0.0f64;
+    for i in 0..b {
+        let row = logits.row(i);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &v in row {
+            denom += ((v - maxv) as f64).exp();
+        }
+        let logz = denom.ln() + maxv as f64;
+        loss += logz - row[labels[i]] as f64;
+        let grow = grad.row_mut(i);
+        for (j, g) in grow.iter_mut().enumerate() {
+            let p = (((row[j] as f64) - logz).exp()) as f32;
+            *g = (p - if j == labels[i] { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    (loss / b as f64) as f32
+}
+
+/// Tiny deterministic RNG (xorshift64*), used everywhere randomness is
+/// needed so experiments are reproducible without an external crate.
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+    /// Standard normal via Box–Muller.
+    pub fn next_gauss(&mut self) -> f32 {
+        let u1 = (self.next_f32() + 1e-7).min(1.0);
+        let u2 = self.next_f32();
+        ((-2.0 * (u1 as f64).ln()).sqrt() * (std::f64::consts::TAU * u2 as f64).cos()) as f32
+    }
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_nt_small() {
+        // x = [[1,2],[3,4]], w = [[1,0],[0,1],[1,1]] -> x·wT = [[1,2,3],[3,4,7]]
+        let x = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0], Category::Other);
+        let w = Tensor::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0], Category::Other);
+        let mut out = Tensor::zeros_cat(2, 3, Category::Other);
+        matmul_nt(&x, &w, &mut out);
+        assert_eq!(out.as_slice(), &[1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_grads_match_finite_difference() {
+        // L = sum((x wT) ⊙ g0); check dW and dx.
+        let mut rng = Rng::new(5);
+        let x = Tensor::from_vec(3, 4, (0..12).map(|_| rng.next_gauss()).collect(), Category::Other);
+        let w = Tensor::from_vec(2, 4, (0..8).map(|_| rng.next_gauss()).collect(), Category::Other);
+        let g0 = Tensor::from_vec(3, 2, (0..6).map(|_| rng.next_gauss()).collect(), Category::Other);
+
+        let loss = |w: &Tensor, x: &Tensor| -> f32 {
+            let mut out = Tensor::zeros_cat(3, 2, Category::Other);
+            matmul_nt(x, w, &mut out);
+            out.as_slice().iter().zip(g0.as_slice()).map(|(a, b)| a * b).sum()
+        };
+
+        let mut dw = Tensor::zeros_cat(2, 4, Category::Other);
+        matmul_tn_acc(&g0, &x, &mut dw);
+        let mut dx = Tensor::zeros_cat(3, 4, Category::Other);
+        matmul_nn(&g0, &w, &mut dx);
+
+        let eps = 1e-2f32;
+        for idx in 0..8 {
+            let mut wp = w.clone_as(Category::Other);
+            wp.as_mut_slice()[idx] += eps;
+            let mut wm = w.clone_as(Category::Other);
+            wm.as_mut_slice()[idx] -= eps;
+            let fd = (loss(&wp, &x) - loss(&wm, &x)) / (2.0 * eps);
+            assert!((fd - dw.as_slice()[idx]).abs() < 1e-2, "dW idx={idx}");
+        }
+        for idx in 0..12 {
+            let mut xp = x.clone_as(Category::Other);
+            xp.as_mut_slice()[idx] += eps;
+            let mut xm = x.clone_as(Category::Other);
+            xm.as_mut_slice()[idx] -= eps;
+            let fd = (loss(&w, &xp) - loss(&w, &xm)) / (2.0 * eps);
+            assert!((fd - dx.as_slice()[idx]).abs() < 1e-2, "dx idx={idx}");
+        }
+    }
+
+    #[test]
+    fn relu_and_backward() {
+        let mut x = Tensor::from_vec(1, 4, vec![-1.0, 2.0, -0.5, 3.0], Category::Other);
+        relu_inplace(&mut x);
+        assert_eq!(x.as_slice(), &[0.0, 2.0, 0.0, 3.0]);
+        let mut g = Tensor::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0], Category::Other);
+        relu_backward_inplace(&mut g, &x);
+        assert_eq!(g.as_slice(), &[0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_sums_to_zero_per_row() {
+        let logits = Tensor::from_vec(2, 3, vec![1.0, 2.0, 0.5, -1.0, 0.0, 1.0], Category::Other);
+        let mut grad = Tensor::zeros_cat(2, 3, Category::Other);
+        let loss = softmax_xent(&logits, &[1, 2], &mut grad);
+        assert!(loss > 0.0);
+        for i in 0..2 {
+            let s: f32 = grad.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_matches_finite_difference() {
+        let logits = Tensor::from_vec(1, 4, vec![0.3, -0.2, 0.9, 0.0], Category::Other);
+        let labels = [2usize];
+        let mut grad = Tensor::zeros_cat(1, 4, Category::Other);
+        softmax_xent(&logits, &labels, &mut grad);
+        let eps = 1e-3f32;
+        for idx in 0..4 {
+            let mut lp = logits.clone_as(Category::Other);
+            lp.as_mut_slice()[idx] += eps;
+            let mut lm = logits.clone_as(Category::Other);
+            lm.as_mut_slice()[idx] -= eps;
+            let mut tmp = Tensor::zeros_cat(1, 4, Category::Other);
+            let fd = (softmax_xent(&lp, &labels, &mut tmp) - softmax_xent(&lm, &labels, &mut tmp))
+                / (2.0 * eps);
+            assert!((fd - grad.as_slice()[idx]).abs() < 1e-3, "idx={idx}");
+        }
+    }
+
+    #[test]
+    fn rng_is_deterministic_and_spread() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut r = Rng::new(2);
+        let mean: f32 = (0..1000).map(|_| r.next_f32()).sum::<f32>() / 1000.0;
+        assert!((mean - 0.5).abs() < 0.05, "mean={mean}");
+    }
+}

@@ -1,0 +1,312 @@
+//! Experiment drivers over the layer substrate: single-layer memory
+//! measurement (Table 1 / Fig 2) and the synthetic classification
+//! fine-tuning task (Table 4 accuracy-parity).
+
+use super::layers::{Backend, CirculantLayer, Dense, FrozenDense, Layer, Lora};
+use super::tensor::{relu_backward_inplace, relu_inplace, softmax_xent, Rng, Tensor};
+use crate::memtrack::{self, Category, Snapshot};
+
+/// The fine-tuning method under test — the row labels of Table 1/2/4.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    FullFinetune,
+    Lora { rank: usize },
+    Circulant { backend: Backend, p: usize },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::FullFinetune => "full-finetune".into(),
+            Method::Lora { rank } => format!("lora_r={rank}"),
+            Method::Circulant { backend, p } => format!("{}_p={p}", backend.name()),
+        }
+    }
+
+    pub fn build(&self, d: usize, seed: u64) -> Box<dyn Layer> {
+        match *self {
+            Method::FullFinetune => Box::new(Dense::new(d, d, seed)),
+            Method::Lora { rank } => Box::new(Lora::new(d, d, rank, seed)),
+            Method::Circulant { backend, p } => {
+                Box::new(CirculantLayer::new(backend, d, d, p, seed))
+            }
+        }
+    }
+}
+
+/// Result of one Table-1 cell: peak bytes during one fwd+bwd step and the
+/// category breakdown at the peak.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryCell {
+    pub peak_bytes: usize,
+    pub snapshot: Snapshot,
+}
+
+impl MemoryCell {
+    pub fn peak_mib(&self) -> f64 {
+        self.peak_bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Run one single-layer training step (forward → backward, like the
+/// paper: "up to the end of the backward pass") and record peak memory.
+///
+/// The persistent model state (params + grad buffers) is constructed
+/// first; the peak is then measured over input creation, forward, and
+/// backward — matching how the paper's profiler session scopes the
+/// measurement.
+pub fn measure_single_layer(method: Method, d: usize, batch: usize, seed: u64) -> MemoryCell {
+    memtrack::reset();
+    let mut layer = method.build(d, seed);
+    memtrack::reset_peak();
+    {
+        let x = Tensor::rand(batch, d, 1.0, seed + 1, Category::Intermediates);
+        let y = layer.forward(x);
+        // loss grad == ones (the profiler experiment's synthetic loss)
+        let mut g = Tensor::zeros_cat(batch, d, Category::Intermediates);
+        g.fill(1.0);
+        drop(y); // y's grad replaces y, as autograd frees the activation
+        let _dx = layer.backward(g);
+    }
+    let snapshot = memtrack::snapshot();
+    MemoryCell { peak_bytes: snapshot.peak_total, snapshot }
+}
+
+/// Full-lifetime measurement, counting the persistent layer state too —
+/// used by the Fig 2 breakdown (weights/trainable/grads/intermediates at
+/// the peak moment).
+pub fn measure_single_layer_with_state(method: Method, d: usize, batch: usize, seed: u64) -> MemoryCell {
+    memtrack::reset();
+    let mut layer = method.build(d, seed);
+    {
+        let x = Tensor::rand(batch, d, 1.0, seed + 1, Category::Intermediates);
+        let y = layer.forward(x);
+        let mut g = Tensor::zeros_cat(batch, d, Category::Intermediates);
+        g.fill(1.0);
+        drop(y);
+        let _dx = layer.backward(g);
+    }
+    let snapshot = memtrack::snapshot();
+    MemoryCell { peak_bytes: snapshot.peak_total, snapshot }
+}
+
+/// Synthetic MRPC-like binary classification: inputs are D-dim feature
+/// vectors from two noisy, nonlinearly-entangled clusters; a frozen
+/// random projection plays the pretrained backbone and the method under
+/// test adapts it (Table 4's accuracy-parity experiment, scaled to this
+/// testbed).
+pub struct ClassifyTask {
+    pub d: usize,
+    pub classes: usize,
+    train_x: Vec<Vec<f32>>,
+    train_y: Vec<usize>,
+    test_x: Vec<Vec<f32>>,
+    test_y: Vec<usize>,
+}
+
+impl ClassifyTask {
+    pub fn synthesize(d: usize, n_train: usize, n_test: usize, seed: u64) -> Self {
+        let classes = 2;
+        let mut rng = Rng::new(seed);
+        // class prototypes
+        let protos: Vec<Vec<f32>> =
+            (0..classes).map(|_| (0..d).map(|_| rng.next_gauss()).collect()).collect();
+        // Scale the class separation to Δ ≈ 2.8σ regardless of dimension
+        // (per-dim signal 2/√d, unit noise): Bayes-optimal accuracy ≈ 92%,
+        // so methods differentiate instead of saturating at 100%.
+        let sig = 2.0 / (d as f32).sqrt();
+        let gen = |n: usize, rng: &mut Rng| {
+            let mut xs = Vec::with_capacity(n);
+            let mut ys = Vec::with_capacity(n);
+            for i in 0..n {
+                let c = i % classes;
+                let x: Vec<f32> = (0..d)
+                    .map(|j| {
+                        let base = protos[c][j] * sig;
+                        // nonlinear entanglement + unit noise
+                        base + 0.5 * (base * 2.0).sin() + rng.next_gauss()
+                    })
+                    .collect();
+                xs.push(x);
+                ys.push(c);
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = gen(n_train, &mut rng);
+        let (test_x, test_y) = gen(n_test, &mut rng);
+        ClassifyTask { d, classes, train_x, train_y, test_x, test_y }
+    }
+
+    fn batch(&self, idxs: &[usize]) -> (Tensor, Vec<usize>) {
+        let mut data = Vec::with_capacity(idxs.len() * self.d);
+        let mut labels = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            data.extend_from_slice(&self.train_x[i]);
+            labels.push(self.train_y[i]);
+        }
+        (Tensor::from_vec(idxs.len(), self.d, data, Category::Intermediates), labels)
+    }
+}
+
+/// Outcome of a fine-tuning run on [`ClassifyTask`].
+#[derive(Debug, Clone)]
+pub struct FinetuneResult {
+    pub method: String,
+    pub final_train_loss: f32,
+    pub test_accuracy: f64,
+    pub steps: usize,
+    pub tokens_per_sec: f64,
+}
+
+/// Fine-tune `method` on the task: frozen backbone → adapted layer →
+/// ReLU → frozen readout → softmax-CE. Returns accuracy + throughput.
+pub fn finetune_classifier(
+    task: &ClassifyTask,
+    method: Method,
+    steps: usize,
+    batch: usize,
+    lr: f32,
+    seed: u64,
+) -> FinetuneResult {
+    let d = task.d;
+    let mut backbone = FrozenDense::new(d, d, seed + 10);
+    let mut layer = method.build(d, seed);
+    let mut readout = FrozenDense::new(task.classes, d, seed + 20);
+
+    let mut rng = Rng::new(seed + 30);
+    let mut last_loss = 0.0f32;
+    let t0 = std::time::Instant::now();
+    let mut samples = 0usize;
+    for _ in 0..steps {
+        let idxs: Vec<usize> = (0..batch).map(|_| rng.below(task.train_x.len())).collect();
+        let (x, labels) = task.batch(&idxs);
+        samples += batch;
+        // forward
+        let h0 = backbone.forward(&x);
+        let mut h1 = layer.forward(h0);
+        relu_inplace(&mut h1);
+        let logits = readout.forward(&h1);
+        let mut dlogits = Tensor::zeros_cat(batch, task.classes, Category::Intermediates);
+        last_loss = softmax_xent(&logits, &labels, &mut dlogits);
+        // backward
+        let mut dh1 = readout.backward(&dlogits);
+        relu_backward_inplace(&mut dh1, &h1);
+        drop(h1);
+        let _dh0 = layer.backward(dh1);
+        layer.sgd_step(lr);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    // evaluate
+    let mut correct = 0usize;
+    let bsz = 64usize.min(task.test_x.len());
+    let mut i = 0;
+    while i < task.test_x.len() {
+        let hi = (i + bsz).min(task.test_x.len());
+        let mut data = Vec::with_capacity((hi - i) * d);
+        for row in &task.test_x[i..hi] {
+            data.extend_from_slice(row);
+        }
+        let x = Tensor::from_vec(hi - i, d, data, Category::Intermediates);
+        let h0 = backbone.forward(&x);
+        let mut h1 = layer.forward(h0);
+        relu_inplace(&mut h1);
+        let logits = readout.forward(&h1);
+        for (r, want) in (i..hi).enumerate() {
+            let row = logits.row(r);
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == task.test_y[want] {
+                correct += 1;
+            }
+        }
+        layer.clear_saved();
+        i = hi;
+    }
+
+    FinetuneResult {
+        method: method.label(),
+        final_train_loss: last_loss,
+        test_accuracy: correct as f64 / task.test_x.len() as f64,
+        steps,
+        tokens_per_sec: samples as f64 * d as f64 / secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_reports_nonzero_peaks() {
+        let cell = measure_single_layer(
+            Method::Circulant { backend: Backend::RdFft, p: 32 },
+            128,
+            2,
+            1,
+        );
+        assert!(cell.peak_bytes > 0);
+    }
+
+    #[test]
+    fn ours_beats_fft_and_rfft_at_single_layer() {
+        let d = 256;
+        let b = 4;
+        let p = 64;
+        let fft = measure_single_layer(Method::Circulant { backend: Backend::Fft, p }, d, b, 1);
+        let rfft = measure_single_layer(Method::Circulant { backend: Backend::Rfft, p }, d, b, 1);
+        let ours = measure_single_layer(Method::Circulant { backend: Backend::RdFft, p }, d, b, 1);
+        assert!(fft.peak_bytes > rfft.peak_bytes);
+        assert!(rfft.peak_bytes > ours.peak_bytes);
+    }
+
+    #[test]
+    fn full_finetune_dominates_adapter_memory_with_state() {
+        let d = 256;
+        let b = 1;
+        let ff = measure_single_layer_with_state(Method::FullFinetune, d, b, 1);
+        let ours = measure_single_layer_with_state(
+            Method::Circulant { backend: Backend::RdFft, p: 64 },
+            d,
+            b,
+            1,
+        );
+        assert!(ff.peak_bytes > 10 * ours.peak_bytes);
+    }
+
+    #[test]
+    fn classifier_learns_above_chance() {
+        let task = ClassifyTask::synthesize(32, 512, 256, 3);
+        let res = finetune_classifier(
+            &task,
+            Method::Circulant { backend: Backend::RdFft, p: 16 },
+            60,
+            16,
+            0.3,
+            7,
+        );
+        assert!(
+            res.test_accuracy > 0.8,
+            "accuracy should be well above chance, got {}",
+            res.test_accuracy
+        );
+    }
+
+    #[test]
+    fn backends_reach_same_accuracy() {
+        let task = ClassifyTask::synthesize(32, 384, 192, 4);
+        let accs: Vec<f64> = [Backend::Fft, Backend::Rfft, Backend::RdFft]
+            .iter()
+            .map(|&bk| {
+                finetune_classifier(&task, Method::Circulant { backend: bk, p: 16 }, 40, 16, 0.3, 7)
+                    .test_accuracy
+            })
+            .collect();
+        assert!((accs[0] - accs[2]).abs() < 0.03, "fft vs ours: {accs:?}");
+        assert!((accs[1] - accs[2]).abs() < 0.03, "rfft vs ours: {accs:?}");
+    }
+}

@@ -1,0 +1,229 @@
+//! Out-of-place standard complex FFT — the `torch.fft.fft` analogue.
+//!
+//! Faithful to how the fft baseline behaves inside a PyTorch circulant
+//! layer: the real input is promoted to a fresh complex buffer (2n reals,
+//! tracked as `Intermediates`), an iterative radix-2 Cooley–Tukey runs on
+//! it, and the caller receives the (newly allocated) complex result. The
+//! transform itself is the same O(n log n) butterfly network as rdFFT — the
+//! difference under measurement is purely the allocation/dtype behaviour,
+//! which is the paper's point.
+
+use crate::memtrack::{self, Category};
+
+/// Plain complex number (two f32s, like `torch.complex64` elements).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Complex {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Complex {
+    #[inline]
+    pub fn new(re: f32, im: f32) -> Self {
+        Complex { re, im }
+    }
+    #[inline]
+    pub fn mul(self, o: Complex) -> Complex {
+        Complex::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+    #[inline]
+    pub fn conj(self) -> Complex {
+        Complex::new(self.re, -self.im)
+    }
+    #[inline]
+    pub fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+    #[inline]
+    pub fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// A heap complex buffer registered with the memory tracker (8 bytes per
+/// element, like complex64).
+pub struct ComplexVec {
+    data: Vec<Complex>,
+    cat: Category,
+}
+
+impl ComplexVec {
+    pub fn zeros(len: usize, cat: Category) -> Self {
+        memtrack::on_alloc(len * 8, cat);
+        ComplexVec { data: vec![Complex::default(); len], cat }
+    }
+    pub fn from_real(x: &[f32], cat: Category) -> Self {
+        memtrack::on_alloc(x.len() * 8, cat);
+        ComplexVec { data: x.iter().map(|&v| Complex::new(v, 0.0)).collect(), cat }
+    }
+}
+
+impl std::ops::Deref for ComplexVec {
+    type Target = [Complex];
+    fn deref(&self) -> &[Complex] {
+        &self.data
+    }
+}
+impl std::ops::DerefMut for ComplexVec {
+    fn deref_mut(&mut self) -> &mut [Complex] {
+        &mut self.data
+    }
+}
+impl Drop for ComplexVec {
+    fn drop(&mut self) {
+        memtrack::on_free(self.data.len() * 8, self.cat);
+    }
+}
+impl Clone for ComplexVec {
+    fn clone(&self) -> Self {
+        memtrack::on_alloc(self.data.len() * 8, self.cat);
+        ComplexVec { data: self.data.clone(), cat: self.cat }
+    }
+}
+
+/// Per-size twiddle cache — real FFT libraries (FFTW plans, cuFFT plans,
+/// torch's cached cuFFT handles) never recompute trig per call, so the
+/// baseline must not either (it would make Table 3 unfairly favourable
+/// to rdFFT). Stages are concatenated: stage with half-block m stores
+/// W_{2m}^k for k = 0..m-1.
+fn twiddle_table(n: usize, inverse: bool) -> std::sync::Arc<Vec<Complex>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<(usize, bool), Arc<Vec<Complex>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    map.entry((n, inverse))
+        .or_insert_with(|| {
+            let sign = if inverse { 1.0f64 } else { -1.0f64 };
+            let mut tw = Vec::with_capacity(n.max(2) - 1);
+            let mut m = 1usize;
+            while m < n {
+                let step = std::f64::consts::TAU / (2 * m) as f64 * sign;
+                for k in 0..m {
+                    let th = step * k as f64;
+                    tw.push(Complex::new(th.cos() as f32, th.sin() as f32));
+                }
+                m *= 2;
+            }
+            Arc::new(tw)
+        })
+        .clone()
+}
+
+/// Iterative radix-2 Cooley–Tukey on a complex slice (in place on the
+/// complex buffer; the *allocation* happened when the buffer was created).
+fn fft_complex(buf: &mut [Complex], inverse: bool) {
+    let n = buf.len();
+    assert!(n.is_power_of_two() && n >= 2);
+    let log2n = n.trailing_zeros();
+    // bit reversal
+    for i in 0..n {
+        let j = ((i as u32).reverse_bits() >> (32 - log2n)) as usize;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+    let tw = twiddle_table(n, inverse);
+    let mut m = 1usize;
+    let mut toff = 0usize;
+    while m < n {
+        let stage = &tw[toff..toff + m];
+        for s in (0..n).step_by(2 * m) {
+            // SAFETY: s + 2m <= n by loop bounds; k < m.
+            unsafe {
+                let blk = buf.get_unchecked_mut(s..s + 2 * m);
+                for (k, w) in stage.iter().enumerate() {
+                    let t = blk.get_unchecked(m + k).mul(*w);
+                    let e = *blk.get_unchecked(k);
+                    *blk.get_unchecked_mut(k) = e.add(t);
+                    *blk.get_unchecked_mut(m + k) = e.sub(t);
+                }
+            }
+        }
+        toff += m;
+        m *= 2;
+    }
+    if inverse {
+        let inv_n = 1.0 / n as f32;
+        for v in buf {
+            v.re *= inv_n;
+            v.im *= inv_n;
+        }
+    }
+}
+
+/// `torch.fft.fft(x)` for real `x`: allocates a 2n-real complex buffer,
+/// promotes, transforms. The returned buffer is tracked.
+pub fn fft_out_of_place(x: &[f32], cat: Category) -> ComplexVec {
+    let mut buf = ComplexVec::from_real(x, cat);
+    fft_complex(&mut buf, false);
+    buf
+}
+
+/// `torch.fft.fft` over an existing complex tensor (allocates the output
+/// copy, as the out-of-place torch op does).
+pub fn fft_complex_out_of_place(x: &ComplexVec, cat: Category) -> ComplexVec {
+    let mut out = ComplexVec::zeros(x.len(), cat);
+    out.data.copy_from_slice(x);
+    fft_complex(&mut out, false);
+    out
+}
+
+/// `torch.fft.ifft(x)`: allocates the complex output, transforms.
+pub fn ifft_out_of_place(x: &ComplexVec, cat: Category) -> ComplexVec {
+    let mut out = ComplexVec::zeros(x.len(), cat);
+    out.data.copy_from_slice(x);
+    fft_complex(&mut out, true);
+    out
+}
+
+/// Extract the real part into a freshly allocated real buffer
+/// (`torch.real(...)` materialization at the end of Eq. 4).
+pub fn real_part(x: &ComplexVec, cat: Category) -> crate::memtrack::TrackedVec {
+    let mut out = crate::memtrack::TrackedVec::zeros(x.len(), cat);
+    for (o, c) in out.iter_mut().zip(x.iter()) {
+        *o = c.re;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::naive_dft;
+
+    #[test]
+    fn matches_naive_dft() {
+        let x: Vec<f32> = (0..32).map(|i| ((i * 17 + 5) % 23) as f32 / 11.0 - 1.0).collect();
+        let spec = fft_out_of_place(&x, Category::Other);
+        let want = naive_dft(&x);
+        for k in 0..32 {
+            assert!((spec[k].re - want[k].0).abs() < 1e-3, "k={k}");
+            assert!((spec[k].im - want[k].1).abs() < 1e-3, "k={k}");
+        }
+    }
+
+    #[test]
+    fn ifft_inverts_fft() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.3).cos()).collect();
+        let spec = fft_out_of_place(&x, Category::Other);
+        let back = ifft_out_of_place(&spec, Category::Other);
+        for i in 0..64 {
+            assert!((back[i].re - x[i]).abs() < 1e-4);
+            assert!(back[i].im.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn allocations_are_tracked() {
+        memtrack::reset();
+        let x = vec![1.0f32; 128];
+        {
+            let _spec = fft_out_of_place(&x, Category::Intermediates);
+            // 128 complex = 1024 bytes live
+            assert_eq!(memtrack::snapshot().current_total(), 128 * 8);
+        }
+        assert_eq!(memtrack::snapshot().current_total(), 0);
+        assert_eq!(memtrack::snapshot().peak_total, 128 * 8);
+    }
+}

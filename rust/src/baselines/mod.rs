@@ -1,0 +1,95 @@
+//! Baseline FFT implementations the paper compares against.
+//!
+//! * [`complex_fft`] — analogue of `torch.fft.fft/ifft`: out-of-place
+//!   standard complex FFT. A real length-`n` input is first *promoted to a
+//!   complex buffer of `2n` reals* (allocation), transformed, and every
+//!   intermediate in a circulant layer stays complex.
+//! * [`rfft`] — analogue of `torch.fft.rfft/irfft`: Hermitian-symmetric
+//!   real FFT returning `n/2+1` complex values in a freshly allocated
+//!   `n+2`-real buffer; the inverse allocates the `n`-real output.
+//! * [`naive_dft`] — O(n²) f64 direct DFT, the accuracy oracle for Table 3.
+//!
+//! The *allocation profile* of these baselines is the point: their extra
+//! buffers are tracked by [`crate::memtrack`] and produce the fft/rfft rows
+//! of Table 1 and Fig 2, while rdFFT's rows stay allocation-free.
+
+pub mod complex_fft;
+pub mod rfft;
+
+pub use complex_fft::{fft_out_of_place, ifft_out_of_place, Complex};
+pub use rfft::{irfft_alloc, rfft_alloc};
+
+/// O(n²) direct DFT of a real signal, computed in f64 — the numerical
+/// ground truth used by the Table 3 accuracy rows. Returns `(re, im)`
+/// pairs for all `n` bins.
+pub fn naive_dft(x: &[f32]) -> Vec<(f32, f32)> {
+    let n = x.len();
+    let mut out = Vec::with_capacity(n);
+    for k in 0..n {
+        let mut re = 0.0f64;
+        let mut im = 0.0f64;
+        for (i, &v) in x.iter().enumerate() {
+            let theta = -std::f64::consts::TAU * (k as f64) * (i as f64) / (n as f64);
+            re += v as f64 * theta.cos();
+            im += v as f64 * theta.sin();
+        }
+        out.push((re as f32, im as f32));
+    }
+    out
+}
+
+/// O(n²) direct inverse DFT (f64) of a full complex spectrum; returns the
+/// complex result (imaginary parts ≈ 0 for Hermitian input).
+pub fn naive_idft(spec: &[(f32, f32)]) -> Vec<(f32, f32)> {
+    let n = spec.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut re = 0.0f64;
+        let mut im = 0.0f64;
+        for (k, &(sr, si)) in spec.iter().enumerate() {
+            let theta = std::f64::consts::TAU * (k as f64) * (i as f64) / (n as f64);
+            let (c, s) = (theta.cos(), theta.sin());
+            re += sr as f64 * c - si as f64 * s;
+            im += sr as f64 * s + si as f64 * c;
+        }
+        out.push(((re / n as f64) as f32, (im / n as f64) as f32));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_dft_of_impulse_is_flat() {
+        let mut x = vec![0.0f32; 8];
+        x[0] = 1.0;
+        let spec = naive_dft(&x);
+        for (re, im) in spec {
+            assert!((re - 1.0).abs() < 1e-6);
+            assert!(im.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn naive_idft_inverts_naive_dft() {
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        let spec = naive_dft(&x);
+        let back = naive_idft(&spec);
+        for i in 0..16 {
+            assert!((back[i].0 - x[i]).abs() < 1e-5);
+            assert!(back[i].1.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn naive_dft_hermitian_for_real_input() {
+        let x: Vec<f32> = (0..12).map(|i| (i * i % 7) as f32 - 3.0).collect();
+        let spec = naive_dft(&x);
+        for k in 1..6 {
+            assert!((spec[k].0 - spec[12 - k].0).abs() < 1e-4);
+            assert!((spec[k].1 + spec[12 - k].1).abs() < 1e-4);
+        }
+    }
+}

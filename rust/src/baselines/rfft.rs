@@ -1,0 +1,153 @@
+//! Out-of-place real FFT — the `torch.fft.rfft/irfft` analogue.
+//!
+//! rfft maps `n` reals to `n/2+1` complex values occupying `n+2` reals —
+//! the **dimension mismatch** the paper's §1/§3.1 is about: the output
+//! cannot live in the input's buffer, so every call allocates. We compute
+//! the spectrum with the same butterfly core as rdFFT (numerics identical)
+//! and then *materialize* it into a freshly allocated rfft-format buffer,
+//! reproducing exactly the allocation behaviour the paper measures.
+
+use crate::memtrack::{self, Category};
+use crate::rdfft::{irdfft_inplace, layout, plan::cached, rdfft_inplace};
+
+/// rfft output: `n/2+1` complex coefficients in `n+2` tracked reals.
+pub struct RfftVec {
+    data: Vec<(f32, f32)>,
+    cat: Category,
+}
+
+impl RfftVec {
+    pub fn zeros(half_plus_one: usize, cat: Category) -> Self {
+        memtrack::on_alloc(half_plus_one * 8, cat);
+        RfftVec { data: vec![(0.0, 0.0); half_plus_one], cat }
+    }
+
+    /// Number of real scalars this buffer occupies (`n + 2`).
+    pub fn real_len(&self) -> usize {
+        self.data.len() * 2
+    }
+}
+
+impl std::ops::Deref for RfftVec {
+    type Target = [(f32, f32)];
+    fn deref(&self) -> &[(f32, f32)] {
+        &self.data
+    }
+}
+impl std::ops::DerefMut for RfftVec {
+    fn deref_mut(&mut self) -> &mut [(f32, f32)] {
+        &mut self.data
+    }
+}
+impl Drop for RfftVec {
+    fn drop(&mut self) {
+        memtrack::on_free(self.data.len() * 8, self.cat);
+    }
+}
+impl Clone for RfftVec {
+    fn clone(&self) -> Self {
+        memtrack::on_alloc(self.data.len() * 8, self.cat);
+        RfftVec { data: self.data.clone(), cat: self.cat }
+    }
+}
+
+/// `torch.fft.rfft(x)`: allocate the `n+2`-real output, fill it with the
+/// non-redundant half-spectrum. Requires a scratch copy of the input
+/// because the output buffer cannot alias the input (dimension mismatch) —
+/// exactly the pre-allocation problem FFTW/cuFFT document.
+pub fn rfft_alloc(x: &[f32], cat: Category) -> RfftVec {
+    let n = x.len();
+    let plan = cached(n);
+    // Scratch real buffer (the "cannot reuse the input" cost).
+    let mut scratch = memtrack::TrackedVec::from_vec(x.to_vec(), cat);
+    rdfft_inplace(&plan, &mut scratch);
+    let mut out = RfftVec::zeros(n / 2 + 1, cat);
+    for k in 0..=n / 2 {
+        out[k] = layout::get(&scratch, k);
+    }
+    out
+}
+
+/// `torch.fft.irfft(spec)`: allocate the `n`-real output and inverse
+/// transform into it.
+pub fn irfft_alloc(spec: &RfftVec, cat: Category) -> memtrack::TrackedVec {
+    let n = (spec.len() - 1) * 2;
+    let plan = cached(n);
+    let mut out = memtrack::TrackedVec::zeros(n, cat);
+    layout::pack_from_rfft(spec, &mut out);
+    irdfft_inplace(&plan, &mut out);
+    out
+}
+
+/// Elementwise complex product of two rfft-format spectra, **allocating**
+/// the result (as `a * b` on torch complex tensors does).
+pub fn rfft_mul(a: &RfftVec, b: &RfftVec, cat: Category) -> RfftVec {
+    assert_eq!(a.len(), b.len());
+    let mut out = RfftVec::zeros(a.len(), cat);
+    for k in 0..a.len() {
+        let (ar, ai) = a[k];
+        let (br, bi) = b[k];
+        out[k] = (ar * br - ai * bi, ar * bi + ai * br);
+    }
+    out
+}
+
+/// Conjugate of an rfft-format spectrum, **allocating** (torch `.conj()`
+/// is lazy but materializes on the next op; we charge it where PyTorch's
+/// profiler sees it).
+pub fn rfft_conj(a: &RfftVec, cat: Category) -> RfftVec {
+    let mut out = RfftVec::zeros(a.len(), cat);
+    for k in 0..a.len() {
+        out[k] = (a[k].0, -a[k].1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::naive_dft;
+
+    #[test]
+    fn rfft_matches_naive_half_spectrum() {
+        let x: Vec<f32> = (0..64).map(|i| ((i * 7 + 3) % 31) as f32 / 15.0 - 1.0).collect();
+        let spec = rfft_alloc(&x, Category::Other);
+        let want = naive_dft(&x);
+        assert_eq!(spec.len(), 33);
+        for k in 0..=32 {
+            assert!((spec[k].0 - want[k].0).abs() < 1e-3, "k={k}");
+            assert!((spec[k].1 - want[k].1).abs() < 1e-3, "k={k}");
+        }
+    }
+
+    #[test]
+    fn irfft_inverts_rfft() {
+        let x: Vec<f32> = (0..128).map(|i| (i as f32 * 0.17).sin()).collect();
+        let spec = rfft_alloc(&x, Category::Other);
+        let back = irfft_alloc(&spec, Category::Other);
+        for i in 0..128 {
+            assert!((back[i] - x[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn output_occupies_n_plus_2_reals() {
+        let x = vec![0.5f32; 256];
+        let spec = rfft_alloc(&x, Category::Other);
+        assert_eq!(spec.real_len(), 258);
+    }
+
+    #[test]
+    fn allocation_profile_is_out_of_place() {
+        memtrack::reset();
+        let x = vec![1.0f32; 1024]; // untracked input (framework-owned)
+        let spec = rfft_alloc(&x, Category::Intermediates);
+        let snap = memtrack::snapshot();
+        // scratch (4096 B) died inside rfft_alloc? No: it lives until the
+        // function returns, so peak = scratch + output.
+        assert_eq!(snap.current_total(), (1024 / 2 + 1) * 8);
+        assert!(snap.peak_total >= 1024 * 4 + (1024 / 2 + 1) * 8);
+        drop(spec);
+        assert_eq!(memtrack::snapshot().current_total(), 0);
+    }
+}

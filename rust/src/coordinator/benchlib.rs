@@ -1,0 +1,99 @@
+//! Tiny benchmarking harness (criterion is unavailable offline; this
+//! provides the subset the tables need: warmup, calibrated iteration
+//! counts, and robust statistics).
+
+use std::time::Instant;
+
+/// Robust timing statistics over many runs of a closure.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+}
+
+/// Run `f` repeatedly for roughly `budget_ms` milliseconds (after a
+/// warmup) and report per-iteration statistics. `f` should include any
+/// per-iteration state reset; use [`bench_batched`] if the op is too fast
+/// to time individually.
+pub fn bench<F: FnMut()>(budget_ms: u64, mut f: F) -> Stats {
+    // warmup
+    let warm_until = Instant::now() + std::time::Duration::from_millis(budget_ms / 5 + 1);
+    while Instant::now() < warm_until {
+        f();
+    }
+    // calibrate batch size so one sample is >= ~20us
+    let t0 = Instant::now();
+    f();
+    let single = t0.elapsed().as_nanos().max(1) as u64;
+    let batch = (20_000 / single).max(1) as usize;
+
+    let mut samples = Vec::new();
+    let until = Instant::now() + std::time::Duration::from_millis(budget_ms);
+    while Instant::now() < until {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    stats_from(samples)
+}
+
+fn stats_from(mut samples: Vec<f64>) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let q = |p: f64| samples[((n as f64 - 1.0) * p) as usize];
+    Stats { mean_ns: mean, median_ns: q(0.5), p10_ns: q(0.1), p90_ns: q(0.9), iters: n }
+}
+
+/// Format a byte count like the paper's tables (MB with two decimals).
+pub fn fmt_mib(bytes: usize) -> String {
+    format!("{:.2}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+/// Format a ratio annotation like the paper's "(×7.11)".
+pub fn fmt_ratio(base: usize, v: usize) -> String {
+    if v == 0 {
+        return "(×inf)".into();
+    }
+    format!("(×{:.2})", base as f64 / v as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let mut x = 0u64;
+        let s = bench(30, || {
+            for i in 0..100 {
+                x = x.wrapping_add(i * i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(s.iters > 0);
+        assert!(s.median_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+    }
+
+    #[test]
+    fn formatting_matches_paper_style() {
+        assert_eq!(fmt_mib(1024 * 1024), "1.00");
+        assert_eq!(fmt_ratio(7340032, 1048576), "(×7.00)");
+    }
+}

@@ -1,0 +1,337 @@
+//! Experiment drivers: regenerate every table and figure of the paper.
+//!
+//! Each driver prints the same rows/series the paper reports. Absolute
+//! numbers differ from the A100/A800 testbed (see DESIGN.md §2); the
+//! comparisons — who wins, by what factor, where crossovers fall — are
+//! the reproduction target (EXPERIMENTS.md records paper-vs-measured).
+
+use crate::autograd::layers::Backend;
+use crate::autograd::train::{
+    finetune_classifier, measure_single_layer, measure_single_layer_with_state, ClassifyTask,
+    Method,
+};
+use crate::baselines::{self, complex_fft, rfft};
+use crate::coordinator::benchlib::{bench, fmt_mib, fmt_ratio};
+use crate::memtrack::{Category, CATEGORIES};
+use crate::rdfft::{self, plan::cached};
+
+const BACKENDS: [Backend; 3] = [Backend::Fft, Backend::Rfft, Backend::RdFft];
+
+/// Table 1: peak memory (MiB) during single-layer fwd+bwd, over
+/// D ∈ {1024, 4096}, B ∈ {1, 16, 256}, methods FF / LoRA / {fft,rfft,ours}
+/// × p. `scale` shrinks the grid for quick runs (scale=1 reproduces the
+/// paper's full grid; the FF column at D=4096,B=256 is minutes of scalar
+/// matmul, so `--fast` uses D ∈ {256, 1024}).
+pub fn table1(fast: bool) {
+    let (dims, batches, ps): (Vec<usize>, Vec<usize>, Vec<usize>) = if fast {
+        (vec![1024, 256], vec![1, 16], vec![128, 256])
+    } else {
+        (vec![4096, 1024], vec![1, 16, 256], vec![128, 256, 512, 1024, 4096])
+    };
+    println!("# Table 1 — peak memory (MiB) during single-layer training (fwd+bwd)");
+    println!("# rows: method; columns: (D, B); parentheses: reduction vs full fine-tune\n");
+
+    for &d in &dims {
+        let mut header = format!("{:<16}", format!("D = {d}"));
+        for &b in &batches {
+            header.push_str(&format!("{:>22}", format!("B={b}")));
+        }
+        println!("{header}");
+
+        let mut methods: Vec<Method> = vec![
+            Method::FullFinetune,
+            Method::Lora { rank: if d >= 4096 { 64 } else { 32 } },
+        ];
+        for &p in &ps {
+            if p <= d {
+                for bk in BACKENDS {
+                    methods.push(Method::Circulant { backend: bk, p });
+                }
+            }
+        }
+
+        // full fine-tune baselines per batch (for the ratio column)
+        let ff: Vec<usize> = batches
+            .iter()
+            .map(|&b| measure_single_layer_with_state(Method::FullFinetune, d, b, 1).peak_bytes)
+            .collect();
+
+        for m in methods {
+            let mut row = format!("{:<16}", m.label());
+            for (bi, &b) in batches.iter().enumerate() {
+                let cell = measure_single_layer_with_state(m, d, b, 1);
+                let ratio = if matches!(m, Method::FullFinetune) {
+                    String::new()
+                } else {
+                    fmt_ratio(ff[bi], cell.peak_bytes)
+                };
+                row.push_str(&format!("{:>22}", format!("{} {}", fmt_mib(cell.peak_bytes), ratio)));
+            }
+            println!("{row}");
+        }
+        println!();
+    }
+}
+
+/// Fig 2: memory breakdown (weights / trainable / gradients /
+/// intermediates / other) at the peak moment, D fixed, two batch sizes.
+pub fn fig2(d: usize, fast: bool) {
+    let batches: &[usize] = if fast { &[1, 16] } else { &[1, 256] };
+    let p = (d / 8).max(16);
+    println!("# Fig 2 — memory breakdown at peak, single-layer training, D={d}, p={p}");
+    for &b in batches {
+        println!("\n## batch = {b}");
+        println!(
+            "{:<16}{:>12}{:>12}{:>12}{:>14}{:>10}{:>12}",
+            "method", "weights", "trainable", "grads", "intermediate", "other", "peak(MiB)"
+        );
+        let methods = [
+            Method::FullFinetune,
+            Method::Lora { rank: if d >= 4096 { 64 } else { 32 } },
+            Method::Circulant { backend: Backend::Fft, p },
+            Method::Circulant { backend: Backend::Rfft, p },
+            Method::Circulant { backend: Backend::RdFft, p },
+        ];
+        for m in methods {
+            let cell = measure_single_layer_with_state(m, d, b, 1);
+            let s = cell.snapshot;
+            let mut row = format!("{:<16}", m.label());
+            for cat in CATEGORIES {
+                row.push_str(&format!("{:>12}", fmt_mib(s.at_peak[cat.index()])));
+            }
+            println!("{row}{:>12}", fmt_mib(s.peak_total));
+        }
+    }
+    println!(
+        "\n(note: 'intermediate' at the peak is the paper's forward-pass\n\
+         transient-tensor bar; rdFFT rows must show ~0 there)"
+    );
+}
+
+/// Table 2: analytical full-model memory decomposition for LLaMA2-7B and
+/// RoBERTa-large (see `crate::model` for the formulas and DESIGN.md §2
+/// for why analytical substitution is sound here).
+pub fn table2() {
+    use crate::model::{table2_row, ArchSpec};
+    for arch in [ArchSpec::llama2_7b(), ArchSpec::roberta_large()] {
+        println!("\n# Table 2 — {} (analytical, paper decomposition)", arch.name);
+        println!(
+            "{:<16}{:>12}{:>15}{:>15}{:>12}{:>12}",
+            "method", "model(GB)", "trainable(MB)", "gradient(MB)", "others(GB)", "total(GB)"
+        );
+        let gib = 1024.0 * 1024.0 * 1024.0;
+        let mib = 1024.0 * 1024.0;
+        let (loras, ps): (Vec<usize>, Vec<usize>) = if arch.name.starts_with("LLaMA") {
+            (vec![32, 64], vec![512, 1024, 4096])
+        } else {
+            (vec![8, 16], vec![256, 512, 1024])
+        };
+        let mut methods = vec![Method::FullFinetune];
+        methods.extend(loras.iter().map(|&r| Method::Lora { rank: r }));
+        for &p in &ps {
+            for bk in BACKENDS {
+                methods.push(Method::Circulant { backend: bk, p });
+            }
+        }
+        for m in methods {
+            let row = table2_row(&arch, m);
+            println!(
+                "{:<16}{:>12.2}{:>15.2}{:>15.2}{:>12.2}{:>12.2}",
+                row.method,
+                row.model_bytes as f64 / gib,
+                row.trainable_bytes as f64 / mib,
+                row.gradient_bytes as f64 / mib,
+                row.others_bytes as f64 / gib,
+                row.total_bytes() as f64 / gib,
+            );
+        }
+    }
+}
+
+/// Table 3: standalone operator runtime (median, µs) and numerical
+/// accuracy vs the f64 naive-DFT oracle, p ∈ {512, 1024, 4096}.
+pub fn table3() {
+    println!("# Table 3 — operator runtime (µs, median) and accuracy vs f64 DFT\n");
+    println!(
+        "{:<8}{:>6}{:>14}{:>14}{:>14}{:>16}{:>14}",
+        "p", "op", "fft", "rfft", "ours", "abs.err(ours)", "rel.err(ours)"
+    );
+    for &n in &[512usize, 1024, 4096] {
+        let plan = cached(n);
+        let x: Vec<f32> = (0..n).map(|i| ((i * 37 + 11) % 97) as f32 / 48.0 - 1.0).collect();
+
+        // -------- runtimes
+        let fft_fwd = bench(300, || {
+            let s = complex_fft::fft_out_of_place(&x, Category::Other);
+            std::hint::black_box(&s[0]);
+        });
+        let spec_c = complex_fft::fft_out_of_place(&x, Category::Other);
+        let fft_inv = bench(300, || {
+            let s = complex_fft::ifft_out_of_place(&spec_c, Category::Other);
+            std::hint::black_box(&s[0]);
+        });
+        let rfft_fwd = bench(300, || {
+            let s = rfft::rfft_alloc(&x, Category::Other);
+            std::hint::black_box(&s[0]);
+        });
+        let spec_r = rfft::rfft_alloc(&x, Category::Other);
+        let rfft_inv = bench(300, || {
+            let s = rfft::irfft_alloc(&spec_r, Category::Other);
+            std::hint::black_box(&s[0]);
+        });
+        let mut buf = x.clone();
+        let ours_fwd = bench(300, || {
+            rdfft::rdfft_inplace(&plan, &mut buf);
+            std::hint::black_box(&buf[0]);
+        });
+        let ours_inv = bench(300, || {
+            rdfft::irdfft_inplace(&plan, &mut buf);
+            std::hint::black_box(&buf[0]);
+        });
+
+        // -------- accuracy vs f64 oracle
+        let oracle = baselines::naive_dft(&x);
+        let mut packed = x.clone();
+        rdfft::rdfft_inplace(&plan, &mut packed);
+        let (mut abs, mut rel_num, mut rel_den) = (0f64, 0f64, 0f64);
+        for k in 0..=n / 2 {
+            let got = crate::rdfft::layout::get(&packed, k);
+            let want = oracle[k];
+            let e = (((got.0 - want.0) as f64).powi(2) + ((got.1 - want.1) as f64).powi(2)).sqrt();
+            abs = abs.max(e);
+            rel_num += e * e;
+            rel_den += (want.0 as f64).powi(2) + (want.1 as f64).powi(2);
+        }
+        let rel = (rel_num / rel_den.max(1e-30)).sqrt();
+
+        println!(
+            "{:<8}{:>6}{:>14.2}{:>14.2}{:>14.2}{:>16.3e}{:>14.3e}",
+            n, "fwd", fft_fwd.median_us(), rfft_fwd.median_us(), ours_fwd.median_us(), abs, rel
+        );
+        println!(
+            "{:<8}{:>6}{:>14.2}{:>14.2}{:>14.2}{:>16}{:>14}",
+            n, "inv", fft_inv.median_us(), rfft_inv.median_us(), ours_inv.median_us(), "-", "-"
+        );
+    }
+    println!(
+        "\n(paper shape to check: ours ≈ rfft at small p, overhead at 4096;\n\
+         ours-inverse faster than ours-forward; errors at float-noise level)"
+    );
+}
+
+/// Table 4: training throughput (tokens/s on an adapted layer at
+/// LLaMA-like width) and task accuracy parity on the synthetic MRPC-like
+/// classification task.
+pub fn table4(fast: bool) {
+    let d = if fast { 512 } else { 1024 };
+    let (steps, n_train) = if fast { (30, 256) } else { (60, 512) };
+    println!("# Table 4 — throughput (k tokens/s) and task accuracy (%)\n");
+    println!("{:<16}{:>14}{:>12}{:>12}", "method", "thr(ktok/s)", "acc(%)", "loss");
+    let task = ClassifyTask::synthesize(d, n_train, n_train / 2, 5);
+    let mut methods =
+        vec![Method::FullFinetune, Method::Lora { rank: 32 }];
+    for &p in if fast { &[128usize, 256][..] } else { &[128usize, 512, 1024][..] } {
+        for bk in BACKENDS {
+            methods.push(Method::Circulant { backend: bk, p });
+        }
+    }
+    for m in methods {
+        let r = finetune_classifier(&task, m, steps, 16, 0.2, 11);
+        println!(
+            "{:<16}{:>14.2}{:>12.1}{:>12.4}",
+            r.method,
+            r.tokens_per_sec / 1e3,
+            r.test_accuracy * 100.0,
+            r.final_train_loss
+        );
+    }
+    println!(
+        "\n(paper shape: FF/LoRA fastest; ours slower than rfft but with the\n\
+         memory advantage of Table 1; all circulant accuracies within noise)"
+    );
+}
+
+/// Supplementary: verify the zero-allocation claim directly (the number
+/// the whole paper rests on).
+pub fn alloc_audit() {
+    println!("# Allocation audit — tensor allocations during one fwd+bwd step\n");
+    println!("{:<16}{:>14}{:>18}", "method", "allocs", "transient bytes");
+    for bk in BACKENDS {
+        let m = Method::Circulant { backend: bk, p: 256 };
+        crate::memtrack::reset();
+        let mut layer = m.build(1024, 1);
+        crate::memtrack::reset_peak();
+        let x = crate::autograd::Tensor::rand(
+            4,
+            1024,
+            1.0,
+            2,
+            Category::Intermediates,
+        );
+        let y = layer.forward(x);
+        let mut g = crate::autograd::Tensor::zeros_cat(4, 1024, Category::Intermediates);
+        g.fill(1.0);
+        drop(y);
+        let _dx = layer.backward(g);
+        let s = crate::memtrack::snapshot();
+        println!(
+            "{:<16}{:>14}{:>18}",
+            m.label(),
+            s.alloc_count,
+            s.peak_by_cat[Category::Intermediates.index()]
+        );
+    }
+}
+
+/// Ablation: optimizer-state memory per method at LLaMA2-7B scale — why
+/// the paper trains with plain SGD (§5.1.2 "We use stochastic gradient
+/// descent (SGD) as the optimizer in all experiments"). Adam on full
+/// fine-tuning alone would dwarf every operator-level saving.
+pub fn optim_ablation() {
+    use crate::autograd::optim::OptimKind;
+    use crate::model::ArchSpec;
+    let arch = ArchSpec::llama2_7b();
+    let kinds = [
+        OptimKind::Sgd,
+        OptimKind::Momentum { beta: 0.9 },
+        OptimKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+    ];
+    println!("# Optimizer-state memory at {} scale (GB, fp32 state)\n", arch.name);
+    println!("{:<16}{:>10}{:>12}{:>10}", "method", "sgd", "momentum", "adam");
+    let gib = 1024.0f64 * 1024.0 * 1024.0;
+    for m in [
+        Method::FullFinetune,
+        Method::Lora { rank: 32 },
+        Method::Circulant { backend: Backend::RdFft, p: 512 },
+        Method::Circulant { backend: Backend::RdFft, p: 4096 },
+    ] {
+        let params = arch.trainable_params(m);
+        let mut row = format!("{:<16}", m.label());
+        for k in kinds {
+            row.push_str(&format!(
+                "{:>10.3}",
+                (params * k.state_per_param() * 4) as f64 / gib
+            ));
+        }
+        println!("{row}");
+    }
+    println!(
+        "\n(read: adapter methods make even Adam affordable — 2×8 MB —\n\
+         while full fine-tuning pays 50 GB; the paper's SGD choice only\n\
+         matters for the FF baseline, so comparisons stay fair)"
+    );
+}
+
+/// Measure the single-layer grid cell-by-cell and return machine-readable
+/// rows — used by integration tests.
+pub fn table1_cells(d: usize, batches: &[usize], p: usize) -> Vec<(String, usize, usize)> {
+    let mut rows = Vec::new();
+    for bk in BACKENDS {
+        for &b in batches {
+            let m = Method::Circulant { backend: bk, p };
+            let cell = measure_single_layer(m, d, b, 1);
+            rows.push((m.label(), b, cell.peak_bytes));
+        }
+    }
+    rows
+}

@@ -1,0 +1,22 @@
+//! L3 coordinator: training orchestration and the experiment harness.
+//!
+//! The paper's contribution lives at the operator level (L1/L2), so the
+//! coordinator is the thin-but-real driver the system prompt prescribes:
+//! process lifecycle, CLI plumbing (`main.rs`), the end-to-end training
+//! loop over the PJRT runtime, metrics, checkpointing — plus one driver
+//! per table/figure of the paper's evaluation section:
+//!
+//! | driver                | paper artifact |
+//! |-----------------------|----------------|
+//! | [`experiments::table1`] | Table 1 (single-layer peak memory grid) |
+//! | [`experiments::fig2`]   | Fig 2 (memory breakdown)                |
+//! | [`experiments::table2`] | Table 2 (full-model memory)             |
+//! | [`experiments::table3`] | Table 3 (operator runtime + accuracy)   |
+//! | [`experiments::table4`] | Table 4 (throughput + task accuracy)    |
+//! | [`trainer::Trainer`]    | end-to-end loss-curve run               |
+
+pub mod benchlib;
+pub mod experiments;
+pub mod trainer;
+
+pub use trainer::{TrainReport, Trainer, TrainerConfig};

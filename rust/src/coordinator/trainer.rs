@@ -1,0 +1,158 @@
+//! End-to-end trainer: drives the AOT-compiled train step from Rust.
+//!
+//! The loop is pure Rust + PJRT: batches come from [`crate::data`], the
+//! step executes the HLO module produced by `aot.py` (L2 model + L1
+//! Pallas rdFFT kernels), parameters thread output→input, metrics stream
+//! to stdout and to a CSV the experiments record in EXPERIMENTS.md.
+
+use crate::data::{Batcher, CorpusGen};
+use crate::runtime::Runtime;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Trainer configuration (data + loop control; the model/optimizer config
+/// is baked into the artifacts).
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub corpus_bytes: usize,
+    pub seed: u64,
+    pub log_csv: Option<PathBuf>,
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            steps: 300,
+            eval_every: 50,
+            eval_batches: 4,
+            corpus_bytes: 1 << 20,
+            seed: 0,
+            log_csv: None,
+            checkpoint: None,
+        }
+    }
+}
+
+/// Summary of a finished run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub final_eval_loss: Option<f32>,
+    pub tokens_per_sec: f64,
+    pub losses: Vec<(usize, f32)>,
+}
+
+/// The training orchestrator.
+pub struct Trainer {
+    runtime: Runtime,
+    cfg: TrainerConfig,
+}
+
+impl Trainer {
+    pub fn new(artifacts: &Path, cfg: TrainerConfig) -> Result<Self> {
+        let runtime = Runtime::load(artifacts)?;
+        Ok(Trainer { runtime, cfg })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Run the training loop; prints progress and returns the report.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let m = &self.runtime.manifest;
+        let (batch, seq) = (m.batch, m.seq_len);
+        println!(
+            "[train] platform={} model: d={} layers={} p={} | {} trainable / {} frozen params",
+            self.runtime.platform(),
+            m.d_model,
+            m.n_layers,
+            m.p,
+            m.num_trainable_params,
+            m.num_frozen_params
+        );
+        let text = CorpusGen::new(self.cfg.seed).text(self.cfg.corpus_bytes);
+        let mut batcher = Batcher::new(&text, batch, seq, self.cfg.seed + 1);
+        let eval_text = CorpusGen::new(self.cfg.seed + 7777).text(64 * 1024);
+        let eval_batcher = Batcher::new(&eval_text, batch, seq, 0);
+
+        let mut csv = match &self.cfg.log_csv {
+            Some(p) => {
+                let mut f = std::fs::File::create(p)
+                    .with_context(|| format!("creating {}", p.display()))?;
+                writeln!(f, "step,loss,eval_loss,tokens_per_sec")?;
+                Some(f)
+            }
+            None => None,
+        };
+
+        let mut losses = Vec::new();
+        let mut first_loss = None;
+        let mut final_eval = None;
+        let t0 = Instant::now();
+        let mut tokens_seen = 0usize;
+
+        for step in 1..=self.cfg.steps {
+            let (toks, tgts) = batcher.next_batch();
+            let loss = self.runtime.train_step(&toks, &tgts)?;
+            tokens_seen += batch * seq;
+            first_loss.get_or_insert(loss);
+            losses.push((step, loss));
+
+            let do_eval = step % self.cfg.eval_every == 0 || step == self.cfg.steps;
+            let mut eval_loss = None;
+            if do_eval {
+                let mut acc = 0.0f32;
+                for i in 0..self.cfg.eval_batches {
+                    let (et, eg) = eval_batcher.eval_batch(i);
+                    acc += self.runtime.eval_step(&et, &eg)?;
+                }
+                let e = acc / self.cfg.eval_batches as f32;
+                eval_loss = Some(e);
+                final_eval = Some(e);
+                let tps = tokens_seen as f64 / t0.elapsed().as_secs_f64();
+                println!(
+                    "[train] step {step:>5}  loss {loss:.4}  eval {e:.4}  {:.0} tok/s",
+                    tps
+                );
+            }
+            if let Some(f) = csv.as_mut() {
+                writeln!(
+                    f,
+                    "{step},{loss},{},{:.1}",
+                    eval_loss.map(|e| e.to_string()).unwrap_or_default(),
+                    tokens_seen as f64 / t0.elapsed().as_secs_f64()
+                )?;
+            }
+        }
+
+        if let Some(ck) = &self.cfg.checkpoint {
+            let flat = self.runtime.trainable_flat()?;
+            let mut bytes = Vec::with_capacity(flat.len() * 4);
+            for v in &flat {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            std::fs::write(ck, &bytes)
+                .with_context(|| format!("writing checkpoint {}", ck.display()))?;
+            println!("[train] checkpoint: {} ({} params)", ck.display(), flat.len());
+        }
+
+        let secs = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            steps: self.cfg.steps,
+            first_loss: first_loss.unwrap_or(f32::NAN),
+            final_loss: losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN),
+            final_eval_loss: final_eval,
+            tokens_per_sec: tokens_seen as f64 / secs,
+            losses,
+        })
+    }
+}

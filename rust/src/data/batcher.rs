@@ -1,0 +1,103 @@
+//! Batch assembly: fixed-geometry `(tokens, targets)` pairs for the AOT
+//! train step (shapes are baked into the HLO, so the batcher owns the
+//! contract of always producing exactly `(batch, seq_len)`).
+
+use super::ByteTokenizer;
+use crate::autograd::tensor::Rng;
+
+/// Produces next-token-prediction batches from a token stream.
+pub struct Batcher {
+    tokens: Vec<i32>,
+    batch: usize,
+    seq_len: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(text: &str, batch: usize, seq_len: usize, seed: u64) -> Self {
+        let tokens = ByteTokenizer.encode(text);
+        assert!(
+            tokens.len() > seq_len + 1,
+            "corpus too small: {} tokens for seq_len {}",
+            tokens.len(),
+            seq_len
+        );
+        Batcher { tokens, batch, seq_len, rng: Rng::new(seed) }
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Sample a batch of random windows; targets are inputs shifted by
+    /// one (the last position predicts the next byte after the window).
+    pub fn next_batch(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(self.batch * self.seq_len);
+        let mut tgts = Vec::with_capacity(self.batch * self.seq_len);
+        for _ in 0..self.batch {
+            let start = self.rng.below(self.tokens.len() - self.seq_len - 1);
+            toks.extend_from_slice(&self.tokens[start..start + self.seq_len]);
+            tgts.extend_from_slice(&self.tokens[start + 1..start + self.seq_len + 1]);
+        }
+        (toks, tgts)
+    }
+
+    /// Deterministic sequential batches for evaluation (no overlap
+    /// randomness; wraps around).
+    pub fn eval_batch(&self, index: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(self.batch * self.seq_len);
+        let mut tgts = Vec::with_capacity(self.batch * self.seq_len);
+        let stride = self.seq_len + 1;
+        let max_start = self.tokens.len() - stride;
+        for b in 0..self.batch {
+            let start = ((index * self.batch + b) * stride) % max_start;
+            toks.extend_from_slice(&self.tokens[start..start + self.seq_len]);
+            tgts.extend_from_slice(&self.tokens[start + 1..start + self.seq_len + 1]);
+        }
+        (toks, tgts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusGen;
+
+    fn make() -> Batcher {
+        let text = CorpusGen::new(1).text(4096);
+        Batcher::new(&text, 4, 32, 9)
+    }
+
+    #[test]
+    fn batch_geometry_is_exact() {
+        let mut b = make();
+        let (t, g) = b.next_batch();
+        assert_eq!(t.len(), 4 * 32);
+        assert_eq!(g.len(), 4 * 32);
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let mut b = make();
+        let (t, g) = b.next_batch();
+        // within each row, target[i] should equal token[i+1]
+        for row in 0..4 {
+            for i in 0..31 {
+                assert_eq!(g[row * 32 + i], t[row * 32 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_batches_are_deterministic() {
+        let b = make();
+        assert_eq!(b.eval_batch(3), b.eval_batch(3));
+        assert_ne!(b.eval_batch(0).0, b.eval_batch(1).0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_tiny_corpus() {
+        Batcher::new("ab", 1, 32, 0);
+    }
+}

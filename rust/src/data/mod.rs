@@ -1,0 +1,56 @@
+//! Data pipeline: synthetic corpus generation, byte-level tokenization and
+//! batch assembly for the end-to-end training runs.
+//!
+//! The paper fine-tunes on GSM8K / MRPC; those datasets are not available
+//! in this offline environment, so the coordinator trains on a synthetic
+//! corpus with controllable structure (documented substitution, DESIGN.md
+//! §2): a second-order word-level Markov source over a small vocabulary
+//! produces text whose per-byte entropy is far below uniform, giving the
+//! LM a real signal to learn and a loss curve with the familiar shape.
+
+pub mod batcher;
+pub mod corpus;
+
+pub use batcher::Batcher;
+pub use corpus::CorpusGen;
+
+/// Byte-level tokenizer (vocab 256): identity on bytes, like the paper's
+/// smallest-footprint tokenization. Provided as a struct so alternative
+/// tokenizers can slot in behind the same interface.
+#[derive(Debug, Default, Clone)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_tokenizer_roundtrips_ascii() {
+        let t = ByteTokenizer;
+        let s = "the quick brown fox; 123!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn byte_tokenizer_tokens_in_vocab() {
+        let t = ByteTokenizer;
+        for tok in t.encode("hello world") {
+            assert!((0..256).contains(&tok));
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! # rdFFT — Memory-Efficient Training with an In-Place FFT
+//!
+//! Reproduction of *"Memory-Efficient Training with In-Place FFT
+//! Implementation"* (NIPS 2025). The library provides:
+//!
+//! * [`rdfft`] — the paper's contribution: a **real-domain, fully in-place**
+//!   FFT/IFFT pair operating inside the original `n`-real-valued buffer,
+//!   with packed-spectrum elementwise ops, circulant / block-circulant
+//!   matrix products (forward **and** backward, Eq. 4/5 of the paper), and a
+//!   software-`bf16` path.
+//! * [`baselines`] — the comparators the paper evaluates against: an
+//!   out-of-place complex FFT (`torch.fft.fft` analogue, 2n-real output) and
+//!   an out-of-place real FFT (`torch.fft.rfft` analogue, n+2-real output),
+//!   plus a naive DFT oracle used for accuracy tables.
+//! * [`memtrack`] — a category-tagged tracking allocator that measures peak
+//!   memory and per-category breakdowns exactly the way the paper's PyTorch
+//!   profiler experiments do (Table 1, Table 2, Fig 2).
+//! * [`autograd`] — a minimal tape autograd over tracked tensors with the
+//!   paper's fine-tuning layers (full fine-tune, LoRA, circulant adapters in
+//!   fft / rfft / rdFFT backends). This is the measurement substrate for the
+//!   single-layer experiments.
+//! * [`model`] — analytical full-model memory model (LLaMA2-7B,
+//!   RoBERTa-large; Table 2) plus the small-transformer config used by the
+//!   end-to-end training example.
+//! * [`data`] — synthetic corpus / classification data generators and
+//!   batching used by the coordinator.
+//! * [`runtime`] — PJRT CPU client wrapper that loads the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` (the L2 JAX model with
+//!   the L1 Pallas rdFFT kernel inside) and executes them from Rust.
+//! * [`coordinator`] — the L3 training orchestrator: training loop, metrics,
+//!   evaluation, and the experiment drivers that regenerate every table and
+//!   figure of the paper.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! measured-vs-paper results.
+
+pub mod autograd;
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod memtrack;
+pub mod model;
+pub mod rdfft;
+pub mod runtime;

@@ -1,0 +1,127 @@
+//! `repro` — CLI for the rdFFT reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts:
+//!
+//! ```text
+//! repro train   [--steps N] [--artifacts DIR] [--csv F] [--ckpt F]
+//! repro table1  [--fast]        single-layer peak-memory grid
+//! repro table2                  full-model memory decomposition
+//! repro table3                  operator runtime + accuracy
+//! repro table4  [--fast]        throughput + task-accuracy parity
+//! repro fig2    [--d D] [--fast] memory breakdown at peak
+//! repro audit                   zero-allocation audit
+//! repro report                  run everything (fast variants)
+//! ```
+//!
+//! (clap is unavailable in this offline environment; parsing is a small
+//! hand-rolled matcher with the same UX.)
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+use rdfft::coordinator::{experiments, Trainer, TrainerConfig};
+
+struct Args {
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    Some(argv[i].clone())
+                } else {
+                    None
+                };
+                flags.push((name.to_string(), val));
+            }
+            i += 1;
+        }
+        Args { flags }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.iter().find(|(n, _)| n == name).and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <command> [flags]\n\
+         commands:\n\
+           train    run the end-to-end training loop over the AOT artifacts\n\
+                    [--steps N=300] [--artifacts DIR=artifacts] [--csv FILE]\n\
+                    [--ckpt FILE] [--eval-every N=50] [--seed S=0]\n\
+           table1   single-layer peak-memory grid   [--fast]\n\
+           table2   full-model memory decomposition\n\
+           table3   operator runtime + accuracy\n\
+           table4   throughput + accuracy parity    [--fast]\n\
+           fig2     memory breakdown at peak        [--d D=1024] [--fast]\n\
+           audit    zero-allocation audit\n\
+           optim    optimizer-state memory ablation\n\
+           report   all of the above (fast variants)"
+    );
+    std::process::exit(2);
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let cfg = TrainerConfig {
+        steps: args.get_usize("steps", 300),
+        eval_every: args.get_usize("eval-every", 50),
+        seed: args.get_usize("seed", 0) as u64,
+        log_csv: args.get("csv").map(PathBuf::from),
+        checkpoint: args.get("ckpt").map(PathBuf::from),
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&artifacts, cfg)?;
+    let report = trainer.run()?;
+    println!(
+        "[train] done: loss {:.4} -> {:.4} over {} steps ({:.0} tok/s)",
+        report.first_loss, report.final_loss, report.steps, report.tokens_per_sec
+    );
+    if report.final_loss >= report.first_loss {
+        bail!("training did not reduce the loss");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "train" => cmd_train(&args)?,
+        "table1" => experiments::table1(args.has("fast")),
+        "table2" => experiments::table2(),
+        "table3" => experiments::table3(),
+        "table4" => experiments::table4(args.has("fast")),
+        "fig2" => experiments::fig2(args.get_usize("d", 1024), args.has("fast")),
+        "audit" => experiments::alloc_audit(),
+        "optim" => experiments::optim_ablation(),
+        "report" => {
+            experiments::table1(true);
+            experiments::fig2(1024, true);
+            experiments::table2();
+            experiments::table3();
+            experiments::table4(true);
+            experiments::alloc_audit();
+            experiments::optim_ablation();
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

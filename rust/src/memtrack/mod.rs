@@ -1,0 +1,311 @@
+//! Category-tagged tracking allocator.
+//!
+//! The paper measures peak GPU memory with the PyTorch memory profiler and
+//! breaks it down into *model weights*, *trainable params*, *gradients* and
+//! *others / intermediates* (Table 1, Table 2, Fig 2). This module measures
+//! the same quantities for our Rust executions: every tensor buffer is
+//! registered here with a [`Category`] when allocated and unregistered when
+//! dropped; we track the running total, the peak total, and the per-category
+//! composition *at the moment of peak* — which is exactly what
+//! `torch.cuda.max_memory_allocated` + a category breakdown gives.
+//!
+//! Tracking is thread-local so `cargo test` threads do not interfere.
+
+use std::cell::RefCell;
+
+/// Memory category, mirroring the paper's Fig 2 / Table 2 breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Frozen base-model weights.
+    Weights,
+    /// Trainable parameters (adapter vectors, LoRA factors, or the full
+    /// weight matrix under full fine-tuning).
+    Trainable,
+    /// Gradient buffers of trainable parameters.
+    Gradients,
+    /// Transient tensors created during forward/backward (activations,
+    /// FFT scratch, saved-for-backward values). The paper's "others".
+    Intermediates,
+    /// Anything else (optimizer state, metrics, ...).
+    Other,
+}
+
+pub const CATEGORIES: [Category; 5] = [
+    Category::Weights,
+    Category::Trainable,
+    Category::Gradients,
+    Category::Intermediates,
+    Category::Other,
+];
+
+impl Category {
+    pub fn index(self) -> usize {
+        match self {
+            Category::Weights => 0,
+            Category::Trainable => 1,
+            Category::Gradients => 2,
+            Category::Intermediates => 3,
+            Category::Other => 4,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Weights => "weights",
+            Category::Trainable => "trainable",
+            Category::Gradients => "gradients",
+            Category::Intermediates => "intermediates",
+            Category::Other => "other",
+        }
+    }
+}
+
+/// A point-in-time (or peak) memory snapshot in bytes.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Snapshot {
+    /// Current bytes per category.
+    pub current: [usize; 5],
+    /// Peak total bytes observed since the last [`reset`].
+    pub peak_total: usize,
+    /// Per-category composition at the moment the peak total was reached.
+    pub at_peak: [usize; 5],
+    /// Independent per-category peaks.
+    pub peak_by_cat: [usize; 5],
+    /// Number of allocations since reset (allocation-count claims:
+    /// rdFFT performs **zero** intermediate allocations).
+    pub alloc_count: usize,
+}
+
+impl Snapshot {
+    pub fn current_total(&self) -> usize {
+        self.current.iter().sum()
+    }
+    pub fn peak_mib(&self) -> f64 {
+        self.peak_total as f64 / (1024.0 * 1024.0)
+    }
+    pub fn at_peak_mib(&self, c: Category) -> f64 {
+        self.at_peak[c.index()] as f64 / (1024.0 * 1024.0)
+    }
+}
+
+#[derive(Default)]
+struct Tracker {
+    current: [usize; 5],
+    peak_total: usize,
+    at_peak: [usize; 5],
+    peak_by_cat: [usize; 5],
+    alloc_count: usize,
+    /// Category override stack (see [`ScopedCategory`]).
+    scope: Vec<Category>,
+}
+
+thread_local! {
+    static TRACKER: RefCell<Tracker> = RefCell::new(Tracker::default());
+}
+
+/// Reset all counters (start of an experiment cell).
+pub fn reset() {
+    TRACKER.with(|t| *t.borrow_mut() = Tracker::default());
+}
+
+/// Reset only the peak statistics, keeping live allocations registered.
+/// Used to measure the peak of a *phase* (e.g. just the backward pass)
+/// while the model's persistent tensors remain counted in `current`.
+pub fn reset_peak() {
+    TRACKER.with(|t| {
+        let mut t = t.borrow_mut();
+        let total: usize = t.current.iter().sum();
+        t.peak_total = total;
+        t.at_peak = t.current;
+        t.peak_by_cat = t.current;
+        t.alloc_count = 0;
+    });
+}
+
+/// Register `bytes` of storage under `cat`. Call [`on_free`] with the same
+/// arguments when the storage is dropped. Tensor types do this in their
+/// constructors/Drop impls; prefer those over calling this directly.
+pub fn on_alloc(bytes: usize, cat: Category) {
+    TRACKER.with(|t| {
+        let mut t = t.borrow_mut();
+        let i = cat.index();
+        t.current[i] += bytes;
+        t.alloc_count += 1;
+        let total: usize = t.current.iter().sum();
+        if total > t.peak_total {
+            t.peak_total = total;
+            t.at_peak = t.current;
+        }
+        if t.current[i] > t.peak_by_cat[i] {
+            t.peak_by_cat[i] = t.current[i];
+        }
+    });
+}
+
+/// Unregister `bytes` of storage under `cat`.
+pub fn on_free(bytes: usize, cat: Category) {
+    TRACKER.with(|t| {
+        let mut t = t.borrow_mut();
+        let i = cat.index();
+        debug_assert!(t.current[i] >= bytes, "free of untracked bytes");
+        t.current[i] = t.current[i].saturating_sub(bytes);
+    });
+}
+
+/// Take a snapshot of the current tracking state.
+pub fn snapshot() -> Snapshot {
+    TRACKER.with(|t| {
+        let t = t.borrow();
+        Snapshot {
+            current: t.current,
+            peak_total: t.peak_total,
+            at_peak: t.at_peak,
+            peak_by_cat: t.peak_by_cat,
+            alloc_count: t.alloc_count,
+        }
+    })
+}
+
+/// The category new tensors default to: the innermost [`ScopedCategory`],
+/// or `Intermediates` when no scope is active (transient tensors are the
+/// common case inside forward/backward).
+pub fn default_category() -> Category {
+    TRACKER.with(|t| t.borrow().scope.last().copied().unwrap_or(Category::Intermediates))
+}
+
+/// RAII guard that makes `cat` the default category for tensors allocated
+/// while it is alive. Nestable.
+pub struct ScopedCategory;
+
+impl ScopedCategory {
+    pub fn new(cat: Category) -> Self {
+        TRACKER.with(|t| t.borrow_mut().scope.push(cat));
+        ScopedCategory
+    }
+}
+
+impl Drop for ScopedCategory {
+    fn drop(&mut self) {
+        TRACKER.with(|t| {
+            t.borrow_mut().scope.pop();
+        });
+    }
+}
+
+/// A `Vec<f32>` whose backing storage is registered with the tracker.
+/// This is the building block for tensors and for the out-of-place FFT
+/// baselines (whose extra buffers are precisely what the paper measures).
+pub struct TrackedVec {
+    data: Vec<f32>,
+    cat: Category,
+}
+
+impl TrackedVec {
+    /// Allocate `len` zeroed f32s under `cat`.
+    pub fn zeros(len: usize, cat: Category) -> Self {
+        on_alloc(len * 4, cat);
+        TrackedVec { data: vec![0.0; len], cat }
+    }
+
+    /// Allocate from existing data under `cat`.
+    pub fn from_vec(data: Vec<f32>, cat: Category) -> Self {
+        on_alloc(data.len() * 4, cat);
+        TrackedVec { data, cat }
+    }
+
+    pub fn category(&self) -> Category {
+        self.cat
+    }
+}
+
+impl std::ops::Deref for TrackedVec {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for TrackedVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl Drop for TrackedVec {
+    fn drop(&mut self) {
+        on_free(self.data.len() * 4, self.cat);
+    }
+}
+
+impl Clone for TrackedVec {
+    fn clone(&self) -> Self {
+        TrackedVec::from_vec(self.data.clone(), self.cat)
+    }
+}
+
+impl std::fmt::Debug for TrackedVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TrackedVec(len={}, cat={})", self.data.len(), self.cat.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_peak_and_breakdown() {
+        reset();
+        let w = TrackedVec::zeros(1024, Category::Weights); // 4 KiB
+        {
+            let _tmp = TrackedVec::zeros(2048, Category::Intermediates); // 8 KiB
+            let s = snapshot();
+            assert_eq!(s.current_total(), 12 * 1024);
+            assert_eq!(s.peak_total, 12 * 1024);
+        }
+        let s = snapshot();
+        assert_eq!(s.current_total(), 4 * 1024);
+        assert_eq!(s.peak_total, 12 * 1024);
+        assert_eq!(s.at_peak[Category::Weights.index()], 4 * 1024);
+        assert_eq!(s.at_peak[Category::Intermediates.index()], 8 * 1024);
+        drop(w);
+        assert_eq!(snapshot().current_total(), 0);
+    }
+
+    #[test]
+    fn scoped_category_applies() {
+        reset();
+        assert_eq!(default_category(), Category::Intermediates);
+        {
+            let _g = ScopedCategory::new(Category::Trainable);
+            assert_eq!(default_category(), Category::Trainable);
+            {
+                let _g2 = ScopedCategory::new(Category::Gradients);
+                assert_eq!(default_category(), Category::Gradients);
+            }
+            assert_eq!(default_category(), Category::Trainable);
+        }
+        assert_eq!(default_category(), Category::Intermediates);
+    }
+
+    #[test]
+    fn reset_peak_keeps_live_allocations() {
+        reset();
+        let _w = TrackedVec::zeros(1024, Category::Weights);
+        {
+            let _tmp = TrackedVec::zeros(4096, Category::Intermediates);
+        }
+        assert_eq!(snapshot().peak_total, 4 * 1024 + 16 * 1024);
+        reset_peak();
+        let s = snapshot();
+        assert_eq!(s.peak_total, 4 * 1024);
+        assert_eq!(s.alloc_count, 0);
+    }
+
+    #[test]
+    fn alloc_count_counts_allocations() {
+        reset();
+        let _a = TrackedVec::zeros(8, Category::Other);
+        let _b = TrackedVec::zeros(8, Category::Other);
+        assert_eq!(snapshot().alloc_count, 2);
+    }
+}

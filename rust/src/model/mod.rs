@@ -1,0 +1,284 @@
+//! Full-model memory accounting (Table 2).
+//!
+//! The paper's Table 2 measures peak GPU memory while fine-tuning
+//! LLaMA2-7B (GSM8K config, bf16 forward) and RoBERTa-large (MRPC config,
+//! fp32). We cannot run those models on this testbed, so this module
+//! provides the *analytical* decomposition the paper itself uses —
+//! `model + trainable + gradient + others` — parameterised by the real
+//! architectures, with the method-dependent `others` term derived from the
+//! same per-operator allocation rules our measured single-layer substrate
+//! obeys (fft: complex out-of-place intermediates; rfft: half-spectrum
+//! out-of-place; rdFFT: none). The single-layer rules are validated
+//! byte-exactly by `memtrack` measurements (Table 1), which is what makes
+//! this extrapolation credible; see DESIGN.md §2.
+
+use crate::autograd::layers::Backend;
+use crate::autograd::train::Method;
+
+/// A transformer architecture, with the training-time precision choices
+/// the paper reports.
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    /// Bytes per base-model parameter (2 = bf16, 4 = fp32).
+    pub param_bytes: usize,
+    /// Bytes per gradient element of *trainable* params (paper: LLaMA
+    /// stores grads in fp32 even with bf16 forward; RoBERTa is fp32
+    /// throughout).
+    pub grad_bytes: usize,
+    /// Bytes per activation element in the forward pass.
+    pub act_bytes: usize,
+    /// Number of adapted projections per layer (the paper's BCA setup
+    /// adapts the attention q/v projections).
+    pub adapted_per_layer: usize,
+    /// MLP matrices per layer (LLaMA's SwiGLU has 3, classic FFN has 2).
+    pub mlp_mats: usize,
+}
+
+impl ArchSpec {
+    /// LLaMA2-7B with the paper's GSM8K configuration
+    /// (per-device batch 2, bf16 forward, fp32 grads).
+    pub fn llama2_7b() -> Self {
+        ArchSpec {
+            name: "LLaMA2-7B",
+            n_layers: 32,
+            d_model: 4096,
+            d_ff: 11008,
+            n_heads: 32,
+            vocab: 32000,
+            seq_len: 512,
+            batch: 2,
+            param_bytes: 2,
+            grad_bytes: 4,
+            act_bytes: 2,
+            adapted_per_layer: 2,
+            mlp_mats: 3,
+        }
+    }
+
+    /// RoBERTa-large with the paper's MRPC configuration
+    /// (batch 32, fp32 throughout).
+    pub fn roberta_large() -> Self {
+        ArchSpec {
+            name: "RoBERTa-Large",
+            n_layers: 24,
+            d_model: 1024,
+            d_ff: 4096,
+            n_heads: 16,
+            vocab: 50265,
+            seq_len: 128,
+            batch: 32,
+            param_bytes: 4,
+            grad_bytes: 4,
+            act_bytes: 4,
+            adapted_per_layer: 2,
+            mlp_mats: 2,
+        }
+    }
+
+    /// Total base parameters (standard transformer counting; attention
+    /// uses 4 d² matrices, MLP 2·d·ff, embeddings vocab·d).
+    pub fn num_params(&self) -> usize {
+        let per_layer = 4 * self.d_model * self.d_model
+            + self.mlp_mats * self.d_model * self.d_ff
+            // layernorm scales/biases
+            + 4 * self.d_model;
+        self.n_layers * per_layer + self.vocab * self.d_model + self.seq_len * self.d_model
+    }
+
+    /// Trainable parameter count for a method.
+    pub fn trainable_params(&self, method: Method) -> usize {
+        match method {
+            Method::FullFinetune => self.num_params(),
+            Method::Lora { rank } => {
+                // LoRA on the same adapted projections: A (r×d) + B (d×r)
+                self.n_layers * self.adapted_per_layer * 2 * rank * self.d_model
+            }
+            Method::Circulant { p, .. } => {
+                // each adapted d×d projection: (d/p)² blocks × p params
+                self.n_layers * self.adapted_per_layer * (self.d_model / p) * (self.d_model / p)
+                    * p
+            }
+        }
+    }
+
+    /// Baseline activation footprint of one training step (everything
+    /// saved for backward that is *method independent*): per layer the
+    /// standard set ≈ 14·B·T·d + 2·B·H·T² attention maps, plus logits.
+    pub fn base_activation_bytes(&self) -> usize {
+        let btd = self.batch * self.seq_len * self.d_model;
+        let att = self.batch * self.n_heads * self.seq_len * self.seq_len;
+        let per_layer = 14 * btd + 2 * att;
+        let logits = self.batch * self.seq_len * self.vocab;
+        (self.n_layers * per_layer + logits + 2 * btd) * self.act_bytes
+    }
+
+    /// Method-dependent transient bytes per step — the FFT intermediates
+    /// of the adapted projections. Derived from the allocation rules the
+    /// Table 1 substrate measures:
+    /// * fft:  promote x,c to complex (2·4B per scalar), product + accum +
+    ///         inverse all complex out-of-place, plus `.real` extraction.
+    /// * rfft: half-spectra (n+2 reals per n), products out-of-place.
+    /// * ours: zero.
+    pub fn method_transient_bytes(&self, method: Method) -> usize {
+        match method {
+            Method::FullFinetune => 0,
+            Method::Lora { rank } => {
+                // saved xAᵀ per adapted projection (fwd) at act precision
+                self.n_layers
+                    * self.adapted_per_layer
+                    * self.batch
+                    * self.seq_len
+                    * rank
+                    * self.act_bytes
+            }
+            Method::Circulant { backend, p } => {
+                let blocks = self.d_model / p; // per projection, per token
+                let tok = self.batch * self.seq_len;
+                // spectra live in fp32 complex (torch upcasts bf16 — the
+                // paper's "fft and rfft do not support bf16 arithmetic")
+                let per_proj = match backend {
+                    Backend::Fft => {
+                        // x̂ (complex 8B·d) + ĉ (8B·d·blocks) + ŷ acc (8B·d)
+                        // + product temp (8B·p) + real() copy (4B·d)
+                        tok * (8 * self.d_model * 2 + 4 * self.d_model)
+                            + 8 * self.d_model * blocks
+                    }
+                    Backend::Rfft => {
+                        // half spectra: (p/2+1) complex per block ≈ (n+2)/2n
+                        let half = |n: usize| (n / p) * (p / 2 + 1) * 8;
+                        tok * (2 * half(self.d_model)) + half(self.d_model) * blocks
+                            + tok * 4 * self.d_model
+                    }
+                    Backend::RdFft => 0,
+                };
+                self.n_layers * self.adapted_per_layer * per_proj
+            }
+        }
+    }
+}
+
+/// One Table-2 row: the paper's five columns, in bytes.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub method: String,
+    pub model_bytes: usize,
+    pub trainable_bytes: usize,
+    pub gradient_bytes: usize,
+    pub others_bytes: usize,
+}
+
+impl Table2Row {
+    pub fn total_bytes(&self) -> usize {
+        self.model_bytes + self.trainable_bytes + self.gradient_bytes + self.others_bytes
+    }
+}
+
+/// Compute a full Table-2 row for `method` on `arch`.
+pub fn table2_row(arch: &ArchSpec, method: Method) -> Table2Row {
+    let trainable = arch.trainable_params(method);
+    let (trainable_bytes, gradient_bytes) = match method {
+        // full fine-tuning updates the base weights in place: no separate
+        // trainable tensor, but full-size gradients
+        Method::FullFinetune => (0, arch.num_params() * arch.grad_bytes),
+        _ => (trainable * 4, trainable * arch.grad_bytes),
+    };
+    Table2Row {
+        method: method.label(),
+        model_bytes: arch.num_params() * arch.param_bytes,
+        trainable_bytes,
+        gradient_bytes,
+        others_bytes: arch.base_activation_bytes() + arch.method_transient_bytes(method),
+    }
+}
+
+/// The small-transformer config used by the end-to-end example — kept
+/// here so Rust-side tooling can reason about the model the artifacts
+/// contain without re-parsing Python.
+#[derive(Debug, Clone)]
+pub struct SmallConfig {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+impl SmallConfig {
+    pub fn from_manifest(m: &crate::runtime::Manifest) -> Self {
+        SmallConfig { d_model: m.d_model, n_layers: m.n_layers, d_ff: 0, vocab: m.vocab }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+    #[test]
+    fn llama_param_count_is_about_7b() {
+        let n = ArchSpec::llama2_7b().num_params();
+        assert!((6.0e9..8.0e9).contains(&(n as f64)), "{n}");
+    }
+
+    #[test]
+    fn roberta_param_count_is_about_355m() {
+        let n = ArchSpec::roberta_large().num_params();
+        assert!((3.0e8..4.5e8).contains(&(n as f64)), "{n}");
+    }
+
+    #[test]
+    fn llama_base_model_close_to_paper() {
+        // paper: 12.61 GB in bf16
+        let gb = ArchSpec::llama2_7b().num_params() as f64 * 2.0 / GIB;
+        assert!((11.5..14.0).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn circulant_trainable_scales_inversely_with_p() {
+        let arch = ArchSpec::llama2_7b();
+        let m512 = arch.trainable_params(Method::Circulant { backend: Backend::RdFft, p: 512 });
+        let m1024 = arch.trainable_params(Method::Circulant { backend: Backend::RdFft, p: 1024 });
+        assert_eq!(m512, 2 * m1024, "halving p doubles params");
+    }
+
+    #[test]
+    fn llama_gradients_twice_trainable_bytes() {
+        // paper: grads fp32, trainable counted in the table as fp32 too,
+        // but gradient MB == 2x trainable MB because forward runs bf16
+        let arch = ArchSpec::llama2_7b();
+        let row = table2_row(&arch, Method::Circulant { backend: Backend::RdFft, p: 512 });
+        assert_eq!(row.gradient_bytes, row.trainable_bytes);
+        // (both fp32 here; the paper's 2x is bf16-trainable vs fp32-grad —
+        // our table reports fp32 trainable, see EXPERIMENTS.md note)
+    }
+
+    #[test]
+    fn method_ordering_matches_paper() {
+        for arch in [ArchSpec::llama2_7b(), ArchSpec::roberta_large()] {
+            let p = 512;
+            let fft = table2_row(&arch, Method::Circulant { backend: Backend::Fft, p });
+            let rfft = table2_row(&arch, Method::Circulant { backend: Backend::Rfft, p });
+            let ours = table2_row(&arch, Method::Circulant { backend: Backend::RdFft, p });
+            let ff = table2_row(&arch, Method::FullFinetune);
+            assert!(fft.total_bytes() > rfft.total_bytes(), "{}", arch.name);
+            assert!(rfft.total_bytes() > ours.total_bytes(), "{}", arch.name);
+            assert!(ff.total_bytes() > ours.total_bytes(), "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn ours_beats_lora_at_full_model_scale() {
+        let arch = ArchSpec::llama2_7b();
+        let lora = table2_row(&arch, Method::Lora { rank: 32 });
+        let ours = table2_row(&arch, Method::Circulant { backend: Backend::RdFft, p: 512 });
+        assert!(ours.total_bytes() < lora.total_bytes());
+    }
+}

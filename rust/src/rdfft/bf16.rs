@@ -1,0 +1,198 @@
+//! Software bfloat16 and the bf16 rdFFT path.
+//!
+//! The paper emphasizes that FFTW/cuFFT (and `torch.fft.*`) do not support
+//! bfloat16, while modern training runs in bf16 — rdFFT supports it
+//! natively. We mirror the hardware practice: storage is bf16 (2 bytes),
+//! butterfly arithmetic runs in f32 (exactly what TPU/VPU and CUDA
+//! `__nv_bfloat16` FMA paths do), results round back to bf16 per element.
+
+use super::plan::Plan;
+
+/// bfloat16: the top 16 bits of an IEEE-754 f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+
+    /// Round-to-nearest-even conversion from f32 (the conversion hardware
+    /// implements; simple truncation loses ~0.5 bit of accuracy).
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        let bits = v.to_bits();
+        if v.is_nan() {
+            // quiet NaN, preserving sign
+            return Bf16(((bits >> 16) | 0x0040) as u16);
+        }
+        // Round-half-to-even via the standard bias trick: add 0x7FFF plus
+        // the LSB of the truncated result, then truncate.
+        let bias = 0x7FFFu32 + ((bits >> 16) & 1);
+        Bf16(((bits + bias) >> 16) as u16)
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(v: f32) -> Self {
+        Bf16::from_f32(v)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(v: Bf16) -> f32 {
+        v.to_f32()
+    }
+}
+
+/// In-place forward rdFFT over a bf16 buffer (storage bf16, math f32).
+pub fn rdfft_inplace_bf16(plan: &Plan, buf: &mut [Bf16]) {
+    assert_eq!(buf.len(), plan.n());
+    for &(i, j) in plan.swaps() {
+        buf.swap(i as usize, j as usize);
+    }
+    let n = plan.n();
+    let mut m = 1usize;
+    while m < n {
+        let tw = plan.stage_twiddles(m);
+        let two_m = 2 * m;
+        let mut s = 0usize;
+        while s < n {
+            let e = buf[s].to_f32();
+            let o = buf[s + m].to_f32();
+            buf[s] = Bf16::from_f32(e + o);
+            buf[s + m] = Bf16::from_f32(e - o);
+            if m >= 2 {
+                let idx = s + m + m / 2;
+                buf[idx] = Bf16::from_f32(-buf[idx].to_f32());
+            }
+            for (k, &(wr, wi)) in (1..m / 2).zip(tw.iter()) {
+                let (er, ei) = (buf[s + k].to_f32(), buf[s + m - k].to_f32());
+                let (or_, oi) = (buf[s + m + k].to_f32(), buf[s + two_m - k].to_f32());
+                let tr = wr * or_ - wi * oi;
+                let ti = wr * oi + wi * or_;
+                buf[s + k] = Bf16::from_f32(er + tr);
+                buf[s + two_m - k] = Bf16::from_f32(ei + ti);
+                buf[s + m - k] = Bf16::from_f32(er - tr);
+                buf[s + m + k] = Bf16::from_f32(ti - ei);
+            }
+            s += two_m;
+        }
+        m = two_m;
+    }
+}
+
+/// In-place inverse rdFFT over a bf16 buffer.
+pub fn irdfft_inplace_bf16(plan: &Plan, buf: &mut [Bf16]) {
+    assert_eq!(buf.len(), plan.n());
+    let n = plan.n();
+    let mut m = n / 2;
+    while m >= 1 {
+        let tw = plan.stage_twiddles(m);
+        let two_m = 2 * m;
+        let mut s = 0usize;
+        while s < n {
+            let a = buf[s].to_f32();
+            let b = buf[s + m].to_f32();
+            buf[s] = Bf16::from_f32(0.5 * (a + b));
+            buf[s + m] = Bf16::from_f32(0.5 * (a - b));
+            if m >= 2 {
+                let idx = s + m + m / 2;
+                buf[idx] = Bf16::from_f32(-buf[idx].to_f32());
+            }
+            for (k, &(wr, wi)) in (1..m / 2).zip(tw.iter()) {
+                let a = buf[s + k].to_f32();
+                let b = buf[s + m - k].to_f32();
+                let c = buf[s + two_m - k].to_f32();
+                let d = buf[s + m + k].to_f32();
+                let er = 0.5 * (a + b);
+                let tr = 0.5 * (a - b);
+                let ti = 0.5 * (c + d);
+                let ei = 0.5 * (c - d);
+                let or_ = tr * wr + ti * wi;
+                let oi = ti * wr - tr * wi;
+                buf[s + k] = Bf16::from_f32(er);
+                buf[s + m - k] = Bf16::from_f32(ei);
+                buf[s + m + k] = Bf16::from_f32(or_);
+                buf[s + two_m - k] = Bf16::from_f32(oi);
+            }
+            s += two_m;
+        }
+        m /= 2;
+    }
+    for &(i, j) in plan.swaps() {
+        buf.swap(i as usize, j as usize);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversion_roundtrip_exact_for_bf16_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, -3.25, 1e20, -1e-20] {
+            let b = Bf16::from_f32(v);
+            let back = b.to_f32();
+            // values representable in bf16 roundtrip exactly
+            assert_eq!(Bf16::from_f32(back), b);
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between bf16(1.0) and the next
+        // value; round-half-even keeps 1.0 (even mantissa).
+        let half_up = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(half_up).to_f32(), 1.0);
+        // slightly above halfway rounds up
+        let above = f32::from_bits(0x3F80_8001);
+        assert!(Bf16::from_f32(above).to_f32() > 1.0);
+    }
+
+    #[test]
+    fn nan_and_inf_survive() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bf16_transform_tracks_f32_transform() {
+        let n = 256;
+        let plan = Plan::new(n);
+        let x: Vec<f32> = (0..n).map(|i| ((i * 31 + 7) % 64) as f32 / 32.0 - 1.0).collect();
+        let mut f32_buf = x.clone();
+        super::super::forward::rdfft_inplace(&plan, &mut f32_buf);
+        let mut bf_buf: Vec<Bf16> = x.iter().map(|&v| Bf16::from_f32(v)).collect();
+        rdfft_inplace_bf16(&plan, &mut bf_buf);
+        let scale = x.iter().map(|v| v.abs()).fold(0.0f32, f32::max) * n as f32;
+        for i in 0..n {
+            let err = (bf_buf[i].to_f32() - f32_buf[i]).abs();
+            assert!(err < 0.02 * scale, "i={i}: {} vs {}", bf_buf[i].to_f32(), f32_buf[i]);
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_within_bf16_tolerance() {
+        let n = 512;
+        let plan = Plan::new(n);
+        let x: Vec<f32> = (0..n).map(|i| ((i * 13 + 3) % 41) as f32 / 20.0 - 1.0).collect();
+        let mut buf: Vec<Bf16> = x.iter().map(|&v| Bf16::from_f32(v)).collect();
+        rdfft_inplace_bf16(&plan, &mut buf);
+        irdfft_inplace_bf16(&plan, &mut buf);
+        for i in 0..n {
+            // log2(512)=9 stages of bf16 rounding each way: tolerance ~ 5%
+            assert!(
+                (buf[i].to_f32() - x[i]).abs() < 0.05 * (1.0 + x[i].abs()),
+                "i={i}: {} vs {}",
+                buf[i].to_f32(),
+                x[i]
+            );
+        }
+    }
+}

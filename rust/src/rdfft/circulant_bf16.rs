@@ -1,0 +1,222 @@
+//! bf16 block-circulant operator — the paper's third contribution made
+//! concrete at the layer level: fft/rfft libraries reject bf16, so a
+//! bf16 training stack must upcast (doubling activation memory); rdFFT
+//! runs the whole Eq. 4/5 pipeline on 2-byte storage with f32 butterfly
+//! arithmetic, halving every buffer the layer touches.
+
+use super::bf16::{irdfft_inplace_bf16, rdfft_inplace_bf16, Bf16};
+use super::plan::{cached, Plan};
+use std::sync::Arc;
+
+/// Packed-domain elementwise product over bf16 spectra (math in f32).
+pub fn mul_acc_bf16(acc: &mut [Bf16], a: &[Bf16], b: &[Bf16]) {
+    let n = acc.len();
+    debug_assert_eq!(n, a.len());
+    debug_assert_eq!(n, b.len());
+    acc[0] = Bf16::from_f32(acc[0].to_f32() + a[0].to_f32() * b[0].to_f32());
+    acc[n / 2] = Bf16::from_f32(acc[n / 2].to_f32() + a[n / 2].to_f32() * b[n / 2].to_f32());
+    for k in 1..n / 2 {
+        let (ar, ai) = (a[k].to_f32(), a[n - k].to_f32());
+        let (br, bi) = (b[k].to_f32(), b[n - k].to_f32());
+        acc[k] = Bf16::from_f32(acc[k].to_f32() + ar * br - ai * bi);
+        acc[n - k] = Bf16::from_f32(acc[n - k].to_f32() + ar * bi + ai * br);
+    }
+}
+
+/// `acc += conj(a) ⊙ b` over bf16 spectra.
+pub fn conj_mul_acc_bf16(acc: &mut [Bf16], a: &[Bf16], b: &[Bf16]) {
+    let n = acc.len();
+    acc[0] = Bf16::from_f32(acc[0].to_f32() + a[0].to_f32() * b[0].to_f32());
+    acc[n / 2] = Bf16::from_f32(acc[n / 2].to_f32() + a[n / 2].to_f32() * b[n / 2].to_f32());
+    for k in 1..n / 2 {
+        let (ar, ai) = (a[k].to_f32(), a[n - k].to_f32());
+        let (br, bi) = (b[k].to_f32(), b[n - k].to_f32());
+        acc[k] = Bf16::from_f32(acc[k].to_f32() + ar * br + ai * bi);
+        acc[n - k] = Bf16::from_f32(acc[n - k].to_f32() + ar * bi - ai * br);
+    }
+}
+
+/// bf16 block-circulant operator (storage 2 bytes/scalar throughout).
+#[derive(Debug, Clone)]
+pub struct BlockCirculantBf16 {
+    plan: Arc<Plan>,
+    rows: usize,
+    cols: usize,
+    p: usize,
+    c_hat: Vec<Bf16>,
+}
+
+impl BlockCirculantBf16 {
+    /// Build from f32 first columns (quantized to bf16 on entry, like a
+    /// bf16 checkpoint load).
+    pub fn from_block_columns(rows: usize, cols: usize, p: usize, c: &[f32]) -> Self {
+        assert!(rows % p == 0 && cols % p == 0);
+        let rb = rows / p;
+        let cb = cols / p;
+        assert_eq!(c.len(), rb * cb * p);
+        let plan = cached(p);
+        let mut c_hat: Vec<Bf16> = c.iter().map(|&v| Bf16::from_f32(v)).collect();
+        for blk in c_hat.chunks_exact_mut(p) {
+            rdfft_inplace_bf16(&plan, blk);
+        }
+        BlockCirculantBf16 { plan, rows, cols, p, c_hat }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.c_hat.len()
+    }
+
+    /// Bytes of parameter storage (half the f32 operator's).
+    pub fn param_bytes(&self) -> usize {
+        self.c_hat.len() * 2
+    }
+
+    /// Forward product, in place on the bf16 input blocks (which then
+    /// hold x̂, the saved-for-backward tensor — same discipline as f32).
+    pub fn forward_inplace(&self, x: &mut [Bf16], out: &mut [Bf16]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        let p = self.p;
+        let cb = self.cols / p;
+        for xb in x.chunks_exact_mut(p) {
+            rdfft_inplace_bf16(&self.plan, xb);
+        }
+        for (i, ob) in out.chunks_exact_mut(p).enumerate() {
+            ob.fill(Bf16::ZERO);
+            for (j, xb) in x.chunks_exact(p).enumerate() {
+                let ch = &self.c_hat[(i * cb + j) * p..][..p];
+                mul_acc_bf16(ob, ch, xb);
+            }
+            irdfft_inplace_bf16(&self.plan, ob);
+        }
+    }
+
+    /// Backward pass (Eq. 5) on bf16 buffers; `dc` accumulates in the
+    /// frequency domain like the f32 operator.
+    pub fn backward(&self, x_hat: &[Bf16], g: &mut [Bf16], dx: &mut [Bf16], dc: &mut [Bf16]) {
+        assert_eq!(x_hat.len(), self.cols);
+        assert_eq!(g.len(), self.rows);
+        assert_eq!(dx.len(), self.cols);
+        assert_eq!(dc.len(), self.c_hat.len());
+        let p = self.p;
+        let cb = self.cols / p;
+        for gb in g.chunks_exact_mut(p) {
+            rdfft_inplace_bf16(&self.plan, gb);
+        }
+        for (i, gb) in g.chunks_exact(p).enumerate() {
+            for (j, xb) in x_hat.chunks_exact(p).enumerate() {
+                let d = &mut dc[(i * cb + j) * p..][..p];
+                conj_mul_acc_bf16(d, xb, gb);
+            }
+        }
+        for (j, dxb) in dx.chunks_exact_mut(p).enumerate() {
+            dxb.fill(Bf16::ZERO);
+            for (i, gb) in g.chunks_exact(p).enumerate() {
+                let ch = &self.c_hat[(i * cb + j) * p..][..p];
+                conj_mul_acc_bf16(dxb, ch, gb);
+            }
+            irdfft_inplace_bf16(&self.plan, dxb);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::circulant::BlockCirculant;
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(99);
+                ((s >> 33) as f64 / (1u64 << 31) as f64 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bf16_forward_tracks_f32_forward() {
+        let (rows, cols, p) = (32, 32, 16);
+        let c = rand_vec((rows / p) * (cols / p) * p, 1);
+        let x = rand_vec(cols, 2);
+        let f32_op = BlockCirculant::from_block_columns(rows, cols, p, &c);
+        let bf_op = BlockCirculantBf16::from_block_columns(rows, cols, p, &c);
+
+        let mut xf = x.clone();
+        let mut out_f = vec![0.0f32; rows];
+        f32_op.forward_inplace(&mut xf, &mut out_f);
+
+        let mut xb: Vec<Bf16> = x.iter().map(|&v| Bf16::from_f32(v)).collect();
+        let mut out_b = vec![Bf16::ZERO; rows];
+        bf_op.forward_inplace(&mut xb, &mut out_b);
+
+        let scale = out_f.iter().map(|v| v.abs()).fold(0.1f32, f32::max);
+        for i in 0..rows {
+            let err = (out_b[i].to_f32() - out_f[i]).abs();
+            assert!(err < 0.1 * scale, "i={i}: {} vs {}", out_b[i].to_f32(), out_f[i]);
+        }
+    }
+
+    #[test]
+    fn bf16_storage_is_half_of_f32() {
+        let op = BlockCirculantBf16::from_block_columns(64, 64, 16, &rand_vec(4 * 4 * 16, 3));
+        assert_eq!(op.param_bytes(), op.num_params() * 2);
+    }
+
+    #[test]
+    fn bf16_backward_produces_finite_grads_tracking_f32() {
+        let (rows, cols, p) = (16, 16, 8);
+        let c = rand_vec(2 * 2 * 8, 4);
+        let x = rand_vec(cols, 5);
+        let g0 = rand_vec(rows, 6);
+
+        let f32_op = BlockCirculant::from_block_columns(rows, cols, p, &c);
+        let mut xf = x.clone();
+        let mut of = vec![0.0f32; rows];
+        f32_op.forward_inplace(&mut xf, &mut of);
+        let mut gf = g0.clone();
+        let mut dxf = vec![0.0f32; cols];
+        let mut dcf = vec![0.0f32; f32_op.num_params()];
+        f32_op.backward(&xf, &mut gf, &mut dxf, &mut dcf);
+
+        let bf_op = BlockCirculantBf16::from_block_columns(rows, cols, p, &c);
+        let mut xb: Vec<Bf16> = x.iter().map(|&v| Bf16::from_f32(v)).collect();
+        let mut ob = vec![Bf16::ZERO; rows];
+        bf_op.forward_inplace(&mut xb, &mut ob);
+        let mut gb: Vec<Bf16> = g0.iter().map(|&v| Bf16::from_f32(v)).collect();
+        let mut dxb = vec![Bf16::ZERO; cols];
+        let mut dcb = vec![Bf16::ZERO; bf_op.num_params()];
+        bf_op.backward(&xb, &mut gb, &mut dxb, &mut dcb);
+
+        let scale = dxf.iter().map(|v| v.abs()).fold(0.1f32, f32::max);
+        for i in 0..cols {
+            assert!(
+                (dxb[i].to_f32() - dxf[i]).abs() < 0.15 * scale,
+                "dx i={i}: {} vs {}",
+                dxb[i].to_f32(),
+                dxf[i]
+            );
+        }
+        let scale = dcf.iter().map(|v| v.abs()).fold(0.1f32, f32::max);
+        for i in 0..dcf.len() {
+            assert!(
+                (dcb[i].to_f32() - dcf[i]).abs() < 0.15 * scale,
+                "dc i={i}: {} vs {}",
+                dcb[i].to_f32(),
+                dcf[i]
+            );
+        }
+    }
+
+    #[test]
+    fn zero_input_gives_zero_output() {
+        let op = BlockCirculantBf16::from_block_columns(16, 16, 8, &rand_vec(2 * 2 * 8, 7));
+        let mut x = vec![Bf16::ZERO; 16];
+        let mut out = vec![Bf16::from_f32(9.0); 16];
+        op.forward_inplace(&mut x, &mut out);
+        for v in out {
+            assert_eq!(v.to_f32(), 0.0);
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Convolution utilities on top of rdFFT — the downstream API surface a
+//! user of the paper's operator actually wants (spectral convolution is
+//! one of the FFT-in-NN use cases the related-work section lists).
+//!
+//! * [`circular_convolve_inplace`] — the raw Eq. 4 primitive.
+//! * [`linear_convolve`] — zero-padded full linear convolution.
+//! * [`OverlapAdd`] — streaming linear convolution with a fixed FIR
+//!   filter: O(log p) per sample, constant memory, suitable for
+//!   arbitrarily long streams. All FFT work is in-place in reused
+//!   buffers; steady-state processing performs **zero** allocations.
+
+use super::forward::rdfft_inplace;
+use super::inverse::irdfft_inplace;
+use super::plan::{cached, Plan};
+use super::spectral;
+use std::sync::Arc;
+
+/// `a := a ⊛ b` (circular convolution, length must match and be a power
+/// of two). `b_spec` must already be in the packed frequency domain.
+pub fn circular_convolve_with_spectrum(plan: &Plan, a: &mut [f32], b_spec: &[f32]) {
+    rdfft_inplace(plan, a);
+    spectral::mul_inplace(a, b_spec);
+    irdfft_inplace(plan, a);
+}
+
+/// `a := a ⊛ b` (circular convolution) with both operands in the time
+/// domain; `b` is transformed into a scratch copy.
+pub fn circular_convolve_inplace(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    let plan = cached(a.len());
+    let mut b_spec = b.to_vec();
+    rdfft_inplace(&plan, &mut b_spec);
+    circular_convolve_with_spectrum(&plan, a, &b_spec);
+}
+
+/// Full linear convolution (`len = x.len() + h.len() - 1`) by zero-padding
+/// to the next power of two. Allocates the output (unavoidable: the
+/// result is longer than either input).
+pub fn linear_convolve(x: &[f32], h: &[f32]) -> Vec<f32> {
+    let out_len = x.len() + h.len() - 1;
+    let n = out_len.next_power_of_two().max(2);
+    let plan = cached(n);
+    let mut xa = vec![0.0f32; n];
+    xa[..x.len()].copy_from_slice(x);
+    let mut ha = vec![0.0f32; n];
+    ha[..h.len()].copy_from_slice(h);
+    rdfft_inplace(&plan, &mut ha);
+    circular_convolve_with_spectrum(&plan, &mut xa, &ha);
+    xa.truncate(out_len);
+    xa
+}
+
+/// Streaming linear convolution with a fixed filter via overlap-add.
+///
+/// Block size `n` is chosen as the smallest power of two ≥ 2·h.len();
+/// each [`Self::process`] call consumes up to `n - h.len() + 1` samples
+/// and appends the convolved output to the caller's sink. Steady state
+/// reuses two internal buffers — zero allocation per block.
+pub struct OverlapAdd {
+    plan: Arc<Plan>,
+    h_spec: Vec<f32>,
+    h_len: usize,
+    /// samples consumed per block
+    pub hop: usize,
+    block: Vec<f32>,
+    tail: Vec<f32>,
+}
+
+impl OverlapAdd {
+    pub fn new(h: &[f32]) -> Self {
+        assert!(!h.is_empty());
+        let n = (2 * h.len()).next_power_of_two().max(2);
+        let plan = cached(n);
+        let mut h_spec = vec![0.0f32; n];
+        h_spec[..h.len()].copy_from_slice(h);
+        rdfft_inplace(&plan, &mut h_spec);
+        let hop = n - h.len() + 1;
+        OverlapAdd {
+            plan,
+            h_spec,
+            h_len: h.len(),
+            hop,
+            block: vec![0.0; n],
+            tail: vec![0.0; h.len() - 1],
+        }
+    }
+
+    /// FFT block size in use.
+    pub fn block_size(&self) -> usize {
+        self.block.len()
+    }
+
+    /// Convolve one chunk (`chunk.len() <= self.hop`) and append
+    /// `chunk.len()` output samples to `out` (steady-state latency 0:
+    /// outputs are finalized as soon as their overlap resolves).
+    pub fn process(&mut self, chunk: &[f32], out: &mut Vec<f32>) {
+        assert!(chunk.len() <= self.hop, "feed at most `hop` samples per call");
+        let n = self.block.len();
+        self.block[..chunk.len()].copy_from_slice(chunk);
+        self.block[chunk.len()..].fill(0.0);
+        rdfft_inplace(&self.plan, &mut self.block);
+        spectral::mul_inplace(&mut self.block, &self.h_spec);
+        irdfft_inplace(&self.plan, &mut self.block);
+        // add the carried tail
+        for (b, t) in self.block.iter_mut().zip(self.tail.iter()) {
+            *b += t;
+        }
+        // emit chunk.len() samples; carry the next h_len-1 as the new tail
+        out.extend_from_slice(&self.block[..chunk.len()]);
+        let tail_len = self.h_len - 1;
+        debug_assert!(chunk.len() + tail_len <= n);
+        for i in 0..tail_len {
+            self.tail[i] = self.block[chunk.len() + i];
+        }
+    }
+
+    /// Flush the trailing `h.len()-1` samples of the stream.
+    pub fn finish(&mut self, out: &mut Vec<f32>) {
+        out.extend_from_slice(&self.tail);
+        self.tail.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_linear(x: &[f32], h: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; x.len() + h.len() - 1];
+        for (i, &xi) in x.iter().enumerate() {
+            for (j, &hj) in h.iter().enumerate() {
+                out[i + j] += xi * hj;
+            }
+        }
+        out
+    }
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((s >> 33) as f64 / (1u64 << 31) as f64 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn circular_convolution_matches_naive() {
+        let n = 64;
+        let a = rand_vec(n, 1);
+        let b = rand_vec(n, 2);
+        let mut got = a.clone();
+        circular_convolve_inplace(&mut got, &b);
+        for i in 0..n {
+            let want: f32 = (0..n).map(|j| a[j] * b[(i + n - j) % n]).sum();
+            assert!((got[i] - want).abs() < 1e-3, "i={i}");
+        }
+    }
+
+    #[test]
+    fn linear_convolution_matches_naive() {
+        for (nx, nh) in [(10usize, 4usize), (100, 17), (33, 33), (1, 5)] {
+            let x = rand_vec(nx, nx as u64);
+            let h = rand_vec(nh, nh as u64 + 7);
+            let got = linear_convolve(&x, &h);
+            let want = naive_linear(&x, &h);
+            assert_eq!(got.len(), want.len());
+            for i in 0..want.len() {
+                assert!((got[i] - want[i]).abs() < 1e-3, "({nx},{nh}) i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_add_matches_batch_linear_convolution() {
+        let h = rand_vec(13, 3);
+        let x = rand_vec(500, 4);
+        let mut ola = OverlapAdd::new(&h);
+        let mut out = Vec::new();
+        let mut i = 0;
+        // feed uneven chunk sizes to exercise the boundary logic
+        let chunks = [ola.hop, 7, ola.hop, 1, ola.hop - 3];
+        let mut c = 0;
+        while i < x.len() {
+            let take = chunks[c % chunks.len()].min(x.len() - i).min(ola.hop);
+            let mut piece = Vec::new();
+            ola.process(&x[i..i + take], &mut piece);
+            out.extend_from_slice(&piece);
+            i += take;
+            c += 1;
+        }
+        ola.finish(&mut out);
+        let want = naive_linear(&x, &h);
+        assert_eq!(out.len(), want.len());
+        for i in 0..want.len() {
+            assert!((out[i] - want[i]).abs() < 1e-2, "i={i}: {} vs {}", out[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn overlap_add_steady_state_allocates_nothing() {
+        let h = rand_vec(31, 5);
+        let mut ola = OverlapAdd::new(&h);
+        let x = rand_vec(ola.hop, 6);
+        let mut out = Vec::with_capacity(8 * ola.hop);
+        ola.process(&x, &mut out); // warm the output Vec
+        out.clear();
+        out.reserve(8 * ola.hop);
+        crate::memtrack::reset_peak();
+        let before = crate::memtrack::snapshot().alloc_count;
+        for _ in 0..5 {
+            ola.process(&x, &mut out);
+        }
+        assert_eq!(crate::memtrack::snapshot().alloc_count, before);
+    }
+
+    #[test]
+    fn impulse_filter_is_identity() {
+        let mut ola = OverlapAdd::new(&[1.0]);
+        let x = rand_vec(100, 9);
+        let mut out = Vec::new();
+        for chunk in x.chunks(ola.hop) {
+            ola.process(chunk, &mut out);
+        }
+        ola.finish(&mut out);
+        for i in 0..x.len() {
+            assert!((out[i] - x[i]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! In-place forward rdFFT (§4.1 of the paper).
+//!
+//! Decimation-in-time Cooley–Tukey over the *packed* real layout. After the
+//! bit-reversal permutation, stage `m` (m = 1, 2, 4, … n/2) combines pairs
+//! of packed `m`-point spectra sitting in adjacent halves of each
+//! `2m`-block into one packed `2m`-point spectrum, entirely in place:
+//!
+//! * `k = 0` — DC/Nyquist lane: `(e, o) → (e+o, e−o)`, both real.
+//! * `k = m/2` — sub-Nyquist lane: `y_{m/2} = e − i·o`; `e` is already in
+//!   its slot, `o` just flips sign in the mirrored slot.
+//! * `1 ≤ k < m/2` — the symmetric **4-element group** of Proposition 1,
+//!   `{s+k, s+m−k, s+m+k, s+2m−k}`: read `(E.re, E.im, O.re, O.im)`,
+//!   apply the twiddle to `O`, write `(y_k.re, y_{m−k}.re, y_{m−k}.im,
+//!   y_k.im)` back to the *same four slots*.
+//!
+//! No element outside the 4-group is touched, so the transform performs
+//! zero allocations and zero out-of-buffer writes — the property the
+//! memory experiments (Table 1 / Fig 2) depend on.
+
+use super::plan::Plan;
+
+/// Transform `buf` (length `plan.n()`) from a real signal to the packed
+/// spectrum, in place.
+pub fn rdfft_inplace(plan: &Plan, buf: &mut [f32]) {
+    assert_eq!(buf.len(), plan.n(), "buffer length must equal plan size");
+    plan.bit_reverse(buf);
+    forward_stages(plan, buf);
+}
+
+/// Batched variant: `buf` holds `batch` contiguous rows of length
+/// `plan.n()`; each row is transformed independently, in place.
+pub fn rdfft_batch(plan: &Plan, buf: &mut [f32]) {
+    let n = plan.n();
+    assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");
+    for row in buf.chunks_exact_mut(n) {
+        rdfft_inplace(plan, row);
+    }
+}
+
+/// All butterfly stages (input already bit-reversed). Exposed for the
+/// ablation bench that separates permutation cost from butterfly cost.
+#[inline]
+pub fn forward_stages(plan: &Plan, buf: &mut [f32]) {
+    let n = plan.n();
+    let mut m = 1usize;
+    while m < n {
+        let tw = plan.stage_twiddles(m);
+        let two_m = 2 * m;
+        let mut s = 0usize;
+        while s < n {
+            // k = 0: DC/Nyquist lane.
+            let e = buf[s];
+            let o = buf[s + m];
+            buf[s] = e + o;
+            buf[s + m] = e - o;
+            if m >= 2 {
+                // k = m/2: y_{m/2} = e - i*o; Re stays, Im slot flips sign.
+                let idx = s + m + m / 2;
+                buf[idx] = -buf[idx];
+            }
+            // 1 <= k < m/2: symmetric four-element groups.
+            //
+            // SAFETY: all four indices lie inside [s, s+2m): the loop
+            // guarantees 1 <= k < m/2, and `s + two_m <= n` by the outer
+            // loop bound, so unchecked access is in range. Bounds checks
+            // here cost ~25% of the transform (see EXPERIMENTS.md §Perf).
+            unsafe {
+                let blk = buf.get_unchecked_mut(s..s + two_m);
+                for (k, &(wr, wi)) in (1..m / 2).zip(tw.iter()) {
+                    let er = *blk.get_unchecked(k);
+                    let ei = *blk.get_unchecked(m - k);
+                    let or_ = *blk.get_unchecked(m + k);
+                    let oi = *blk.get_unchecked(two_m - k);
+                    // T = W * O
+                    let tr = wr * or_ - wi * oi;
+                    let ti = wr * oi + wi * or_;
+                    *blk.get_unchecked_mut(k) = er + tr; //       Re y_k
+                    *blk.get_unchecked_mut(two_m - k) = ei + ti; // Im y_k
+                    *blk.get_unchecked_mut(m - k) = er - tr; //    Re y_{m-k}
+                    *blk.get_unchecked_mut(m + k) = ti - ei; //    Im y_{m-k}
+                }
+            }
+            s += two_m;
+        }
+        m = two_m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_point_transform() {
+        let plan = Plan::new(2);
+        let mut buf = [3.0f32, 5.0];
+        rdfft_inplace(&plan, &mut buf);
+        assert_eq!(buf, [8.0, -2.0]); // [DC, Nyquist]
+    }
+
+    #[test]
+    fn four_point_transform() {
+        // FFT([1,2,3,4]) = [10, -2+2i, -2, -2-2i]
+        // packed: [10, -2, -2, 2]
+        let plan = Plan::new(4);
+        let mut buf = [1.0f32, 2.0, 3.0, 4.0];
+        rdfft_inplace(&plan, &mut buf);
+        assert!((buf[0] - 10.0).abs() < 1e-6);
+        assert!((buf[1] - -2.0).abs() < 1e-6);
+        assert!((buf[2] - -2.0).abs() < 1e-6);
+        assert!((buf[3] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn impulse_has_flat_spectrum() {
+        let n = 64;
+        let plan = Plan::new(n);
+        let mut buf = vec![0.0f32; n];
+        buf[0] = 1.0;
+        rdfft_inplace(&plan, &mut buf);
+        // FFT(delta) = all-ones: packed layout is re=1 everywhere, im=0.
+        for k in 0..=n / 2 {
+            assert!((buf[k] - 1.0).abs() < 1e-6, "k={k}");
+        }
+        for k in n / 2 + 1..n {
+            assert!(buf[k].abs() < 1e-6, "k={k}");
+        }
+    }
+
+    #[test]
+    fn constant_signal_is_pure_dc() {
+        let n = 32;
+        let plan = Plan::new(n);
+        let mut buf = vec![2.0f32; n];
+        rdfft_inplace(&plan, &mut buf);
+        assert!((buf[0] - 64.0).abs() < 1e-5);
+        for k in 1..n {
+            assert!(buf[k].abs() < 1e-5, "k={k} -> {}", buf[k]);
+        }
+    }
+
+    #[test]
+    fn single_cosine_lands_on_one_bin() {
+        let n = 128;
+        let f = 5usize;
+        let plan = Plan::new(n);
+        let mut buf: Vec<f32> = (0..n)
+            .map(|i| (std::f64::consts::TAU * f as f64 * i as f64 / n as f64).cos() as f32)
+            .collect();
+        rdfft_inplace(&plan, &mut buf);
+        // cos(2π f t/n): y_f = n/2, y_{n-f} = n/2, everything else 0.
+        assert!((buf[f] - n as f32 / 2.0).abs() < 1e-3);
+        for k in 0..n {
+            if k != f {
+                assert!(buf[k].abs() < 1e-3, "k={k} -> {}", buf[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn single_sine_lands_on_one_imag_bin() {
+        let n = 128;
+        let f = 9usize;
+        let plan = Plan::new(n);
+        let mut buf: Vec<f32> = (0..n)
+            .map(|i| (std::f64::consts::TAU * f as f64 * i as f64 / n as f64).sin() as f32)
+            .collect();
+        rdfft_inplace(&plan, &mut buf);
+        // sin: y_f = -i n/2 → Im(y_f) = -n/2 stored at index n-f.
+        assert!((buf[n - f] + n as f32 / 2.0).abs() < 1e-3);
+        for k in 0..n {
+            if k != n - f {
+                assert!(buf[k].abs() < 1e-3, "k={k} -> {}", buf[k]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let plan = Plan::new(8);
+        let mut buf = [0.0f32; 4];
+        rdfft_inplace(&plan, &mut buf);
+    }
+}

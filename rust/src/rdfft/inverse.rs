@@ -1,0 +1,149 @@
+//! In-place inverse rdFFT (§4.2 of the paper).
+//!
+//! The inverse runs the forward butterfly graph **in reverse** (Eq. 7):
+//! every stage map is linear and invertible, so we undo stages from
+//! `m = n/2` down to `m = 1` and finish with the (involutive) bit-reversal
+//! permutation. Each undone butterfly carries a factor of ½ exactly where
+//! the forward butterfly summed two values, so the composition accumulates
+//! exactly the 1/N normalization of the IFFT — no separate scaling pass.
+//!
+//! Like the forward path this touches only the symmetric 4-element groups,
+//! performs zero allocations, and leaves the result in the original real
+//! buffer.
+
+use super::plan::Plan;
+
+/// Transform `buf` (length `plan.n()`) from the packed spectrum back to the
+/// real signal, in place. Exact inverse of [`super::rdfft_inplace`]
+/// (including normalization).
+pub fn irdfft_inplace(plan: &Plan, buf: &mut [f32]) {
+    assert_eq!(buf.len(), plan.n(), "buffer length must equal plan size");
+    inverse_stages(plan, buf);
+    plan.bit_reverse(buf);
+}
+
+/// Batched variant of [`irdfft_inplace`] over contiguous rows.
+pub fn irdfft_batch(plan: &Plan, buf: &mut [f32]) {
+    let n = plan.n();
+    assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");
+    for row in buf.chunks_exact_mut(n) {
+        irdfft_inplace(plan, row);
+    }
+}
+
+/// All inverse butterfly stages (output still bit-reversed). Exposed for
+/// the ablation bench.
+#[inline]
+pub fn inverse_stages(plan: &Plan, buf: &mut [f32]) {
+    let n = plan.n();
+    let mut m = n / 2;
+    while m >= 1 {
+        let tw = plan.stage_inv_twiddles(m);
+        let two_m = 2 * m;
+        let mut s = 0usize;
+        while s < n {
+            // k = 0 lane: forward was (e,o) -> (e+o, e-o).
+            let a = buf[s];
+            let b = buf[s + m];
+            buf[s] = 0.5 * (a + b);
+            buf[s + m] = 0.5 * (a - b);
+            if m >= 2 {
+                // k = m/2 lane: forward flipped the sign of the Im slot.
+                let idx = s + m + m / 2;
+                buf[idx] = -buf[idx];
+            }
+            // 1 <= k < m/2: undo the 4-group butterfly.
+            //
+            // SAFETY: same in-block bounds argument as the forward stage
+            // (see forward.rs); unchecked access shaves the bounds-check
+            // cost recorded in EXPERIMENTS.md §Perf.
+            unsafe {
+                let blk = buf.get_unchecked_mut(s..s + two_m);
+                // hr/hi are the pre-halved twiddles (wr/2, wi/2), so
+                // O = T·conj(W)/2 comes out directly from (a−b), (c+d).
+                for (k, &(hr, hi)) in (1..m / 2).zip(tw.iter()) {
+                    let a = *blk.get_unchecked(k); //          er + tr
+                    let b = *blk.get_unchecked(m - k); //      er - tr
+                    let c = *blk.get_unchecked(two_m - k); //  ei + ti
+                    let d = *blk.get_unchecked(m + k); //      ti - ei
+                    let er = 0.5 * (a + b);
+                    let ei = 0.5 * (c - d);
+                    let or_ = (a - b) * hr + (c + d) * hi;
+                    let oi = (c + d) * hr - (a - b) * hi;
+                    *blk.get_unchecked_mut(k) = er;
+                    *blk.get_unchecked_mut(m - k) = ei;
+                    *blk.get_unchecked_mut(m + k) = or_;
+                    *blk.get_unchecked_mut(two_m - k) = oi;
+                }
+            }
+            s += two_m;
+        }
+        m /= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::forward::rdfft_inplace;
+    use super::*;
+
+    #[test]
+    fn two_point_inverse() {
+        let plan = Plan::new(2);
+        let mut buf = [8.0f32, -2.0];
+        irdfft_inplace(&plan, &mut buf);
+        assert_eq!(buf, [3.0, 5.0]);
+    }
+
+    #[test]
+    fn inverse_of_flat_spectrum_is_impulse() {
+        let n = 32;
+        let plan = Plan::new(n);
+        // packed all-ones spectrum == FFT(delta)
+        let mut buf = vec![0.0f32; n];
+        for k in 0..=n / 2 {
+            buf[k] = 1.0;
+        }
+        irdfft_inplace(&plan, &mut buf);
+        assert!((buf[0] - 1.0).abs() < 1e-5);
+        for i in 1..n {
+            assert!(buf[i].abs() < 1e-5, "i={i}");
+        }
+    }
+
+    #[test]
+    fn normalization_is_exactly_one_over_n() {
+        // IFFT(FFT(x)) == x implies the DC path is divided by n overall:
+        // spectrum = [n, 0, ..] must invert to all-ones.
+        let n = 64;
+        let plan = Plan::new(n);
+        let mut buf = vec![0.0f32; n];
+        buf[0] = n as f32;
+        irdfft_inplace(&plan, &mut buf);
+        for i in 0..n {
+            assert!((buf[i] - 1.0).abs() < 1e-5, "i={i} -> {}", buf[i]);
+        }
+    }
+
+    #[test]
+    fn inverse_then_forward_is_identity_too() {
+        // forward∘inverse = id (the other composition order from mod.rs).
+        let n = 512;
+        let plan = Plan::new(n);
+        let orig: Vec<f32> = (0..n).map(|i| ((i * 37 + 11) % 101) as f32 / 50.0 - 1.0).collect();
+        let mut buf = orig.clone();
+        irdfft_inplace(&plan, &mut buf);
+        rdfft_inplace(&plan, &mut buf);
+        for i in 0..n {
+            assert!((buf[i] - orig[i]).abs() < 1e-3, "i={i}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let plan = Plan::new(8);
+        let mut buf = [0.0f32; 16];
+        irdfft_inplace(&plan, &mut buf);
+    }
+}

@@ -1,0 +1,141 @@
+//! Packed-spectrum layout helpers.
+//!
+//! The packed layout stores a conjugate-symmetric length-`n` spectrum in
+//! `n` reals: `Re(y_k)` at `k`, `Im(y_k)` at `n-k` (`1 ≤ k < n/2`), plus the
+//! real DC / Nyquist terms at `0` / `n/2`. The paper calls out (Limitations)
+//! that *explicit* complex access requires decoding; these helpers are that
+//! decode/encode logic, plus the in-place operations (conjugation, reads)
+//! that do **not** require leaving the packed form.
+
+/// Read the complex coefficient `y_k` (`0 ≤ k ≤ n/2`) from a packed buffer.
+#[inline]
+pub fn get(buf: &[f32], k: usize) -> (f32, f32) {
+    let n = buf.len();
+    debug_assert!(k <= n / 2);
+    if k == 0 {
+        (buf[0], 0.0)
+    } else if k == n / 2 {
+        (buf[n / 2], 0.0)
+    } else {
+        (buf[k], buf[n - k])
+    }
+}
+
+/// Write the complex coefficient `y_k` into a packed buffer. Panics (debug)
+/// if asked to write a non-zero imaginary part into the DC/Nyquist slots.
+#[inline]
+pub fn set(buf: &mut [f32], k: usize, re: f32, im: f32) {
+    let n = buf.len();
+    debug_assert!(k <= n / 2);
+    if k == 0 || k == n / 2 {
+        debug_assert!(im == 0.0, "DC/Nyquist coefficients are real");
+        buf[k] = re;
+    } else {
+        buf[k] = re;
+        buf[n - k] = im;
+    }
+}
+
+/// Conjugate a packed spectrum in place: negate the imaginary half
+/// (indices `n/2+1 .. n-1`). This is how Eq. 5's `conj(FFT(·))` is realized
+/// with zero allocation.
+#[inline]
+pub fn conj_inplace(buf: &mut [f32]) {
+    let n = buf.len();
+    for v in &mut buf[n / 2 + 1..] {
+        *v = -*v;
+    }
+}
+
+/// Decode a packed spectrum into the full complex spectrum
+/// (length `n` of `(re, im)`), reconstructing the conjugate half.
+/// **Allocates** — only for tests/diagnostics, never on the training path.
+pub fn unpack_full(buf: &[f32]) -> Vec<(f32, f32)> {
+    let n = buf.len();
+    let mut out = vec![(0.0f32, 0.0f32); n];
+    out[0] = (buf[0], 0.0);
+    out[n / 2] = (buf[n / 2], 0.0);
+    for k in 1..n / 2 {
+        let (re, im) = (buf[k], buf[n - k]);
+        out[k] = (re, im);
+        out[n - k] = (re, -im);
+    }
+    out
+}
+
+/// Decode a packed spectrum into rFFT form: `n/2 + 1` complex values
+/// occupying `n + 2` reals — the dimension-mismatched format the paper's
+/// baselines use. **Allocates.**
+pub fn unpack_rfft(buf: &[f32]) -> Vec<(f32, f32)> {
+    let n = buf.len();
+    let mut out = Vec::with_capacity(n / 2 + 1);
+    for k in 0..=n / 2 {
+        out.push(get(buf, k));
+    }
+    out
+}
+
+/// Encode rFFT-format complex coefficients (`n/2+1` values) into a packed
+/// buffer of length `n`. Inverse of [`unpack_rfft`]. The imaginary parts of
+/// the DC and Nyquist coefficients must be (numerically) zero.
+pub fn pack_from_rfft(coeffs: &[(f32, f32)], out: &mut [f32]) {
+    let n = out.len();
+    assert_eq!(coeffs.len(), n / 2 + 1);
+    out[0] = coeffs[0].0;
+    out[n / 2] = coeffs[n / 2].0;
+    for k in 1..n / 2 {
+        out[k] = coeffs[k].0;
+        out[n - k] = coeffs[k].1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut buf = vec![0.0f32; 8];
+        set(&mut buf, 0, 5.0, 0.0);
+        set(&mut buf, 4, -3.0, 0.0);
+        set(&mut buf, 1, 1.5, -2.5);
+        set(&mut buf, 3, 0.25, 0.75);
+        assert_eq!(get(&buf, 0), (5.0, 0.0));
+        assert_eq!(get(&buf, 4), (-3.0, 0.0));
+        assert_eq!(get(&buf, 1), (1.5, -2.5));
+        assert_eq!(get(&buf, 3), (0.25, 0.75));
+        // physical layout: im(y_1) at index 7, im(y_3) at index 5
+        assert_eq!(buf[7], -2.5);
+        assert_eq!(buf[5], 0.75);
+    }
+
+    #[test]
+    fn conj_negates_only_imag_half() {
+        let mut buf: Vec<f32> = (1..=8).map(|i| i as f32).collect();
+        conj_inplace(&mut buf);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0, 5.0, -6.0, -7.0, -8.0]);
+        // double conjugation is identity
+        conj_inplace(&mut buf);
+        assert_eq!(buf[5], 6.0);
+    }
+
+    #[test]
+    fn unpack_full_reconstructs_hermitian_half() {
+        let buf = vec![10.0f32, -2.0, -2.0, 2.0]; // packed FFT([1,2,3,4])
+        let full = unpack_full(&buf);
+        assert_eq!(full[0], (10.0, 0.0));
+        assert_eq!(full[1], (-2.0, 2.0));
+        assert_eq!(full[2], (-2.0, 0.0));
+        assert_eq!(full[3], (-2.0, -2.0)); // conj of full[1]
+    }
+
+    #[test]
+    fn rfft_pack_unpack_roundtrip() {
+        let buf = vec![10.0f32, -2.0, -2.0, 2.0];
+        let rf = unpack_rfft(&buf);
+        assert_eq!(rf.len(), 3); // n/2+1 complex == n+2 reals
+        let mut back = vec![0.0f32; 4];
+        pack_from_rfft(&rf, &mut back);
+        assert_eq!(back, buf);
+    }
+}

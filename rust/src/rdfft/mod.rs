@@ -1,0 +1,154 @@
+//! rdFFT — the paper's contribution: a real-domain, **fully in-place** FFT.
+//!
+//! An `n`-point real input is transformed inside its own buffer of `n` f32s
+//! (no auxiliary storage, no `n+2` expansion, no complex dtype) into the
+//! *packed* spectrum layout of §4.1 of the paper:
+//!
+//! ```text
+//! index:   0      1       2     ...  n/2-1    n/2     n/2+1  ...  n-1
+//! value:  y0.re  y1.re  y2.re  ...          y_{n/2}.re       ...  y1.im
+//!                                                    y_{n/2-1}.im
+//! ```
+//!
+//! i.e. `Re(y_k)` lives at index `k` and `Im(y_k)` at the conjugate-symmetric
+//! index `n-k`; the always-real DC (`y_0`) and Nyquist (`y_{n/2}`) terms each
+//! occupy one slot. The inverse transform consumes the same layout and
+//! restores the original real signal, again fully in place.
+//!
+//! Submodules:
+//! * [`plan`]      — precomputed twiddle factors + bit-reversal schedule
+//! * [`layout`]    — packed-format helpers (pack/unpack/conjugate/views)
+//! * [`forward`]   — in-place forward transform (§4.1, Proposition 1)
+//! * [`inverse`]   — in-place inverse transform (§4.2, Eq. 7)
+//! * [`spectral`]  — packed-domain elementwise complex ops (⊙, conj-⊙)
+//! * [`circulant`] — circulant & block-circulant products + gradients (Eq. 4/5)
+//! * [`bf16`]      — software bfloat16 and the bf16 transform path
+
+pub mod bf16;
+pub mod circulant;
+pub mod circulant_bf16;
+pub mod conv;
+pub mod forward;
+pub mod inverse;
+pub mod layout;
+pub mod plan;
+pub mod spectral;
+pub mod twod;
+
+pub use circulant::{BlockCirculant, Circulant};
+pub use forward::{rdfft_batch, rdfft_inplace};
+pub use inverse::{irdfft_batch, irdfft_inplace};
+pub use plan::Plan;
+
+/// True iff `n` is a supported transform size (power of two, ≥ 2).
+pub fn is_supported_size(n: usize) -> bool {
+    n >= 2 && n.is_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::naive_dft;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((state >> 33) as f64 / (1u64 << 31) as f64 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn forward_matches_naive_dft_all_sizes() {
+        for log_n in 1..=12 {
+            let n = 1usize << log_n;
+            let plan = Plan::new(n);
+            let x = rand_vec(n, 42 + log_n as u64);
+            let mut buf = x.clone();
+            rdfft_inplace(&plan, &mut buf);
+            let spec = naive_dft(&x);
+            // DC and Nyquist
+            let tol = 1e-4 * (n as f32).sqrt();
+            assert!((buf[0] - spec[0].0).abs() < tol, "n={n} DC");
+            assert!((buf[n / 2] - spec[n / 2].0).abs() < tol, "n={n} nyquist");
+            for k in 1..n / 2 {
+                assert!((buf[k] - spec[k].0).abs() < tol, "n={n} k={k} re: {} vs {}", buf[k], spec[k].0);
+                assert!((buf[n - k] - spec[k].1).abs() < tol, "n={n} k={k} im: {} vs {}", buf[n - k], spec[k].1);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        for log_n in 1..=13 {
+            let n = 1usize << log_n;
+            let plan = Plan::new(n);
+            let x = rand_vec(n, 7 * log_n as u64 + 1);
+            let mut buf = x.clone();
+            rdfft_inplace(&plan, &mut buf);
+            irdfft_inplace(&plan, &mut buf);
+            for i in 0..n {
+                assert!(
+                    (buf[i] - x[i]).abs() < 1e-4,
+                    "n={n} i={i}: {} vs {}",
+                    buf[i],
+                    x[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let n = 256;
+        let b = 5;
+        let plan = Plan::new(n);
+        let x = rand_vec(n * b, 99);
+        let mut buf = x.clone();
+        rdfft_batch(&plan, &mut buf);
+        irdfft_batch(&plan, &mut buf);
+        for i in 0..n * b {
+            assert!((buf[i] - x[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn parseval_holds_in_packed_layout() {
+        // ||x||^2 == (y0^2 + y_{n/2}^2 + 2*sum_k (re^2+im^2)) / n
+        let n = 1024;
+        let plan = Plan::new(n);
+        let x = rand_vec(n, 3);
+        let energy_time: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let mut buf = x.clone();
+        rdfft_inplace(&plan, &mut buf);
+        let mut energy_freq = (buf[0] as f64).powi(2) + (buf[n / 2] as f64).powi(2);
+        for k in 1..n / 2 {
+            energy_freq += 2.0 * ((buf[k] as f64).powi(2) + (buf[n - k] as f64).powi(2));
+        }
+        energy_freq /= n as f64;
+        assert!(
+            (energy_time - energy_freq).abs() / energy_time < 1e-5,
+            "{energy_time} vs {energy_freq}"
+        );
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 128;
+        let plan = Plan::new(n);
+        let x = rand_vec(n, 11);
+        let y = rand_vec(n, 12);
+        let (a, b) = (0.7f32, -1.3f32);
+        let mut fx = x.clone();
+        let mut fy = y.clone();
+        rdfft_inplace(&plan, &mut fx);
+        rdfft_inplace(&plan, &mut fy);
+        let mut z: Vec<f32> = (0..n).map(|i| a * x[i] + b * y[i]).collect();
+        rdfft_inplace(&plan, &mut z);
+        for i in 0..n {
+            assert!((z[i] - (a * fx[i] + b * fy[i])).abs() < 1e-3);
+        }
+    }
+}

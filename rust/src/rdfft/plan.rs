@@ -1,0 +1,191 @@
+//! Transform plans: twiddle factors and the bit-reversal schedule.
+//!
+//! A [`Plan`] is created once per transform size and shared by every
+//! forward/inverse call (the paper's CUDA implementation likewise bakes
+//! twiddles into constant memory). Plans are *read-only* at transform time,
+//! so the transform itself stays allocation-free — the property Table 1
+//! measures.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Precomputed data for an `n`-point rdFFT (`n` a power of two ≥ 2).
+#[derive(Debug, Clone)]
+pub struct Plan {
+    n: usize,
+    log2n: u32,
+    /// Swap pairs `(i, j)` with `i < j` realizing the bit-reversal
+    /// permutation in-place. Involutive: applying twice is the identity.
+    swaps: Vec<(u32, u32)>,
+    /// Twiddles for every stage, flattened. Stage with half-block `m`
+    /// (combining two packed `m`-blocks into one `2m`-block) uses entries
+    /// `k = 1 .. m/2-1`: `W_{2m}^k = (cos θ, -sin θ)`, `θ = 2πk / (2m)`.
+    /// `stage_off[s]` is the base index for stage `s` (where `m = 2^{s}`).
+    twiddles: Vec<(f32, f32)>,
+    /// Inverse-stage *half*-twiddles `(wr/2, wi/2)`, same layout: the
+    /// inverse butterfly needs `((a−b)·wr + (c+d)·wi) / 2` per output, so
+    /// pre-halving the twiddle removes two multiplies per 4-group
+    /// (EXPERIMENTS.md §Perf iteration 2).
+    inv_twiddles: Vec<(f32, f32)>,
+    stage_off: Vec<usize>,
+}
+
+impl Plan {
+    /// Build a plan for transform size `n`. Panics unless `n` is a power of
+    /// two ≥ 2.
+    pub fn new(n: usize) -> Self {
+        assert!(super::is_supported_size(n), "rdFFT size must be a power of two >= 2, got {n}");
+        let log2n = n.trailing_zeros();
+
+        // Bit-reversal swap list.
+        let mut swaps = Vec::with_capacity(n / 2);
+        for i in 0..n {
+            let j = (i as u32).reverse_bits() >> (32 - log2n);
+            if (i as u32) < j {
+                swaps.push((i as u32, j));
+            }
+        }
+
+        // Twiddles per stage: stage s has m = 2^s, k = 1..m/2-1.
+        let mut twiddles = Vec::new();
+        let mut inv_twiddles = Vec::new();
+        let mut stage_off = Vec::with_capacity(log2n as usize);
+        for s in 0..log2n {
+            let m = 1usize << s;
+            stage_off.push(twiddles.len());
+            for k in 1..m / 2 {
+                let theta = std::f64::consts::TAU * k as f64 / (2 * m) as f64;
+                let (wr, wi) = (theta.cos() as f32, (-theta.sin()) as f32);
+                twiddles.push((wr, wi));
+                inv_twiddles.push((0.5 * wr, 0.5 * wi));
+            }
+        }
+
+        Plan { n, log2n, swaps, twiddles, inv_twiddles, stage_off }
+    }
+
+    /// Transform size.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// log2 of the transform size (= number of butterfly stages).
+    #[inline]
+    pub fn log2n(&self) -> u32 {
+        self.log2n
+    }
+
+    /// Bit-reversal swap pairs.
+    #[inline]
+    pub fn swaps(&self) -> &[(u32, u32)] {
+        &self.swaps
+    }
+
+    /// Twiddle slice for the stage with half-block `m` (entries for
+    /// `k = 1 .. m/2-1`, so the slice is empty for `m < 4`).
+    #[inline]
+    pub fn stage_twiddles(&self, m: usize) -> &[(f32, f32)] {
+        let s = m.trailing_zeros() as usize;
+        let start = self.stage_off[s];
+        let len = (m / 2).saturating_sub(1);
+        &self.twiddles[start..start + len]
+    }
+
+    /// Half-twiddles `(wr/2, wi/2)` for the inverse stage with half-block
+    /// `m` (same indexing as [`Self::stage_twiddles`]).
+    #[inline]
+    pub fn stage_inv_twiddles(&self, m: usize) -> &[(f32, f32)] {
+        let s = m.trailing_zeros() as usize;
+        let start = self.stage_off[s];
+        let len = (m / 2).saturating_sub(1);
+        &self.inv_twiddles[start..start + len]
+    }
+
+    /// Apply the bit-reversal permutation to `buf` in place.
+    /// Involutive — used by both the forward (before stages) and the
+    /// inverse (after stages).
+    #[inline]
+    pub fn bit_reverse(&self, buf: &mut [f32]) {
+        debug_assert_eq!(buf.len(), self.n);
+        for &(i, j) in &self.swaps {
+            buf.swap(i as usize, j as usize);
+        }
+    }
+
+    /// Heap bytes consumed by this plan (reported in DESIGN.md's VMEM /
+    /// constant-memory estimates; not counted against transform memory).
+    pub fn heap_bytes(&self) -> usize {
+        self.swaps.len() * 8
+            + self.twiddles.len() * 8
+            + self.inv_twiddles.len() * 8
+            + self.stage_off.len() * 8
+    }
+}
+
+/// Process-wide plan cache. Layers at many sizes share plans; building a
+/// plan is O(n log n) and done once.
+pub fn cached(n: usize) -> Arc<Plan> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<Plan>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    map.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_reverse_is_involutive() {
+        let plan = Plan::new(16);
+        let orig: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut buf = orig.clone();
+        plan.bit_reverse(&mut buf);
+        assert_ne!(buf, orig);
+        plan.bit_reverse(&mut buf);
+        assert_eq!(buf, orig);
+    }
+
+    #[test]
+    fn bit_reverse_permutation_is_correct() {
+        let plan = Plan::new(8);
+        let mut buf: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        plan.bit_reverse(&mut buf);
+        assert_eq!(buf, vec![0.0, 4.0, 2.0, 6.0, 1.0, 5.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn twiddle_counts_per_stage() {
+        let plan = Plan::new(16);
+        assert_eq!(plan.stage_twiddles(1).len(), 0);
+        assert_eq!(plan.stage_twiddles(2).len(), 0);
+        assert_eq!(plan.stage_twiddles(4).len(), 1);
+        assert_eq!(plan.stage_twiddles(8).len(), 3);
+    }
+
+    #[test]
+    fn twiddle_values_are_unit_magnitude() {
+        let plan = Plan::new(64);
+        for m in [4usize, 8, 16, 32] {
+            for &(wr, wi) in plan.stage_twiddles(m) {
+                let mag = (wr * wr + wi * wi).sqrt();
+                assert!((mag - 1.0).abs() < 1e-6);
+                assert!(wi <= 0.0, "forward twiddles have non-positive imaginary part");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        Plan::new(24);
+    }
+
+    #[test]
+    fn cache_returns_shared_plan() {
+        let a = cached(32);
+        let b = cached(32);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

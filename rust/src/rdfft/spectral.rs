@@ -1,0 +1,190 @@
+//! Packed-domain elementwise spectral operations.
+//!
+//! The circulant layer (Eq. 4) multiplies two spectra elementwise, and its
+//! backward pass (Eq. 5) multiplies by a *conjugated* spectrum. Because
+//! `conj(A·B) = conj(A)·conj(B)`, the product of two conjugate-symmetric
+//! spectra is itself conjugate-symmetric (§4.2 "Symmetry in Circulant
+//! Matrix based Training"), so all of these ops stay inside the packed
+//! layout and run fully in place on real buffers.
+
+/// `a ⊙= b` — elementwise complex product of two packed spectra, written
+/// into `a`. Zero allocation.
+#[inline]
+pub fn mul_inplace(a: &mut [f32], b: &[f32]) {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    a[0] *= b[0];
+    a[n / 2] *= b[n / 2];
+    for k in 1..n / 2 {
+        let (ar, ai) = (a[k], a[n - k]);
+        let (br, bi) = (b[k], b[n - k]);
+        a[k] = ar * br - ai * bi;
+        a[n - k] = ar * bi + ai * br;
+    }
+}
+
+/// `a = conj(a) ⊙ b` — the backward-pass product of Eq. 5, fused so the
+/// conjugation costs nothing (no separate negation pass, no allocation).
+#[inline]
+pub fn conj_mul_inplace(a: &mut [f32], b: &[f32]) {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    a[0] *= b[0];
+    a[n / 2] *= b[n / 2];
+    for k in 1..n / 2 {
+        let (ar, ai) = (a[k], a[n - k]);
+        let (br, bi) = (b[k], b[n - k]);
+        // (ar - i·ai)(br + i·bi)
+        a[k] = ar * br + ai * bi;
+        a[n - k] = ar * bi - ai * br;
+    }
+}
+
+/// `a ⊙= conj(b)` — elementwise product with the conjugate of `b`
+/// (equivalently `conj(b) ⊙ a`): the Eq. 5 product when the conjugated
+/// factor is the *other* operand. Zero allocation.
+#[inline]
+pub fn mul_conjb_inplace(a: &mut [f32], b: &[f32]) {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    a[0] *= b[0];
+    a[n / 2] *= b[n / 2];
+    for k in 1..n / 2 {
+        let (ar, ai) = (a[k], a[n - k]);
+        let (br, bi) = (b[k], b[n - k]);
+        // (ar + i·ai)(br - i·bi)
+        a[k] = ar * br + ai * bi;
+        a[n - k] = ai * br - ar * bi;
+    }
+}
+
+/// `acc += a ⊙ b` — multiply-accumulate of packed spectra, used by the
+/// block-circulant layer to sum block products in the frequency domain
+/// before a single inverse transform. Zero allocation.
+#[inline]
+pub fn mul_acc(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = acc.len();
+    debug_assert_eq!(n, a.len());
+    debug_assert_eq!(n, b.len());
+    acc[0] += a[0] * b[0];
+    acc[n / 2] += a[n / 2] * b[n / 2];
+    for k in 1..n / 2 {
+        let (ar, ai) = (a[k], a[n - k]);
+        let (br, bi) = (b[k], b[n - k]);
+        acc[k] += ar * br - ai * bi;
+        acc[n - k] += ar * bi + ai * br;
+    }
+}
+
+/// `acc += conj(a) ⊙ b` — multiply-accumulate with conjugation (backward
+/// pass of the block-circulant layer). Zero allocation.
+#[inline]
+pub fn conj_mul_acc(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = acc.len();
+    debug_assert_eq!(n, a.len());
+    debug_assert_eq!(n, b.len());
+    acc[0] += a[0] * b[0];
+    acc[n / 2] += a[n / 2] * b[n / 2];
+    for k in 1..n / 2 {
+        let (ar, ai) = (a[k], a[n - k]);
+        let (br, bi) = (b[k], b[n - k]);
+        acc[k] += ar * br + ai * bi;
+        acc[n - k] += ar * bi - ai * br;
+    }
+}
+
+/// Scale a packed spectrum (or any real buffer) in place.
+#[inline]
+pub fn scale_inplace(a: &mut [f32], s: f32) {
+    for v in a {
+        *v *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdfft::layout::{get, unpack_full};
+
+    fn cmul(a: (f32, f32), b: (f32, f32)) -> (f32, f32) {
+        (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+    }
+
+    fn packed(vals: &[(f32, f32)]) -> Vec<f32> {
+        // vals = y_0 .. y_{n/2}
+        let n = (vals.len() - 1) * 2;
+        let mut buf = vec![0.0f32; n];
+        crate::rdfft::layout::pack_from_rfft(vals, &mut buf);
+        buf
+    }
+
+    #[test]
+    fn mul_matches_complex_multiplication() {
+        let a = packed(&[(2.0, 0.0), (1.0, -3.0), (0.5, 2.0), (-1.0, 0.0)]);
+        let b = packed(&[(-1.0, 0.0), (2.0, 1.0), (0.0, -1.0), (4.0, 0.0)]);
+        let mut out = a.clone();
+        mul_inplace(&mut out, &b);
+        for k in 0..=3 {
+            let expect = cmul(get(&a, k), get(&b, k));
+            let got = get(&out, k);
+            assert!((got.0 - expect.0).abs() < 1e-6, "k={k}");
+            assert!((got.1 - expect.1).abs() < 1e-6, "k={k}");
+        }
+    }
+
+    #[test]
+    fn conj_mul_matches_conjugated_multiplication() {
+        let a = packed(&[(2.0, 0.0), (1.0, -3.0), (0.5, 2.0), (-1.0, 0.0)]);
+        let b = packed(&[(-1.0, 0.0), (2.0, 1.0), (0.0, -1.0), (4.0, 0.0)]);
+        let mut out = a.clone();
+        conj_mul_inplace(&mut out, &b);
+        for k in 0..=3 {
+            let (ar, ai) = get(&a, k);
+            let expect = cmul((ar, -ai), get(&b, k));
+            let got = get(&out, k);
+            assert!((got.0 - expect.0).abs() < 1e-6, "k={k}");
+            assert!((got.1 - expect.1).abs() < 1e-6, "k={k}");
+        }
+    }
+
+    #[test]
+    fn product_preserves_hermitian_symmetry() {
+        let a = packed(&[(1.0, 0.0), (2.0, -1.0), (3.0, 0.5), (0.0, 0.0)]);
+        let b = packed(&[(0.5, 0.0), (-1.0, 2.0), (1.0, 1.0), (2.0, 0.0)]);
+        let mut out = a.clone();
+        mul_inplace(&mut out, &b);
+        let full = unpack_full(&out);
+        let n = full.len();
+        for k in 1..n / 2 {
+            assert!((full[k].0 - full[n - k].0).abs() < 1e-6);
+            assert!((full[k].1 + full[n - k].1).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mul_acc_accumulates() {
+        let a = packed(&[(1.0, 0.0), (1.0, 1.0), (2.0, 0.0)]);
+        let b = packed(&[(2.0, 0.0), (3.0, -1.0), (1.0, 0.0)]);
+        let mut acc = vec![0.0f32; 4];
+        mul_acc(&mut acc, &a, &b);
+        mul_acc(&mut acc, &a, &b);
+        let mut once = a.clone();
+        mul_inplace(&mut once, &b);
+        for i in 0..4 {
+            assert!((acc[i] - 2.0 * once[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conj_mul_acc_matches_conj_mul() {
+        let a = packed(&[(1.0, 0.0), (1.0, 1.0), (2.0, 0.0)]);
+        let b = packed(&[(2.0, 0.0), (3.0, -1.0), (1.0, 0.0)]);
+        let mut acc = vec![0.0f32; 4];
+        conj_mul_acc(&mut acc, &a, &b);
+        let mut direct = a.clone();
+        conj_mul_inplace(&mut direct, &b);
+        for i in 0..4 {
+            assert!((acc[i] - direct[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! The artifacts manifest: the typed contract between `aot.py` and the
+//! Rust runtime (parameter order, shapes, token geometry, config).
+
+use super::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One named parameter tensor in a fixed position of the argument list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub p: usize,
+    pub lr: f64,
+    pub frozen: Vec<ParamSpec>,
+    pub trainable: Vec<ParamSpec>,
+    pub num_frozen_params: usize,
+    pub num_trainable_params: usize,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let cfg = v.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        let params = |k: &str| -> Result<Vec<ParamSpec>> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest missing {k}"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect()
+        };
+        Ok(Manifest {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            seq_len: get("seq_len")?,
+            batch: get("batch")?,
+            p: get("p")?,
+            lr: cfg.get("lr").and_then(Json::as_f64).ok_or_else(|| anyhow!("config missing lr"))?,
+            frozen: params("frozen")?,
+            trainable: params("trainable")?,
+            num_frozen_params: v
+                .get("num_frozen_params")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            num_trainable_params: v
+                .get("num_trainable_params")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "config": {"vocab": 256, "d_model": 64, "n_layers": 2, "n_heads": 2,
+                 "d_ff": 128, "seq_len": 32, "batch": 2, "p": 16, "lr": 0.05},
+      "frozen": [{"name": "emb", "shape": [256, 64]}],
+      "trainable": [{"name": "l0.wq.c", "shape": [4, 4, 16]},
+                    {"name": "l0.wv.c", "shape": [4, 4, 16]}],
+      "tokens_shape": [2, 32],
+      "train_outputs": 3,
+      "num_frozen_params": 16384,
+      "num_trainable_params": 512
+    }"#;
+
+    #[test]
+    fn parses_full_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.seq_len, 32);
+        assert!((m.lr - 0.05).abs() < 1e-12);
+        assert_eq!(m.frozen.len(), 1);
+        assert_eq!(m.frozen[0].elems(), 256 * 64);
+        assert_eq!(m.trainable[1].name, "l0.wv.c");
+        assert_eq!(m.trainable[1].shape, vec![4, 4, 16]);
+    }
+
+    #[test]
+    fn rejects_incomplete_manifest() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"config": {}}"#).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! `python/compile/aot.py` lowers the L2 model (with the L1 Pallas rdFFT
+//! kernels inside) to **HLO text** once at build time; this module loads
+//! the text with `HloModuleProto::from_text_file`, compiles it on the PJRT
+//! CPU client, and exposes typed step functions to the coordinator. Python
+//! never runs on the training path — after `make artifacts` the `repro`
+//! binary is self-contained.
+
+pub mod json;
+pub mod manifest;
+
+pub use manifest::{Manifest, ParamSpec};
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A loaded training runtime: compiled executables + parameter state
+/// threading.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: Option<xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    /// Frozen backbone literals (constant across steps).
+    frozen: Vec<xla::Literal>,
+    /// Current adapter parameters (threaded output -> input each step).
+    trainable: Vec<xla::Literal>,
+}
+
+impl Runtime {
+    /// Load artifacts produced by `make artifacts` from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .context("loading manifest.json (run `make artifacts` first)")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+
+        let compile = |file: &PathBuf| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(file)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", file.display()))
+        };
+
+        let train_exe = compile(&dir.join("train_step.hlo.txt"))?;
+        let eval_path = dir.join("eval_step.hlo.txt");
+        let eval_exe = if eval_path.exists() { Some(compile(&eval_path)?) } else { None };
+
+        let frozen = load_param_literals(&dir.join("frozen.bin"), &manifest.frozen)?;
+        let trainable = load_param_literals(&dir.join("trainable.bin"), &manifest.trainable)?;
+
+        Ok(Runtime { client, train_exe, eval_exe, manifest, frozen, trainable })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one SGD train step on a `(batch, seq)` token/target pair.
+    /// The updated adapter parameters replace the runtime's state (the
+    /// output→input threading that substitutes for buffer donation over
+    /// the HLO-text interchange); returns the step loss.
+    pub fn train_step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let (b, t) = (self.manifest.batch, self.manifest.seq_len);
+        anyhow::ensure!(tokens.len() == b * t, "tokens must be batch*seq");
+        anyhow::ensure!(targets.len() == b * t, "targets must be batch*seq");
+        let tok = xla::Literal::vec1(tokens)
+            .reshape(&[b as i64, t as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let tgt = xla::Literal::vec1(targets)
+            .reshape(&[b as i64, t as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(self.frozen.len() + self.trainable.len() + 2);
+        args.extend(self.frozen.iter());
+        args.extend(self.trainable.iter());
+        args.push(&tok);
+        args.push(&tgt);
+
+        let result =
+            self.train_exe.execute::<&xla::Literal>(&args).map_err(|e| anyhow!("{e:?}"))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let mut parts = out.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == self.trainable.len() + 1,
+            "expected {} outputs, got {}",
+            self.trainable.len() + 1,
+            parts.len()
+        );
+        let loss_lit = parts.pop().unwrap();
+        let loss: f32 = loss_lit.get_first_element().map_err(|e| anyhow!("{e:?}"))?;
+        self.trainable = parts;
+        Ok(loss)
+    }
+
+    /// Loss on a batch without updating parameters.
+    pub fn eval_step(&self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let exe = self.eval_exe.as_ref().ok_or_else(|| anyhow!("no eval executable"))?;
+        let (b, t) = (self.manifest.batch, self.manifest.seq_len);
+        let tok = xla::Literal::vec1(tokens)
+            .reshape(&[b as i64, t as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let tgt = xla::Literal::vec1(targets)
+            .reshape(&[b as i64, t as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.frozen.iter());
+        args.extend(self.trainable.iter());
+        args.push(&tok);
+        args.push(&tgt);
+        let result = exe.execute::<&xla::Literal>(&args).map_err(|e| anyhow!("{e:?}"))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        parts[0].get_first_element().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Current adapter parameters, flattened f32 in manifest order
+    /// (checkpointing).
+    pub fn trainable_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for lit in &self.trainable {
+            out.extend(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
+        }
+        Ok(out)
+    }
+
+    /// Restore adapter parameters from a flat f32 vector (checkpoint load).
+    pub fn set_trainable_flat(&mut self, flat: &[f32]) -> Result<()> {
+        let mut lits = Vec::with_capacity(self.manifest.trainable.len());
+        let mut off = 0usize;
+        for spec in &self.manifest.trainable {
+            let n = spec.elems();
+            anyhow::ensure!(off + n <= flat.len(), "flat params too short");
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&flat[off..off + n])
+                .reshape(&dims)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            lits.push(lit);
+            off += n;
+        }
+        anyhow::ensure!(off == flat.len(), "flat params too long");
+        self.trainable = lits;
+        Ok(())
+    }
+}
+
+/// Read a raw little-endian f32 file into per-parameter literals, shaped
+/// per the manifest spec (the `frozen.bin` / `trainable.bin` contract).
+pub fn load_param_literals(path: &Path, specs: &[ParamSpec]) -> Result<Vec<xla::Literal>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let total: usize = specs.iter().map(|s| s.elems()).sum();
+    anyhow::ensure!(
+        bytes.len() == total * 4,
+        "{}: expected {} bytes, found {}",
+        path.display(),
+        total * 4,
+        bytes.len()
+    );
+    let floats: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0usize;
+    for spec in specs {
+        let n = spec.elems();
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&floats[off..off + n])
+            .reshape(&dims)
+            .map_err(|e| anyhow!("shaping {}: {e:?}", spec.name))?;
+        out.push(lit);
+        off += n;
+    }
+    Ok(out)
+}

@@ -1,0 +1,135 @@
+//! Failure injection: the runtime and manifest loaders must fail loudly
+//! and informatively on corrupt artifacts — never load garbage weights.
+
+use rdfft::runtime::{load_param_literals, Manifest, ParamSpec, Runtime};
+use std::io::Write;
+use std::path::Path;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("rdfft_failinj_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_artifacts_dir_is_a_clean_error() {
+    let Err(err) = Runtime::load(Path::new("/nonexistent/artifacts")) else {
+        panic!("load of nonexistent dir must fail");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "error should mention the manifest: {msg}");
+}
+
+#[test]
+fn truncated_manifest_rejected() {
+    let d = tmpdir("truncmanifest");
+    std::fs::write(d.join("manifest.json"), b"{\"config\": {\"voc").unwrap();
+    assert!(Runtime::load(&d).is_err());
+}
+
+#[test]
+fn manifest_missing_fields_rejected() {
+    assert!(Manifest::parse(r#"{"config": {"vocab": 1}}"#).is_err());
+    assert!(Manifest::parse(r#"{"trainable": []}"#).is_err());
+    assert!(Manifest::parse("[]").is_err());
+    assert!(Manifest::parse("").is_err());
+}
+
+#[test]
+fn param_file_size_mismatch_rejected() {
+    let d = tmpdir("binsize");
+    let path = d.join("params.bin");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(&[0u8; 16]).unwrap(); // 4 f32s
+    drop(f);
+    let specs = vec![ParamSpec { name: "w".into(), shape: vec![2, 4] }]; // needs 8
+    let Err(err) = load_param_literals(&path, &specs) else {
+        panic!("size mismatch must be rejected");
+    };
+    assert!(format!("{err}").contains("expected"), "{err}");
+}
+
+#[test]
+fn param_file_exact_size_accepted_and_shaped() {
+    let d = tmpdir("binok");
+    let path = d.join("params.bin");
+    let vals: Vec<u8> = (0..8).flat_map(|i| (i as f32).to_le_bytes()).collect();
+    std::fs::write(&path, &vals).unwrap();
+    let specs = vec![
+        ParamSpec { name: "a".into(), shape: vec![2, 2] },
+        ParamSpec { name: "b".into(), shape: vec![4] },
+    ];
+    let lits = load_param_literals(&path, &specs).unwrap();
+    assert_eq!(lits.len(), 2);
+    assert_eq!(lits[0].element_count(), 4);
+    assert_eq!(lits[1].to_vec::<f32>().unwrap(), vec![4.0, 5.0, 6.0, 7.0]);
+}
+
+#[test]
+fn garbage_hlo_text_rejected_at_compile() {
+    // full Runtime::load with a manifest that parses but HLO that doesn't
+    let d = tmpdir("garbagehlo");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{
+          "config": {"vocab": 4, "d_model": 2, "n_layers": 1, "n_heads": 1,
+                     "d_ff": 2, "seq_len": 2, "batch": 1, "p": 2, "lr": 0.1},
+          "frozen": [{"name": "w", "shape": [1]}],
+          "trainable": [{"name": "c", "shape": [1]}],
+          "tokens_shape": [1, 2],
+          "train_outputs": 2,
+          "num_frozen_params": 1,
+          "num_trainable_params": 1
+        }"#,
+    )
+    .unwrap();
+    std::fs::write(d.join("train_step.hlo.txt"), "this is not an HloModule").unwrap();
+    std::fs::write(d.join("frozen.bin"), 1.0f32.to_le_bytes()).unwrap();
+    std::fs::write(d.join("trainable.bin"), 0.0f32.to_le_bytes()).unwrap();
+    assert!(Runtime::load(&d).is_err());
+}
+
+#[test]
+fn nan_input_does_not_crash_the_transform() {
+    // numerical robustness: NaNs propagate (IEEE semantics) but must not
+    // corrupt neighbouring lanes' independence or panic.
+    use rdfft::rdfft::{irdfft_inplace, plan::cached, rdfft_inplace};
+    let n = 64;
+    let plan = cached(n);
+    let mut buf = vec![1.0f32; n];
+    buf[7] = f32::NAN;
+    rdfft_inplace(&plan, &mut buf);
+    assert!(buf.iter().any(|v| v.is_nan()), "NaN must propagate");
+    irdfft_inplace(&plan, &mut buf); // must not panic
+}
+
+#[test]
+fn denormal_and_extreme_inputs_roundtrip() {
+    use rdfft::rdfft::{irdfft_inplace, plan::cached, rdfft_inplace};
+    let n = 32;
+    let plan = cached(n);
+    for scale in [1e-38f32, 1e30f32] {
+        let orig: Vec<f32> = (0..n).map(|i| scale * ((i % 5) as f32 - 2.0)).collect();
+        let mut buf = orig.clone();
+        rdfft_inplace(&plan, &mut buf);
+        irdfft_inplace(&plan, &mut buf);
+        for i in 0..n {
+            let tol = scale * 1e-3 * n as f32;
+            assert!((buf[i] - orig[i]).abs() <= tol, "scale={scale} i={i}");
+        }
+    }
+}
+
+#[test]
+fn set_trainable_flat_rejects_wrong_lengths() {
+    // exercised without artifacts via direct manifest construction is not
+    // possible (Runtime fields are private) — covered through the public
+    // path in integration_runtime when artifacts exist; here we assert the
+    // length law on load_param_literals, the shared code path.
+    let d = tmpdir("wronglen");
+    let path = d.join("p.bin");
+    std::fs::write(&path, [0u8; 12]).unwrap(); // 3 f32
+    let specs = vec![ParamSpec { name: "w".into(), shape: vec![4] }];
+    assert!(load_param_literals(&path, &specs).is_err());
+}

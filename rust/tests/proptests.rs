@@ -1,0 +1,295 @@
+//! Property-based sweeps over the core invariants (in-tree substitute for
+//! proptest, which is unavailable offline): each property runs against
+//! hundreds of seeded random cases across sizes; failures print the seed
+//! so cases are reproducible.
+
+use rdfft::baselines::naive_dft;
+use rdfft::rdfft::bf16::{irdfft_inplace_bf16, rdfft_inplace_bf16, Bf16};
+use rdfft::rdfft::{
+    irdfft_inplace, layout, plan::cached, rdfft_inplace, spectral, BlockCirculant, Circulant,
+};
+
+/// Deterministic per-case RNG.
+struct Rng(u64);
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn f32(&mut self) -> f32 {
+        (self.next() >> 40) as f32 / (1u64 << 24) as f32 * 2.0 - 1.0
+    }
+    fn vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+const SIZES: [usize; 8] = [2, 4, 8, 16, 64, 256, 1024, 4096];
+
+#[test]
+fn prop_roundtrip_identity() {
+    for case in 0..300u64 {
+        let mut rng = Rng::new(case);
+        let n = SIZES[rng.below(SIZES.len())];
+        let plan = cached(n);
+        let x = rng.vec(n);
+        let mut buf = x.clone();
+        rdfft_inplace(&plan, &mut buf);
+        irdfft_inplace(&plan, &mut buf);
+        for i in 0..n {
+            assert!(
+                (buf[i] - x[i]).abs() < 1e-3,
+                "case={case} n={n} i={i}: {} vs {}",
+                buf[i],
+                x[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_forward_matches_naive_dft() {
+    for case in 0..60u64 {
+        let mut rng = Rng::new(1000 + case);
+        let n = SIZES[rng.below(6)]; // <= 1024 (naive is O(n^2))
+        let plan = cached(n);
+        let x = rng.vec(n);
+        let mut buf = x.clone();
+        rdfft_inplace(&plan, &mut buf);
+        let want = naive_dft(&x);
+        let tol = 1e-3 * (n as f32).sqrt();
+        for k in 0..=n / 2 {
+            let (re, im) = layout::get(&buf, k);
+            assert!((re - want[k].0).abs() < tol, "case={case} n={n} k={k} re");
+            assert!((im - want[k].1).abs() < tol, "case={case} n={n} k={k} im");
+        }
+    }
+}
+
+#[test]
+fn prop_linearity() {
+    for case in 0..200u64 {
+        let mut rng = Rng::new(2000 + case);
+        let n = SIZES[rng.below(SIZES.len())];
+        let plan = cached(n);
+        let (a, b) = (rng.f32() * 3.0, rng.f32() * 3.0);
+        let x = rng.vec(n);
+        let y = rng.vec(n);
+        let mut fx = x.clone();
+        let mut fy = y.clone();
+        rdfft_inplace(&plan, &mut fx);
+        rdfft_inplace(&plan, &mut fy);
+        let mut z: Vec<f32> = (0..n).map(|i| a * x[i] + b * y[i]).collect();
+        rdfft_inplace(&plan, &mut z);
+        for i in 0..n {
+            assert!(
+                (z[i] - (a * fx[i] + b * fy[i])).abs() < 2e-3 * (n as f32).sqrt(),
+                "case={case} n={n} i={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_parseval() {
+    for case in 0..200u64 {
+        let mut rng = Rng::new(3000 + case);
+        let n = SIZES[rng.below(SIZES.len())];
+        let plan = cached(n);
+        let x = rng.vec(n);
+        let et: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        let mut buf = x.clone();
+        rdfft_inplace(&plan, &mut buf);
+        let mut ef = (buf[0] as f64).powi(2) + (buf[n / 2] as f64).powi(2);
+        for k in 1..n / 2 {
+            ef += 2.0 * ((buf[k] as f64).powi(2) + (buf[n - k] as f64).powi(2));
+        }
+        ef /= n as f64;
+        assert!(
+            (et - ef).abs() <= 1e-4 * et.max(1.0),
+            "case={case} n={n}: {et} vs {ef}"
+        );
+    }
+}
+
+#[test]
+fn prop_spectral_mul_is_convolution() {
+    // IFFT(â ⊙ b̂) == circular convolution of a and b.
+    for case in 0..80u64 {
+        let mut rng = Rng::new(4000 + case);
+        let n = [4usize, 8, 16, 64, 256][rng.below(5)];
+        let plan = cached(n);
+        let a = rng.vec(n);
+        let b = rng.vec(n);
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        rdfft_inplace(&plan, &mut fa);
+        rdfft_inplace(&plan, &mut fb);
+        spectral::mul_inplace(&mut fa, &fb);
+        irdfft_inplace(&plan, &mut fa);
+        for i in 0..n {
+            let want: f32 = (0..n).map(|j| a[j] * b[(i + n - j) % n]).sum();
+            assert!(
+                (fa[i] - want).abs() < 1e-2 * (n as f32).sqrt(),
+                "case={case} n={n} i={i}: {} vs {want}",
+                fa[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_conjugation_time_reversal() {
+    // conj in frequency == time reversal: IFFT(conj(x̂))[i] == x[(n-i) % n]
+    for case in 0..100u64 {
+        let mut rng = Rng::new(5000 + case);
+        let n = SIZES[rng.below(6)];
+        let plan = cached(n);
+        let x = rng.vec(n);
+        let mut buf = x.clone();
+        rdfft_inplace(&plan, &mut buf);
+        layout::conj_inplace(&mut buf);
+        irdfft_inplace(&plan, &mut buf);
+        for i in 0..n {
+            assert!(
+                (buf[i] - x[(n - i) % n]).abs() < 1e-3,
+                "case={case} n={n} i={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_circulant_matches_dense() {
+    for case in 0..60u64 {
+        let mut rng = Rng::new(6000 + case);
+        let n = [4usize, 8, 16, 32, 64][rng.below(5)];
+        let c = rng.vec(n);
+        let x = rng.vec(n);
+        let circ = Circulant::from_first_column(&c);
+        let dense = circ.to_dense();
+        let mut got = x.clone();
+        circ.matvec_inplace(&mut got);
+        for i in 0..n {
+            let want: f32 = (0..n).map(|j| dense[i * n + j] * x[j]).sum();
+            assert!((got[i] - want).abs() < 1e-2, "case={case} n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_block_circulant_grads_match_finite_difference() {
+    for case in 0..10u64 {
+        let mut rng = Rng::new(7000 + case);
+        let p = [4usize, 8, 16][rng.below(3)];
+        let (rows, cols) = (2 * p, 2 * p);
+        let cvec = rng.vec((rows / p) * (cols / p) * p);
+        let bc = BlockCirculant::from_block_columns(rows, cols, p, &cvec);
+        let x = rng.vec(cols);
+        let g0 = rng.vec(rows);
+
+        let mut x_hat = x.clone();
+        let mut out = vec![0.0; rows];
+        bc.forward_inplace(&mut x_hat, &mut out);
+        let mut g = g0.clone();
+        let mut dx = vec![0.0; cols];
+        let mut dc = vec![0.0; bc.num_params()];
+        bc.backward(&x_hat, &mut g, &mut dx, &mut dc);
+
+        // dx via finite differences on a few random coordinates
+        let f = |x: &[f32]| -> f32 {
+            let mut xb = x.to_vec();
+            let mut o = vec![0.0; rows];
+            bc.forward_inplace(&mut xb, &mut o);
+            o.iter().zip(&g0).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-2f32;
+        for _ in 0..5 {
+            let idx = rng.below(cols);
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!(
+                (fd - dx[idx]).abs() < 3e-2 * (1.0 + fd.abs()),
+                "case={case} p={p} idx={idx}: fd={fd} got={}",
+                dx[idx]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bf16_tracks_f32() {
+    for case in 0..60u64 {
+        let mut rng = Rng::new(8000 + case);
+        let n = [16usize, 64, 256, 1024][rng.below(4)];
+        let plan = cached(n);
+        let x = rng.vec(n);
+        let mut f32_buf = x.clone();
+        rdfft_inplace(&plan, &mut f32_buf);
+        let mut bf: Vec<Bf16> = x.iter().map(|&v| Bf16::from_f32(v)).collect();
+        rdfft_inplace_bf16(&plan, &mut bf);
+        let scale = (n as f32) * 0.02;
+        for i in 0..n {
+            assert!(
+                (bf[i].to_f32() - f32_buf[i]).abs() < scale.max(0.05),
+                "case={case} n={n} i={i}: {} vs {}",
+                bf[i].to_f32(),
+                f32_buf[i]
+            );
+        }
+        irdfft_inplace_bf16(&plan, &mut bf);
+        for i in 0..n {
+            assert!(
+                (bf[i].to_f32() - x[i]).abs() < 0.06,
+                "case={case} roundtrip n={n} i={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bf16_conversion_roundtrip_and_monotone() {
+    let mut rng = Rng::new(9000);
+    for _ in 0..5000 {
+        let v = rng.f32() * 1e6;
+        let b = Bf16::from_f32(v);
+        let back = b.to_f32();
+        // rounding error bounded by 1 part in 2^8
+        assert!((back - v).abs() <= v.abs() / 128.0 + f32::MIN_POSITIVE);
+        // double conversion is idempotent
+        assert_eq!(Bf16::from_f32(back), b);
+    }
+}
+
+#[test]
+fn prop_transform_never_allocates() {
+    // run many shapes; the tracker must never see an allocation from
+    // inside the transform itself.
+    rdfft::memtrack::reset();
+    for case in 0..50u64 {
+        let mut rng = Rng::new(10_000 + case);
+        let n = SIZES[rng.below(SIZES.len())];
+        let plan = cached(n);
+        let mut buf = rng.vec(n);
+        let other = buf.clone(); // caller-side, untracked
+        let before = rdfft::memtrack::snapshot().alloc_count;
+        rdfft_inplace(&plan, &mut buf);
+        spectral::mul_inplace(&mut buf, &other);
+        irdfft_inplace(&plan, &mut buf);
+        // (the clone above is caller-side and untracked; transform adds 0)
+        assert_eq!(rdfft::memtrack::snapshot().alloc_count, before, "case={case} n={n}");
+    }
+}
