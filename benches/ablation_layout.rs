@@ -73,4 +73,18 @@ fn main() {
         "\n(read: fwd-total ≈ bitrev + fwd-stages; rfft-oop pays the extra\n\
          allocation+copy; plan-build is why plans are cached)"
     );
+
+    // ------------------------------------------------------------------
+    // Batch execution ablation: scalar per-row loop vs the batch-major
+    // engine vs engine + scoped threads — the shared grid from
+    // experiments (fwd+inv roundtrips keep values bounded across timed
+    // iterations; also prints the batch=1 latency gate and writes
+    // BENCH_rdfft.json). Exits non-zero if the latency gate regresses.
+    // ------------------------------------------------------------------
+    println!();
+    let fast = std::env::args().any(|a| a == "--fast");
+    if !rdfft::coordinator::experiments::bench_rdfft_engine(fast) {
+        eprintln!("FAIL: engine batch=1 latency regressed vs the scalar path");
+        std::process::exit(1);
+    }
 }

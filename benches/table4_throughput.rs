@@ -1,9 +1,18 @@
 //! Bench: Table 4 — fine-tuning throughput and task-accuracy parity
-//! across methods (FF / LoRA / circulant×{fft, rfft, ours}).
+//! across methods (FF / LoRA / circulant×{fft, rfft, ours}), preceded by
+//! the batch-engine throughput ablation (scalar row loop vs batch-major
+//! vs batch-major + scoped threads), which also writes the
+//! machine-readable `BENCH_rdfft.json` (schema in EXPERIMENTS.md §Perf).
 //!
 //! `cargo bench --bench table4_throughput`
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
+    let gates_ok = rdfft::coordinator::experiments::bench_rdfft_engine(fast);
+    println!();
     rdfft::coordinator::experiments::table4(fast);
+    if !gates_ok {
+        eprintln!("FAIL: engine batch=1 latency regressed vs the scalar path");
+        std::process::exit(1);
+    }
 }

@@ -22,7 +22,7 @@ use crate::baselines::complex_fft::{fft_out_of_place, ifft_out_of_place, Complex
 use crate::baselines::rfft::{irfft_alloc, rfft_alloc, rfft_conj, rfft_mul, RfftVec};
 use crate::memtrack::{Category, ScopedCategory};
 use crate::rdfft::plan::cached;
-use crate::rdfft::{irdfft_inplace, rdfft_inplace, spectral};
+use crate::rdfft::{engine, spectral};
 use std::sync::Arc;
 
 /// FFT backend selection for [`CirculantLayer`] — the three columns of
@@ -327,9 +327,7 @@ impl CirculantLayer {
     /// it holding spectra (eval-only use, or inspection).
     pub fn ensure_time_domain(&mut self) {
         if self.c_in_freq {
-            for blk in self.c.as_mut_slice().chunks_exact_mut(self.p) {
-                irdfft_inplace(&self.plan, blk);
-            }
+            engine::inverse_batch(&self.plan, self.c.as_mut_slice());
             self.c_in_freq = false;
         }
     }
@@ -337,21 +335,18 @@ impl CirculantLayer {
     fn forward_rdfft(&mut self, mut x: Tensor) -> Tensor {
         let (p, rb, cb) = (self.p, self.rb(), self.cb());
         let b = x.rows;
-        // ĉ: transform the parameter buffer itself, in place. It stays in
-        // the frequency domain until the end of backward restores it.
+        // ĉ: transform the parameter buffer itself, in place (one
+        // batch-major engine call over all rb*cb blocks). It stays in the
+        // frequency domain until the end of backward restores it.
         if !self.c_in_freq {
-            for blk in self.c.as_mut_slice().chunks_exact_mut(p) {
-                rdfft_inplace(&self.plan, blk);
-            }
+            engine::forward_batch(&self.plan, self.c.as_mut_slice());
             self.c_in_freq = true;
         }
-        // Transform every input block in place: x's buffer now holds x̂ and
-        // doubles as the saved-for-backward tensor. No allocation.
-        for r in 0..b {
-            for blk in x.row_mut(r).chunks_exact_mut(p) {
-                rdfft_inplace(&self.plan, blk);
-            }
-        }
+        // Transform every input block in place — the whole (b × cols)
+        // tensor is b*cb contiguous length-p blocks, so a single engine
+        // batch covers it. x's buffer now holds x̂ and doubles as the
+        // saved-for-backward tensor. No allocation.
+        engine::forward_batch(&self.plan, x.as_mut_slice());
         // The output activation is mandatory for any method.
         let mut out = Tensor::zeros_cat(b, self.rows, Category::Intermediates);
         for r in 0..b {
@@ -363,9 +358,10 @@ impl CirculantLayer {
                     let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
                     spectral::mul_acc(ob, ch, &xrow[j * p..(j + 1) * p]);
                 }
-                irdfft_inplace(&self.plan, ob);
             }
         }
+        // One batched inverse finishes every output block of every row.
+        engine::inverse_batch(&self.plan, out.as_mut_slice());
         self.saved_x = Some(x);
         out
     }
@@ -374,12 +370,9 @@ impl CirculantLayer {
         let (p, rb, cb) = (self.p, self.rb(), self.cb());
         let b = g.rows;
         let x_hat = self.saved_x.take().expect("forward first");
-        // ĝ: transform grad-output blocks in place (no allocation).
-        for r in 0..b {
-            for blk in g.row_mut(r).chunks_exact_mut(p) {
-                rdfft_inplace(&self.plan, blk);
-            }
-        }
+        // ĝ: transform grad-output blocks in place, batch-major over the
+        // whole tensor (no allocation).
+        engine::forward_batch(&self.plan, g.as_mut_slice());
         // dĉ += conj(x̂) ⊙ ĝ — straight into the (mandatory) grad buffer.
         for r in 0..b {
             let xrow = x_hat.row(r);
@@ -408,8 +401,9 @@ impl CirculantLayer {
                         let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
                         spectral::conj_mul_acc(sb, ch, &row[i * p..(i + 1) * p]);
                     }
-                    irdfft_inplace(&self.plan, sb);
                 }
+                // one batched inverse over the whole accumulated row
+                engine::inverse_batch(&self.plan, ws);
                 row.copy_from_slice(ws);
             }
             dx
@@ -425,20 +419,16 @@ impl CirculantLayer {
                         let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
                         spectral::conj_mul_acc(db, ch, &grow[i * p..(i + 1) * p]);
                     }
-                    irdfft_inplace(&self.plan, db);
                 }
             }
+            engine::inverse_batch(&self.plan, dx.as_mut_slice());
             dx
         };
         // Leave the frequency domain: gradient blocks IFFT in place
         // (Eq. 5's final IFFT), parameter blocks IFFT back so SGD happens
         // on time-domain c, identical to the fft/rfft backends.
-        for blk in self.dc.as_mut_slice().chunks_exact_mut(p) {
-            irdfft_inplace(&self.plan, blk);
-        }
-        for blk in self.c.as_mut_slice().chunks_exact_mut(p) {
-            irdfft_inplace(&self.plan, blk);
-        }
+        engine::inverse_batch(&self.plan, self.dc.as_mut_slice());
+        engine::inverse_batch(&self.plan, self.c.as_mut_slice());
         self.c_in_freq = false;
         dx
     }

@@ -25,28 +25,44 @@ impl Stats {
 
 /// Run `f` repeatedly for roughly `budget_ms` milliseconds (after a
 /// warmup) and report per-iteration statistics. `f` should include any
-/// per-iteration state reset; use [`bench_batched`] if the op is too fast
-/// to time individually.
+/// per-iteration state reset.
+///
+/// The first call doubles as the warmup probe: when a single call already
+/// exceeds the warmup window (ultra-slow closures — large-n throughput
+/// cells), warmup is capped at that one iteration instead of duplicating
+/// nearly the whole budget, so slow cells finish within budget. The
+/// sampling loop always records at least one sample.
 pub fn bench<F: FnMut()>(budget_ms: u64, mut f: F) -> Stats {
-    // warmup
-    let warm_until = Instant::now() + std::time::Duration::from_millis(budget_ms / 5 + 1);
-    while Instant::now() < warm_until {
-        f();
-    }
-    // calibrate batch size so one sample is >= ~20us
+    let warm_window = std::time::Duration::from_millis(budget_ms / 5 + 1);
     let t0 = Instant::now();
     f();
-    let single = t0.elapsed().as_nanos().max(1) as u64;
-    let batch = (20_000 / single).max(1) as usize;
+    let mut single = t0.elapsed();
+    if single < warm_window {
+        let warm_until = Instant::now() + (warm_window - single);
+        while Instant::now() < warm_until {
+            f();
+        }
+        // Re-probe now that caches/pages are warm: the cold first call
+        // would otherwise mis-calibrate fast closures into tiny batches.
+        let t1 = Instant::now();
+        f();
+        single = t1.elapsed();
+    }
+    // calibrate batch size so one sample is >= ~20us
+    let single_ns = single.as_nanos().max(1) as u64;
+    let batch = (20_000 / single_ns).max(1) as usize;
 
     let mut samples = Vec::new();
     let until = Instant::now() + std::time::Duration::from_millis(budget_ms);
-    while Instant::now() < until {
+    loop {
         let t = Instant::now();
         for _ in 0..batch {
             f();
         }
         samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        if Instant::now() >= until {
+            break;
+        }
     }
     stats_from(samples)
 }
@@ -58,6 +74,52 @@ fn stats_from(mut samples: Vec<f64>) -> Stats {
     let mean = samples.iter().sum::<f64>() / n as f64;
     let q = |p: f64| samples[((n as f64 - 1.0) * p) as usize];
     Stats { mean_ns: mean, median_ns: q(0.5), p10_ns: q(0.1), p90_ns: q(0.9), iters: n }
+}
+
+/// One measured cell of the rdFFT engine benchmark grid, serialized into
+/// `BENCH_rdfft.json` (schema documented in EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Execution mode: `"scalar"`, `"batch_major"`, or `"batch_threads"`.
+    pub mode: String,
+    /// Transform size.
+    pub n: usize,
+    /// Rows per call.
+    pub batch: usize,
+    /// Stats over the timed closure (one fwd+inv roundtrip of the batch).
+    pub stats: Stats,
+    /// Transforms per second: `2 * batch / median_seconds`.
+    pub transforms_per_sec: f64,
+    /// Throughput relative to the scalar row loop at the same (n, batch).
+    pub speedup_vs_scalar: f64,
+}
+
+/// Write engine benchmark records as JSON (hand-rolled: serde is
+/// unavailable offline; the reader side is `runtime::json`).
+pub fn write_bench_json(path: &std::path::Path, records: &[BenchRecord]) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"bench_rdfft/v1\",\n  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"n\": {}, \"batch\": {}, \
+             \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"p10_ns\": {:.1}, \
+             \"p90_ns\": {:.1}, \"iters\": {}, \"transforms_per_sec\": {:.1}, \
+             \"speedup_vs_scalar\": {:.3}}}{}\n",
+            r.mode,
+            r.n,
+            r.batch,
+            r.stats.median_ns,
+            r.stats.mean_ns,
+            r.stats.p10_ns,
+            r.stats.p90_ns,
+            r.stats.iters,
+            r.transforms_per_sec,
+            r.speedup_vs_scalar,
+            if i + 1 == records.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
 }
 
 /// Format a byte count like the paper's tables (MB with two decimals).
@@ -95,5 +157,48 @@ mod tests {
     fn formatting_matches_paper_style() {
         assert_eq!(fmt_mib(1024 * 1024), "1.00");
         assert_eq!(fmt_ratio(7340032, 1048576), "(×7.00)");
+    }
+
+    #[test]
+    fn slow_closure_stays_within_budget() {
+        // One call takes ~3x the warmup window; the capped warmup must
+        // keep the whole bench within ~(1 call warmup + budget + 1 call
+        // overshoot) instead of duplicating the budget during warmup.
+        let budget_ms = 20u64;
+        let t0 = std::time::Instant::now();
+        let s = bench(budget_ms, || {
+            std::thread::sleep(std::time::Duration::from_millis(12));
+        });
+        let elapsed = t0.elapsed().as_millis() as u64;
+        assert!(s.iters >= 1);
+        assert!(
+            elapsed < 4 * budget_ms,
+            "slow-closure bench blew the budget: {elapsed}ms for budget {budget_ms}ms"
+        );
+    }
+
+    #[test]
+    fn bench_json_roundtrips_through_parser() {
+        let rec = BenchRecord {
+            mode: "batch_major".into(),
+            n: 256,
+            batch: 8,
+            stats: Stats { mean_ns: 10.0, median_ns: 9.0, p10_ns: 8.0, p90_ns: 12.0, iters: 5 },
+            transforms_per_sec: 1.6e9,
+            speedup_vs_scalar: 2.25,
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("rdfft_benchjson_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_rdfft.json");
+        write_bench_json(&path, &[rec.clone(), rec]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::runtime::json::parse(&text).expect("valid json");
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_rdfft/v1"));
+        let recs = v.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("n").unwrap().as_usize(), Some(256));
+        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("batch_major"));
+        assert!((recs[0].get("speedup_vs_scalar").unwrap().as_f64().unwrap() - 2.25).abs() < 1e-9);
     }
 }

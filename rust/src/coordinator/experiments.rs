@@ -322,6 +322,116 @@ pub fn optim_ablation() {
     );
 }
 
+/// Batch-engine ablation: scalar per-row loop vs batch-major engine vs
+/// batch-major + scoped threads, over (n × batch). Each timed closure is
+/// one forward+inverse roundtrip of the whole batch (keeps values
+/// bounded across iterations). Prints the grid and writes the
+/// machine-readable records to `BENCH_rdfft.json` (schema in
+/// EXPERIMENTS.md §Perf).
+///
+/// Returns `false` when the single-row latency gate failed (engine
+/// batch=1 slower than the scalar path beyond measurement slack) so
+/// bench binaries can exit non-zero instead of burying a `REGRESSED`
+/// cell in the log.
+pub fn bench_rdfft_engine(fast: bool) -> bool {
+    use crate::coordinator::benchlib::{write_bench_json, BenchRecord};
+    use crate::rdfft::engine::{self, EngineConfig};
+    use crate::rdfft::forward::rdfft_batch_scalar;
+    use crate::rdfft::inverse::irdfft_batch_scalar;
+
+    let budget = if fast { 60 } else { 200 };
+    let ns = [256usize, 1024, 4096];
+    let batches: &[usize] = if fast { &[1, 8] } else { &[1, 8, 32] };
+    let serial = EngineConfig::serial();
+
+    println!("# rdFFT batch engine — fwd+inv roundtrip, median ns per row-transform\n");
+    println!(
+        "{:<8}{:>8}{:>14}{:>14}{:>14}{:>10}{:>10}{:>12}",
+        "n", "batch", "scalar", "batch-major", "bm+threads", "bm×", "thr×", "b1-gate"
+    );
+    let mut records = Vec::new();
+    let mut gates_ok = true;
+    for &n in &ns {
+        let plan = cached(n);
+        for &b in batches {
+            let mut buf: Vec<f32> =
+                (0..n * b).map(|i| ((i * 31 + 17) % 101) as f32 / 50.0 - 1.0).collect();
+            let s_scalar = bench(budget, || {
+                rdfft_batch_scalar(&plan, &mut buf);
+                irdfft_batch_scalar(&plan, &mut buf);
+                std::hint::black_box(&buf[0]);
+            });
+            let s_bm = bench(budget, || {
+                engine::forward_batch_with(&plan, &mut buf, &serial);
+                engine::inverse_batch_with(&plan, &mut buf, &serial);
+                std::hint::black_box(&buf[0]);
+            });
+            let s_thr = bench(budget, || {
+                engine::forward_batch(&plan, &mut buf);
+                engine::inverse_batch(&plan, &mut buf);
+                std::hint::black_box(&buf[0]);
+            });
+            // per row-transform: each closure iteration performs 2*b
+            // transforms (b forward + b inverse)
+            let per = |s: &crate::coordinator::benchlib::Stats| s.median_ns / (2.0 * b as f64);
+            let tps = |s: &crate::coordinator::benchlib::Stats| {
+                2.0 * b as f64 / (s.median_ns.max(1.0) / 1e9)
+            };
+            let bm_x = s_scalar.median_ns / s_bm.median_ns.max(1.0);
+            let thr_x = s_scalar.median_ns / s_thr.median_ns.max(1.0);
+            // Single-row latency gate: the engine's batch=1 path must not
+            // regress vs the seed scalar transform (10% measurement slack
+            // — shared CI machines are noisy).
+            let gate = if b == 1 {
+                if s_thr.median_ns <= s_scalar.median_ns * 1.10 {
+                    "ok"
+                } else {
+                    gates_ok = false;
+                    "REGRESSED"
+                }
+            } else {
+                "-"
+            };
+            println!(
+                "{:<8}{:>8}{:>14.0}{:>14.0}{:>14.0}{:>10.2}{:>10.2}{:>12}",
+                n,
+                b,
+                per(&s_scalar),
+                per(&s_bm),
+                per(&s_thr),
+                bm_x,
+                thr_x,
+                gate
+            );
+            for (mode, stats, speedup) in [
+                ("scalar", s_scalar, 1.0),
+                ("batch_major", s_bm, bm_x),
+                ("batch_threads", s_thr, thr_x),
+            ] {
+                records.push(BenchRecord {
+                    mode: mode.to_string(),
+                    n,
+                    batch: b,
+                    transforms_per_sec: tps(&stats),
+                    stats,
+                    speedup_vs_scalar: speedup,
+                });
+            }
+        }
+    }
+    println!(
+        "\n(gates: batch-major+threads >= 2x scalar at batch >= 8 where the\n\
+         work threshold engages; batch=1 must ride the spawn-free path and\n\
+         stay at or below scalar latency — see EXPERIMENTS.md §Perf)"
+    );
+    let path = std::path::Path::new("BENCH_rdfft.json");
+    match write_bench_json(path, &records) {
+        Ok(()) => println!("wrote {} ({} records)", path.display(), records.len()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+    gates_ok
+}
+
 /// Measure the single-layer grid cell-by-cell and return machine-readable
 /// rows — used by integration tests.
 pub fn table1_cells(d: usize, batches: &[usize], p: usize) -> Vec<(String, usize, usize)> {

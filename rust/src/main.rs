@@ -72,6 +72,8 @@ fn usage() -> ! {
            fig2     memory breakdown at peak        [--d D=1024] [--fast]\n\
            audit    zero-allocation audit\n\
            optim    optimizer-state memory ablation\n\
+           engine   batch-engine throughput ablation [--fast]\n\
+                    (writes BENCH_rdfft.json)\n\
            report   all of the above (fast variants)"
     );
     std::process::exit(2);
@@ -112,6 +114,11 @@ fn main() -> Result<()> {
         "fig2" => experiments::fig2(args.get_usize("d", 1024), args.has("fast")),
         "audit" => experiments::alloc_audit(),
         "optim" => experiments::optim_ablation(),
+        "engine" => {
+            if !experiments::bench_rdfft_engine(args.has("fast")) {
+                bail!("engine latency gate failed: batch=1 regressed vs the scalar path");
+            }
+        }
         "report" => {
             experiments::table1(true);
             experiments::fig2(1024, true);
@@ -120,6 +127,7 @@ fn main() -> Result<()> {
             experiments::table4(true);
             experiments::alloc_audit();
             experiments::optim_ablation();
+            let _ = experiments::bench_rdfft_engine(true);
         }
         _ => usage(),
     }

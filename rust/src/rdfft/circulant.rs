@@ -15,6 +15,7 @@
 //!   (which any training method must allocate anyway),
 //! * conjugations (Eq. 5) are fused sign-flips, never materialized.
 
+use super::engine;
 use super::forward::rdfft_inplace;
 use super::inverse::irdfft_inplace;
 use super::plan::{cached, Plan};
@@ -110,9 +111,9 @@ impl BlockCirculant {
         assert_eq!(c.len(), rb * cb * p);
         let plan = cached(p);
         let mut c_hat = c.to_vec();
-        for blk in c_hat.chunks_exact_mut(p) {
-            rdfft_inplace(&plan, blk);
-        }
+        // All rb*cb block columns are contiguous length-p rows: one
+        // batch-major engine call transforms the lot.
+        engine::forward_batch(&plan, &mut c_hat);
         BlockCirculant { plan, rows, cols, p, c_hat }
     }
 
@@ -166,16 +167,16 @@ impl BlockCirculant {
         assert_eq!(out.len(), self.rows);
         let p = self.p;
         let cb = self.col_blocks();
-        for xb in x.chunks_exact_mut(p) {
-            rdfft_inplace(&self.plan, xb);
-        }
+        // x̂: all cb input blocks in one batch-major pass.
+        engine::forward_batch(&self.plan, x);
         for (i, ob) in out.chunks_exact_mut(p).enumerate() {
             for (j, xb) in x.chunks_exact(p).enumerate() {
                 let ch = &self.c_hat[(i * cb + j) * p..][..p];
                 spectral::mul_acc(ob, ch, xb);
             }
-            irdfft_inplace(&self.plan, ob);
         }
+        // One batched inverse over all rb accumulated output blocks.
+        engine::inverse_batch(&self.plan, out);
     }
 
     /// Backward pass (Eq. 5).
@@ -198,10 +199,8 @@ impl BlockCirculant {
         let p = self.p;
         let cb = self.col_blocks();
 
-        // ĝ: transform grad-output blocks in place.
-        for gb in g.chunks_exact_mut(p) {
-            rdfft_inplace(&self.plan, gb);
-        }
+        // ĝ: transform grad-output blocks in place, batch-major.
+        engine::forward_batch(&self.plan, g);
         // dĉ_ij += conj(x̂_j) ⊙ ĝ_i  — accumulated in the frequency domain;
         // the optimizer step works on spectra directly so no inverse here.
         for (i, gb) in g.chunks_exact(p).enumerate() {
@@ -210,15 +209,16 @@ impl BlockCirculant {
                 spectral::conj_mul_acc(d, xb, gb);
             }
         }
-        // dx_j = IFFT( Σ_i conj(ĉ_ij) ⊙ ĝ_i )
+        // dx_j = IFFT( Σ_i conj(ĉ_ij) ⊙ ĝ_i ): accumulate every block,
+        // then a single batched inverse over all cb of them.
         for (j, dxb) in dx.chunks_exact_mut(p).enumerate() {
             dxb.fill(0.0);
             for (i, gb) in g.chunks_exact(p).enumerate() {
                 let ch = &self.c_hat[(i * cb + j) * p..][..p];
                 spectral::conj_mul_acc(dxb, ch, gb);
             }
-            irdfft_inplace(&self.plan, dxb);
         }
+        engine::inverse_batch(&self.plan, dx);
     }
 
     /// Apply an SGD step directly on the spectra parameters:

@@ -9,6 +9,7 @@
 //!   arbitrarily long streams. All FFT work is in-place in reused
 //!   buffers; steady-state processing performs **zero** allocations.
 
+use super::engine;
 use super::forward::rdfft_inplace;
 use super::inverse::irdfft_inplace;
 use super::plan::{cached, Plan};
@@ -48,6 +49,39 @@ pub fn linear_convolve(x: &[f32], h: &[f32]) -> Vec<f32> {
     circular_convolve_with_spectrum(&plan, &mut xa, &ha);
     xa.truncate(out_len);
     xa
+}
+
+/// Batched full linear convolution: `rows` equal-length signals
+/// (concatenated row-major in `xs`) against one filter `h`, through the
+/// batch-major engine — one forward batch, one spectral sweep, one
+/// inverse batch, instead of `rows` independent transform pairs. Returns
+/// the outputs concatenated row-major, each `x_len + h.len() - 1` long.
+pub fn linear_convolve_batch(xs: &[f32], rows: usize, h: &[f32]) -> Vec<f32> {
+    assert!(rows > 0, "need at least one signal row");
+    assert!(xs.len() % rows == 0, "xs must hold `rows` equal-length signals");
+    assert!(!h.is_empty());
+    let x_len = xs.len() / rows;
+    assert!(x_len > 0, "signal rows must be non-empty");
+    let out_len = x_len + h.len() - 1;
+    let n = out_len.next_power_of_two().max(2);
+    let plan = cached(n);
+    let mut h_spec = vec![0.0f32; n];
+    h_spec[..h.len()].copy_from_slice(h);
+    rdfft_inplace(&plan, &mut h_spec);
+    let mut buf = vec![0.0f32; rows * n];
+    for (r, x) in xs.chunks_exact(x_len).enumerate() {
+        buf[r * n..r * n + x_len].copy_from_slice(x);
+    }
+    engine::forward_batch(&plan, &mut buf);
+    for row in buf.chunks_exact_mut(n) {
+        spectral::mul_inplace(row, &h_spec);
+    }
+    engine::inverse_batch(&plan, &mut buf);
+    let mut out = Vec::with_capacity(rows * out_len);
+    for r in 0..rows {
+        out.extend_from_slice(&buf[r * n..r * n + out_len]);
+    }
+    out
 }
 
 /// Streaming linear convolution with a fixed filter via overlap-add.
@@ -168,6 +202,25 @@ mod tests {
             assert_eq!(got.len(), want.len());
             for i in 0..want.len() {
                 assert!((got[i] - want[i]).abs() < 1e-3, "({nx},{nh}) i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_convolution_matches_per_row() {
+        let (rows, x_len, h_len) = (5usize, 40usize, 9usize);
+        let h = rand_vec(h_len, 100);
+        let xs = rand_vec(rows * x_len, 101);
+        let got = linear_convolve_batch(&xs, rows, &h);
+        let out_len = x_len + h_len - 1;
+        assert_eq!(got.len(), rows * out_len);
+        for r in 0..rows {
+            let want = linear_convolve(&xs[r * x_len..(r + 1) * x_len], &h);
+            for i in 0..out_len {
+                assert!(
+                    (got[r * out_len + i] - want[i]).abs() < 1e-3,
+                    "row={r} i={i}"
+                );
             }
         }
     }

@@ -1,0 +1,586 @@
+//! Batch-major rdFFT execution engine.
+//!
+//! The scalar paths in [`super::forward`] / [`super::inverse`] transform
+//! one row at a time: a bit-reversal pass, then one pass per butterfly
+//! stage. This module is the batched hot path every multi-row consumer
+//! (block-circulant layers, 2-D transforms, conv batches, the trainer's
+//! per-step block sweeps) routes through. Three ideas, all composing with
+//! the paper's in-place discipline (zero allocations, zero out-of-buffer
+//! writes):
+//!
+//! 1. **Fused permutation + first two stages.** The `m = 1` and `m = 2`
+//!    stages have trivial twiddles (±1, ∓i), and the in-place bit-reversal
+//!    swap loop finalizes positions in ascending order, so each aligned
+//!    4-block can run both stages *immediately after* its four swaps while
+//!    the values are in registers — one pass over the buffer instead of
+//!    three. (Correctness argument in [`fused_bitrev_stage12`].)
+//!
+//! 2. **SoA twiddles + tiled batch-major stages.** Remaining stages sweep
+//!    a *tile* of rows, reusing each stage's twiddles across every row in
+//!    the tile; twiddles live in separate `wr`/`wi` slices
+//!    ([`Plan::stage_twiddles_soa`]) so the innermost loops read stride-1
+//!    lanes. Small stages iterate rows innermost at a fixed `(stage, k)`
+//!    to amortize twiddle loads; large stages iterate `k` innermost so the
+//!    four element streams stay stride-±1 for the autovectorizer.
+//!
+//! 3. **Scoped-thread row parallelism.** Batches above a tunable work
+//!    threshold split into contiguous row chunks under
+//!    [`std::thread::scope`] (no external crates). Thresholds are chosen
+//!    so `batch = 1` latency never pays a spawn, and every worker has
+//!    enough rows to amortize one. See `EXPERIMENTS.md` §Perf for the
+//!    measured ablation and `BENCH_rdfft.json` for the machine-readable
+//!    numbers.
+
+use super::plan::Plan;
+
+/// Tuning knobs for the batch engine. [`EngineConfig::default`] is what
+/// the public batch entry points use; benches and tests construct
+/// explicit configs to pin a specific execution mode.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Rows per cache tile in the batch-major stage sweep.
+    pub tile_rows: usize,
+    /// Minimum total elements (`rows * n`) before threads are considered.
+    pub par_min_elems: usize,
+    /// Minimum rows before threads are considered (also the floor that
+    /// keeps single-row latency on the spawn-free path).
+    pub par_min_rows: usize,
+    /// Target elements per worker chunk: the batch is split into at most
+    /// `total_elems / par_chunk_elems` chunks (capped by core count).
+    pub par_chunk_elems: usize,
+    /// Hard cap on worker threads. 0 = `available_parallelism()`.
+    pub max_threads: usize,
+}
+
+impl EngineConfig {
+    /// Default thresholds: threads only when there are ≥ 4 rows and the
+    /// whole batch is ≥ 32 Ki elements (≈ 128 KiB), with ≥ 16 Ki elements
+    /// of work per spawned worker.
+    pub const fn new() -> Self {
+        EngineConfig {
+            tile_rows: 8,
+            par_min_elems: 1 << 15,
+            par_min_rows: 4,
+            par_chunk_elems: 1 << 14,
+            max_threads: 0,
+        }
+    }
+
+    /// A config that never spawns threads (pure batch-major execution);
+    /// used by the ablation bench to separate layout wins from
+    /// parallelism wins.
+    pub const fn serial() -> Self {
+        EngineConfig {
+            tile_rows: 8,
+            par_min_elems: 1 << 15,
+            par_min_rows: usize::MAX,
+            par_chunk_elems: 1 << 14,
+            max_threads: 0,
+        }
+    }
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig::new()
+    }
+}
+
+/// Stages with half-block `m` at or below this bound run rows innermost
+/// (twiddle-amortizing); larger stages run `k` innermost (stride-1 SIMD
+/// lanes). `m = 32` keeps the row-inner working set per block within a
+/// few cache lines per row.
+const SMALL_M: usize = 32;
+
+/// Forward-transform `batch` contiguous rows of length `plan.n()` in
+/// place with default tuning. Equivalent to per-row
+/// [`super::forward::rdfft_inplace`] (bit-for-bit: the same float ops in
+/// the same per-element order).
+pub fn forward_batch(plan: &Plan, buf: &mut [f32]) {
+    forward_batch_with(plan, buf, &EngineConfig::new());
+}
+
+/// Inverse-transform `batch` contiguous rows in place, default tuning.
+pub fn inverse_batch(plan: &Plan, buf: &mut [f32]) {
+    inverse_batch_with(plan, buf, &EngineConfig::new());
+}
+
+/// [`forward_batch`] with explicit tuning.
+pub fn forward_batch_with(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
+    run_batch(plan, buf, cfg, forward_rows);
+}
+
+/// [`inverse_batch`] with explicit tuning.
+pub fn inverse_batch_with(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
+    run_batch(plan, buf, cfg, inverse_rows);
+}
+
+/// Shared driver: validate, decide serial vs scoped-thread execution,
+/// dispatch `kernel` over contiguous row chunks.
+fn run_batch(
+    plan: &Plan,
+    buf: &mut [f32],
+    cfg: &EngineConfig,
+    kernel: fn(&Plan, &mut [f32], usize),
+) {
+    let n = plan.n();
+    assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");
+    let rows = buf.len() / n;
+    if rows == 0 {
+        return;
+    }
+    let workers = planned_workers(rows, n, cfg);
+    if workers <= 1 {
+        kernel(plan, buf, cfg.tile_rows);
+        return;
+    }
+    // Contiguous row chunks; `ceil` so the chunk count never exceeds
+    // `workers`. Scoped threads may borrow `buf` and `plan` directly.
+    let chunk_rows = (rows + workers - 1) / workers;
+    let tile_rows = cfg.tile_rows;
+    std::thread::scope(|s| {
+        let mut rest = buf;
+        while rest.len() > chunk_rows * n {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(chunk_rows * n);
+            s.spawn(move || kernel(plan, chunk, tile_rows));
+            rest = tail;
+        }
+        // Run the final chunk on the calling thread: one fewer spawn.
+        kernel(plan, rest, tile_rows);
+    });
+}
+
+/// How many workers (including the calling thread) the batch should use.
+fn planned_workers(rows: usize, n: usize, cfg: &EngineConfig) -> usize {
+    let total = rows * n;
+    if rows < cfg.par_min_rows || total < cfg.par_min_elems {
+        return 1;
+    }
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let cap = if cfg.max_threads == 0 { cores } else { cfg.max_threads.min(cores) };
+    let by_work = (total / cfg.par_chunk_elems.max(1)).max(1);
+    by_work.min(cap).min(rows)
+}
+
+// ---------------------------------------------------------------------
+// Per-chunk kernels
+// ---------------------------------------------------------------------
+
+/// Forward kernel over one contiguous chunk of rows.
+fn forward_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
+    let n = plan.n();
+    // Pass 1 (per row): fused bit-reversal + stages m = 1, 2.
+    for row in buf.chunks_exact_mut(n) {
+        fused_bitrev_stage12(plan, row);
+    }
+    // Pass 2 (per row tile): remaining stages, batch-major.
+    if n > 4 {
+        for tile in buf.chunks_mut(tile_rows.max(1) * n) {
+            forward_stages_tile(plan, tile);
+        }
+    }
+}
+
+/// Inverse kernel over one contiguous chunk of rows. Mirrors
+/// [`forward_rows`] in reverse: tiled stages down to m = 4, then a fused
+/// per-row undo of stages m = 2, 1, then the bit-reversal.
+fn inverse_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
+    let n = plan.n();
+    if n > 4 {
+        for tile in buf.chunks_mut(tile_rows.max(1) * n) {
+            inverse_stages_tile(plan, tile);
+        }
+    }
+    for row in buf.chunks_exact_mut(n) {
+        fused_inverse_stage21(row, n);
+        // The trailing permutation cannot be interleaved with the
+        // butterfly undo (a swap may read a 4-block that is not yet
+        // undone), so the inverse keeps it as its own pass.
+        plan.bit_reverse(row);
+    }
+}
+
+/// One pass over `row`: the in-place bit-reversal fused with the m = 1
+/// and m = 2 butterfly stages.
+///
+/// Correctness of the interleave: in the ascending in-place swap loop
+/// (`swap(i, rev(i))` iff `i < rev(i)`), every position `p` changes
+/// exactly once, at step `min(p, rev(p))` — so after the four swaps of an
+/// aligned 4-block `[4u, 4u+4)` the block holds its final pre-stage
+/// values, and no later swap step `i' > 4u+3` can read or write inside
+/// the block again (a swap touches `i'` and `rev(i') > i'` only). The two
+/// trivial-twiddle stages can therefore run on the block immediately,
+/// while its values are hot.
+pub fn fused_bitrev_stage12(plan: &Plan, row: &mut [f32]) {
+    let n = plan.n();
+    debug_assert_eq!(row.len(), n);
+    if n == 2 {
+        let (a, b) = (row[0], row[1]);
+        row[0] = a + b;
+        row[1] = a - b;
+        return;
+    }
+    let rev = plan.rev();
+    let mut s = 0usize;
+    while s < n {
+        for i in s..s + 4 {
+            let j = rev[i] as usize;
+            if i < j {
+                row.swap(i, j);
+            }
+        }
+        let (x0, x1, x2, x3) = (row[s], row[s + 1], row[s + 2], row[s + 3]);
+        // m = 1 on pairs: packed 2-point spectra [DC, Nyquist].
+        let (a, b) = (x0 + x1, x0 - x1);
+        let (c, d) = (x2 + x3, x2 - x3);
+        // m = 2: k = 0 lane combines the two DCs; the sub-Nyquist lane
+        // (y_1 = e - i·o) flips the sign of the odd block's Nyquist slot.
+        row[s] = a + c;
+        row[s + 1] = b;
+        row[s + 2] = a - c;
+        row[s + 3] = -d;
+        s += 4;
+    }
+}
+
+/// One pass over `row`: undo stage m = 2 then m = 1 (the exact inverse of
+/// the butterfly half of [`fused_bitrev_stage12`]; the caller applies the
+/// bit-reversal afterwards).
+pub fn fused_inverse_stage21(row: &mut [f32], n: usize) {
+    debug_assert_eq!(row.len(), n);
+    if n == 2 {
+        let (a, b) = (row[0], row[1]);
+        row[0] = 0.5 * (a + b);
+        row[1] = 0.5 * (a - b);
+        return;
+    }
+    let mut s = 0usize;
+    while s < n {
+        let (y0, y1, y2, y3) = (row[s], row[s + 1], row[s + 2], row[s + 3]);
+        // Undo m = 2: recover the two packed 2-point spectra.
+        let a = 0.5 * (y0 + y2);
+        let c = 0.5 * (y0 - y2);
+        let b = y1;
+        let d = -y3;
+        // Undo m = 1 on both pairs.
+        row[s] = 0.5 * (a + b);
+        row[s + 1] = 0.5 * (a - b);
+        row[s + 2] = 0.5 * (c + d);
+        row[s + 3] = 0.5 * (c - d);
+        s += 4;
+    }
+}
+
+/// Forward stages m = 4 .. n/2 over a tile of rows, batch-major.
+fn forward_stages_tile(plan: &Plan, tile: &mut [f32]) {
+    let n = plan.n();
+    let rows = tile.len() / n;
+    debug_assert_eq!(tile.len(), rows * n);
+    let mut m = 4usize;
+    while m < n {
+        let (wr, wi) = plan.stage_twiddles_soa(m);
+        let two_m = 2 * m;
+        let half = m / 2;
+        let mut s = 0usize;
+        while s < n {
+            // Trivial lanes (k = 0 DC/Nyquist combine, k = m/2 sign
+            // flip), per row.
+            for r in 0..rows {
+                let base = r * n + s;
+                let e = tile[base];
+                let o = tile[base + m];
+                tile[base] = e + o;
+                tile[base + m] = e - o;
+                let idx = base + m + half;
+                tile[idx] = -tile[idx];
+            }
+            // Symmetric 4-groups, 1 <= k < m/2.
+            //
+            // SAFETY: identical bounds argument to the scalar
+            // forward_stages (all four indices lie in [base, base+two_m),
+            // and base + two_m <= rows*n because s + two_m <= n), lifted
+            // over `rows` rows. Bounds checks cost ~25% here (see
+            // EXPERIMENTS.md §Perf).
+            unsafe {
+                if m <= SMALL_M {
+                    // Row-inner: one twiddle load serves every row in the
+                    // tile at this (stage, k).
+                    for k in 1..half {
+                        let wrk = *wr.get_unchecked(k - 1);
+                        let wik = *wi.get_unchecked(k - 1);
+                        for r in 0..rows {
+                            let blk = tile.get_unchecked_mut(r * n + s..r * n + s + two_m);
+                            bf4_forward(blk, m, two_m, k, wrk, wik);
+                        }
+                    }
+                } else {
+                    // k-inner: stride-1 SoA twiddles and stride-±1
+                    // element streams for the autovectorizer.
+                    for r in 0..rows {
+                        let blk = tile.get_unchecked_mut(r * n + s..r * n + s + two_m);
+                        for k in 1..half {
+                            bf4_forward(
+                                blk,
+                                m,
+                                two_m,
+                                k,
+                                *wr.get_unchecked(k - 1),
+                                *wi.get_unchecked(k - 1),
+                            );
+                        }
+                    }
+                }
+            }
+            s += two_m;
+        }
+        m = two_m;
+    }
+}
+
+/// Inverse stages m = n/2 .. 4 over a tile of rows, batch-major.
+fn inverse_stages_tile(plan: &Plan, tile: &mut [f32]) {
+    let n = plan.n();
+    let rows = tile.len() / n;
+    debug_assert_eq!(tile.len(), rows * n);
+    let mut m = n / 2;
+    while m >= 4 {
+        let (hr, hi) = plan.stage_inv_twiddles_soa(m);
+        let two_m = 2 * m;
+        let half = m / 2;
+        let mut s = 0usize;
+        while s < n {
+            for r in 0..rows {
+                let base = r * n + s;
+                let a = tile[base];
+                let b = tile[base + m];
+                tile[base] = 0.5 * (a + b);
+                tile[base + m] = 0.5 * (a - b);
+                let idx = base + m + half;
+                tile[idx] = -tile[idx];
+            }
+            // SAFETY: same bounds argument as forward_stages_tile.
+            unsafe {
+                if m <= SMALL_M {
+                    for k in 1..half {
+                        let hrk = *hr.get_unchecked(k - 1);
+                        let hik = *hi.get_unchecked(k - 1);
+                        for r in 0..rows {
+                            let blk = tile.get_unchecked_mut(r * n + s..r * n + s + two_m);
+                            bf4_inverse(blk, m, two_m, k, hrk, hik);
+                        }
+                    }
+                } else {
+                    for r in 0..rows {
+                        let blk = tile.get_unchecked_mut(r * n + s..r * n + s + two_m);
+                        for k in 1..half {
+                            bf4_inverse(
+                                blk,
+                                m,
+                                two_m,
+                                k,
+                                *hr.get_unchecked(k - 1),
+                                *hi.get_unchecked(k - 1),
+                            );
+                        }
+                    }
+                }
+            }
+            s += two_m;
+        }
+        m /= 2;
+    }
+}
+
+/// The forward symmetric 4-group butterfly (same float ops, same order as
+/// the scalar path — batch outputs stay bit-identical to per-row ones).
+///
+/// # Safety
+/// `blk` must have length `two_m` and `1 <= k < m/2` with `two_m = 2*m`.
+#[inline(always)]
+unsafe fn bf4_forward(blk: &mut [f32], m: usize, two_m: usize, k: usize, wr: f32, wi: f32) {
+    debug_assert!(k >= 1 && k < m / 2 && blk.len() == two_m);
+    let er = *blk.get_unchecked(k);
+    let ei = *blk.get_unchecked(m - k);
+    let or_ = *blk.get_unchecked(m + k);
+    let oi = *blk.get_unchecked(two_m - k);
+    let tr = wr * or_ - wi * oi;
+    let ti = wr * oi + wi * or_;
+    *blk.get_unchecked_mut(k) = er + tr;
+    *blk.get_unchecked_mut(two_m - k) = ei + ti;
+    *blk.get_unchecked_mut(m - k) = er - tr;
+    *blk.get_unchecked_mut(m + k) = ti - ei;
+}
+
+/// The inverse symmetric 4-group butterfly (pre-halved twiddles `hr`,
+/// `hi`; see [`super::inverse`]).
+///
+/// # Safety
+/// `blk` must have length `two_m` and `1 <= k < m/2` with `two_m = 2*m`.
+#[inline(always)]
+unsafe fn bf4_inverse(blk: &mut [f32], m: usize, two_m: usize, k: usize, hr: f32, hi: f32) {
+    debug_assert!(k >= 1 && k < m / 2 && blk.len() == two_m);
+    let a = *blk.get_unchecked(k);
+    let b = *blk.get_unchecked(m - k);
+    let c = *blk.get_unchecked(two_m - k);
+    let d = *blk.get_unchecked(m + k);
+    let er = 0.5 * (a + b);
+    let ei = 0.5 * (c - d);
+    let or_ = (a - b) * hr + (c + d) * hi;
+    let oi = (c + d) * hr - (a - b) * hi;
+    *blk.get_unchecked_mut(k) = er;
+    *blk.get_unchecked_mut(m - k) = ei;
+    *blk.get_unchecked_mut(m + k) = or_;
+    *blk.get_unchecked_mut(two_m - k) = oi;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::forward::{rdfft_inplace, rdfft_batch_scalar};
+    use super::super::inverse::{irdfft_inplace, irdfft_batch_scalar};
+    use super::super::plan::cached;
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((state >> 33) as f64 / (1u64 << 31) as f64 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    /// A config that forces the threaded path even for tiny batches.
+    fn force_threads() -> EngineConfig {
+        EngineConfig {
+            par_min_rows: 2,
+            par_min_elems: 0,
+            par_chunk_elems: 1,
+            max_threads: 3,
+            ..EngineConfig::new()
+        }
+    }
+
+    #[test]
+    fn fused_first_pass_equals_bitrev_plus_two_stages() {
+        for n in [4usize, 8, 16, 64, 256] {
+            let plan = cached(n);
+            let x = rand_vec(n, n as u64);
+            let mut fused = x.clone();
+            fused_bitrev_stage12(&plan, &mut fused);
+            // reference: explicit permutation, then scalar stages m=1,2
+            let mut r = x.clone();
+            plan.bit_reverse(&mut r);
+            for blk in r.chunks_exact_mut(2) {
+                let (e, o) = (blk[0], blk[1]);
+                blk[0] = e + o;
+                blk[1] = e - o;
+            }
+            if n >= 4 {
+                for blk in r.chunks_exact_mut(4) {
+                    let (e, o) = (blk[0], blk[2]);
+                    blk[0] = e + o;
+                    blk[2] = e - o;
+                    blk[3] = -blk[3];
+                }
+            }
+            assert_eq!(fused, r, "n={n}");
+        }
+    }
+
+    #[test]
+    fn forward_batch_matches_scalar_rows_exactly() {
+        for (n, b) in [(2usize, 3usize), (4, 5), (16, 1), (64, 7), (256, 9), (1024, 4)] {
+            let plan = cached(n);
+            let x = rand_vec(n * b, (n + b) as u64);
+            let mut scalar = x.clone();
+            rdfft_batch_scalar(&plan, &mut scalar);
+            let mut engine = x.clone();
+            forward_batch(&plan, &mut engine);
+            assert_eq!(engine, scalar, "n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn inverse_batch_matches_scalar_rows_exactly() {
+        for (n, b) in [(2usize, 3usize), (4, 5), (16, 1), (64, 7), (256, 9), (1024, 4)] {
+            let plan = cached(n);
+            let x = rand_vec(n * b, (2 * n + b) as u64);
+            let mut scalar = x.clone();
+            irdfft_batch_scalar(&plan, &mut scalar);
+            let mut engine = x.clone();
+            inverse_batch(&plan, &mut engine);
+            assert_eq!(engine, scalar, "n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn threaded_path_matches_serial_path() {
+        let cfg = force_threads();
+        for (n, b) in [(8usize, 5usize), (64, 13), (256, 6)] {
+            let plan = cached(n);
+            let x = rand_vec(n * b, 77 + n as u64);
+            let mut serial = x.clone();
+            forward_batch_with(&plan, &mut serial, &EngineConfig::serial());
+            let mut threaded = x.clone();
+            forward_batch_with(&plan, &mut threaded, &cfg);
+            assert_eq!(serial, threaded, "fwd n={n} b={b}");
+            inverse_batch_with(&plan, &mut serial, &EngineConfig::serial());
+            inverse_batch_with(&plan, &mut threaded, &cfg);
+            assert_eq!(serial, threaded, "inv n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity_across_tile_boundaries() {
+        // batch sizes straddling the default tile (8 rows) and odd counts
+        for b in [1usize, 7, 8, 9, 17] {
+            let n = 128;
+            let plan = cached(n);
+            let x = rand_vec(n * b, 1000 + b as u64);
+            let mut buf = x.clone();
+            forward_batch(&plan, &mut buf);
+            inverse_batch(&plan, &mut buf);
+            for i in 0..n * b {
+                assert!((buf[i] - x[i]).abs() < 1e-4, "b={b} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_agrees_with_single_row_transform() {
+        let n = 512;
+        let plan = cached(n);
+        let x = rand_vec(n, 5);
+        let mut scalar = x.clone();
+        rdfft_inplace(&plan, &mut scalar);
+        let mut engine = x.clone();
+        forward_batch(&plan, &mut engine);
+        assert_eq!(engine, scalar);
+        irdfft_inplace(&plan, &mut scalar);
+        inverse_batch(&plan, &mut engine);
+        assert_eq!(engine, scalar);
+    }
+
+    #[test]
+    fn worker_planning_respects_thresholds() {
+        let cfg = EngineConfig::new();
+        // single row never threads
+        assert_eq!(planned_workers(1, 1 << 20, &cfg), 1);
+        // tiny total work never threads
+        assert_eq!(planned_workers(8, 256, &cfg), 1);
+        // serial config never threads
+        assert_eq!(planned_workers(1024, 4096, &EngineConfig::serial()), 1);
+        // big batches thread up to the core/row caps
+        let w = planned_workers(64, 4096, &cfg);
+        assert!(w >= 1 && w <= 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_buffer_rejected() {
+        let plan = cached(8);
+        let mut buf = vec![0.0f32; 12];
+        forward_batch(&plan, &mut buf);
+    }
+}

@@ -28,8 +28,17 @@ pub fn rdfft_inplace(plan: &Plan, buf: &mut [f32]) {
 }
 
 /// Batched variant: `buf` holds `batch` contiguous rows of length
-/// `plan.n()`; each row is transformed independently, in place.
+/// `plan.n()`; each row is transformed independently, in place. Routed
+/// through the batch-major [`super::engine`] (fused first stages, SoA
+/// twiddles, scoped-thread row chunks above the work threshold); output
+/// is bit-identical to the per-row scalar path.
 pub fn rdfft_batch(plan: &Plan, buf: &mut [f32]) {
+    super::engine::forward_batch(plan, buf);
+}
+
+/// The pre-engine serial row loop, kept as the equivalence/ablation
+/// reference: per-row scalar transforms, nothing fused, nothing batched.
+pub fn rdfft_batch_scalar(plan: &Plan, buf: &mut [f32]) {
     let n = plan.n();
     assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");
     for row in buf.chunks_exact_mut(n) {

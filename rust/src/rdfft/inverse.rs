@@ -22,8 +22,15 @@ pub fn irdfft_inplace(plan: &Plan, buf: &mut [f32]) {
     plan.bit_reverse(buf);
 }
 
-/// Batched variant of [`irdfft_inplace`] over contiguous rows.
+/// Batched variant of [`irdfft_inplace`] over contiguous rows, routed
+/// through the batch-major [`super::engine`]; output is bit-identical to
+/// the per-row scalar path.
 pub fn irdfft_batch(plan: &Plan, buf: &mut [f32]) {
+    super::engine::inverse_batch(plan, buf);
+}
+
+/// The pre-engine serial row loop (equivalence/ablation reference).
+pub fn irdfft_batch_scalar(plan: &Plan, buf: &mut [f32]) {
     let n = plan.n();
     assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");
     for row in buf.chunks_exact_mut(n) {

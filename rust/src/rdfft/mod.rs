@@ -20,6 +20,8 @@
 //! * [`layout`]    — packed-format helpers (pack/unpack/conjugate/views)
 //! * [`forward`]   — in-place forward transform (§4.1, Proposition 1)
 //! * [`inverse`]   — in-place inverse transform (§4.2, Eq. 7)
+//! * [`engine`]    — batch-major execution engine (fused stages, SoA
+//!   twiddles, scoped-thread batches) behind every batched entry point
 //! * [`spectral`]  — packed-domain elementwise complex ops (⊙, conj-⊙)
 //! * [`circulant`] — circulant & block-circulant products + gradients (Eq. 4/5)
 //! * [`bf16`]      — software bfloat16 and the bf16 transform path
@@ -28,6 +30,7 @@ pub mod bf16;
 pub mod circulant;
 pub mod circulant_bf16;
 pub mod conv;
+pub mod engine;
 pub mod forward;
 pub mod inverse;
 pub mod layout;
@@ -36,6 +39,7 @@ pub mod spectral;
 pub mod twod;
 
 pub use circulant::{BlockCirculant, Circulant};
+pub use engine::{forward_batch, inverse_batch, EngineConfig};
 pub use forward::{rdfft_batch, rdfft_inplace};
 pub use inverse::{irdfft_batch, irdfft_inplace};
 pub use plan::Plan;

@@ -7,7 +7,7 @@
 //! measures.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// Precomputed data for an `n`-point rdFFT (`n` a power of two ≥ 2).
 #[derive(Debug, Clone)]
@@ -28,6 +28,18 @@ pub struct Plan {
     /// (EXPERIMENTS.md §Perf iteration 2).
     inv_twiddles: Vec<(f32, f32)>,
     stage_off: Vec<usize>,
+    /// Full bit-reversal table: `rev[i]` is the bit-reverse of `i`. The
+    /// batch engine's fused permutation pass needs per-index targets (the
+    /// pairwise `swaps` list cannot be interleaved with butterflies).
+    rev: Vec<u32>,
+    /// SoA twiddles for the batch engine: same stage layout as
+    /// `twiddles`, but real and imaginary parts in separate slices so the
+    /// innermost engine loops read stride-1 lanes.
+    wr: Vec<f32>,
+    wi: Vec<f32>,
+    /// SoA pre-halved inverse twiddles (`wr/2`, `wi/2`).
+    inv_wr: Vec<f32>,
+    inv_wi: Vec<f32>,
 }
 
 impl Plan {
@@ -37,18 +49,23 @@ impl Plan {
         assert!(super::is_supported_size(n), "rdFFT size must be a power of two >= 2, got {n}");
         let log2n = n.trailing_zeros();
 
-        // Bit-reversal swap list.
+        // Bit-reversal swap list + full per-index table (engine).
         let mut swaps = Vec::with_capacity(n / 2);
+        let mut rev = Vec::with_capacity(n);
         for i in 0..n {
             let j = (i as u32).reverse_bits() >> (32 - log2n);
+            rev.push(j);
             if (i as u32) < j {
                 swaps.push((i as u32, j));
             }
         }
 
-        // Twiddles per stage: stage s has m = 2^s, k = 1..m/2-1.
+        // Twiddles per stage: stage s has m = 2^s, k = 1..m/2-1. Stored
+        // both AoS (scalar path) and SoA (batch engine).
         let mut twiddles = Vec::new();
         let mut inv_twiddles = Vec::new();
+        let (mut wr_v, mut wi_v) = (Vec::new(), Vec::new());
+        let (mut inv_wr, mut inv_wi) = (Vec::new(), Vec::new());
         let mut stage_off = Vec::with_capacity(log2n as usize);
         for s in 0..log2n {
             let m = 1usize << s;
@@ -58,10 +75,26 @@ impl Plan {
                 let (wr, wi) = (theta.cos() as f32, (-theta.sin()) as f32);
                 twiddles.push((wr, wi));
                 inv_twiddles.push((0.5 * wr, 0.5 * wi));
+                wr_v.push(wr);
+                wi_v.push(wi);
+                inv_wr.push(0.5 * wr);
+                inv_wi.push(0.5 * wi);
             }
         }
 
-        Plan { n, log2n, swaps, twiddles, inv_twiddles, stage_off }
+        Plan {
+            n,
+            log2n,
+            swaps,
+            twiddles,
+            inv_twiddles,
+            stage_off,
+            rev,
+            wr: wr_v,
+            wi: wi_v,
+            inv_wr,
+            inv_wi,
+        }
     }
 
     /// Transform size.
@@ -80,6 +113,32 @@ impl Plan {
     #[inline]
     pub fn swaps(&self) -> &[(u32, u32)] {
         &self.swaps
+    }
+
+    /// Full bit-reversal table (`rev[i]` = bit-reverse of `i`).
+    #[inline]
+    pub fn rev(&self) -> &[u32] {
+        &self.rev
+    }
+
+    /// SoA forward twiddles `(wr, wi)` for the stage with half-block `m`
+    /// (entries for `k = 1 .. m/2-1`, like [`Self::stage_twiddles`]).
+    #[inline]
+    pub fn stage_twiddles_soa(&self, m: usize) -> (&[f32], &[f32]) {
+        let s = m.trailing_zeros() as usize;
+        let start = self.stage_off[s];
+        let len = (m / 2).saturating_sub(1);
+        (&self.wr[start..start + len], &self.wi[start..start + len])
+    }
+
+    /// SoA pre-halved inverse twiddles `(wr/2, wi/2)` for the stage with
+    /// half-block `m`.
+    #[inline]
+    pub fn stage_inv_twiddles_soa(&self, m: usize) -> (&[f32], &[f32]) {
+        let s = m.trailing_zeros() as usize;
+        let start = self.stage_off[s];
+        let len = (m / 2).saturating_sub(1);
+        (&self.inv_wr[start..start + len], &self.inv_wi[start..start + len])
     }
 
     /// Twiddle slice for the stage with half-block `m` (entries for
@@ -120,15 +179,22 @@ impl Plan {
             + self.twiddles.len() * 8
             + self.inv_twiddles.len() * 8
             + self.stage_off.len() * 8
+            + self.rev.len() * 4
+            + (self.wr.len() + self.wi.len() + self.inv_wr.len() + self.inv_wi.len()) * 4
     }
 }
 
 /// Process-wide plan cache. Layers at many sizes share plans; building a
-/// plan is O(n log n) and done once.
+/// plan is O(n log n) and done once. Read-mostly after warmup, so lookups
+/// take a shared `RwLock` read guard — concurrent batch-engine workers do
+/// not serialize on the cache the way the previous `Mutex` made them.
 pub fn cached(n: usize) -> Arc<Plan> {
-    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<Plan>>>> = OnceLock::new();
-    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut map = cache.lock().unwrap();
+    static CACHE: OnceLock<RwLock<HashMap<usize, Arc<Plan>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
+    if let Some(plan) = cache.read().unwrap().get(&n) {
+        return plan.clone();
+    }
+    let mut map = cache.write().unwrap();
     map.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
 }
 
@@ -187,5 +253,58 @@ mod tests {
         let a = cached(32);
         let b = cached(32);
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn cache_is_safe_under_concurrent_lookup() {
+        let handles: Vec<_> = (0..8)
+            .map(|t| std::thread::spawn(move || cached(64 << (t % 3)).n()))
+            .collect();
+        for h in handles {
+            let n = h.join().unwrap();
+            assert!(n == 64 || n == 128 || n == 256);
+        }
+        assert!(Arc::ptr_eq(&cached(64), &cached(64)));
+    }
+
+    #[test]
+    fn soa_twiddles_match_aos() {
+        let plan = Plan::new(128);
+        for m in [4usize, 8, 16, 32, 64] {
+            let aos = plan.stage_twiddles(m);
+            let (wr, wi) = plan.stage_twiddles_soa(m);
+            let inv = plan.stage_inv_twiddles(m);
+            let (hr, hi) = plan.stage_inv_twiddles_soa(m);
+            assert_eq!(aos.len(), wr.len());
+            for k in 0..aos.len() {
+                assert_eq!(aos[k], (wr[k], wi[k]), "m={m} k={k}");
+                assert_eq!(inv[k], (hr[k], hi[k]), "m={m} k={k} inv");
+            }
+        }
+    }
+
+    #[test]
+    fn rev_table_matches_swap_list() {
+        let plan = Plan::new(64);
+        let rev = plan.rev();
+        assert_eq!(rev.len(), 64);
+        for i in 0..64u32 {
+            assert_eq!(rev[rev[i as usize] as usize], i, "involution at {i}");
+        }
+        for &(i, j) in plan.swaps() {
+            assert_eq!(rev[i as usize], j);
+        }
+    }
+
+    #[test]
+    fn heap_bytes_counts_soa_twiddle_arrays() {
+        let plan = Plan::new(16);
+        let tw: usize = [1usize, 2, 4, 8].iter().map(|&m| (m / 2).saturating_sub(1)).sum();
+        let expected = plan.swaps().len() * 8     // swap pairs
+            + tw * 8 * 2                          // AoS fwd + inv twiddles
+            + 4 * 8                               // stage_off
+            + 16 * 4                              // rev table
+            + tw * 4 * 4; // SoA wr/wi/inv_wr/inv_wi
+        assert_eq!(plan.heap_bytes(), expected);
     }
 }

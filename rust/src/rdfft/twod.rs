@@ -12,29 +12,44 @@
 //! coefficient stream — `unpack_col(unpack_row(X2))` reconstructs the
 //! complex 2-D DFT's non-redundant quadrant (see tests).
 //!
-//! The inverse runs the passes in the opposite order, each exactly
-//! inverting its 1-D transform, so `irdfft2(rdfft2(x)) == x` holds to
-//! float precision with zero auxiliary allocation beyond one column
-//! scratch of `rows` floats (the strided-access analogue of the CUDA
-//! kernel's shared-memory tile; allocate it once via [`Plan2`]).
+//! Both passes run through the batch-major [`super::engine`]: the row
+//! pass is one engine call over all `rows` contiguous rows, and the
+//! column pass gathers columns into a fixed transpose tile (the
+//! strided-access analogue of the CUDA kernel's shared-memory tile,
+//! allocated once in [`Plan2::new`]) so columns also transform as
+//! contiguous engine batches. The inverse runs the passes in the opposite
+//! order, so `irdfft2(rdfft2(x)) == x` holds to float precision with zero
+//! allocation beyond the plan's persistent tile.
 
-use super::forward::rdfft_inplace;
-use super::inverse::irdfft_inplace;
+use super::engine;
 use super::plan::{cached, Plan};
 use std::sync::Arc;
 
-/// Plan for a 2-D transform, including the reusable column scratch.
+/// Columns gathered per transpose tile in the column pass.
+const COL_TILE: usize = 8;
+
+/// Plan for a 2-D transform, including the persistent transpose tile.
 pub struct Plan2 {
     rows: usize,
     cols: usize,
     row_plan: Arc<Plan>,
     col_plan: Arc<Plan>,
+    /// `tile_cols × rows` transpose scratch, column-major per gathered
+    /// column, reused across calls (allocated once here, never per call).
+    tile: Vec<f32>,
 }
 
 impl Plan2 {
     pub fn new(rows: usize, cols: usize) -> Self {
         assert!(super::is_supported_size(rows) && super::is_supported_size(cols));
-        Plan2 { rows, cols, row_plan: cached(cols), col_plan: cached(rows) }
+        let tile_cols = COL_TILE.min(cols);
+        Plan2 {
+            rows,
+            cols,
+            row_plan: cached(cols),
+            col_plan: cached(rows),
+            tile: vec![0.0; rows * tile_cols],
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -44,46 +59,54 @@ impl Plan2 {
         self.cols
     }
 
-    /// Forward 2-D packed transform, in place (plus one `rows`-float
-    /// column scratch supplied by the caller, reusable across calls).
-    pub fn forward_inplace(&self, buf: &mut [f32], col_scratch: &mut [f32]) {
+    /// Forward 2-D packed transform, in place (`&mut self` for the
+    /// reusable transpose tile).
+    pub fn forward_inplace(&mut self, buf: &mut [f32]) {
         assert_eq!(buf.len(), self.rows * self.cols);
-        assert_eq!(col_scratch.len(), self.rows);
-        for row in buf.chunks_exact_mut(self.cols) {
-            rdfft_inplace(&self.row_plan, row);
-        }
-        for c in 0..self.cols {
-            for r in 0..self.rows {
-                col_scratch[r] = buf[r * self.cols + c];
-            }
-            rdfft_inplace(&self.col_plan, col_scratch);
-            for r in 0..self.rows {
-                buf[r * self.cols + c] = col_scratch[r];
-            }
-        }
+        engine::forward_batch(&self.row_plan, buf);
+        self.col_pass(buf, true);
     }
 
     /// Exact inverse of [`Self::forward_inplace`].
-    pub fn inverse_inplace(&self, buf: &mut [f32], col_scratch: &mut [f32]) {
+    pub fn inverse_inplace(&mut self, buf: &mut [f32]) {
         assert_eq!(buf.len(), self.rows * self.cols);
-        assert_eq!(col_scratch.len(), self.rows);
-        for c in 0..self.cols {
-            for r in 0..self.rows {
-                col_scratch[r] = buf[r * self.cols + c];
+        self.col_pass(buf, false);
+        engine::inverse_batch(&self.row_plan, buf);
+    }
+
+    /// Transform every column: gather up to `COL_TILE` columns into the
+    /// persistent tile (each becoming one contiguous engine row), run one
+    /// batched transform, scatter back.
+    fn col_pass(&mut self, buf: &mut [f32], forward: bool) {
+        let (r, c) = (self.rows, self.cols);
+        let tile_cols = self.tile.len() / r;
+        let mut c0 = 0usize;
+        while c0 < c {
+            let tc = tile_cols.min(c - c0);
+            for t in 0..tc {
+                for i in 0..r {
+                    self.tile[t * r + i] = buf[i * c + c0 + t];
+                }
             }
-            irdfft_inplace(&self.col_plan, col_scratch);
-            for r in 0..self.rows {
-                buf[r * self.cols + c] = col_scratch[r];
+            let seg = &mut self.tile[..tc * r];
+            if forward {
+                engine::forward_batch(&self.col_plan, seg);
+            } else {
+                engine::inverse_batch(&self.col_plan, seg);
             }
-        }
-        for row in buf.chunks_exact_mut(self.cols) {
-            irdfft_inplace(&self.row_plan, row);
+            for t in 0..tc {
+                for i in 0..r {
+                    buf[i * c + c0 + t] = self.tile[t * r + i];
+                }
+            }
+            c0 += tc;
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::forward::rdfft_inplace;
     use super::*;
 
     fn rand_mat(r: usize, c: usize, seed: u64) -> Vec<f32> {
@@ -98,14 +121,13 @@ mod tests {
 
     #[test]
     fn roundtrip_2d() {
-        for (r, c) in [(4usize, 8usize), (8, 8), (16, 32), (64, 16)] {
-            let plan = Plan2::new(r, c);
+        for (r, c) in [(4usize, 8usize), (8, 8), (16, 32), (64, 16), (8, 4)] {
+            let mut plan = Plan2::new(r, c);
             let x = rand_mat(r, c, (r * c) as u64);
             let mut buf = x.clone();
-            let mut scratch = vec![0.0f32; r];
-            plan.forward_inplace(&mut buf, &mut scratch);
+            plan.forward_inplace(&mut buf);
             assert_ne!(buf, x, "transform must change the buffer");
-            plan.inverse_inplace(&mut buf, &mut scratch);
+            plan.inverse_inplace(&mut buf);
             for i in 0..r * c {
                 assert!((buf[i] - x[i]).abs() < 1e-3, "({r}x{c}) i={i}");
             }
@@ -115,12 +137,11 @@ mod tests {
     #[test]
     fn dc_term_is_total_sum() {
         let (r, c) = (8, 16);
-        let plan = Plan2::new(r, c);
+        let mut plan = Plan2::new(r, c);
         let x = rand_mat(r, c, 5);
         let sum: f32 = x.iter().sum();
         let mut buf = x;
-        let mut scratch = vec![0.0f32; r];
-        plan.forward_inplace(&mut buf, &mut scratch);
+        plan.forward_inplace(&mut buf);
         assert!((buf[0] - sum).abs() < 1e-3 * (r * c) as f32);
     }
 
@@ -136,10 +157,9 @@ mod tests {
                 x[i * c + j] = f[i] * g[j];
             }
         }
-        let plan = Plan2::new(r, c);
-        let mut scratch = vec![0.0f32; r];
+        let mut plan = Plan2::new(r, c);
         let mut buf = x.clone();
-        plan.forward_inplace(&mut buf, &mut scratch);
+        plan.forward_inplace(&mut buf);
 
         // row-0 of the 2D packed transform equals sum over rows of f times
         // packed(g): check against direct computation
@@ -159,18 +179,47 @@ mod tests {
     #[test]
     fn linearity_2d() {
         let (r, c) = (16, 8);
-        let plan = Plan2::new(r, c);
+        let mut plan = Plan2::new(r, c);
         let a = rand_mat(r, c, 1);
         let b = rand_mat(r, c, 2);
-        let mut scratch = vec![0.0f32; r];
         let mut fa = a.clone();
-        plan.forward_inplace(&mut fa, &mut scratch);
+        plan.forward_inplace(&mut fa);
         let mut fb = b.clone();
-        plan.forward_inplace(&mut fb, &mut scratch);
+        plan.forward_inplace(&mut fb);
         let mut sum: Vec<f32> = (0..r * c).map(|i| 2.0 * a[i] - 0.5 * b[i]).collect();
-        plan.forward_inplace(&mut sum, &mut scratch);
+        plan.forward_inplace(&mut sum);
         for i in 0..r * c {
             assert!((sum[i] - (2.0 * fa[i] - 0.5 * fb[i])).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn column_tiling_matches_untiled_column_loop() {
+        // wide matrix exercises multiple tiles, including a partial one
+        let (r, c) = (16usize, 32usize);
+        let mut plan = Plan2::new(r, c);
+        let x = rand_mat(r, c, 9);
+        let mut got = x.clone();
+        plan.forward_inplace(&mut got);
+
+        // reference: row pass + one-column-at-a-time scalar column pass
+        let mut want = x;
+        for row in want.chunks_exact_mut(c) {
+            rdfft_inplace(&cached(c), row);
+        }
+        let col_plan = cached(r);
+        let mut scratch = vec![0.0f32; r];
+        for j in 0..c {
+            for i in 0..r {
+                scratch[i] = want[i * c + j];
+            }
+            rdfft_inplace(&col_plan, &mut scratch);
+            for i in 0..r {
+                want[i * c + j] = scratch[i];
+            }
+        }
+        for i in 0..r * c {
+            assert_eq!(got[i], want[i], "i={i}");
         }
     }
 }

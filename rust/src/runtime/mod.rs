@@ -9,10 +9,14 @@
 
 pub mod json;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use manifest::{Manifest, ParamSpec};
 
 use anyhow::{anyhow, Context, Result};
+// The offline build links the typed stub; a real deployment swaps this
+// alias for the actual PJRT bindings crate (see xla_stub.rs docs).
+use self::xla_stub as xla;
 use std::path::{Path, PathBuf};
 
 /// A loaded training runtime: compiled executables + parameter state

@@ -1,0 +1,207 @@
+//! Typed stub for the PJRT/XLA bindings.
+//!
+//! The offline build environment has no XLA runtime to link against, so
+//! this module provides the exact API surface `runtime/mod.rs` consumes.
+//! [`Literal`] is a real in-memory implementation (the manifest/param
+//! loaders and their failure-injection tests exercise it for real);
+//! everything that would need a native PJRT client reports a clean
+//! "runtime unavailable" error instead of loading garbage. Swapping in
+//! real bindings means deleting this file and pointing the `use … as xla`
+//! alias at the actual crate — no other code changes.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Errors from the stubbed XLA layer (rendered with `{:?}` by callers,
+/// matching the real bindings' error style).
+#[derive(Debug, Clone)]
+pub enum XlaError {
+    /// The native PJRT runtime is not linked into this build.
+    Unavailable(&'static str),
+    /// Shape/type mismatch in a literal operation.
+    Invalid(String),
+}
+
+const NO_RUNTIME: &str =
+    "PJRT/XLA native runtime is not linked into this offline build; \
+     the pure-Rust rdfft paths (everything outside `runtime`) are unaffected";
+
+/// Element types a [`Literal`] can hold.
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Scalar types storable in a [`Literal`].
+pub trait NativeType: Sized + Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Result<Vec<Self>, XlaError>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Result<Vec<Self>, XlaError> {
+        match d {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(XlaError::Invalid("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Result<Vec<Self>, XlaError> {
+        match d {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(XlaError::Invalid("literal is not i32".into())),
+        }
+    }
+}
+
+/// A host-side tensor literal (fully functional in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Reshape; the element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(XlaError::Invalid(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::unwrap(&self.data)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, XlaError> {
+        T::unwrap(&self.data)?
+            .first()
+            .copied()
+            .ok_or_else(|| XlaError::Invalid("empty literal".into()))
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples
+    /// (execution is unavailable), so this always errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        Err(XlaError::Unavailable(NO_RUNTIME))
+    }
+}
+
+/// Parsed HLO module text (held verbatim; compilation is unavailable).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self, XlaError> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| XlaError::Invalid(format!("reading hlo text: {e}")))?;
+        if !text.trim_start().starts_with("HloModule") {
+            return Err(XlaError::Invalid("not an HloModule text file".into()));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An HLO computation wrapper.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle (unreachable in the stub: no client can be
+/// constructed, so no execution can produce one).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError::Unavailable(NO_RUNTIME))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError::Unavailable(NO_RUNTIME))
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] fails cleanly in the stub, so
+/// `Runtime::load` errors out before any garbage state can be built.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(XlaError::Unavailable(NO_RUNTIME))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError::Unavailable(NO_RUNTIME))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32_and_i32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        let i = Literal::vec1(&[7i32, 8]);
+        assert_eq!(i.get_first_element::<i32>().unwrap(), 7);
+        assert!(i.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}

@@ -6,6 +6,8 @@ use rdfft::autograd::layers::Backend;
 use rdfft::autograd::train::{measure_single_layer_with_state, Method};
 use rdfft::coordinator::experiments::table1_cells;
 use rdfft::memtrack::Category;
+use rdfft::rdfft::engine::{self, EngineConfig};
+use rdfft::rdfft::plan::cached;
 
 #[test]
 fn ours_strictly_below_rfft_below_fft_across_grid() {
@@ -91,6 +93,45 @@ fn batch_growth_hurts_fft_more_than_ours() {
         "fft transient memory must grow with batch much faster than ours: \
          {fft_slope:.0} vs {ours_slope:.0} bytes over 15 samples"
     );
+}
+
+#[test]
+fn batch_engine_is_allocation_free_outside_thread_spawn() {
+    // The engine's per-row work must register zero tracked allocations —
+    // the only untracked cost is OS thread spawn above the parallel
+    // threshold, which the paper's memory model does not count (it is not
+    // tensor memory). Covers serial, threshold-gated, and forced-thread
+    // paths.
+    let n = 512usize;
+    let rows = 16usize;
+    let plan = cached(n);
+    let base: Vec<f32> = (0..n * rows).map(|i| ((i * 13 + 5) % 97) as f32 / 48.0 - 1.0).collect();
+    let configs = [
+        EngineConfig::serial(),
+        EngineConfig::new(),
+        EngineConfig {
+            par_min_rows: 2,
+            par_min_elems: 0,
+            par_chunk_elems: 1,
+            max_threads: 4,
+            ..EngineConfig::new()
+        },
+    ];
+    for (ci, cfg) in configs.iter().enumerate() {
+        let mut buf = base.clone();
+        rdfft::memtrack::reset();
+        let before = rdfft::memtrack::snapshot().alloc_count;
+        engine::forward_batch_with(&plan, &mut buf, cfg);
+        engine::inverse_batch_with(&plan, &mut buf, cfg);
+        assert_eq!(
+            rdfft::memtrack::snapshot().alloc_count,
+            before,
+            "engine cfg {ci} performed tracked allocations"
+        );
+        for i in 0..n * rows {
+            assert!((buf[i] - base[i]).abs() < 1e-3, "cfg={ci} roundtrip i={i}");
+        }
+    }
 }
 
 #[test]

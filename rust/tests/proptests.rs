@@ -5,6 +5,9 @@
 
 use rdfft::baselines::naive_dft;
 use rdfft::rdfft::bf16::{irdfft_inplace_bf16, rdfft_inplace_bf16, Bf16};
+use rdfft::rdfft::engine::{self, EngineConfig};
+use rdfft::rdfft::forward::rdfft_batch_scalar;
+use rdfft::rdfft::inverse::irdfft_batch_scalar;
 use rdfft::rdfft::{
     irdfft_inplace, layout, plan::cached, rdfft_inplace, spectral, BlockCirculant, Circulant,
 };
@@ -271,6 +274,100 @@ fn prop_bf16_conversion_roundtrip_and_monotone() {
         assert!((back - v).abs() <= v.abs() / 128.0 + f32::MIN_POSITIVE);
         // double conversion is idempotent
         assert_eq!(Bf16::from_f32(back), b);
+    }
+}
+
+/// Engine tuning variants exercised by the equivalence properties: the
+/// default (threshold-gated threads), pure serial batch-major, and a
+/// config that forces threads even on tiny batches (so odd chunk splits
+/// are covered deterministically).
+fn engine_configs() -> [EngineConfig; 3] {
+    [
+        EngineConfig::new(),
+        EngineConfig::serial(),
+        EngineConfig {
+            par_min_rows: 2,
+            par_min_elems: 0,
+            par_chunk_elems: 1,
+            max_threads: 3,
+            ..EngineConfig::new()
+        },
+    ]
+}
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-4 * (1.0 + b.abs())
+}
+
+#[test]
+fn prop_engine_forward_equals_scalar_rows() {
+    // batch-major forward ≡ per-row scalar reference across random sizes
+    // n ∈ {2..4096} and batches 1..17 (odd / non-chunk-aligned included)
+    for case in 0..120u64 {
+        let mut rng = Rng::new(20_000 + case);
+        let n = SIZES[rng.below(SIZES.len())];
+        let batch = 1 + rng.below(17);
+        let x = rng.vec(n * batch);
+        let mut want = x.clone();
+        rdfft_batch_scalar(&cached(n), &mut want);
+        for (ci, cfg) in engine_configs().iter().enumerate() {
+            let mut got = x.clone();
+            engine::forward_batch_with(&cached(n), &mut got, cfg);
+            for i in 0..n * batch {
+                assert!(
+                    close(got[i], want[i]),
+                    "case={case} cfg={ci} n={n} b={batch} i={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_inverse_equals_scalar_rows() {
+    for case in 0..120u64 {
+        let mut rng = Rng::new(21_000 + case);
+        let n = SIZES[rng.below(SIZES.len())];
+        let batch = 1 + rng.below(17);
+        let x = rng.vec(n * batch);
+        let mut want = x.clone();
+        irdfft_batch_scalar(&cached(n), &mut want);
+        for (ci, cfg) in engine_configs().iter().enumerate() {
+            let mut got = x.clone();
+            engine::inverse_batch_with(&cached(n), &mut got, cfg);
+            for i in 0..n * batch {
+                assert!(
+                    close(got[i], want[i]),
+                    "case={case} cfg={ci} n={n} b={batch} i={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_roundtrip_identity_all_batches() {
+    // forward∘inverse == id through the engine for every batch 1..=17,
+    // including n = 2 and batches that don't align with tiles or chunks
+    for case in 0..60u64 {
+        let mut rng = Rng::new(22_000 + case);
+        let n = SIZES[rng.below(SIZES.len())];
+        let batch = 1 + rng.below(17);
+        let x = rng.vec(n * batch);
+        let mut buf = x.clone();
+        let plan = cached(n);
+        engine::forward_batch(&plan, &mut buf);
+        engine::inverse_batch(&plan, &mut buf);
+        for i in 0..n * batch {
+            assert!(
+                (buf[i] - x[i]).abs() < 1e-3,
+                "case={case} n={n} b={batch} i={i}"
+            );
+        }
     }
 }
 

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate as one command: build (all targets, so benches/examples
+# stay compiling), test, and — when rustfmt is installed — format check.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release --all-targets
+cargo test -q
+
+if command -v rustfmt >/dev/null 2>&1; then
+  cargo fmt --all --check
+else
+  echo "ci.sh: rustfmt not installed; skipping format check" >&2
+fi
+
+echo "ci.sh: OK"

@@ -1,0 +1,182 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored crate
+//! provides the (small) subset of `anyhow`'s API the repo actually uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Semantics match upstream where
+//! it matters to callers:
+//!
+//! * `{err}` displays the outermost context,
+//! * `{err:#}` displays the whole chain joined with `": "`,
+//! * `{err:?}` displays the chain in the familiar `Caused by:` form,
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::fmt;
+
+/// A context-carrying error. Index 0 of the chain is the outermost
+/// context; the last entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`: that keeps
+// this blanket `From` coherent next to core's identity `From<T> for T`
+// (the same trick upstream anyhow uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` — attach context to a `Result` or `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_and_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("loading manifest.json").unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest.json");
+        let full = format!("{e:#}");
+        assert!(full.contains("loading manifest.json"));
+        assert!(full.contains("file missing"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail_work() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x > 2, "x too small: {x}");
+            if x > 100 {
+                bail!("x too big");
+            }
+            Ok(x)
+        }
+        assert!(f(1).is_err());
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(101).is_err());
+    }
+
+    #[test]
+    fn with_context_is_lazy_and_chains() {
+        let r: Result<()> = Err::<(), _>(io_err()).with_context(|| format!("step {}", 3));
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "step 3");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+}
