@@ -1,5 +1,7 @@
-//! Single-layer fine-tuning memory walkthrough — the paper's §5.1.1 story
-//! on one concrete configuration, with the breakdown printed per phase.
+//! Fine-tuning memory walkthrough — the paper's §5.1.1 story on one
+//! concrete configuration, with the breakdown printed per phase, followed
+//! by the *multi-layer* Table-1-style rows measured on the pure-Rust
+//! native training pipeline (no Python, no PJRT).
 //!
 //! ```bash
 //! cargo run --release --example finetune_memory [-- D B p]
@@ -43,9 +45,14 @@ fn main() {
     g.fill(1.0);
     drop(y);
     memtrack::reset_peak();
-    let _dx = layer.backward(g);
+    let dx = layer.backward(g);
     let bwd = memtrack::snapshot();
     println!("  backward: +{} allocations (grad_output overwritten in place)", bwd.alloc_count);
+    // Release the walkthrough's tracked tensors before the measurement
+    // loops below reset the tracker, so the accounting stays balanced in
+    // debug builds.
+    drop(dx);
+    drop(layer);
 
     // Cross-method comparison.
     println!("\npeak memory, one fwd+bwd step (MiB):");
@@ -68,5 +75,14 @@ fn main() {
             .collect();
         println!("{:<16}{:>10.2}  {}", m.label(), cell.peak_mib(), parts.join(" "));
     }
+
+    // Multi-layer rows: the same method axis measured end-to-end on the
+    // native trainer (depth-2 residual stack, a few SGD steps) — the
+    // Table-1-style rows for real multi-layer training, via the shared
+    // experiments sweep.
+    let depth = 2;
+    let mp = p.min(d / 2).max(2);
+    println!("\nmulti-layer native training (d={d}, depth={depth}, p={mp}, batch={b}):");
+    rdfft::coordinator::experiments::native_method_rows(d, depth, b, 4, mp);
     println!("\nfinetune_memory OK");
 }

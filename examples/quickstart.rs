@@ -60,6 +60,9 @@ fn main() {
     bc.backward(&input, &mut g, &mut dx, &mut dc);
     bc.sgd_step(&dc, 1e-2);
     println!("block-circulant layer: {} trainable params updated", bc.num_params());
+    // The operator's parameter storage is memtrack-registered; release it
+    // before the tracker reset below so the accounting stays balanced.
+    drop(bc);
 
     // ------------------------------------------------------------------
     // 4. The memory story, measured (what Table 1 automates).

@@ -59,6 +59,11 @@ pub trait Layer {
     fn num_trainable(&self) -> usize;
     /// Drop saved-for-backward state (end of step).
     fn clear_saved(&mut self);
+    /// Visit every `(parameter, gradient)` tensor pair, in a stable order,
+    /// so external optimizers ([`crate::autograd::optim::OptimizerBank`])
+    /// can apply stateful updates and zero the gradients. Implementations
+    /// must present parameters in their canonical (time) domain.
+    fn for_each_param(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32]));
 }
 
 // ---------------------------------------------------------------------
@@ -114,6 +119,10 @@ impl Layer for Dense {
 
     fn clear_saved(&mut self) {
         self.saved_x = None;
+    }
+
+    fn for_each_param(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+        f(self.w.as_mut_slice(), self.dw.as_mut_slice());
     }
 }
 
@@ -234,6 +243,11 @@ impl Layer for Lora {
     fn clear_saved(&mut self) {
         self.saved_x = None;
         self.saved_xa = None;
+    }
+
+    fn for_each_param(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+        f(self.a.as_mut_slice(), self.da.as_mut_slice());
+        f(self.b.as_mut_slice(), self.db.as_mut_slice());
     }
 }
 
@@ -660,6 +674,13 @@ impl Layer for CirculantLayer {
         self.saved_cplx_x.clear();
         self.saved_cplx_c.clear();
         self.ensure_time_domain();
+    }
+
+    fn for_each_param(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+        // The visitor contract hands out time-domain parameters; restore
+        // them first if a forward left spectra in the buffer.
+        self.ensure_time_domain();
+        f(self.c.as_mut_slice(), self.dc.as_mut_slice());
     }
 }
 

@@ -20,9 +20,11 @@
 
 pub mod layers;
 pub mod optim;
+pub mod stack;
 pub mod tensor;
 pub mod train;
 
 pub use layers::{Backend, CirculantLayer, Dense, FrozenDense, Layer, Lora};
-pub use optim::{OptimKind, Optimizer};
+pub use optim::{OptimKind, Optimizer, OptimizerBank};
+pub use stack::{SpectralStack, StackConfig};
 pub use tensor::Tensor;

@@ -114,6 +114,52 @@ impl Optimizer {
     }
 }
 
+/// Per-tensor optimizer collection for a whole model. A model exposes its
+/// parameters through a stable-order visitor
+/// ([`crate::autograd::layers::Layer::for_each_param`]); tensor `i`'s
+/// optimizer state is created lazily at its first visit, sized to that
+/// tensor, and reused on every later step.
+pub struct OptimizerBank {
+    kind: OptimKind,
+    lr: f32,
+    opts: Vec<Optimizer>,
+}
+
+impl OptimizerBank {
+    pub fn new(kind: OptimKind, lr: f32) -> Self {
+        OptimizerBank { kind, lr, opts: Vec::new() }
+    }
+
+    pub fn kind(&self) -> OptimKind {
+        self.kind
+    }
+
+    /// Number of parameter tensors seen so far.
+    pub fn num_tensors(&self) -> usize {
+        self.opts.len()
+    }
+
+    /// Total tracked state bytes across all tensors (0 for SGD).
+    pub fn state_bytes(&self) -> usize {
+        self.opts.iter().map(|o| o.state_bytes()).sum()
+    }
+
+    /// Apply one update to the `idx`-th parameter tensor. `idx` must
+    /// follow the visit order (0, 1, 2, ... on the first step, then the
+    /// same order every step) so state lines up with its tensor.
+    pub fn apply(&mut self, idx: usize, param: &mut [f32], grad: &[f32]) {
+        assert!(
+            idx <= self.opts.len(),
+            "parameter tensors must be visited in a stable order (got idx {idx} with {} known)",
+            self.opts.len()
+        );
+        if idx == self.opts.len() {
+            self.opts.push(Optimizer::new(self.kind, self.lr, param.len()));
+        }
+        self.opts[idx].apply(param, grad);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +236,47 @@ mod tests {
         o1.apply(&mut p1, &[1.0]);
         o2.apply(&mut p2, &[1000.0]);
         assert!((p1[0] - p2[0]).abs() < 1e-4, "{} vs {}", p1[0], p2[0]);
+    }
+
+    #[test]
+    fn bank_minimizes_two_tensors_and_sizes_state_per_tensor() {
+        memtrack::reset();
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 3];
+        let mut bank =
+            OptimizerBank::new(OptimKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }, 0.05);
+        let (first_a, _) = quad_loss(&a);
+        let (first_b, _) = quad_loss(&b);
+        for _ in 0..300 {
+            let (_, ga) = quad_loss(&a);
+            let (_, gb) = quad_loss(&b);
+            bank.apply(0, &mut a, &ga);
+            bank.apply(1, &mut b, &gb);
+        }
+        assert_eq!(bank.num_tensors(), 2);
+        assert_eq!(bank.state_bytes(), 2 * (8 + 3) * 4);
+        let (last_a, _) = quad_loss(&a);
+        let (last_b, _) = quad_loss(&b);
+        assert!(last_a < 0.01 * first_a, "{first_a} -> {last_a}");
+        assert!(last_b < 0.01 * first_b, "{first_b} -> {last_b}");
+    }
+
+    #[test]
+    fn bank_sgd_holds_no_state() {
+        let mut p = vec![1.0f32; 16];
+        let g = vec![0.5f32; 16];
+        let mut bank = OptimizerBank::new(OptimKind::Sgd, 0.1);
+        bank.apply(0, &mut p, &g);
+        assert_eq!(bank.state_bytes(), 0);
+        assert!((p[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bank_rejects_out_of_order_tensor_indices() {
+        let mut bank = OptimizerBank::new(OptimKind::Sgd, 0.1);
+        let mut p = vec![0.0f32; 2];
+        bank.apply(3, &mut p, &[0.0, 0.0]);
     }
 
     #[test]

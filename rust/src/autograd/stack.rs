@@ -1,0 +1,370 @@
+//! Multi-layer spectral model over the layer substrate — the native
+//! training pipeline's network.
+//!
+//! The stack is a byte-level n-gram language model shaped so that every
+//! hot tensor flows through the batch-major rdFFT engine when the blocks
+//! are circulant:
+//!
+//! ```text
+//! bytes [b, ctx] ──frozen embed+position sum──► features [b, d]
+//!    ─► h = ReLU(h + block_0(h))   block ∈ {Dense, LoRA, CirculantLayer}
+//!    ─► h = ReLU(h + block_1(h)) ─► … ─► depth blocks
+//!    ─► trainable Dense readout [vocab, d] ─► logits [b, vocab]
+//! ```
+//!
+//! Blocks are **residual**: the identity skip plays the frozen backbone
+//! every adapter method rides on (LoRA's `W₀ + ΔW` with `W₀ = I` per
+//! block), so near-zero-initialized circulant adapters neither attenuate
+//! the signal at depth nor block gradient flow.
+//!
+//! Memory discipline mirrors the single-layer experiments: the frozen
+//! embedding is `Weights`, block parameters are `Trainable`, their grad
+//! accumulators `Gradients`, and activations `Intermediates`. ReLU state
+//! between blocks is a **sign-bit mask** (1 bit per activation, tracked
+//! via [`crate::memtrack::Registration`]) rather than a saved activation
+//! copy — the incoming activation itself is saved *inside* the next block
+//! (in place, for the rdFFT backend), so the stack adds no per-layer
+//! activation copies of its own.
+
+use super::layers::{Dense, Layer};
+use super::optim::OptimizerBank;
+use super::tensor::{softmax_xent, Tensor};
+use super::train::Method;
+use crate::memtrack::{self, Category};
+
+/// Configuration of a [`SpectralStack`].
+#[derive(Debug, Clone)]
+pub struct StackConfig {
+    /// Hidden width (must satisfy the block method's constraints, e.g. a
+    /// multiple of `p` for circulant blocks).
+    pub d: usize,
+    /// Number of adapted blocks between embedding and readout.
+    pub depth: usize,
+    /// Vocabulary (byte tokenizer: 256).
+    pub vocab: usize,
+    /// Context bytes per prediction.
+    pub ctx: usize,
+    /// The layer type every block instantiates (the Table-1 method axis).
+    pub method: Method,
+    pub seed: u64,
+}
+
+impl Default for StackConfig {
+    fn default() -> Self {
+        StackConfig {
+            d: 64,
+            depth: 2,
+            vocab: 256,
+            ctx: 8,
+            method: Method::Circulant {
+                backend: super::layers::Backend::RdFft,
+                p: 16,
+            },
+            seed: 0,
+        }
+    }
+}
+
+/// ReLU applied in place, with the surviving lanes recorded as a bit mask
+/// (b·d bits, tracked). Backward zeroes the masked-off lanes of the
+/// incoming gradient.
+struct ReluMask {
+    bits: Vec<u64>,
+    len: usize,
+    _reg: memtrack::Registration,
+}
+
+impl ReluMask {
+    fn forward(t: &mut Tensor) -> ReluMask {
+        let s = t.as_mut_slice();
+        let words = (s.len() + 63) / 64;
+        let reg = memtrack::Registration::new(words * 8, Category::Intermediates);
+        let mut bits = vec![0u64; words];
+        for (i, v) in s.iter_mut().enumerate() {
+            if *v > 0.0 {
+                bits[i / 64] |= 1u64 << (i % 64);
+            } else {
+                *v = 0.0;
+            }
+        }
+        ReluMask { bits, len: s.len(), _reg: reg }
+    }
+
+    fn backward(&self, g: &mut Tensor) {
+        let s = g.as_mut_slice();
+        assert_eq!(s.len(), self.len, "gradient shape must match the masked activation");
+        for (i, v) in s.iter_mut().enumerate() {
+            if self.bits[i / 64] & (1u64 << (i % 64)) == 0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// The multi-layer model: frozen embedding, `depth` adapted blocks with
+/// ReLU between them, trainable dense readout.
+pub struct SpectralStack {
+    cfg: StackConfig,
+    /// Frozen byte embedding `[vocab, d]` (the pretrained backbone).
+    embed: Tensor,
+    /// Per-position scale of the context sum (fixed, so byte order
+    /// matters to the features).
+    pos_scale: Vec<f32>,
+    blocks: Vec<Box<dyn Layer>>,
+    readout: Dense,
+    /// ReLU masks saved by the last forward, one per block.
+    masks: Vec<ReluMask>,
+}
+
+impl SpectralStack {
+    pub fn new(cfg: StackConfig) -> Self {
+        let scale = (1.0 / cfg.d as f32).sqrt();
+        let embed = Tensor::rand(cfg.vocab, cfg.d, scale, cfg.seed + 100, Category::Weights);
+        let pos_scale: Vec<f32> = (0..cfg.ctx).map(|j| 1.0 / (1.0 + j as f32)).collect();
+        let blocks: Vec<Box<dyn Layer>> =
+            (0..cfg.depth).map(|k| cfg.method.build(cfg.d, cfg.seed + k as u64)).collect();
+        let readout = Dense::new(cfg.vocab, cfg.d, cfg.seed + 999);
+        SpectralStack { cfg, embed, pos_scale, blocks, readout, masks: Vec::new() }
+    }
+
+    pub fn config(&self) -> &StackConfig {
+        &self.cfg
+    }
+
+    /// Trainable scalars across blocks and readout.
+    pub fn num_trainable(&self) -> usize {
+        self.blocks.iter().map(|b| b.num_trainable()).sum::<usize>()
+            + self.readout.num_trainable()
+    }
+
+    /// Embed a flat `[b * ctx]` byte context batch into `[b, d]` features:
+    /// position-scaled sums of frozen embedding rows (no matmul — the
+    /// embedding is a lookup, like any LM's input layer).
+    pub fn features(&self, ctx_bytes: &[u8]) -> Tensor {
+        let ctx = self.cfg.ctx;
+        assert!(
+            !ctx_bytes.is_empty() && ctx_bytes.len() % ctx == 0,
+            "context batch must be a multiple of ctx={ctx}"
+        );
+        let b = ctx_bytes.len() / ctx;
+        let mut h = Tensor::zeros_cat(b, self.cfg.d, Category::Intermediates);
+        for r in 0..b {
+            let row = h.row_mut(r);
+            for (j, &byte) in ctx_bytes[r * ctx..(r + 1) * ctx].iter().enumerate() {
+                let e = self.embed.row(byte as usize);
+                let s = self.pos_scale[j];
+                for (o, v) in row.iter_mut().zip(e) {
+                    *o += s * v;
+                }
+            }
+        }
+        h
+    }
+
+    /// Forward the whole stack; returns logits `[b, vocab]`. Saves
+    /// backward state (inside the blocks + the ReLU masks).
+    pub fn forward(&mut self, ctx_bytes: &[u8]) -> Tensor {
+        let mut h = self.features(ctx_bytes);
+        self.masks.clear();
+        for blk in &mut self.blocks {
+            // h ← ReLU(h + block(h)): the skip needs one activation copy
+            // (the block consumes and saves its input in place).
+            let skip = h.clone_as(Category::Intermediates);
+            let mut t = blk.forward(h);
+            t.axpy(&skip, 1.0);
+            drop(skip);
+            self.masks.push(ReluMask::forward(&mut t));
+            h = t;
+        }
+        self.readout.forward(h)
+    }
+
+    /// Backward from the loss gradient w.r.t. the logits; accumulates
+    /// parameter gradients in every layer. The grad w.r.t. the features is
+    /// discarded (the embedding is frozen).
+    pub fn backward(&mut self, dlogits: Tensor) {
+        let mut g = self.readout.backward(dlogits);
+        for (blk, mask) in self.blocks.iter_mut().rev().zip(self.masks.drain(..).rev()) {
+            mask.backward(&mut g);
+            // d(h + block(h)) = g + blockᵀ(g): the skip path mirrors the
+            // forward copy.
+            let skip = g.clone_as(Category::Intermediates);
+            let mut dh = blk.backward(g);
+            dh.axpy(&skip, 1.0);
+            g = dh;
+        }
+    }
+
+    /// One full training step on a context batch: forward, softmax
+    /// cross-entropy, backward, optimizer update (+ grad zeroing).
+    /// Returns the batch loss.
+    pub fn train_step(
+        &mut self,
+        ctx_bytes: &[u8],
+        labels: &[usize],
+        bank: &mut OptimizerBank,
+    ) -> f32 {
+        let logits = self.forward(ctx_bytes);
+        let mut dl = Tensor::zeros_cat(logits.rows, logits.cols, Category::Intermediates);
+        let loss = softmax_xent(&logits, labels, &mut dl);
+        drop(logits);
+        self.backward(dl);
+        let mut idx = 0usize;
+        self.for_each_param(&mut |p, g| {
+            bank.apply(idx, p, g);
+            for v in g.iter_mut() {
+                *v = 0.0;
+            }
+            idx += 1;
+        });
+        loss
+    }
+
+    /// Loss on a batch without training (drops all saved state after).
+    pub fn eval_loss(&mut self, ctx_bytes: &[u8], labels: &[usize]) -> f32 {
+        let logits = self.forward(ctx_bytes);
+        let mut scratch = Tensor::zeros_cat(logits.rows, logits.cols, Category::Intermediates);
+        let loss = softmax_xent(&logits, labels, &mut scratch);
+        self.clear_saved();
+        loss
+    }
+
+    /// Visit every `(param, grad)` pair: blocks first (in order), then the
+    /// readout — the stable order [`OptimizerBank`] requires.
+    pub fn for_each_param(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+        for blk in &mut self.blocks {
+            blk.for_each_param(f);
+        }
+        self.readout.for_each_param(f);
+    }
+
+    pub fn clear_saved(&mut self) {
+        for blk in &mut self.blocks {
+            blk.clear_saved();
+        }
+        self.readout.clear_saved();
+        self.masks.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layers::Backend;
+    use super::super::optim::OptimKind;
+    use super::*;
+    use crate::autograd::tensor::Rng;
+
+    fn batch(b: usize, ctx: usize, seed: u64) -> (Vec<u8>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let bytes: Vec<u8> = (0..b * ctx).map(|_| (97 + rng.below(20)) as u8).collect();
+        // deterministic target derived from the context so it is learnable
+        let labels: Vec<usize> =
+            (0..b).map(|r| (bytes[r * ctx] as usize + bytes[r * ctx + 1] as usize) % 23).collect();
+        (bytes, labels)
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let cfg = StackConfig { d: 32, depth: 2, ctx: 4, ..Default::default() };
+        let mut s1 = SpectralStack::new(cfg.clone());
+        let mut s2 = SpectralStack::new(cfg);
+        let (bytes, _) = batch(3, 4, 1);
+        let y1 = s1.forward(&bytes);
+        let y2 = s2.forward(&bytes);
+        assert_eq!((y1.rows, y1.cols), (3, 256));
+        assert_eq!(y1.as_slice(), y2.as_slice(), "same seed must give the same logits");
+    }
+
+    #[test]
+    fn relu_mask_backward_matches_saved_output_rule() {
+        use crate::autograd::tensor::relu_backward_inplace;
+        let mut t = Tensor::from_vec(
+            1,
+            6,
+            vec![-1.0, 2.0, 0.0, 3.0, -0.5, 1.0],
+            Category::Other,
+        );
+        let reference = {
+            let mut y = t.clone_as(Category::Other);
+            crate::autograd::tensor::relu_inplace(&mut y);
+            y
+        };
+        let mask = ReluMask::forward(&mut t);
+        assert_eq!(t.as_slice(), reference.as_slice());
+        let mut g1 = Tensor::from_vec(1, 6, vec![1.0; 6], Category::Other);
+        let mut g2 = Tensor::from_vec(1, 6, vec![1.0; 6], Category::Other);
+        mask.backward(&mut g1);
+        relu_backward_inplace(&mut g2, &reference);
+        assert_eq!(g1.as_slice(), g2.as_slice());
+    }
+
+    #[test]
+    fn stack_memorizes_a_fixed_batch_all_methods() {
+        for method in [
+            Method::Circulant { backend: Backend::RdFft, p: 8 },
+            Method::FullFinetune,
+            Method::Lora { rank: 4 },
+        ] {
+            let cfg = StackConfig { d: 32, depth: 2, ctx: 4, method, seed: 3, ..Default::default() };
+            let mut stack = SpectralStack::new(cfg);
+            let mut bank = OptimizerBank::new(OptimKind::Sgd, 0.3);
+            let (bytes, labels) = batch(8, 4, 7);
+            let first = stack.train_step(&bytes, &labels, &mut bank);
+            let mut last = first;
+            for _ in 0..100 {
+                last = stack.train_step(&bytes, &labels, &mut bank);
+            }
+            assert!(
+                last < first * 0.6,
+                "{method:?}: memorizing one batch must cut the loss: {first} -> {last}"
+            );
+        }
+    }
+
+    #[test]
+    fn adam_also_trains_the_stack() {
+        let cfg = StackConfig { d: 32, depth: 2, ctx: 4, seed: 5, ..Default::default() };
+        let mut stack = SpectralStack::new(cfg);
+        let mut bank =
+            OptimizerBank::new(OptimKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }, 0.01);
+        let (bytes, labels) = batch(8, 4, 9);
+        let first = stack.train_step(&bytes, &labels, &mut bank);
+        let mut last = first;
+        for _ in 0..100 {
+            last = stack.train_step(&bytes, &labels, &mut bank);
+        }
+        // depth blocks + readout, one tensor each (circulant c + dense w)
+        assert_eq!(bank.num_tensors(), 3);
+        assert!(bank.state_bytes() > 0, "adam must hold per-tensor state");
+        assert!(last < first * 0.6, "adam: {first} -> {last}");
+    }
+
+    #[test]
+    fn param_visit_order_is_stable_and_complete() {
+        let cfg = StackConfig { d: 32, depth: 3, ctx: 4, seed: 2, ..Default::default() };
+        let mut stack = SpectralStack::new(cfg);
+        let mut sizes = Vec::new();
+        stack.for_each_param(&mut |p, g| {
+            assert_eq!(p.len(), g.len());
+            sizes.push(p.len());
+        });
+        let mut sizes2 = Vec::new();
+        stack.for_each_param(&mut |p, _| sizes2.push(p.len()));
+        assert_eq!(sizes, sizes2);
+        assert_eq!(sizes.iter().sum::<usize>(), stack.num_trainable());
+        assert_eq!(sizes.len(), 4); // 3 circulant blocks + readout
+    }
+
+    #[test]
+    fn eval_loss_leaves_no_saved_state() {
+        let cfg = StackConfig { d: 32, depth: 2, ctx: 4, ..Default::default() };
+        let mut stack = SpectralStack::new(cfg);
+        let (bytes, labels) = batch(4, 4, 11);
+        let l1 = stack.eval_loss(&bytes, &labels);
+        let l2 = stack.eval_loss(&bytes, &labels);
+        // (tolerance, not equality: the circulant parameter buffer
+        // roundtrips through the frequency domain between evals)
+        assert!((l1 - l2).abs() < 1e-4, "eval must be repeatable: {l1} vs {l2}");
+        assert!(stack.masks.is_empty());
+    }
+}

@@ -432,6 +432,57 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
     gates_ok
 }
 
+/// Shared row sweep for the native multi-layer memory grid: a short
+/// native-trainer run per method (FF / LoRA / circulant×backends) at
+/// equal width, printing total peak, activation+gradient peak,
+/// trainable-parameter count, final loss and throughput. Used by
+/// [`table_native`] and by `examples/finetune_memory.rs`.
+pub fn native_method_rows(d: usize, depth: usize, batch: usize, steps: usize, p: usize) {
+    use crate::autograd::optim::OptimKind;
+    use crate::autograd::stack::StackConfig;
+    use crate::coordinator::native::measure_native_run;
+
+    println!(
+        "{:<16}{:>12}{:>16}{:>14}{:>14}{:>12}",
+        "method", "peak(MiB)", "act+grad(MiB)", "trainable", "loss", "tok/s"
+    );
+    let mut methods = vec![Method::FullFinetune, Method::Lora { rank: 16.min(d / 4).max(1) }];
+    for bk in BACKENDS {
+        methods.push(Method::Circulant { backend: bk, p });
+    }
+    for m in methods {
+        let cfg = StackConfig { d, depth, ctx: 8, method: m, seed: 3, ..Default::default() };
+        let r = measure_native_run(cfg, OptimKind::Sgd, 0.2, batch, steps);
+        println!(
+            "{:<16}{:>12.2}{:>16.3}{:>14}{:>14.4}{:>12.0}",
+            r.method,
+            r.peak_mib(),
+            r.activation_grad_peak() as f64 / (1024.0 * 1024.0),
+            r.trainable_params,
+            r.final_loss,
+            r.tokens_per_sec,
+        );
+    }
+}
+
+/// Native multi-layer Table-1-style grid: run the pure-Rust trainer for a
+/// few steps per method at equal width and print total peak plus the
+/// activation+gradient peak (the axis the paper's in-place claim is
+/// about). The circulant rdFFT row must sit strictly below full fine-tune
+/// on that axis — `rust/tests/native_training.rs` asserts it.
+pub fn table_native(fast: bool) {
+    let (d, depth, batch, steps) = if fast { (128, 2, 8, 5) } else { (256, 3, 16, 10) };
+    println!(
+        "# Native multi-layer training memory — d={d}, depth={depth}, batch={batch}, {steps} steps (SGD)\n"
+    );
+    native_method_rows(d, depth, batch, steps, d / 4);
+    println!(
+        "\n(read: the rdFFT circulant row's act+grad column must sit strictly\n\
+         below full fine-tune at equal width — the multi-layer extension of\n\
+         Table 1, asserted in rust/tests/native_training.rs)"
+    );
+}
+
 /// Measure the single-layer grid cell-by-cell and return machine-readable
 /// rows — used by integration tests.
 pub fn table1_cells(d: usize, batches: &[usize], p: usize) -> Vec<(String, usize, usize)> {

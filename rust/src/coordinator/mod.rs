@@ -13,10 +13,27 @@
 //! | [`experiments::table2`] | Table 2 (full-model memory)             |
 //! | [`experiments::table3`] | Table 3 (operator runtime + accuracy)   |
 //! | [`experiments::table4`] | Table 4 (throughput + task accuracy)    |
-//! | [`trainer::Trainer`]    | end-to-end loss-curve run               |
+//! | [`trainer::Trainer`]    | end-to-end loss-curve run (PJRT/AOT)    |
+//! | [`native::NativeTrainer`] | pure-Rust loss-curve + memory run     |
 
 pub mod benchlib;
 pub mod experiments;
+pub mod native;
 pub mod trainer;
 
+pub use native::{NativeReport, NativeTrainer, NativeTrainerConfig};
 pub use trainer::{TrainReport, Trainer, TrainerConfig};
+
+/// Create a metrics CSV with `header` already written — shared by the
+/// PJRT and native trainers so both log files parse the same way.
+pub(crate) fn open_csv(
+    path: &std::path::Path,
+    header: &str,
+) -> anyhow::Result<std::fs::File> {
+    use anyhow::Context;
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "{header}")?;
+    Ok(f)
+}

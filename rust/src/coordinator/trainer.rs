@@ -85,12 +85,7 @@ impl Trainer {
         let eval_batcher = Batcher::new(&eval_text, batch, seq, 0);
 
         let mut csv = match &self.cfg.log_csv {
-            Some(p) => {
-                let mut f = std::fs::File::create(p)
-                    .with_context(|| format!("creating {}", p.display()))?;
-                writeln!(f, "step,loss,eval_loss,tokens_per_sec")?;
-                Some(f)
-            }
+            Some(p) => Some(super::open_csv(p, "step,loss,eval_loss,tokens_per_sec")?),
             None => None,
         };
 

@@ -42,6 +42,42 @@ impl Batcher {
         (toks, tgts)
     }
 
+    /// Sample a batch of `(context, next-byte)` pairs for the native
+    /// n-gram trainer: `batch` flat contexts of `ctx` bytes each plus the
+    /// byte that follows every context (as a class label).
+    pub fn next_context_batch(&mut self, ctx: usize) -> (Vec<u8>, Vec<usize>) {
+        assert!(
+            self.tokens.len() > ctx + 1,
+            "corpus too small: {} tokens for ctx {}",
+            self.tokens.len(),
+            ctx
+        );
+        let mut contexts = Vec::with_capacity(self.batch * ctx);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let start = self.rng.below(self.tokens.len() - ctx - 1);
+            contexts.extend(self.tokens[start..start + ctx].iter().map(|&t| t as u8));
+            labels.push(self.tokens[start + ctx] as usize);
+        }
+        (contexts, labels)
+    }
+
+    /// Deterministic `(context, next-byte)` batches for evaluation
+    /// (sequential strided windows, wrapping around the corpus).
+    pub fn eval_context_batch(&self, index: usize, ctx: usize) -> (Vec<u8>, Vec<usize>) {
+        assert!(self.tokens.len() > ctx + 1);
+        let stride = ctx + 1;
+        let max_start = self.tokens.len() - stride;
+        let mut contexts = Vec::with_capacity(self.batch * ctx);
+        let mut labels = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            let start = ((index * self.batch + b) * stride) % max_start;
+            contexts.extend(self.tokens[start..start + ctx].iter().map(|&t| t as u8));
+            labels.push(self.tokens[start + ctx] as usize);
+        }
+        (contexts, labels)
+    }
+
     /// Deterministic sequential batches for evaluation (no overlap
     /// randomness; wraps around).
     pub fn eval_batch(&self, index: usize) -> (Vec<i32>, Vec<i32>) {
@@ -99,5 +135,29 @@ mod tests {
     #[should_panic]
     fn rejects_tiny_corpus() {
         Batcher::new("ab", 1, 32, 0);
+    }
+
+    #[test]
+    fn context_batch_geometry_and_label_follows_context() {
+        let text = CorpusGen::new(2).text(4096);
+        let mut b = Batcher::new(&text, 8, 16, 3);
+        let (ctxs, labels) = b.next_context_batch(6);
+        assert_eq!(ctxs.len(), 8 * 6);
+        assert_eq!(labels.len(), 8);
+        let bytes = text.as_bytes();
+        for r in 0..8 {
+            let ctx = &ctxs[r * 6..(r + 1) * 6];
+            // every (context, label) pair must occur verbatim in the corpus
+            let found = bytes.windows(7).any(|w| &w[..6] == ctx && w[6] as usize == labels[r]);
+            assert!(found, "row {r} not a corpus window");
+        }
+    }
+
+    #[test]
+    fn eval_context_batches_are_deterministic_and_distinct() {
+        let text = CorpusGen::new(2).text(4096);
+        let b = Batcher::new(&text, 4, 16, 3);
+        assert_eq!(b.eval_context_batch(2, 8), b.eval_context_batch(2, 8));
+        assert_ne!(b.eval_context_batch(0, 8).0, b.eval_context_batch(1, 8).0);
     }
 }

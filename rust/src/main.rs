@@ -19,7 +19,11 @@
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
-use rdfft::coordinator::{experiments, Trainer, TrainerConfig};
+use rdfft::autograd::layers::Backend;
+use rdfft::autograd::optim::OptimKind;
+use rdfft::autograd::stack::StackConfig;
+use rdfft::autograd::train::Method;
+use rdfft::coordinator::{experiments, NativeTrainer, NativeTrainerConfig, Trainer, TrainerConfig};
 
 struct Args {
     flags: Vec<(String, Option<String>)>,
@@ -65,6 +69,14 @@ fn usage() -> ! {
            train    run the end-to-end training loop over the AOT artifacts\n\
                     [--steps N=300] [--artifacts DIR=artifacts] [--csv FILE]\n\
                     [--ckpt FILE] [--eval-every N=50] [--seed S=0]\n\
+           train-native  pure-Rust training on the in-place engine (no PJRT)\n\
+                    [--steps N=150] [--d D=64] [--depth K=2] [--ctx C=8]\n\
+                    [--batch B=16] [--p P=16] [--method circulant|dense|lora]\n\
+                    [--backend ours|fft|rfft] [--optim sgd|momentum|adam]\n\
+                    [--lr F] [--csv FILE] [--seed S=0] [--eval-every N=25]\n\
+                    [--max-peak-mib M]  (exits non-zero if loss fails to\n\
+                    drop or the memtrack peak exceeds M)\n\
+           table-native  native multi-layer peak-memory grid [--fast]\n\
            table1   single-layer peak-memory grid   [--fast]\n\
            table2   full-model memory decomposition\n\
            table3   operator runtime + accuracy\n\
@@ -101,12 +113,102 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_train_native(args: &Args) -> Result<()> {
+    let backend = match args.get("backend").unwrap_or("ours") {
+        "ours" | "rdfft" => Backend::RdFft,
+        "fft" => Backend::Fft,
+        "rfft" => Backend::Rfft,
+        other => bail!("unknown backend {other:?} (ours|fft|rfft)"),
+    };
+    let d = args.get_usize("d", 64);
+    let p = args.get_usize("p", 16);
+    let method = match args.get("method").unwrap_or("circulant") {
+        "circulant" => Method::Circulant { backend, p },
+        "dense" | "full" => Method::FullFinetune,
+        "lora" => Method::Lora { rank: args.get_usize("rank", 8) },
+        other => bail!("unknown method {other:?} (circulant|dense|lora)"),
+    };
+    if let Method::Circulant { p, .. } = method {
+        if d % p != 0 {
+            bail!("--d {d} must be a multiple of --p {p}");
+        }
+    }
+    let (optim, default_lr) = match args.get("optim").unwrap_or("sgd") {
+        "sgd" => (OptimKind::Sgd, 0.2),
+        "momentum" => (OptimKind::Momentum { beta: 0.9 }, 0.05),
+        "adam" => (OptimKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }, 0.01),
+        other => bail!("unknown optimizer {other:?} (sgd|momentum|adam)"),
+    };
+    let lr = match args.get("lr") {
+        // A malformed rate must fail loudly, not silently fall back.
+        Some(raw) => match raw.parse::<f32>() {
+            Ok(v) => v,
+            Err(_) => bail!("--lr expects a number, got {raw:?}"),
+        },
+        None => default_lr,
+    };
+    // One --seed drives both model init and the corpus/batch stream.
+    let seed = args.get_usize("seed", 0) as u64;
+    let cfg = NativeTrainerConfig {
+        stack: StackConfig {
+            d,
+            depth: args.get_usize("depth", 2),
+            ctx: args.get_usize("ctx", 8),
+            method,
+            seed,
+            ..Default::default()
+        },
+        optim,
+        lr,
+        steps: args.get_usize("steps", 150),
+        batch: args.get_usize("batch", 16),
+        eval_every: args.get_usize("eval-every", 25),
+        seed,
+        log_csv: args.get("csv").map(PathBuf::from),
+        ..Default::default()
+    };
+    let mut trainer = NativeTrainer::new(cfg);
+    let report = trainer.run()?;
+    println!(
+        "[train-native] done: loss {:.4} -> {:.4} (trend {:.4} -> {:.4}) over {} steps, \
+         peak {:.2} MiB (act+grad {:.3} MiB), {:.0} tok/s",
+        report.first_loss,
+        report.final_loss,
+        report.head_loss,
+        report.tail_loss,
+        report.steps,
+        report.peak_mib(),
+        report.activation_grad_peak() as f64 / (1024.0 * 1024.0),
+        report.tokens_per_sec,
+    );
+    if !report.loss_decreased() {
+        bail!(
+            "training did not reduce the loss ({:.4} -> {:.4})",
+            report.head_loss,
+            report.tail_loss
+        );
+    }
+    if let Some(raw) = args.get("max-peak-mib") {
+        // A malformed budget must fail loudly, not silently disable the gate.
+        let Ok(max) = raw.parse::<f64>() else {
+            bail!("--max-peak-mib expects a number in MiB, got {raw:?}");
+        };
+        if report.peak_mib() > max {
+            bail!("memtrack peak {:.2} MiB exceeds the budget {max:.2} MiB", report.peak_mib());
+        }
+        println!("[train-native] peak {:.2} MiB within budget {max:.2} MiB", report.peak_mib());
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else { usage() };
     let args = Args::parse(&argv[1..]);
     match cmd.as_str() {
         "train" => cmd_train(&args)?,
+        "train-native" => cmd_train_native(&args)?,
+        "table-native" => experiments::table_native(args.has("fast")),
         "table1" => experiments::table1(args.has("fast")),
         "table2" => experiments::table2(),
         "table3" => experiments::table3(),
@@ -125,6 +227,7 @@ fn main() -> Result<()> {
             experiments::table2();
             experiments::table3();
             experiments::table4(true);
+            experiments::table_native(true);
             experiments::alloc_audit();
             experiments::optim_ablation();
             let _ = experiments::bench_rdfft_engine(true);

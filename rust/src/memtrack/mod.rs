@@ -191,6 +191,45 @@ impl Drop for ScopedCategory {
     }
 }
 
+/// RAII registration of `bytes` of storage the tracker should count even
+/// though the bytes do not live in a [`TrackedVec`] — bf16 parameter
+/// buffers (2 bytes/scalar), ReLU sign-bit masks, and similar non-f32
+/// storage. Registers on construction, unregisters on drop; cloning
+/// re-registers (a clone of the owner duplicates the storage).
+pub struct Registration {
+    bytes: usize,
+    cat: Category,
+}
+
+impl Registration {
+    pub fn new(bytes: usize, cat: Category) -> Self {
+        on_alloc(bytes, cat);
+        Registration { bytes, cat }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for Registration {
+    fn drop(&mut self) {
+        on_free(self.bytes, self.cat);
+    }
+}
+
+impl Clone for Registration {
+    fn clone(&self) -> Self {
+        Registration::new(self.bytes, self.cat)
+    }
+}
+
+impl std::fmt::Debug for Registration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Registration({}B, {})", self.bytes, self.cat.name())
+    }
+}
+
 /// A `Vec<f32>` whose backing storage is registered with the tracker.
 /// This is the building block for tensors and for the out-of-place FFT
 /// baselines (whose extra buffers are precisely what the paper measures).
@@ -307,5 +346,21 @@ mod tests {
         let _a = TrackedVec::zeros(8, Category::Other);
         let _b = TrackedVec::zeros(8, Category::Other);
         assert_eq!(snapshot().alloc_count, 2);
+    }
+
+    #[test]
+    fn registration_tracks_and_untracks_bytes() {
+        reset();
+        {
+            let r = Registration::new(100, Category::Trainable);
+            assert_eq!(snapshot().current[Category::Trainable.index()], 100);
+            let r2 = r.clone();
+            assert_eq!(snapshot().current[Category::Trainable.index()], 200);
+            drop(r);
+            assert_eq!(snapshot().current[Category::Trainable.index()], 100);
+            drop(r2);
+        }
+        assert_eq!(snapshot().current_total(), 0);
+        assert_eq!(snapshot().peak_total, 200);
     }
 }

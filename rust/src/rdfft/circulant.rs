@@ -20,6 +20,7 @@ use super::forward::rdfft_inplace;
 use super::inverse::irdfft_inplace;
 use super::plan::{cached, Plan};
 use super::spectral;
+use crate::memtrack::{Category, Registration};
 use std::sync::Arc;
 
 /// Square circulant operator, parameterised by the packed spectrum of its
@@ -99,6 +100,9 @@ pub struct BlockCirculant {
     /// Packed spectra of all blocks' first columns, `rb * cb * p` reals —
     /// exactly the trainable-parameter count the paper reports.
     c_hat: Vec<f32>,
+    /// memtrack registration of the parameter storage (4 bytes/scalar),
+    /// so operator-level bf16-vs-f32 byte comparisons are tracker-backed.
+    _mem: Registration,
 }
 
 impl BlockCirculant {
@@ -114,7 +118,8 @@ impl BlockCirculant {
         // All rb*cb block columns are contiguous length-p rows: one
         // batch-major engine call transforms the lot.
         engine::forward_batch(&plan, &mut c_hat);
-        BlockCirculant { plan, rows, cols, p, c_hat }
+        let mem = Registration::new(c_hat.len() * 4, Category::Trainable);
+        BlockCirculant { plan, rows, cols, p, c_hat, _mem: mem }
     }
 
     /// Build a zero-initialised adapter (zero spectrum ⇒ zero matrix), the
@@ -124,7 +129,8 @@ impl BlockCirculant {
         assert!(rows % p == 0 && cols % p == 0);
         let plan = cached(p);
         let len = (rows / p) * (cols / p) * p;
-        BlockCirculant { plan, rows, cols, p, c_hat: vec![0.0; len] }
+        let mem = Registration::new(len * 4, Category::Trainable);
+        BlockCirculant { plan, rows, cols, p, c_hat: vec![0.0; len], _mem: mem }
     }
 
     pub fn rows(&self) -> usize {
@@ -144,6 +150,12 @@ impl BlockCirculant {
     }
     pub fn num_params(&self) -> usize {
         self.c_hat.len()
+    }
+    /// Bytes of parameter storage (4 bytes per f32 scalar; the bf16
+    /// operator's [`super::circulant_bf16::BlockCirculantBf16::param_bytes`]
+    /// is exactly half).
+    pub fn param_bytes(&self) -> usize {
+        self.c_hat.len() * 4
     }
     pub fn spectra(&self) -> &[f32] {
         &self.c_hat

@@ -6,6 +6,7 @@
 
 use super::bf16::{irdfft_inplace_bf16, rdfft_inplace_bf16, Bf16};
 use super::plan::{cached, Plan};
+use crate::memtrack::{Category, Registration};
 use std::sync::Arc;
 
 /// Packed-domain elementwise product over bf16 spectra (math in f32).
@@ -44,6 +45,10 @@ pub struct BlockCirculantBf16 {
     cols: usize,
     p: usize,
     c_hat: Vec<Bf16>,
+    /// memtrack registration of the bf16 parameter storage (2 bytes per
+    /// scalar — half the f32 operator's, asserted tracker-side in
+    /// `rust/tests/differential.rs`).
+    _mem: Registration,
 }
 
 impl BlockCirculantBf16 {
@@ -59,7 +64,8 @@ impl BlockCirculantBf16 {
         for blk in c_hat.chunks_exact_mut(p) {
             rdfft_inplace_bf16(&plan, blk);
         }
-        BlockCirculantBf16 { plan, rows, cols, p, c_hat }
+        let mem = Registration::new(c_hat.len() * 2, Category::Trainable);
+        BlockCirculantBf16 { plan, rows, cols, p, c_hat, _mem: mem }
     }
 
     pub fn num_params(&self) -> usize {

@@ -187,4 +187,178 @@ mod tests {
             assert!((acc[i] - direct[i]).abs() < 1e-6);
         }
     }
+
+    // ---------------- randomized spectral-algebra properties ----------------
+
+    use crate::autograd::tensor::Rng as PRng;
+
+    /// `n` uniform draws in (-1, 1) from the crate's shared deterministic
+    /// RNG.
+    fn rand_vec(rng: &mut PRng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    fn spectrum_of(x: &[f32]) -> Vec<f32> {
+        let plan = crate::rdfft::plan::cached(x.len());
+        let mut s = x.to_vec();
+        crate::rdfft::forward::rdfft_inplace(&plan, &mut s);
+        s
+    }
+
+    /// Energy of a packed spectrum under Parseval's theorem
+    /// (`||x||² = (y₀² + y_{n/2}² + 2·Σ(re²+im²)) / n`).
+    fn packed_energy(s: &[f32]) -> f64 {
+        let n = s.len();
+        let mut e = (s[0] as f64).powi(2) + (s[n / 2] as f64).powi(2);
+        for k in 1..n / 2 {
+            e += 2.0 * ((s[k] as f64).powi(2) + (s[n - k] as f64).powi(2));
+        }
+        e / n as f64
+    }
+
+    #[test]
+    fn prop_parseval_energy_preserved_by_packed_encoding() {
+        for case in 0..60u64 {
+            let mut rng = PRng::new(100 + case);
+            let n = [4usize, 8, 16, 64, 256, 1024][(case % 6) as usize];
+            let x = rand_vec(&mut rng, n);
+            let et: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+            let ef = packed_energy(&spectrum_of(&x));
+            assert!(
+                (et - ef).abs() <= 1e-4 * et.max(1.0),
+                "case={case} n={n}: {et} vs {ef}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_packed_products_match_full_complex_products() {
+        // The packed kernels assume the product of two conjugate-symmetric
+        // spectra is itself conjugate-symmetric (§4.2 of the paper). Check
+        // both halves of that claim against an independent computation in
+        // the full complex domain: the full product must be Hermitian, and
+        // the packed kernel's lanes must equal the full product's.
+        for case in 0..40u64 {
+            let mut rng = PRng::new(200 + case);
+            let n = [8usize, 16, 64, 256][(case % 4) as usize];
+            let a = spectrum_of(&rand_vec(&mut rng, n));
+            let b = spectrum_of(&rand_vec(&mut rng, n));
+            let fa = unpack_full(&a);
+            let fb = unpack_full(&b);
+            for variant in 0..3 {
+                let mut out = a.clone();
+                let full_prod: Vec<(f32, f32)> = match variant {
+                    0 => {
+                        mul_inplace(&mut out, &b);
+                        (0..n).map(|k| cmul(fa[k], fb[k])).collect()
+                    }
+                    1 => {
+                        conj_mul_inplace(&mut out, &b);
+                        (0..n).map(|k| cmul((fa[k].0, -fa[k].1), fb[k])).collect()
+                    }
+                    _ => {
+                        mul_conjb_inplace(&mut out, &b);
+                        (0..n).map(|k| cmul(fa[k], (fb[k].0, -fb[k].1))).collect()
+                    }
+                };
+                let tol = 1e-4
+                    * (1.0
+                        + full_prod.iter().fold(0.0f32, |m, &(r, i)| m.max(r.abs()).max(i.abs())));
+                for k in 1..n / 2 {
+                    // Hermitian symmetry of the independent full product...
+                    assert!(
+                        (full_prod[k].0 - full_prod[n - k].0).abs() < tol
+                            && (full_prod[k].1 + full_prod[n - k].1).abs() < tol,
+                        "case={case} variant={variant} n={n} k={k} symmetry"
+                    );
+                }
+                // ...and lane-for-lane agreement of the packed kernel.
+                for k in 0..=n / 2 {
+                    let (gr, gi) = get(&out, k);
+                    assert!(
+                        (gr - full_prod[k].0).abs() < tol && (gi - full_prod[k].1).abs() < tol,
+                        "case={case} variant={variant} n={n} k={k}: ({gr},{gi}) vs {:?}",
+                        full_prod[k]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_mul_conj_mul_roundtrip_scales_by_energy() {
+        // conj_mul(mul(a, b), b) computes conj(a·b)·b = conj(a)·|b|²
+        // lane-wise: every packed lane of the result must equal
+        // conj(a)_k · |b_k|².
+        for case in 0..40u64 {
+            let mut rng = PRng::new(300 + case);
+            let n = [8usize, 16, 64][(case % 3) as usize];
+            let a = spectrum_of(&rand_vec(&mut rng, n));
+            let b = spectrum_of(&rand_vec(&mut rng, n));
+            let mut out = a.clone();
+            mul_inplace(&mut out, &b);
+            conj_mul_inplace(&mut out, &b);
+            for k in 0..=n / 2 {
+                let (ar, ai) = get(&a, k);
+                let (br, bi) = get(&b, k);
+                let mag2 = br * br + bi * bi;
+                let (gr, gi) = get(&out, k);
+                assert!(
+                    (gr - ar * mag2).abs() < 1e-4 * (1.0 + mag2),
+                    "case={case} n={n} k={k} re"
+                );
+                assert!(
+                    (gi + ai * mag2).abs() < 1e-4 * (1.0 + mag2),
+                    "case={case} n={n} k={k} im"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_conj_mul_is_conjugate_of_mul_conjb() {
+        // conj(a)·b and a·conj(b) are complex conjugates of each other,
+        // so the two fused kernels must agree up to an imaginary-half
+        // sign flip.
+        for case in 0..40u64 {
+            let mut rng = PRng::new(400 + case);
+            let n = [8usize, 32, 128][(case % 3) as usize];
+            let a = spectrum_of(&rand_vec(&mut rng, n));
+            let b = spectrum_of(&rand_vec(&mut rng, n));
+            let mut lhs = a.clone();
+            conj_mul_inplace(&mut lhs, &b);
+            let mut rhs = a.clone();
+            mul_conjb_inplace(&mut rhs, &b);
+            crate::rdfft::layout::conj_inplace(&mut rhs);
+            for i in 0..n {
+                assert!(
+                    (lhs[i] - rhs[i]).abs() < 1e-5,
+                    "case={case} n={n} i={i}: {} vs {}",
+                    lhs[i],
+                    rhs[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_mul_by_delta_spectrum_is_identity() {
+        // FFT(δ) is the all-ones spectrum — the ⊙ identity element; a
+        // mul/IFFT roundtrip through it must reproduce the signal.
+        for case in 0..20u64 {
+            let mut rng = PRng::new(500 + case);
+            let n = [8usize, 64, 512][(case % 3) as usize];
+            let mut delta = vec![0.0f32; n];
+            delta[0] = 1.0;
+            let one = spectrum_of(&delta);
+            let x = rand_vec(&mut rng, n);
+            let mut s = spectrum_of(&x);
+            mul_inplace(&mut s, &one);
+            let plan = crate::rdfft::plan::cached(n);
+            crate::rdfft::inverse::irdfft_inplace(&plan, &mut s);
+            for i in 0..n {
+                assert!((s[i] - x[i]).abs() < 1e-3, "case={case} n={n} i={i}");
+            }
+        }
+    }
 }

@@ -1,0 +1,250 @@
+//! Differential tests: every rdFFT engine path is cross-checked against a
+//! reference oracle, so any engine change that alters numerics is caught.
+//!
+//! Oracles, in decreasing independence:
+//! * `baselines::complex_fft` — a *separate* radix-2 implementation on
+//!   complex buffers (its own twiddle cache, its own butterfly ordering);
+//! * `baselines::naive_dft` — O(n²) f64 direct summation;
+//! * `baselines::rfft` — shares the rdFFT core, so comparing against it
+//!   checks the packed-layout encode/decode contract specifically;
+//! * dense materialization (`to_dense`) for the circulant layers.
+
+use rdfft::autograd::layers::{Backend, CirculantLayer, Layer};
+use rdfft::autograd::tensor::Rng;
+use rdfft::autograd::Tensor;
+use rdfft::baselines::{complex_fft, naive_dft, rfft};
+use rdfft::memtrack::{self, Category};
+use rdfft::rdfft::bf16::Bf16;
+use rdfft::rdfft::circulant_bf16::BlockCirculantBf16;
+use rdfft::rdfft::{engine, layout, plan::cached, BlockCirculant};
+
+/// `n` uniform draws in (-1, 1) from the crate's shared deterministic RNG.
+fn vec_pm1(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+/// Sizes the differential sweep covers (ISSUE: n in {4..1024}).
+const SIZES: [usize; 9] = [4, 8, 16, 32, 64, 128, 256, 512, 1024];
+/// Odd / non-aligned batch counts.
+const BATCHES: [usize; 4] = [1, 3, 7, 13];
+
+#[test]
+fn forward_batch_matches_independent_complex_fft() {
+    for &n in &SIZES {
+        for &b in &BATCHES {
+            let mut rng = Rng::new((n * 31 + b) as u64);
+            let x = vec_pm1(&mut rng, n * b);
+            let mut got = x.clone();
+            engine::forward_batch(&cached(n), &mut got);
+            let tol = 1e-3 * (n as f32).sqrt();
+            for r in 0..b {
+                let row = &x[r * n..(r + 1) * n];
+                let want = complex_fft::fft_out_of_place(row, Category::Other);
+                for k in 0..=n / 2 {
+                    let (re, im) = layout::get(&got[r * n..(r + 1) * n], k);
+                    assert!(
+                        (re - want[k].re).abs() < tol && (im - want[k].im).abs() < tol,
+                        "n={n} b={b} row={r} k={k}: ({re},{im}) vs ({},{})",
+                        want[k].re,
+                        want[k].im
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_matches_rfft_packing_contract() {
+    // rfft shares the butterfly core, so this pins the packed-layout
+    // encode/decode contract: unpacking the engine output must equal the
+    // rfft-format spectrum coefficient for coefficient.
+    for &n in &SIZES {
+        let mut rng = Rng::new(900 + n as u64);
+        let x = vec_pm1(&mut rng, n);
+        let mut packed = x.clone();
+        engine::forward_batch(&cached(n), &mut packed);
+        let spec = rfft::rfft_alloc(&x, Category::Other);
+        assert_eq!(spec.len(), n / 2 + 1);
+        for k in 0..=n / 2 {
+            let (re, im) = layout::get(&packed, k);
+            assert!(
+                (re - spec[k].0).abs() < 1e-4 && (im - spec[k].1).abs() < 1e-4,
+                "n={n} k={k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn inverse_batch_matches_independent_complex_ifft() {
+    for &n in &SIZES {
+        for &b in &[1usize, 3, 5] {
+            let mut rng = Rng::new((n * 7 + b) as u64);
+            // Start from spectra of real signals so both inverses apply.
+            let time = vec_pm1(&mut rng, n * b);
+            let mut packed = time.clone();
+            engine::forward_batch(&cached(n), &mut packed);
+            let mut got = packed.clone();
+            engine::inverse_batch(&cached(n), &mut got);
+            for r in 0..b {
+                // independent inverse: unpack to full complex, run the
+                // complex-fft baseline's ifft
+                let full = layout::unpack_full(&packed[r * n..(r + 1) * n]);
+                let mut cplx = complex_fft::ComplexVec::zeros(n, Category::Other);
+                for k in 0..n {
+                    cplx[k] = complex_fft::Complex::new(full[k].0, full[k].1);
+                }
+                let want = complex_fft::ifft_out_of_place(&cplx, Category::Other);
+                for i in 0..n {
+                    let g = got[r * n + i];
+                    assert!(
+                        (g - want[i].re).abs() < 1e-3,
+                        "n={n} b={b} row={r} i={i}: {g} vs {}",
+                        want[i].re
+                    );
+                    assert!(want[i].im.abs() < 1e-3, "imag leakage n={n} i={i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_matches_f64_dft_oracle_small_sizes() {
+    for &n in &[4usize, 16, 64, 256] {
+        let mut rng = Rng::new(5000 + n as u64);
+        let x = vec_pm1(&mut rng, n);
+        let mut got = x.clone();
+        engine::forward_batch(&cached(n), &mut got);
+        let want = naive_dft(&x);
+        let tol = 1e-3 * (n as f32).sqrt();
+        for k in 0..=n / 2 {
+            let (re, im) = layout::get(&got, k);
+            assert!((re - want[k].0).abs() < tol, "n={n} k={k} re");
+            assert!((im - want[k].1).abs() < tol, "n={n} k={k} im");
+        }
+    }
+}
+
+/// Dense reference for a circulant layer's forward: y = x · Wᵀ where W is
+/// the layer's materialized block-circulant weight.
+fn dense_forward(w: &[f32], x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    (0..rows).map(|i| (0..cols).map(|j| w[i * cols + j] * x[j]).sum()).collect()
+}
+
+#[test]
+fn circulant_layer_backends_agree_on_odd_batches() {
+    // The fft backend runs on the independent complex-FFT implementation,
+    // so rdFFT-vs-fft agreement at the layer level is a true differential
+    // check of Eq. 4/5, swept over odd / non-tile-aligned batch counts.
+    for &(d, p) in &[(16usize, 8usize), (64, 16), (256, 64)] {
+        for &b in &BATCHES {
+            let seed = (d + p + b) as u64;
+            let mut ours = CirculantLayer::new(Backend::RdFft, d, d, p, seed);
+            let mut fft = CirculantLayer::new(Backend::Fft, d, d, p, seed);
+
+            let mut rng = Rng::new(seed);
+            let x: Vec<f32> = vec_pm1(&mut rng, b * d);
+
+            let y_ours = ours.forward(Tensor::from_vec(b, d, x.clone(), Category::Other));
+            let y_fft = fft.forward(Tensor::from_vec(b, d, x.clone(), Category::Other));
+            for i in 0..b * d {
+                assert!(
+                    (y_ours.as_slice()[i] - y_fft.as_slice()[i]).abs() < 1e-3,
+                    "d={d} p={p} b={b} i={i}: ours vs fft"
+                );
+            }
+
+            // backward differential: same upstream grad through both
+            let g: Vec<f32> = vec_pm1(&mut rng, b * d);
+            let dx_ours = ours.backward(Tensor::from_vec(b, d, g.clone(), Category::Other));
+            let dx_fft = fft.backward(Tensor::from_vec(b, d, g, Category::Other));
+            for i in 0..b * d {
+                assert!(
+                    (dx_ours.as_slice()[i] - dx_fft.as_slice()[i]).abs() < 1e-3,
+                    "d={d} p={p} b={b} i={i}: dx ours vs fft"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn block_circulant_forward_matches_dense_oracle_across_sizes() {
+    for &(rows, cols, p) in &[(16usize, 16usize, 4usize), (32, 64, 16), (128, 128, 32)] {
+        let mut rng = Rng::new((rows * cols + p) as u64);
+        let c = vec_pm1(&mut rng, (rows / p) * (cols / p) * p);
+        let bc = BlockCirculant::from_block_columns(rows, cols, p, &c);
+        let dense = bc.to_dense();
+        let x = vec_pm1(&mut rng, cols);
+        let want = dense_forward(&dense, &x, rows, cols);
+        let mut xb = x.clone();
+        let mut out = vec![0.0f32; rows];
+        bc.forward_inplace(&mut xb, &mut out);
+        for i in 0..rows {
+            assert!(
+                (out[i] - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()),
+                "{rows}x{cols} p={p} i={i}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// bf16 path (ISSUE satellite: equivalence + parameter-byte halving)
+// ---------------------------------------------------------------------
+
+#[test]
+fn bf16_operator_tracks_f32_operator_across_sizes() {
+    for &(d, p) in &[(16usize, 8usize), (64, 16), (128, 32)] {
+        let mut rng = Rng::new((d + p) as u64);
+        let c = vec_pm1(&mut rng, (d / p) * (d / p) * p);
+        let x = vec_pm1(&mut rng, d);
+        let f32_op = BlockCirculant::from_block_columns(d, d, p, &c);
+        let bf_op = BlockCirculantBf16::from_block_columns(d, d, p, &c);
+
+        let mut xf = x.clone();
+        let mut yf = vec![0.0f32; d];
+        f32_op.forward_inplace(&mut xf, &mut yf);
+
+        let mut xb: Vec<Bf16> = x.iter().map(|&v| Bf16::from_f32(v)).collect();
+        let mut yb = vec![Bf16::ZERO; d];
+        bf_op.forward_inplace(&mut xb, &mut yb);
+
+        // bf16 keeps ~8 mantissa bits and every butterfly stage rounds:
+        // tolerate 10% of the output scale (matches the operator's own
+        // unit-test tolerance at these sizes).
+        let scale = yf.iter().map(|v| v.abs()).fold(0.5f32, f32::max);
+        for i in 0..d {
+            assert!(
+                (yb[i].to_f32() - yf[i]).abs() < 0.1 * scale,
+                "d={d} p={p} i={i}: {} vs {}",
+                yb[i].to_f32(),
+                yf[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn bf16_backend_halves_parameter_bytes_tracker_backed() {
+    let (d, p) = (64usize, 16usize);
+    let mut rng = Rng::new(42);
+    let c = vec_pm1(&mut rng, (d / p) * (d / p) * p);
+
+    // f32 operator: 4 bytes per scalar under Trainable.
+    memtrack::reset();
+    let f32_op = BlockCirculant::from_block_columns(d, d, p, &c);
+    let f32_bytes = memtrack::snapshot().current[Category::Trainable.index()];
+    assert_eq!(f32_bytes, f32_op.param_bytes());
+    assert_eq!(f32_bytes, f32_op.num_params() * 4);
+    drop(f32_op);
+    assert_eq!(memtrack::snapshot().current[Category::Trainable.index()], 0);
+
+    // bf16 operator: exactly half, and the tracker agrees.
+    let bf_op = BlockCirculantBf16::from_block_columns(d, d, p, &c);
+    let bf_bytes = memtrack::snapshot().current[Category::Trainable.index()];
+    assert_eq!(bf_bytes, bf_op.param_bytes());
+    assert_eq!(bf_bytes * 2, f32_bytes, "bf16 must halve parameter bytes");
+}

@@ -1,0 +1,133 @@
+//! Integration: the pure-Rust training pipeline — loss must go down on a
+//! multi-layer circulant model, and the memtrack evidence must show the
+//! in-place backend's step-state advantage at the *model* level (the
+//! multi-layer extension of Table 1, the PR's acceptance criterion).
+
+use rdfft::autograd::layers::Backend;
+use rdfft::autograd::optim::OptimKind;
+use rdfft::autograd::stack::StackConfig;
+use rdfft::autograd::train::Method;
+use rdfft::coordinator::native::{measure_native_run, NativeReport, NativeTrainer, NativeTrainerConfig};
+use rdfft::memtrack::Category;
+
+fn run(method: Method, d: usize, depth: usize, batch: usize, steps: usize) -> NativeReport {
+    let cfg = NativeTrainerConfig {
+        stack: StackConfig { d, depth, ctx: 8, method, seed: 11, ..Default::default() },
+        optim: OptimKind::Sgd,
+        lr: 0.2,
+        steps,
+        batch,
+        eval_every: 0,
+        eval_batches: 0,
+        corpus_bytes: 64 * 1024,
+        seed: 4,
+        log_csv: None,
+        verbose: false,
+    };
+    let mut t = NativeTrainer::new(cfg);
+    t.run().expect("native run")
+}
+
+#[test]
+fn multilayer_circulant_trains_100_plus_steps_with_decreasing_loss() {
+    let r = run(Method::Circulant { backend: Backend::RdFft, p: 16 }, 64, 2, 16, 120);
+    assert_eq!(r.losses.len(), 120);
+    assert!(
+        r.tail_loss < r.head_loss,
+        "loss must trend down over {} steps: {} -> {}",
+        r.steps,
+        r.head_loss,
+        r.tail_loss
+    );
+    // byte-LM starts near uniform (ln 256 ≈ 5.55); the corpus is low
+    // entropy, so 120 steps must make real progress, not a epsilon drop
+    assert!(
+        r.tail_loss < r.head_loss - 0.5,
+        "expected substantive progress: {} -> {}",
+        r.head_loss,
+        r.tail_loss
+    );
+}
+
+#[test]
+fn all_backends_and_optimizers_reduce_loss_on_the_stack() {
+    for method in [
+        Method::Circulant { backend: Backend::Fft, p: 16 },
+        Method::Circulant { backend: Backend::Rfft, p: 16 },
+        Method::Lora { rank: 8 },
+    ] {
+        let r = run(method, 64, 2, 8, 60);
+        assert!(r.tail_loss < r.head_loss, "{}: {} -> {}", r.method, r.head_loss, r.tail_loss);
+    }
+    // Adam on the rdFFT backend
+    let r = measure_native_run(
+        StackConfig {
+            d: 64,
+            depth: 2,
+            ctx: 8,
+            method: Method::Circulant { backend: Backend::RdFft, p: 16 },
+            seed: 2,
+            ..Default::default()
+        },
+        OptimKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        0.01,
+        8,
+        60,
+    );
+    assert!(r.tail_loss < r.head_loss, "adam: {} -> {}", r.head_loss, r.tail_loss);
+    assert!(r.optimizer_state_bytes > 0);
+}
+
+/// The PR's acceptance criterion: at equal width and depth, the circulant
+/// rdFFT backend's activation+gradient peak must be strictly below the
+/// full-finetune Dense baseline's.
+#[test]
+fn circulant_activation_grad_peak_strictly_below_dense_at_equal_width() {
+    // d=256, depth=3: block gradients (3·d² dense vs 3·d²/p circulant)
+    // dominate the shared readout, so the ordering is structural.
+    let (d, depth, batch, steps) = (256usize, 3usize, 4usize, 2usize);
+    let dense = run(Method::FullFinetune, d, depth, batch, steps);
+    let circ = run(Method::Circulant { backend: Backend::RdFft, p: 32 }, d, depth, batch, steps);
+    assert!(
+        circ.activation_grad_peak() < dense.activation_grad_peak(),
+        "circulant act+grad peak {} must be strictly below dense {}",
+        circ.activation_grad_peak(),
+        dense.activation_grad_peak()
+    );
+    // ...and the gap is structural, not noise: dense holds depth·d² grad
+    // scalars against the circulant's depth·d²/p (plus the shared readout),
+    // so demand a wide margin on the gradient axis alone.
+    let gi = Category::Gradients.index();
+    assert!(
+        dense.peak_by_cat[gi] > 2 * circ.peak_by_cat[gi],
+        "gradient peak: dense {} vs circulant {}",
+        dense.peak_by_cat[gi],
+        circ.peak_by_cat[gi]
+    );
+    // total peak ordering follows too
+    assert!(circ.peak_bytes < dense.peak_bytes);
+}
+
+#[test]
+fn rdfft_backend_peak_not_above_fft_backend_peak_multilayer() {
+    let (d, depth, batch, steps) = (128usize, 2usize, 4usize, 3usize);
+    let fft = run(Method::Circulant { backend: Backend::Fft, p: 32 }, d, depth, batch, steps);
+    let ours = run(Method::Circulant { backend: Backend::RdFft, p: 32 }, d, depth, batch, steps);
+    assert!(
+        ours.activation_grad_peak() < fft.activation_grad_peak(),
+        "ours {} vs fft {}",
+        ours.activation_grad_peak(),
+        fft.activation_grad_peak()
+    );
+}
+
+#[test]
+fn report_accounting_is_internally_consistent() {
+    let r = run(Method::Circulant { backend: Backend::RdFft, p: 16 }, 64, 2, 8, 5);
+    assert_eq!(r.at_peak.iter().sum::<usize>(), r.peak_bytes);
+    for c in rdfft::memtrack::CATEGORIES {
+        assert!(r.peak_by_cat[c.index()] >= r.at_peak[c.index()], "{}", c.name());
+    }
+    assert!(r.trainable_params > 0);
+    assert_eq!(r.optimizer_state_bytes, 0, "sgd holds no state");
+}

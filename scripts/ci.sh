@@ -1,11 +1,20 @@
 #!/usr/bin/env bash
 # Tier-1 gate as one command: build (all targets, so benches/examples
-# stay compiling), test, and — when rustfmt is installed — format check.
+# stay compiling), test (unit + integration + differential + native
+# training suites), a native-trainer smoke run, and — when rustfmt is
+# installed — format check.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release --all-targets
 cargo test -q
+
+# Native-trainer smoke: 20 steps on a depth-2 circulant stack must reduce
+# the loss AND keep the memtrack peak under a fixed budget (the binary
+# exits non-zero on either failure).
+./target/release/repro train-native \
+  --steps 20 --d 64 --depth 2 --p 16 --batch 8 --eval-every 10 \
+  --max-peak-mib 8
 
 if command -v rustfmt >/dev/null 2>&1; then
   cargo fmt --all --check
