@@ -84,7 +84,7 @@ fn main() {
     println!();
     let fast = std::env::args().any(|a| a == "--fast");
     if !rdfft::coordinator::experiments::bench_rdfft_engine(fast) {
-        eprintln!("FAIL: engine batch=1 latency regressed vs the scalar path");
+        eprintln!("FAIL: engine gate (batch=1 latency vs scalar, or fused-vs-unfused circulant) regressed");
         std::process::exit(1);
     }
 }

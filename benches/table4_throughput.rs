@@ -12,7 +12,7 @@ fn main() {
     println!();
     rdfft::coordinator::experiments::table4(fast);
     if !gates_ok {
-        eprintln!("FAIL: engine batch=1 latency regressed vs the scalar path");
+        eprintln!("FAIL: engine gate (batch=1 latency vs scalar, or fused-vs-unfused circulant) regressed");
         std::process::exit(1);
     }
 }

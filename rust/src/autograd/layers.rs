@@ -64,6 +64,41 @@ pub trait Layer {
     /// can apply stateful updates and zero the gradients. Implementations
     /// must present parameters in their canonical (time) domain.
     fn for_each_param(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32]));
+
+    /// Residual forward `y = x + layer(x)` — the block sweep of
+    /// [`crate::autograd::stack::SpectralStack`]. The default clones the
+    /// input for the time-domain skip; layers with a fused skip (the
+    /// rdFFT circulant layer adds spectra before its single inverse
+    /// sweep) override to avoid the activation copy.
+    fn forward_residual(&mut self, x: Tensor) -> Tensor {
+        residual_forward_fallback(self, x)
+    }
+
+    /// Residual backward `dx = g + layerᵀ(g)`, mirroring
+    /// [`Layer::forward_residual`]. Default clones the incoming gradient
+    /// for the skip path.
+    fn backward_residual(&mut self, grad_out: Tensor) -> Tensor {
+        residual_backward_fallback(self, grad_out)
+    }
+}
+
+/// The clone-and-add residual forward, shared by the [`Layer`] trait
+/// default and the overrides that only fuse some configurations (so the
+/// fused and unfused skip semantics can never drift apart).
+fn residual_forward_fallback<L: Layer + ?Sized>(layer: &mut L, x: Tensor) -> Tensor {
+    let skip = x.clone_as(Category::Intermediates);
+    let mut y = layer.forward(x);
+    y.axpy(&skip, 1.0);
+    y
+}
+
+/// The clone-and-add residual backward, mirroring
+/// [`residual_forward_fallback`].
+fn residual_backward_fallback<L: Layer + ?Sized>(layer: &mut L, grad_out: Tensor) -> Tensor {
+    let skip = grad_out.clone_as(Category::Intermediates);
+    let mut dx = layer.backward(grad_out);
+    dx.axpy(&skip, 1.0);
+    dx
 }
 
 // ---------------------------------------------------------------------
@@ -346,68 +381,109 @@ impl CirculantLayer {
         }
     }
 
-    fn forward_rdfft(&mut self, mut x: Tensor) -> Tensor {
-        let (p, rb, cb) = (self.p, self.rb(), self.cb());
-        let b = x.rows;
-        // ĉ: transform the parameter buffer itself, in place (one
-        // batch-major engine call over all rb*cb blocks). It stays in the
-        // frequency domain until the end of backward restores it.
+    /// Transform the parameter buffer to its packed block spectra if it
+    /// is still in the time domain.
+    fn ensure_freq_domain(&mut self) {
         if !self.c_in_freq {
             engine::forward_batch(&self.plan, self.c.as_mut_slice());
             self.c_in_freq = true;
         }
-        // Transform every input block in place — the whole (b × cols)
-        // tensor is b*cb contiguous length-p blocks, so a single engine
-        // batch covers it. x's buffer now holds x̂ and doubles as the
-        // saved-for-backward tensor. No allocation.
-        engine::forward_batch(&self.plan, x.as_mut_slice());
-        // The output activation is mandatory for any method.
+    }
+
+    fn forward_rdfft(&mut self, mut x: Tensor) -> Tensor {
+        let b = x.rows;
+        // ĉ: transform the parameter buffer itself, in place (one
+        // batch-major engine call over all rb*cb blocks). It stays in the
+        // frequency domain until the end of backward restores it.
+        self.ensure_freq_domain();
+        // Fused sweep over all b samples: each sample's input blocks are
+        // forward-staged in place (x's buffer ends holding x̂ — the
+        // saved-for-backward tensor), the packed products accumulate into
+        // its output blocks, and those are inverse-staged — one
+        // cache-resident pass per sample instead of three whole-tensor
+        // passes. The output activation is mandatory for any method.
         let mut out = Tensor::zeros_cat(b, self.rows, Category::Intermediates);
-        for r in 0..b {
-            let xrow = x.row(r);
-            let orow = out.row_mut(r);
-            for i in 0..rb {
-                let ob = &mut orow[i * p..(i + 1) * p];
-                for j in 0..cb {
-                    let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
-                    spectral::mul_acc(ob, ch, &xrow[j * p..(j + 1) * p]);
-                }
-            }
-        }
-        // One batched inverse finishes every output block of every row.
-        engine::inverse_batch(&self.plan, out.as_mut_slice());
+        engine::block_circulant_forward_batch(
+            &self.plan,
+            x.as_mut_slice(),
+            out.as_mut_slice(),
+            self.c.as_slice(),
+            self.rb(),
+            self.cb(),
+        );
         self.saved_x = Some(x);
         out
     }
 
-    fn backward_rdfft(&mut self, mut g: Tensor) -> Tensor {
+    /// Residual variant: `out = x + W x` with the skip added in the
+    /// frequency domain inside the fused sweep (the transform is linear),
+    /// so the stack's block sweep needs **no** time-domain activation
+    /// copy. Square layers only.
+    fn forward_rdfft_residual(&mut self, mut x: Tensor) -> Tensor {
+        debug_assert_eq!(self.rows, self.cols);
+        let b = x.rows;
+        self.ensure_freq_domain();
+        let mut out = Tensor::zeros_cat(b, self.rows, Category::Intermediates);
+        engine::block_circulant_forward_residual_batch(
+            &self.plan,
+            x.as_mut_slice(),
+            out.as_mut_slice(),
+            self.c.as_slice(),
+            self.rb(),
+            self.cb(),
+        );
+        self.saved_x = Some(x);
+        out
+    }
+
+    /// rdFFT backward. `residual` additionally adds the skip gradient
+    /// (`dx = g + Wᵀg`) in the frequency domain inside the fused sweep —
+    /// used by [`Layer::backward_residual`]; square layers only.
+    fn backward_rdfft(&mut self, mut g: Tensor, residual: bool) -> Tensor {
         let (p, rb, cb) = (self.p, self.rb(), self.cb());
         let b = g.rows;
         let x_hat = self.saved_x.take().expect("forward first");
-        // ĝ: transform grad-output blocks in place, batch-major over the
-        // whole tensor (no allocation).
-        engine::forward_batch(&self.plan, g.as_mut_slice());
-        // dĉ += conj(x̂) ⊙ ĝ — straight into the (mandatory) grad buffer.
-        for r in 0..b {
-            let xrow = x_hat.row(r);
-            let grow = g.row(r);
-            for i in 0..rb {
-                for j in 0..cb {
-                    let d = &mut self.dc.as_mut_slice()[(i * cb + j) * p..][..p];
-                    spectral::conj_mul_acc(d, &xrow[j * p..(j + 1) * p], &grow[i * p..(i + 1) * p]);
-                }
-            }
-        }
         // dx: when the layer is square, grad-output's buffer is
         // overwritten in place with dx (the paper's "overwrite grad_output
         // at the final stage of the backward pass"), using the layer's
         // persistent one-row workspace — each dx block needs every ĝ
         // block, so a row of scratch is unavoidable; it is allocated once
-        // at construction (the CUDA analogue is shared memory).
+        // at construction (the CUDA analogue is shared memory). The whole
+        // sample is processed in one fused, cache-resident sweep: forward
+        // stages (ĝ), the dĉ accumulation, the conjugated products, and
+        // the inverse stages.
         let dx = if self.rows == self.cols {
             let mut dx = g;
+            // The per-sample sweep below is serial (dc and the workspace
+            // are shared accumulators), so on batches big enough to
+            // thread, run the ĝ transform as one threaded whole-tensor
+            // pass up front and let the sweep skip its per-row transform
+            // — the same ops either way, bit-identically.
+            let pre_transformed = engine::default_would_thread(b * cb, p);
+            if pre_transformed {
+                engine::forward_batch(&self.plan, dx.as_mut_slice());
+            }
             for r in 0..b {
                 let row = dx.row_mut(r);
+                // ĝ for this sample, in place (row aliases grad-output).
+                if !pre_transformed {
+                    engine::forward_rows(&self.plan, row, cb.max(1));
+                }
+                // dĉ_ij += conj(x̂_j) ⊙ ĝ_i — straight into the
+                // (mandatory) grad buffer while ĝ is hot.
+                let xrow = x_hat.row(r);
+                for i in 0..rb {
+                    for j in 0..cb {
+                        let d = &mut self.dc.as_mut_slice()[(i * cb + j) * p..][..p];
+                        spectral::conj_mul_acc(
+                            d,
+                            &xrow[j * p..(j + 1) * p],
+                            &row[i * p..(i + 1) * p],
+                        );
+                    }
+                }
+                // dx_j = IFFT([ĝ_j +] Σ_i conj(ĉ_ij) ⊙ ĝ_i) into the
+                // workspace, then overwrite the sample's grad-output row.
                 let ws = self.workspace.as_mut_slice();
                 for (j, sb) in ws.chunks_exact_mut(p).enumerate() {
                     sb.fill(0.0);
@@ -415,27 +491,46 @@ impl CirculantLayer {
                         let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
                         spectral::conj_mul_acc(sb, ch, &row[i * p..(i + 1) * p]);
                     }
+                    if residual {
+                        // Skip-path gradient, added as spectra (linear).
+                        for (o, v) in sb.iter_mut().zip(&row[j * p..(j + 1) * p]) {
+                            *o += v;
+                        }
+                    }
                 }
-                // one batched inverse over the whole accumulated row
-                engine::inverse_batch(&self.plan, ws);
+                engine::inverse_rows(&self.plan, ws, cb.max(1));
                 row.copy_from_slice(ws);
             }
             dx
         } else {
-            // Rectangular: dx is a mandatory output allocation.
+            debug_assert!(!residual, "residual backward requires a square layer");
+            // Rectangular: dx is a mandatory output allocation. The fused
+            // transpose sweep turns g into ĝ in place and produces dx in
+            // the same pass.
             let mut dx = Tensor::zeros_cat(b, self.cols, Category::Intermediates);
+            engine::block_circulant_transpose_batch(
+                &self.plan,
+                g.as_mut_slice(),
+                dx.as_mut_slice(),
+                self.c.as_slice(),
+                rb,
+                cb,
+            );
+            // dĉ += conj(x̂) ⊙ ĝ from the spectra the sweep left behind.
             for r in 0..b {
+                let xrow = x_hat.row(r);
                 let grow = g.row(r);
-                let dxrow = dx.row_mut(r);
-                for j in 0..cb {
-                    let db = &mut dxrow[j * p..(j + 1) * p];
-                    for i in 0..rb {
-                        let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
-                        spectral::conj_mul_acc(db, ch, &grow[i * p..(i + 1) * p]);
+                for i in 0..rb {
+                    for j in 0..cb {
+                        let d = &mut self.dc.as_mut_slice()[(i * cb + j) * p..][..p];
+                        spectral::conj_mul_acc(
+                            d,
+                            &xrow[j * p..(j + 1) * p],
+                            &grow[i * p..(i + 1) * p],
+                        );
                     }
                 }
             }
-            engine::inverse_batch(&self.plan, dx.as_mut_slice());
             dx
         };
         // Leave the frequency domain: gradient blocks IFFT in place
@@ -648,10 +743,28 @@ impl Layer for CirculantLayer {
     fn backward(&mut self, grad_out: Tensor) -> Tensor {
         assert_eq!(grad_out.cols, self.rows);
         match self.backend {
-            Backend::RdFft => self.backward_rdfft(grad_out),
+            Backend::RdFft => self.backward_rdfft(grad_out, false),
             Backend::Rfft => self.backward_rfft(grad_out),
             Backend::Fft => self.backward_fft(grad_out),
         }
+    }
+
+    fn forward_residual(&mut self, x: Tensor) -> Tensor {
+        assert_eq!(x.cols, self.cols);
+        if self.backend == Backend::RdFft && self.rows == self.cols {
+            // Fused skip: x̂ is added to the output spectra inside the
+            // sweep — no time-domain activation copy.
+            return self.forward_rdfft_residual(x);
+        }
+        residual_forward_fallback(self, x)
+    }
+
+    fn backward_residual(&mut self, grad_out: Tensor) -> Tensor {
+        assert_eq!(grad_out.cols, self.rows);
+        if self.backend == Backend::RdFft && self.rows == self.cols {
+            return self.backward_rdfft(grad_out, true);
+        }
+        residual_backward_fallback(self, grad_out)
     }
 
     fn sgd_step(&mut self, lr: f32) {
@@ -865,6 +978,67 @@ mod tests {
             let dx = l.backward(grad_ones(b, rows));
             assert_eq!((dx.rows, dx.cols), (b, cols));
         }
+    }
+
+    /// The fused frequency-domain residual (`forward_residual` /
+    /// `backward_residual` on a square rdFFT layer) must agree with the
+    /// default clone-and-add skip to transform-roundtrip precision, for
+    /// outputs, input grads, and parameter grads.
+    #[test]
+    fn fused_residual_matches_clone_and_add_reference() {
+        let (b, d, p) = (3, 32, 8);
+        let mut reference = CirculantLayer::new(Backend::RdFft, d, d, p, 55);
+        let mut fused = CirculantLayer::new(Backend::RdFft, d, d, p, 55);
+        let x = input(b, d, 66);
+        let x2 = x.clone_as(Category::Intermediates);
+
+        let skip = x.clone_as(Category::Other);
+        let mut y_ref = reference.forward(x);
+        y_ref.axpy(&skip, 1.0);
+        let y_fused = fused.forward_residual(x2);
+        for i in 0..y_ref.len() {
+            assert!(
+                (y_ref.as_slice()[i] - y_fused.as_slice()[i]).abs() < 1e-3,
+                "y i={i}: {} vs {}",
+                y_ref.as_slice()[i],
+                y_fused.as_slice()[i]
+            );
+        }
+
+        let g = grad_ones(b, d);
+        let g2 = grad_ones(b, d);
+        let gskip = g.clone_as(Category::Other);
+        let mut dx_ref = reference.backward(g);
+        dx_ref.axpy(&gskip, 1.0);
+        let dx_fused = fused.backward_residual(g2);
+        for i in 0..dx_ref.len() {
+            assert!(
+                (dx_ref.as_slice()[i] - dx_fused.as_slice()[i]).abs() < 1e-3,
+                "dx i={i}"
+            );
+        }
+        for i in 0..reference.dc.len() {
+            assert!(
+                (reference.dc.as_slice()[i] - fused.dc.as_slice()[i]).abs() < 1e-3,
+                "dc i={i}"
+            );
+        }
+    }
+
+    /// The fused residual path must keep the layer's allocation story:
+    /// forward allocates only the output tensor, backward nothing.
+    #[test]
+    fn fused_residual_is_allocation_free() {
+        let (b, d, p) = (4, 64, 16);
+        let mut l = CirculantLayer::new(Backend::RdFft, d, d, p, 8);
+        let x = input(b, d, 9);
+        let g = grad_ones(b, d);
+        memtrack::reset_peak();
+        let before = memtrack::snapshot().alloc_count;
+        let _y = l.forward_residual(x);
+        assert_eq!(memtrack::snapshot().alloc_count - before, 1, "output tensor only");
+        let _dx = l.backward_residual(g);
+        assert_eq!(memtrack::snapshot().alloc_count - before, 1, "backward allocates nothing");
     }
 
     #[test]

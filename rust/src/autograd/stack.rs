@@ -167,12 +167,11 @@ impl SpectralStack {
         let mut h = self.features(ctx_bytes);
         self.masks.clear();
         for blk in &mut self.blocks {
-            // h ← ReLU(h + block(h)): the skip needs one activation copy
-            // (the block consumes and saves its input in place).
-            let skip = h.clone_as(Category::Intermediates);
-            let mut t = blk.forward(h);
-            t.axpy(&skip, 1.0);
-            drop(skip);
+            // h ← ReLU(h + block(h)), through the layer's residual hook:
+            // the rdFFT circulant block adds the skip as spectra inside
+            // its fused single-sweep pipeline (no activation copy); other
+            // layers fall back to the clone-and-add default.
+            let mut t = blk.forward_residual(h);
             self.masks.push(ReluMask::forward(&mut t));
             h = t;
         }
@@ -186,12 +185,9 @@ impl SpectralStack {
         let mut g = self.readout.backward(dlogits);
         for (blk, mask) in self.blocks.iter_mut().rev().zip(self.masks.drain(..).rev()) {
             mask.backward(&mut g);
-            // d(h + block(h)) = g + blockᵀ(g): the skip path mirrors the
-            // forward copy.
-            let skip = g.clone_as(Category::Intermediates);
-            let mut dh = blk.backward(g);
-            dh.axpy(&skip, 1.0);
-            g = dh;
+            // d(h + block(h)) = g + blockᵀ(g), via the residual hook
+            // (fused skip gradient for the rdFFT circulant block).
+            g = blk.backward_residual(g);
         }
     }
 

@@ -323,21 +323,25 @@ pub fn optim_ablation() {
 }
 
 /// Batch-engine ablation: scalar per-row loop vs batch-major engine vs
-/// batch-major + scoped threads, over (n × batch). Each timed closure is
-/// one forward+inverse roundtrip of the whole batch (keeps values
-/// bounded across iterations). Prints the grid and writes the
-/// machine-readable records to `BENCH_rdfft.json` (schema in
-/// EXPERIMENTS.md §Perf).
+/// batch-major + scoped threads, over (n × batch), plus the circulant
+/// fused-vs-unfused pipeline comparison (the tentpole's acceptance
+/// rows). Each timed closure is one forward+inverse roundtrip of the
+/// whole batch (keeps values bounded across iterations). Prints the grid
+/// and writes the machine-readable records to `BENCH_rdfft.json` (schema
+/// in EXPERIMENTS.md §Perf).
 ///
-/// Returns `false` when the single-row latency gate failed (engine
-/// batch=1 slower than the scalar path beyond measurement slack) so
-/// bench binaries can exit non-zero instead of burying a `REGRESSED`
-/// cell in the log.
+/// Returns `false` when a gate failed — the single-row latency gate
+/// (engine batch=1 slower than the scalar path beyond measurement
+/// slack) or the fused-circulant gate (fused sweep slower than the
+/// unfused three-pass pipeline on a ≥ 8 Ki-element cell) — so bench
+/// binaries can exit non-zero instead of burying a `REGRESSED` cell in
+/// the log.
 pub fn bench_rdfft_engine(fast: bool) -> bool {
     use crate::coordinator::benchlib::{write_bench_json, BenchRecord};
-    use crate::rdfft::engine::{self, EngineConfig};
+    use crate::rdfft::engine::{self, EngineConfig, SpectralOp};
     use crate::rdfft::forward::rdfft_batch_scalar;
     use crate::rdfft::inverse::irdfft_batch_scalar;
+    use crate::rdfft::spectral;
 
     let budget = if fast { 60 } else { 200 };
     let ns = [256usize, 1024, 4096];
@@ -417,12 +421,73 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
                     speedup_vs_scalar: speedup,
                 });
             }
+
+            // Circulant apply, fused single-sweep pipeline vs the unfused
+            // forward → packed product → inverse three-pass pipeline at
+            // the same (n, batch). The δ spectrum (the ⊙ identity) keeps
+            // repeated applications numerically bounded across timing
+            // iterations. For the fused record, `speedup_vs_scalar`
+            // reports fused-vs-unfused (the tentpole's acceptance ratio).
+            let mut spec = vec![0.0f32; n];
+            spec[0] = 1.0;
+            rdfft::rdfft_inplace(&plan, &mut spec);
+            let s_unf = bench(budget, || {
+                engine::forward_batch(&plan, &mut buf);
+                for row in buf.chunks_exact_mut(n) {
+                    spectral::mul_inplace(row, &spec);
+                }
+                engine::inverse_batch(&plan, &mut buf);
+                std::hint::black_box(&buf[0]);
+            });
+            let s_fus = bench(budget, || {
+                engine::circulant_apply_batch(&plan, &mut buf, &spec, SpectralOp::Mul);
+                std::hint::black_box(&buf[0]);
+            });
+            let fus_x = s_unf.median_ns / s_fus.median_ns.max(1.0);
+            // Regression gate: on cells with enough work to time stably
+            // (≥ 8 Ki elements), the fused sweep must not be slower than
+            // the unfused pipeline beyond measurement slack. (The ≥ 1.2×
+            // acceptance target is judged on the large cells and
+            // reported, not hard-gated — tiny L1-resident cells have
+            // little bandwidth to win back.)
+            let fus_gate = if n * b >= 1 << 13 {
+                if fus_x >= 0.9 {
+                    "ok"
+                } else {
+                    gates_ok = false;
+                    "REGRESSED"
+                }
+            } else {
+                "-"
+            };
+            println!(
+                "{:<8}{:>8}  circulant-apply: unfused {:>10.0}  fused {:>10.0}  fused× {:>5.2}  {}",
+                n,
+                b,
+                s_unf.median_ns / b as f64,
+                s_fus.median_ns / b as f64,
+                fus_x,
+                fus_gate
+            );
+            for (mode, stats, speedup) in
+                [("circulant_unfused", s_unf, 1.0), ("circulant_fused", s_fus, fus_x)]
+            {
+                records.push(BenchRecord {
+                    mode: mode.to_string(),
+                    n,
+                    batch: b,
+                    transforms_per_sec: tps(&stats),
+                    stats,
+                    speedup_vs_scalar: speedup,
+                });
+            }
         }
     }
     println!(
         "\n(gates: batch-major+threads >= 2x scalar at batch >= 8 where the\n\
          work threshold engages; batch=1 must ride the spawn-free path and\n\
-         stay at or below scalar latency — see EXPERIMENTS.md §Perf)"
+         stay at or below scalar latency; circulant fused× target >= 1.2\n\
+         on the grid — see EXPERIMENTS.md §Perf)"
     );
     let path = std::path::Path::new("BENCH_rdfft.json");
     match write_bench_json(path, &records) {

@@ -148,13 +148,17 @@ impl NativeTrainer {
             );
         }
         let text = CorpusGen::new(cfg.seed).text(cfg.corpus_bytes);
-        let mut batcher = Batcher::new(&text, cfg.batch, ctx.max(2), cfg.seed + 1);
+        // try_new: a corpus too small for the context window is a typed,
+        // propagated error (clean CLI failure), not a panic.
+        let mut batcher = Batcher::try_new(&text, cfg.batch, ctx.max(2), cfg.seed + 1)?;
         // Held-out corpus only when evaluation will actually run.
         let eval_enabled = cfg.eval_every > 0 && cfg.eval_batches > 0;
-        let eval_batcher = eval_enabled.then(|| {
+        let eval_batcher = if eval_enabled {
             let eval_text = CorpusGen::new(cfg.seed + 7777).text(64 * 1024);
-            Batcher::new(&eval_text, cfg.batch, ctx.max(2), 0)
-        });
+            Some(Batcher::try_new(&eval_text, cfg.batch, ctx.max(2), 0)?)
+        } else {
+            None
+        };
 
         let mut csv = match &cfg.log_csv {
             Some(p) => Some(super::open_csv(
@@ -174,7 +178,9 @@ impl NativeTrainer {
         let mut eval_secs = 0.0f64;
 
         for step in 1..=cfg.steps {
-            let (ctxs, labels) = batcher.next_context_batch(ctx);
+            // Typed BatchError surfaces as a clean CLI failure on tiny
+            // corpora instead of a panic inside the sampler.
+            let (ctxs, labels) = batcher.next_context_batch(ctx)?;
             let loss = self.stack.train_step(&ctxs, &labels, &mut self.bank);
             tokens_seen += cfg.batch * ctx;
             losses.push((step, loss));
@@ -187,7 +193,7 @@ impl NativeTrainer {
                 let eb = eval_batcher.as_ref().expect("eval_enabled implies a batcher");
                 let mut acc = 0.0f32;
                 for i in 0..cfg.eval_batches {
-                    let (et, el) = eb.eval_context_batch(i, ctx);
+                    let (et, el) = eb.eval_context_batch(i, ctx)?;
                     acc += self.stack.eval_loss(&et, &el);
                 }
                 let e = acc / cfg.eval_batches as f32;
@@ -270,7 +276,7 @@ pub fn measure_native_run(
         verbose: false,
     };
     let mut t = NativeTrainer::new(cfg);
-    t.run().expect("native run cannot fail without a CSV path")
+    t.run().expect("native run cannot fail: no CSV path and a 32 KiB corpus")
 }
 
 #[cfg(test)]

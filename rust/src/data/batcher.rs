@@ -4,6 +4,49 @@
 
 use super::ByteTokenizer;
 use crate::autograd::tensor::Rng;
+use std::fmt;
+
+/// Typed failure from context-batch assembly. Tiny corpora (the
+/// `train-native --steps 20 --batch 8` CI smoke on a short text, an empty
+/// eval split) must surface a clean, actionable error — not a panic or an
+/// out-of-bounds index deep inside the sampler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchError {
+    /// The corpus has too few tokens to cut even one training window
+    /// (`ctx` context bytes + the next-byte label).
+    CorpusTooSmall {
+        /// Tokens available.
+        tokens: usize,
+        /// Minimum tokens a single window needs.
+        needed: usize,
+    },
+    /// The deterministic eval split has no full `(context, label)` window.
+    EmptyEvalSplit {
+        /// Tokens available in the split.
+        tokens: usize,
+        /// Window length (`ctx + 1`).
+        window: usize,
+    },
+}
+
+impl fmt::Display for BatchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            BatchError::CorpusTooSmall { tokens, needed } => write!(
+                f,
+                "corpus too small for a context batch: {tokens} tokens, \
+                 need at least {needed} (context + next-byte label)"
+            ),
+            BatchError::EmptyEvalSplit { tokens, window } => write!(
+                f,
+                "eval split too small: {tokens} tokens cannot fit one \
+                 {window}-token (context, label) window"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BatchError {}
 
 /// Produces next-token-prediction batches from a token stream.
 pub struct Batcher {
@@ -15,14 +58,29 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(text: &str, batch: usize, seq_len: usize, seed: u64) -> Self {
+        match Self::try_new(text, batch, seq_len, seed) {
+            Ok(b) => b,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Non-panicking constructor: callers that must fail cleanly on tiny
+    /// corpora (the native trainer's CLI path) get a typed
+    /// [`BatchError`] instead of the [`Self::new`] panic.
+    pub fn try_new(
+        text: &str,
+        batch: usize,
+        seq_len: usize,
+        seed: u64,
+    ) -> Result<Self, BatchError> {
         let tokens = ByteTokenizer.encode(text);
-        assert!(
-            tokens.len() > seq_len + 1,
-            "corpus too small: {} tokens for seq_len {}",
-            tokens.len(),
-            seq_len
-        );
-        Batcher { tokens, batch, seq_len, rng: Rng::new(seed) }
+        if tokens.len() < seq_len + 2 {
+            return Err(BatchError::CorpusTooSmall {
+                tokens: tokens.len(),
+                needed: seq_len + 2,
+            });
+        }
+        Ok(Batcher { tokens, batch, seq_len, rng: Rng::new(seed) })
     }
 
     pub fn num_tokens(&self) -> usize {
@@ -44,14 +102,19 @@ impl Batcher {
 
     /// Sample a batch of `(context, next-byte)` pairs for the native
     /// n-gram trainer: `batch` flat contexts of `ctx` bytes each plus the
-    /// byte that follows every context (as a class label).
-    pub fn next_context_batch(&mut self, ctx: usize) -> (Vec<u8>, Vec<usize>) {
-        assert!(
-            self.tokens.len() > ctx + 1,
-            "corpus too small: {} tokens for ctx {}",
-            self.tokens.len(),
-            ctx
-        );
+    /// byte that follows every context (as a class label). Returns a
+    /// typed [`BatchError`] — never panics — when the corpus cannot fit a
+    /// single window.
+    pub fn next_context_batch(
+        &mut self,
+        ctx: usize,
+    ) -> Result<(Vec<u8>, Vec<usize>), BatchError> {
+        // One window needs ctx context bytes + 1 label byte, and the
+        // sampler draws starts from 0..len-ctx-1, so len >= ctx + 2.
+        let needed = ctx + 2;
+        if self.tokens.len() < needed {
+            return Err(BatchError::CorpusTooSmall { tokens: self.tokens.len(), needed });
+        }
         let mut contexts = Vec::with_capacity(self.batch * ctx);
         let mut labels = Vec::with_capacity(self.batch);
         for _ in 0..self.batch {
@@ -59,23 +122,40 @@ impl Batcher {
             contexts.extend(self.tokens[start..start + ctx].iter().map(|&t| t as u8));
             labels.push(self.tokens[start + ctx] as usize);
         }
-        (contexts, labels)
+        Ok((contexts, labels))
     }
 
     /// Deterministic `(context, next-byte)` batches for evaluation
-    /// (sequential strided windows, wrapping around the corpus).
-    pub fn eval_context_batch(&self, index: usize, ctx: usize) -> (Vec<u8>, Vec<usize>) {
-        assert!(self.tokens.len() > ctx + 1);
+    /// (sequential strided windows, wrapping around the corpus). Returns
+    /// a typed [`BatchError`] when the split cannot fit one window (the
+    /// old modulo-by-zero panic path).
+    pub fn eval_context_batch(
+        &self,
+        index: usize,
+        ctx: usize,
+    ) -> Result<(Vec<u8>, Vec<usize>), BatchError> {
         let stride = ctx + 1;
+        if self.tokens.len() < stride {
+            return Err(BatchError::EmptyEvalSplit {
+                tokens: self.tokens.len(),
+                window: stride,
+            });
+        }
+        // A split of exactly `stride` tokens holds one window: every row
+        // reads it from start 0 (guards the `% max_start` below).
         let max_start = self.tokens.len() - stride;
         let mut contexts = Vec::with_capacity(self.batch * ctx);
         let mut labels = Vec::with_capacity(self.batch);
         for b in 0..self.batch {
-            let start = ((index * self.batch + b) * stride) % max_start;
+            let start = if max_start == 0 {
+                0
+            } else {
+                ((index * self.batch + b) * stride) % max_start
+            };
             contexts.extend(self.tokens[start..start + ctx].iter().map(|&t| t as u8));
             labels.push(self.tokens[start + ctx] as usize);
         }
-        (contexts, labels)
+        Ok((contexts, labels))
     }
 
     /// Deterministic sequential batches for evaluation (no overlap
@@ -141,7 +221,7 @@ mod tests {
     fn context_batch_geometry_and_label_follows_context() {
         let text = CorpusGen::new(2).text(4096);
         let mut b = Batcher::new(&text, 8, 16, 3);
-        let (ctxs, labels) = b.next_context_batch(6);
+        let (ctxs, labels) = b.next_context_batch(6).unwrap();
         assert_eq!(ctxs.len(), 8 * 6);
         assert_eq!(labels.len(), 8);
         let bytes = text.as_bytes();
@@ -157,7 +237,52 @@ mod tests {
     fn eval_context_batches_are_deterministic_and_distinct() {
         let text = CorpusGen::new(2).text(4096);
         let b = Batcher::new(&text, 4, 16, 3);
-        assert_eq!(b.eval_context_batch(2, 8), b.eval_context_batch(2, 8));
-        assert_ne!(b.eval_context_batch(0, 8).0, b.eval_context_batch(1, 8).0);
+        assert_eq!(
+            b.eval_context_batch(2, 8).unwrap(),
+            b.eval_context_batch(2, 8).unwrap()
+        );
+        assert_ne!(
+            b.eval_context_batch(0, 8).unwrap().0,
+            b.eval_context_batch(1, 8).unwrap().0
+        );
+    }
+
+    #[test]
+    fn tiny_corpus_yields_typed_errors_not_panics() {
+        // A corpus long enough for the seq_len-based constructor but far
+        // too short for the requested context window must produce the
+        // typed errors (this used to panic / index out of bounds).
+        let mut b = Batcher::new("a tiny corpus.", 8, 2, 1);
+        let err = b.next_context_batch(64).unwrap_err();
+        assert!(matches!(err, BatchError::CorpusTooSmall { needed: 66, .. }), "{err:?}");
+        let err = b.eval_context_batch(0, 64).unwrap_err();
+        assert!(matches!(err, BatchError::EmptyEvalSplit { window: 65, .. }), "{err:?}");
+        // Error text is actionable (mentions both sizes).
+        let msg = format!("{}", b.next_context_batch(64).unwrap_err());
+        assert!(msg.contains("66") && msg.contains("14"), "{msg}");
+        // Construction itself has a non-panicking path too (the native
+        // trainer uses it so a tiny corpus is a clean CLI error).
+        let err = Batcher::try_new("ab", 1, 32, 0).unwrap_err();
+        assert!(matches!(err, BatchError::CorpusTooSmall { needed: 34, .. }), "{err:?}");
+    }
+
+    #[test]
+    fn boundary_corpus_exactly_one_window_works() {
+        // len == ctx + 2 is the smallest corpus that can serve windows.
+        let mut b = Batcher::new("abcdefgh", 4, 2, 1); // 8 tokens
+        let (ctxs, labels) = b.next_context_batch(6).unwrap();
+        assert_eq!(ctxs.len(), 4 * 6);
+        assert_eq!(labels.len(), 4);
+        let (ectx, elab) = b.eval_context_batch(3, 6).unwrap();
+        assert_eq!(ectx.len(), 4 * 6);
+        assert_eq!(elab.len(), 4);
+
+        // A split of exactly ctx+1 tokens holds one window: every row
+        // serves it from start 0 instead of erroring (or hitting the old
+        // `% 0` panic).
+        let one = Batcher::new("abcdefg", 2, 2, 1); // 7 tokens, stride 7
+        let (c1, l1) = one.eval_context_batch(5, 6).unwrap();
+        assert_eq!(c1, b"abcdefabcdef".to_vec());
+        assert_eq!(l1, vec![b'g' as usize, b'g' as usize]);
     }
 }

@@ -11,7 +11,7 @@
 pub mod batcher;
 pub mod corpus;
 
-pub use batcher::Batcher;
+pub use batcher::{BatchError, Batcher};
 pub use corpus::CorpusGen;
 
 /// Byte-level tokenizer (vocab 256): identity on bytes, like the paper's

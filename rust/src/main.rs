@@ -218,7 +218,10 @@ fn main() -> Result<()> {
         "optim" => experiments::optim_ablation(),
         "engine" => {
             if !experiments::bench_rdfft_engine(args.has("fast")) {
-                bail!("engine latency gate failed: batch=1 regressed vs the scalar path");
+                bail!(
+                    "engine gate failed: batch=1 latency regressed vs scalar, \
+                     or the fused circulant pipeline regressed vs unfused"
+                );
             }
         }
         "report" => {

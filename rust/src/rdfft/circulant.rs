@@ -15,7 +15,7 @@
 //!   (which any training method must allocate anyway),
 //! * conjugations (Eq. 5) are fused sign-flips, never materialized.
 
-use super::engine;
+use super::engine::{self, SpectralOp};
 use super::forward::rdfft_inplace;
 use super::inverse::irdfft_inplace;
 use super::plan::{cached, Plan};
@@ -55,19 +55,39 @@ impl Circulant {
         &self.c_hat
     }
 
-    /// `x := C x`, fully in place (Eq. 4). Zero allocation.
+    /// `x := C x`, fully in place (Eq. 4), through the fused single-sweep
+    /// pipeline ([`engine::circulant_apply_batch`]). Zero allocation.
     pub fn matvec_inplace(&self, x: &mut [f32]) {
-        rdfft_inplace(&self.plan, x);
-        spectral::mul_inplace(x, &self.c_hat);
-        irdfft_inplace(&self.plan, x);
+        assert_eq!(x.len(), self.n(), "use matvec_batch_inplace for multiple rows");
+        engine::circulant_apply_batch(&self.plan, x, &self.c_hat, SpectralOp::Mul);
+    }
+
+    /// Batched matvec: `x` holds any number of contiguous length-`n`
+    /// rows, each transformed `row := C row` in one fused sweep per row
+    /// tile. Zero allocation.
+    pub fn matvec_batch_inplace(&self, x: &mut [f32]) {
+        engine::circulant_apply_batch(&self.plan, x, &self.c_hat, SpectralOp::Mul);
     }
 
     /// `g := Cᵀ g` — the input-gradient product of Eq. 5
-    /// (`∂L/∂x = IFFT(conj(ĉ) ⊙ FFT(g))`), fully in place.
+    /// (`∂L/∂x = IFFT(conj(ĉ) ⊙ FFT(g))`), fully in place, fused.
     pub fn matvec_transpose_inplace(&self, g: &mut [f32]) {
-        rdfft_inplace(&self.plan, g);
-        spectral::mul_conjb_inplace(g, &self.c_hat); // ĝ ⊙ conj(ĉ)
-        irdfft_inplace(&self.plan, g);
+        assert_eq!(g.len(), self.n(), "use matvec_transpose_batch_inplace for multiple rows");
+        engine::circulant_apply_batch(&self.plan, g, &self.c_hat, SpectralOp::MulConjB);
+    }
+
+    /// Batched transpose matvec: any number of contiguous length-`n`
+    /// rows, each `row := Cᵀ row`, one fused sweep per row tile.
+    pub fn matvec_transpose_batch_inplace(&self, g: &mut [f32]) {
+        engine::circulant_apply_batch(&self.plan, g, &self.c_hat, SpectralOp::MulConjB);
+    }
+
+    /// The pre-fusion three-pass matvec (forward → product → inverse),
+    /// kept as the differential oracle for the fused path.
+    pub fn matvec_inplace_unfused(&self, x: &mut [f32]) {
+        rdfft_inplace(&self.plan, x);
+        spectral::mul_inplace(x, &self.c_hat);
+        irdfft_inplace(&self.plan, x);
     }
 
     /// Materialize the dense `n×n` matrix (row-major). **Allocates** —
@@ -167,14 +187,32 @@ impl BlockCirculant {
         &self.plan
     }
 
-    /// Forward product `out = W x` (Eq. 4 blockwise).
+    /// Forward product `out = W x` (Eq. 4 blockwise), through the fused
+    /// single-sweep pipeline ([`engine::block_circulant_forward_batch`]).
     ///
     /// `x` (length `cols`) is transformed **in place** — on return it holds
     /// the packed spectra of its blocks, which is exactly the tensor the
     /// backward pass needs (`x̂` in Eq. 5), so nothing extra is saved.
-    /// `out` (length `rows`) must be zeroed by the caller; spectra
-    /// accumulate into it and a single inverse per output block finishes.
+    /// `out` (length `rows`) is overwritten (zeroed inside the sweep):
+    /// spectra accumulate into it and the inverse stages finish each
+    /// output block while it is still cache-resident.
     pub fn forward_inplace(&self, x: &mut [f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        engine::block_circulant_forward_batch(
+            &self.plan,
+            x,
+            out,
+            &self.c_hat,
+            self.row_blocks(),
+            self.col_blocks(),
+        );
+    }
+
+    /// The pre-fusion three-pass forward (forward batch → product sweep →
+    /// inverse batch), kept as the differential oracle for
+    /// [`Self::forward_inplace`]. `out` must be zeroed by the caller.
+    pub fn forward_inplace_unfused(&self, x: &mut [f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(out.len(), self.rows);
         let p = self.p;
@@ -211,10 +249,40 @@ impl BlockCirculant {
         let p = self.p;
         let cb = self.col_blocks();
 
+        // Fused transpose sweep: transforms g -> ĝ in place AND produces
+        // dx = IFFT(Σ_i conj(ĉ_ij) ⊙ ĝ_i) in one pass over the sample.
+        engine::block_circulant_transpose_batch(
+            &self.plan,
+            g,
+            dx,
+            &self.c_hat,
+            self.row_blocks(),
+            cb,
+        );
+        // dĉ_ij += conj(x̂_j) ⊙ ĝ_i  — accumulated in the frequency domain
+        // from the ĝ the sweep left behind; the optimizer step works on
+        // spectra directly so no inverse here.
+        for (i, gb) in g.chunks_exact(p).enumerate() {
+            for (j, xb) in x_hat.chunks_exact(p).enumerate() {
+                let d = &mut dc[(i * cb + j) * p..][..p];
+                spectral::conj_mul_acc(d, xb, gb);
+            }
+        }
+    }
+
+    /// The pre-fusion three-pass backward, kept as the differential
+    /// oracle for [`Self::backward`].
+    pub fn backward_unfused(&self, x_hat: &[f32], g: &mut [f32], dx: &mut [f32], dc: &mut [f32]) {
+        assert_eq!(x_hat.len(), self.cols);
+        assert_eq!(g.len(), self.rows);
+        assert_eq!(dx.len(), self.cols);
+        assert_eq!(dc.len(), self.c_hat.len());
+        let p = self.p;
+        let cb = self.col_blocks();
+
         // ĝ: transform grad-output blocks in place, batch-major.
         engine::forward_batch(&self.plan, g);
-        // dĉ_ij += conj(x̂_j) ⊙ ĝ_i  — accumulated in the frequency domain;
-        // the optimizer step works on spectra directly so no inverse here.
+        // dĉ_ij += conj(x̂_j) ⊙ ĝ_i
         for (i, gb) in g.chunks_exact(p).enumerate() {
             for (j, xb) in x_hat.chunks_exact(p).enumerate() {
                 let d = &mut dc[(i * cb + j) * p..][..p];
@@ -427,5 +495,98 @@ mod tests {
                 "idx={idx}: fd={num} analytic={analytic}"
             );
         }
+    }
+
+    #[test]
+    fn fused_matvec_matches_unfused_oracle() {
+        for n in [4usize, 16, 64, 512] {
+            let circ = Circulant::from_first_column(&rand_vec(n, n as u64));
+            let x = rand_vec(n, 2 * n as u64 + 1);
+            let mut fused = x.clone();
+            circ.matvec_inplace(&mut fused);
+            let mut reference = x.clone();
+            circ.matvec_inplace_unfused(&mut reference);
+            assert_eq!(fused, reference, "n={n}");
+        }
+    }
+
+    #[test]
+    fn batched_matvec_matches_per_row_matvec() {
+        let n = 64;
+        let b = 7;
+        let circ = Circulant::from_first_column(&rand_vec(n, 9));
+        let xs = rand_vec(n * b, 10);
+        let mut batched = xs.clone();
+        circ.matvec_batch_inplace(&mut batched);
+        for r in 0..b {
+            let mut row = xs[r * n..(r + 1) * n].to_vec();
+            circ.matvec_inplace(&mut row);
+            assert_eq!(&batched[r * n..(r + 1) * n], &row[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn fused_block_forward_matches_unfused_oracle() {
+        for (rows, cols, p) in [(16usize, 16usize, 8usize), (32, 64, 16), (64, 32, 16)] {
+            let c = rand_vec((rows / p) * (cols / p) * p, (rows + cols) as u64);
+            let bc = BlockCirculant::from_block_columns(rows, cols, p, &c);
+            let x = rand_vec(cols, (rows * 3) as u64);
+
+            let mut x_fused = x.clone();
+            let mut out_fused = vec![0.0f32; rows];
+            bc.forward_inplace(&mut x_fused, &mut out_fused);
+
+            let mut x_ref = x.clone();
+            let mut out_ref = vec![0.0f32; rows];
+            bc.forward_inplace_unfused(&mut x_ref, &mut out_ref);
+
+            assert_eq!(out_fused, out_ref, "{rows}x{cols} p={p}");
+            assert_eq!(x_fused, x_ref, "saved x-hat {rows}x{cols} p={p}");
+        }
+    }
+
+    #[test]
+    fn fused_block_backward_matches_unfused_oracle() {
+        for (rows, cols, p) in [(16usize, 16usize, 8usize), (32, 64, 16)] {
+            let c = rand_vec((rows / p) * (cols / p) * p, (rows ^ cols) as u64 + 5);
+            let bc = BlockCirculant::from_block_columns(rows, cols, p, &c);
+            let x = rand_vec(cols, 77);
+            let g0 = rand_vec(rows, 78);
+
+            let mut x_hat = x.clone();
+            let mut out = vec![0.0f32; rows];
+            bc.forward_inplace(&mut x_hat, &mut out);
+
+            let mut g_f = g0.clone();
+            let mut dx_f = vec![0.0f32; cols];
+            let mut dc_f = vec![0.0f32; bc.num_params()];
+            bc.backward(&x_hat, &mut g_f, &mut dx_f, &mut dc_f);
+
+            let mut g_u = g0.clone();
+            let mut dx_u = vec![0.0f32; cols];
+            let mut dc_u = vec![0.0f32; bc.num_params()];
+            bc.backward_unfused(&x_hat, &mut g_u, &mut dx_u, &mut dc_u);
+
+            assert_eq!(dx_f, dx_u, "dx {rows}x{cols} p={p}");
+            assert_eq!(dc_f, dc_u, "dc {rows}x{cols} p={p}");
+            assert_eq!(g_f, g_u, "g-hat {rows}x{cols} p={p}");
+        }
+    }
+
+    #[test]
+    fn fused_block_forward_allocates_nothing() {
+        let (rows, cols, p) = (64usize, 64usize, 16usize);
+        let c = rand_vec((rows / p) * (cols / p) * p, 13);
+        let bc = BlockCirculant::from_block_columns(rows, cols, p, &c);
+        let mut x = rand_vec(cols, 14);
+        let mut out = vec![0.0f32; rows];
+        crate::memtrack::reset_peak();
+        let before = crate::memtrack::snapshot().alloc_count;
+        bc.forward_inplace(&mut x, &mut out);
+        let mut g = rand_vec(rows, 15);
+        let mut dx = vec![0.0f32; cols];
+        let mut dc = vec![0.0f32; bc.num_params()];
+        bc.backward(&x, &mut g, &mut dx, &mut dc);
+        assert_eq!(crate::memtrack::snapshot().alloc_count, before);
     }
 }

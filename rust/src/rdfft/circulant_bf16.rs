@@ -78,27 +78,19 @@ impl BlockCirculantBf16 {
     }
 
     /// Forward product, in place on the bf16 input blocks (which then
-    /// hold x̂, the saved-for-backward tensor — same discipline as f32).
+    /// hold x̂, the saved-for-backward tensor — same discipline as f32),
+    /// via the fused block sweep ([`block_sweep_bf16`]), mirroring
+    /// [`crate::rdfft::engine::block_circulant_forward_batch`].
     pub fn forward_inplace(&self, x: &mut [Bf16], out: &mut [Bf16]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(out.len(), self.rows);
-        let p = self.p;
-        let cb = self.cols / p;
-        for xb in x.chunks_exact_mut(p) {
-            rdfft_inplace_bf16(&self.plan, xb);
-        }
-        for (i, ob) in out.chunks_exact_mut(p).enumerate() {
-            ob.fill(Bf16::ZERO);
-            for (j, xb) in x.chunks_exact(p).enumerate() {
-                let ch = &self.c_hat[(i * cb + j) * p..][..p];
-                mul_acc_bf16(ob, ch, xb);
-            }
-            irdfft_inplace_bf16(&self.plan, ob);
-        }
+        block_sweep_bf16(&self.plan, x, out, &self.c_hat, self.cols / self.p, false);
     }
 
     /// Backward pass (Eq. 5) on bf16 buffers; `dc` accumulates in the
-    /// frequency domain like the f32 operator.
+    /// frequency domain like the f32 operator. The transpose sweep turns
+    /// `g` into ĝ in place and produces `dx` in the same pass, mirroring
+    /// [`crate::rdfft::engine::block_circulant_transpose_batch`].
     pub fn backward(&self, x_hat: &[Bf16], g: &mut [Bf16], dx: &mut [Bf16], dc: &mut [Bf16]) {
         assert_eq!(x_hat.len(), self.cols);
         assert_eq!(g.len(), self.rows);
@@ -106,23 +98,48 @@ impl BlockCirculantBf16 {
         assert_eq!(dc.len(), self.c_hat.len());
         let p = self.p;
         let cb = self.cols / p;
-        for gb in g.chunks_exact_mut(p) {
-            rdfft_inplace_bf16(&self.plan, gb);
-        }
+        block_sweep_bf16(&self.plan, g, dx, &self.c_hat, cb, true);
         for (i, gb) in g.chunks_exact(p).enumerate() {
             for (j, xb) in x_hat.chunks_exact(p).enumerate() {
                 let d = &mut dc[(i * cb + j) * p..][..p];
                 conj_mul_acc_bf16(d, xb, gb);
             }
         }
-        for (j, dxb) in dx.chunks_exact_mut(p).enumerate() {
-            dxb.fill(Bf16::ZERO);
-            for (i, gb) in g.chunks_exact(p).enumerate() {
-                let ch = &self.c_hat[(i * cb + j) * p..][..p];
-                conj_mul_acc_bf16(dxb, ch, gb);
+    }
+}
+
+/// The bf16 mirror of the engine's fused block-circulant sweep: transform
+/// the input blocks in place (they end holding their packed spectra),
+/// accumulate the packed products into each output block and inverse it
+/// immediately — one pass over the operand, zero allocations, storage
+/// 2 bytes/scalar throughout with f32 butterfly arithmetic.
+/// `transpose` selects the Eq. 5 direction (`conj(ĉ_ij) ⊙ ĝ_i` into
+/// input-grad block j) over the Eq. 4 forward (`ĉ_ij ⊙ x̂_j` into output
+/// block i); `cb` is the weight layout's column-block count.
+fn block_sweep_bf16(
+    plan: &Plan,
+    input: &mut [Bf16],
+    out: &mut [Bf16],
+    c_hat: &[Bf16],
+    cb: usize,
+    transpose: bool,
+) {
+    let p = plan.n();
+    for xb in input.chunks_exact_mut(p) {
+        rdfft_inplace_bf16(plan, xb);
+    }
+    for (oi, ob) in out.chunks_exact_mut(p).enumerate() {
+        ob.fill(Bf16::ZERO);
+        for (ii, xb) in input.chunks_exact(p).enumerate() {
+            let (i, j) = if transpose { (ii, oi) } else { (oi, ii) };
+            let ch = &c_hat[(i * cb + j) * p..][..p];
+            if transpose {
+                conj_mul_acc_bf16(ob, ch, xb);
+            } else {
+                mul_acc_bf16(ob, ch, xb);
             }
-            irdfft_inplace_bf16(&self.plan, dxb);
         }
+        irdfft_inplace_bf16(plan, ob);
     }
 }
 

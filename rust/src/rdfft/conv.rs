@@ -9,19 +9,18 @@
 //!   arbitrarily long streams. All FFT work is in-place in reused
 //!   buffers; steady-state processing performs **zero** allocations.
 
-use super::engine;
+use super::engine::{self, SpectralOp};
 use super::forward::rdfft_inplace;
-use super::inverse::irdfft_inplace;
 use super::plan::{cached, Plan};
-use super::spectral;
 use std::sync::Arc;
 
-/// `a := a ⊛ b` (circular convolution, length must match and be a power
-/// of two). `b_spec` must already be in the packed frequency domain.
+/// `a := a ⊛ b` (circular convolution; `a` may hold one row or any number
+/// of contiguous length-`plan.n()` rows). `b_spec` must already be in the
+/// packed frequency domain. Runs the fused single-sweep circulant
+/// pipeline — forward stages, packed product, inverse stages per
+/// cache-resident tile.
 pub fn circular_convolve_with_spectrum(plan: &Plan, a: &mut [f32], b_spec: &[f32]) {
-    rdfft_inplace(plan, a);
-    spectral::mul_inplace(a, b_spec);
-    irdfft_inplace(plan, a);
+    engine::circulant_apply_batch(plan, a, b_spec, SpectralOp::Mul);
 }
 
 /// `a := a ⊛ b` (circular convolution) with both operands in the time
@@ -53,9 +52,10 @@ pub fn linear_convolve(x: &[f32], h: &[f32]) -> Vec<f32> {
 
 /// Batched full linear convolution: `rows` equal-length signals
 /// (concatenated row-major in `xs`) against one filter `h`, through the
-/// batch-major engine — one forward batch, one spectral sweep, one
-/// inverse batch, instead of `rows` independent transform pairs. Returns
-/// the outputs concatenated row-major, each `x_len + h.len() - 1` long.
+/// fused circulant pipeline — one single-sweep pass per row tile instead
+/// of `rows` independent transform pairs or three full batch passes.
+/// Returns the outputs concatenated row-major, each
+/// `x_len + h.len() - 1` long.
 pub fn linear_convolve_batch(xs: &[f32], rows: usize, h: &[f32]) -> Vec<f32> {
     assert!(rows > 0, "need at least one signal row");
     assert!(xs.len() % rows == 0, "xs must hold `rows` equal-length signals");
@@ -72,11 +72,7 @@ pub fn linear_convolve_batch(xs: &[f32], rows: usize, h: &[f32]) -> Vec<f32> {
     for (r, x) in xs.chunks_exact(x_len).enumerate() {
         buf[r * n..r * n + x_len].copy_from_slice(x);
     }
-    engine::forward_batch(&plan, &mut buf);
-    for row in buf.chunks_exact_mut(n) {
-        spectral::mul_inplace(row, &h_spec);
-    }
-    engine::inverse_batch(&plan, &mut buf);
+    engine::circulant_apply_batch(&plan, &mut buf, &h_spec, SpectralOp::Mul);
     let mut out = Vec::with_capacity(rows * out_len);
     for r in 0..rows {
         out.extend_from_slice(&buf[r * n..r * n + out_len]);
@@ -132,9 +128,8 @@ impl OverlapAdd {
         let n = self.block.len();
         self.block[..chunk.len()].copy_from_slice(chunk);
         self.block[chunk.len()..].fill(0.0);
-        rdfft_inplace(&self.plan, &mut self.block);
-        spectral::mul_inplace(&mut self.block, &self.h_spec);
-        irdfft_inplace(&self.plan, &mut self.block);
+        // Fused convolve: one sweep over the block instead of three.
+        engine::circulant_apply_batch(&self.plan, &mut self.block, &self.h_spec, SpectralOp::Mul);
         // add the carried tail
         for (b, t) in self.block.iter_mut().zip(self.tail.iter()) {
             *b += t;

@@ -32,6 +32,7 @@
 //!    numbers.
 
 use super::plan::Plan;
+use super::spectral;
 
 /// Tuning knobs for the batch engine. [`EngineConfig::default`] is what
 /// the public batch entry points use; benches and tests construct
@@ -115,14 +116,243 @@ pub fn inverse_batch_with(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
     run_batch(plan, buf, cfg, inverse_rows);
 }
 
-/// Shared driver: validate, decide serial vs scoped-thread execution,
-/// dispatch `kernel` over contiguous row chunks.
-fn run_batch(
+// ---------------------------------------------------------------------
+// Fused circulant pipeline
+// ---------------------------------------------------------------------
+
+/// Which packed spectral product the fused circulant pipeline applies
+/// between the forward and inverse butterfly stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpectralOp {
+    /// `roŵ ⊙ spec` — the Eq. 4 forward product.
+    Mul,
+    /// `roŵ ⊙ conj(spec)` — the Eq. 5 transpose/backward product.
+    MulConjB,
+}
+
+/// Fused circulant application: every contiguous length-`plan.n()` row of
+/// `buf` becomes `IFFT(op(spec) ⊙ FFT(row))`, sweeping each row tile
+/// **once** — forward butterfly stages, packed conjugate-symmetric
+/// product, inverse stages, all while the tile is cache-resident —
+/// instead of the unfused pipeline's three full passes over the buffer
+/// (forward batch, product sweep, inverse batch). Numerics are
+/// bit-identical to the unfused path (same float ops per element, same
+/// order), and nothing is allocated after plan construction.
+pub fn circulant_apply_batch(plan: &Plan, buf: &mut [f32], spec: &[f32], op: SpectralOp) {
+    circulant_apply_batch_with(plan, buf, spec, op, &EngineConfig::new());
+}
+
+/// [`circulant_apply_batch`] with explicit tuning.
+pub fn circulant_apply_batch_with(
     plan: &Plan,
     buf: &mut [f32],
+    spec: &[f32],
+    op: SpectralOp,
     cfg: &EngineConfig,
-    kernel: fn(&Plan, &mut [f32], usize),
 ) {
+    assert_eq!(spec.len(), plan.n(), "spectrum length must equal plan size");
+    run_batch(plan, buf, cfg, move |plan: &Plan, chunk: &mut [f32], tile_rows: usize| {
+        circulant_rows(plan, chunk, tile_rows, spec, op);
+    });
+}
+
+/// One worker's share of the fused pipeline: per tile, forward stages →
+/// packed product → inverse stages in a single sweep. Composes the same
+/// [`forward_rows`]/[`inverse_rows`] kernels as the plain batch paths
+/// (each tile is exactly one of their tiles), so the fused path can
+/// never diverge from `forward_batch`/`inverse_batch` numerics.
+fn circulant_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize, spec: &[f32], op: SpectralOp) {
+    let n = plan.n();
+    for tile in buf.chunks_mut(tile_rows.max(1) * n) {
+        forward_rows(plan, tile, tile_rows);
+        match op {
+            SpectralOp::Mul => spectral::mul_rows_inplace(tile, spec),
+            SpectralOp::MulConjB => spectral::mul_conjb_rows_inplace(tile, spec),
+        }
+        inverse_rows(plan, tile, tile_rows);
+    }
+}
+
+/// Fused **block-circulant** forward sweep (Eq. 4 blockwise): `x` holds
+/// one or more samples of `cb` contiguous length-`n` input blocks, `out`
+/// the matching samples of `rb` output blocks, and `specs` the packed
+/// block spectra `ĉ[(i·cb + j)·n ..][..n]`. Per sample, in one
+/// cache-resident sweep: the sample's input blocks are forward-staged in
+/// place (so `x` ends holding x̂ — exactly the saved-for-backward tensor),
+/// the packed products accumulate into the sample's output blocks (zeroed
+/// here), and the output blocks are inverse-staged. Zero allocations.
+pub fn block_circulant_forward_batch(
+    plan: &Plan,
+    x: &mut [f32],
+    out: &mut [f32],
+    specs: &[f32],
+    rb: usize,
+    cb: usize,
+) {
+    block_apply(plan, x, out, specs, rb, cb, false, false, &EngineConfig::new());
+}
+
+/// [`block_circulant_forward_batch`] with explicit tuning.
+pub fn block_circulant_forward_batch_with(
+    plan: &Plan,
+    x: &mut [f32],
+    out: &mut [f32],
+    specs: &[f32],
+    rb: usize,
+    cb: usize,
+    cfg: &EngineConfig,
+) {
+    block_apply(plan, x, out, specs, rb, cb, false, false, cfg);
+}
+
+/// [`block_circulant_forward_batch`] with the frequency-domain residual
+/// `out_j += x̂_j` added before the inverse stages — computes
+/// `out = x + W x` per sample with **no** time-domain skip copy (the
+/// transform is linear, so adding spectra before one shared inverse is
+/// exact up to float rounding). Requires a square block layout
+/// (`rb == cb`).
+pub fn block_circulant_forward_residual_batch(
+    plan: &Plan,
+    x: &mut [f32],
+    out: &mut [f32],
+    specs: &[f32],
+    rb: usize,
+    cb: usize,
+) {
+    assert_eq!(rb, cb, "the freq-domain residual needs a square block layout");
+    block_apply(plan, x, out, specs, rb, cb, false, true, &EngineConfig::new());
+}
+
+/// Fused block-circulant **transpose** sweep (the Eq. 5 input-gradient
+/// product): `g` holds samples of `rb` grad-output blocks, `dx` the
+/// matching samples of `cb` input-gradient blocks. Per sample, one sweep:
+/// `g`'s blocks are forward-staged in place (so `g` ends holding ĝ —
+/// which the caller's dĉ accumulation needs anyway), the conjugated
+/// products `conj(ĉ_ij) ⊙ ĝ_i` accumulate into the zeroed `dx` blocks,
+/// and the `dx` blocks are inverse-staged. Zero allocations.
+pub fn block_circulant_transpose_batch(
+    plan: &Plan,
+    g: &mut [f32],
+    dx: &mut [f32],
+    specs: &[f32],
+    rb: usize,
+    cb: usize,
+) {
+    block_apply(plan, g, dx, specs, rb, cb, true, false, &EngineConfig::new());
+}
+
+/// Shared fused block sweep behind the three public block entries.
+/// `transpose` selects direction (input blocks = rb grad blocks, output
+/// blocks = cb input-grad blocks, conjugated products); `residual` adds
+/// the input spectra into the matching output blocks before the inverse.
+#[allow(clippy::too_many_arguments)]
+fn block_apply(
+    plan: &Plan,
+    input: &mut [f32],
+    out: &mut [f32],
+    specs: &[f32],
+    rb: usize,
+    cb: usize,
+    transpose: bool,
+    residual: bool,
+    cfg: &EngineConfig,
+) {
+    let n = plan.n();
+    let (in_blocks, out_blocks) = if transpose { (rb, cb) } else { (cb, rb) };
+    assert!(in_blocks > 0 && out_blocks > 0, "block counts must be positive");
+    assert_eq!(specs.len(), rb * cb * n, "spec length must be rb*cb*n");
+    assert!(input.len() % (in_blocks * n) == 0, "input must be whole samples");
+    let samples = input.len() / (in_blocks * n);
+    assert_eq!(out.len(), samples * out_blocks * n, "output/input sample counts must match");
+    if residual {
+        assert_eq!(in_blocks, out_blocks, "residual requires square block layout");
+    }
+    if samples == 0 {
+        return;
+    }
+    let in_row = in_blocks * n;
+    let out_row = out_blocks * n;
+    // Thread planning counts the whole sweep's row-transform work
+    // (in + out blocks per sample), capped by the sample count since
+    // samples are the split unit.
+    let workers =
+        planned_workers(samples * (in_blocks + out_blocks), n, cfg).min(samples);
+    let sweep = |xs: &mut [f32], os: &mut [f32]| {
+        for (s_in, s_out) in xs.chunks_exact_mut(in_row).zip(os.chunks_exact_mut(out_row)) {
+            block_apply_sample(plan, s_in, s_out, specs, cb, transpose, residual);
+        }
+    };
+    if workers <= 1 {
+        sweep(input, out);
+        return;
+    }
+    let chunk = (samples + workers - 1) / workers;
+    std::thread::scope(|sc| {
+        let mut rest_in = input;
+        let mut rest_out = out;
+        while rest_in.len() > chunk * in_row {
+            let (ci, ti) = std::mem::take(&mut rest_in).split_at_mut(chunk * in_row);
+            let (co, to) = std::mem::take(&mut rest_out).split_at_mut(chunk * out_row);
+            sc.spawn(move || {
+                for (s_in, s_out) in
+                    ci.chunks_exact_mut(in_row).zip(co.chunks_exact_mut(out_row))
+                {
+                    block_apply_sample(plan, s_in, s_out, specs, cb, transpose, residual);
+                }
+            });
+            rest_in = ti;
+            rest_out = to;
+        }
+        sweep(rest_in, rest_out);
+    });
+}
+
+/// One sample of the fused block sweep: forward-stage the input blocks
+/// (kept as spectra), product-accumulate into the zeroed output blocks
+/// (+ optional freq-domain residual), inverse-stage the output blocks —
+/// all while the sample is cache-resident.
+fn block_apply_sample(
+    plan: &Plan,
+    input: &mut [f32],
+    out: &mut [f32],
+    specs: &[f32],
+    cb: usize,
+    transpose: bool,
+    residual: bool,
+) {
+    let n = plan.n();
+    let in_blocks = input.len() / n;
+    forward_rows(plan, input, in_blocks.max(1));
+    out.fill(0.0);
+    for (oi, ob) in out.chunks_exact_mut(n).enumerate() {
+        for (ii, xb) in input.chunks_exact(n).enumerate() {
+            // Weight-layout spec index: row block i, column block j.
+            let (i, j) = if transpose { (ii, oi) } else { (oi, ii) };
+            let ch = &specs[(i * cb + j) * n..][..n];
+            if transpose {
+                spectral::conj_mul_acc(ob, ch, xb);
+            } else {
+                spectral::mul_acc(ob, ch, xb);
+            }
+        }
+        if residual {
+            let xb = &input[oi * n..(oi + 1) * n];
+            for (o, v) in ob.iter_mut().zip(xb) {
+                *o += v;
+            }
+        }
+    }
+    let out_blocks = out.len() / n;
+    inverse_rows(plan, out, out_blocks.max(1));
+}
+
+/// Shared driver: validate, decide serial vs scoped-thread execution,
+/// dispatch `kernel` over contiguous row chunks. Generic so the fused
+/// circulant pipeline can close over its spectrum without boxing.
+fn run_batch<K>(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig, kernel: K)
+where
+    K: Fn(&Plan, &mut [f32], usize) + Copy + Send + Sync,
+{
     let n = plan.n();
     assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");
     let rows = buf.len() / n;
@@ -150,6 +380,15 @@ fn run_batch(
     });
 }
 
+/// True when a batch of `rows` length-`n` rows would split across worker
+/// threads under default tuning. Fused per-sample callers that cannot
+/// parallelize internally (shared accumulators/workspaces) use this to
+/// fall back to the threaded whole-tensor passes on big batches instead
+/// of silently serializing them.
+pub fn default_would_thread(rows: usize, n: usize) -> bool {
+    planned_workers(rows, n, &EngineConfig::new()) > 1
+}
+
 /// How many workers (including the calling thread) the batch should use.
 fn planned_workers(rows: usize, n: usize, cfg: &EngineConfig) -> usize {
     let total = rows * n;
@@ -166,8 +405,11 @@ fn planned_workers(rows: usize, n: usize, cfg: &EngineConfig) -> usize {
 // Per-chunk kernels
 // ---------------------------------------------------------------------
 
-/// Forward kernel over one contiguous chunk of rows.
-fn forward_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
+/// Forward kernel over one contiguous chunk of rows: fused bit-reversal +
+/// first two stages per row, then tiled batch-major stages. Public so
+/// fused consumers (the circulant pipeline, the layer backward) can
+/// compose it with their own product stages without a thread dispatch.
+pub fn forward_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
     let n = plan.n();
     // Pass 1 (per row): fused bit-reversal + stages m = 1, 2.
     for row in buf.chunks_exact_mut(n) {
@@ -183,8 +425,9 @@ fn forward_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
 
 /// Inverse kernel over one contiguous chunk of rows. Mirrors
 /// [`forward_rows`] in reverse: tiled stages down to m = 4, then a fused
-/// per-row undo of stages m = 2, 1, then the bit-reversal.
-fn inverse_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
+/// per-row undo of stages m = 2, 1, then the bit-reversal. Public for the
+/// same fused consumers as [`forward_rows`].
+pub fn inverse_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
     let n = plan.n();
     if n > 4 {
         for tile in buf.chunks_mut(tile_rows.max(1) * n) {
@@ -582,5 +825,209 @@ mod tests {
         let plan = cached(8);
         let mut buf = vec![0.0f32; 12];
         forward_batch(&plan, &mut buf);
+    }
+
+    /// A unit spectrum of size n: the packed FFT of δ (all-ones lanes),
+    /// the ⊙ identity — keeps repeated fused applications bounded.
+    fn delta_spectrum(n: usize) -> Vec<f32> {
+        let mut s = vec![0.0f32; n];
+        s[0] = 1.0;
+        forward_batch(&cached(n), &mut s);
+        s
+    }
+
+    /// Unfused three-pass reference: forward batch, per-row product,
+    /// inverse batch — the differential oracle for the fused pipeline.
+    fn unfused_apply(plan: &super::super::plan::Plan, buf: &mut [f32], spec: &[f32], op: SpectralOp) {
+        forward_batch(plan, buf);
+        for row in buf.chunks_exact_mut(plan.n()) {
+            match op {
+                SpectralOp::Mul => crate::rdfft::spectral::mul_inplace(row, spec),
+                SpectralOp::MulConjB => crate::rdfft::spectral::mul_conjb_inplace(row, spec),
+            }
+        }
+        inverse_batch(plan, buf);
+    }
+
+    #[test]
+    fn fused_circulant_apply_is_bit_identical_to_unfused() {
+        for (n, b) in [(2usize, 3usize), (4, 5), (16, 7), (64, 9), (256, 13), (1024, 3)] {
+            let plan = cached(n);
+            let mut spec = rand_vec(n, 31 + n as u64);
+            forward_batch(&plan, &mut spec);
+            for op in [SpectralOp::Mul, SpectralOp::MulConjB] {
+                let x = rand_vec(n * b, (n * b) as u64);
+                let mut fused = x.clone();
+                circulant_apply_batch_with(&plan, &mut fused, &spec, op, &EngineConfig::serial());
+                let mut reference = x.clone();
+                unfused_apply(&plan, &mut reference, &spec, op);
+                assert_eq!(fused, reference, "n={n} b={b} op={op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_circulant_apply_threaded_matches_serial() {
+        let cfg = force_threads();
+        for (n, b) in [(16usize, 9usize), (128, 11)] {
+            let plan = cached(n);
+            let spec = delta_spectrum(n);
+            let x = rand_vec(n * b, 500 + n as u64);
+            let mut serial = x.clone();
+            circulant_apply_batch_with(&plan, &mut serial, &spec, SpectralOp::Mul, &EngineConfig::serial());
+            let mut threaded = x.clone();
+            circulant_apply_batch_with(&plan, &mut threaded, &spec, SpectralOp::Mul, &cfg);
+            assert_eq!(serial, threaded, "n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn fused_apply_with_delta_spectrum_is_identity() {
+        let n = 128;
+        let plan = cached(n);
+        let spec = delta_spectrum(n);
+        for b in [1usize, 7, 8, 9] {
+            let x = rand_vec(n * b, 900 + b as u64);
+            let mut buf = x.clone();
+            circulant_apply_batch(&plan, &mut buf, &spec, SpectralOp::Mul);
+            for i in 0..n * b {
+                assert!((buf[i] - x[i]).abs() < 1e-4, "b={b} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_apply_allocates_nothing_after_plan_construction() {
+        let n = 256;
+        let plan = cached(n);
+        let spec = delta_spectrum(n);
+        let mut buf = rand_vec(n * 8, 42);
+        crate::memtrack::reset();
+        let before = crate::memtrack::snapshot().alloc_count;
+        circulant_apply_batch_with(&plan, &mut buf, &spec, SpectralOp::Mul, &EngineConfig::serial());
+        circulant_apply_batch_with(&plan, &mut buf, &spec, SpectralOp::MulConjB, &EngineConfig::serial());
+        assert_eq!(crate::memtrack::snapshot().alloc_count, before);
+    }
+
+    #[test]
+    fn block_forward_sweep_matches_three_pass_reference() {
+        // rb x cb block grid over several samples: the fused sweep must be
+        // bit-identical to forward-batch + per-sample product loops +
+        // inverse-batch (the pre-fusion BlockCirculant pipeline).
+        for (rb, cb, n, samples) in [(1usize, 1usize, 16usize, 3usize), (2, 2, 8, 5), (2, 4, 16, 2)] {
+            let plan = cached(n);
+            let mut specs = rand_vec(rb * cb * n, (rb * 13 + cb) as u64);
+            forward_batch(&plan, &mut specs);
+            let x0 = rand_vec(samples * cb * n, (n + samples) as u64);
+
+            let mut x_ref = x0.clone();
+            forward_batch(&plan, &mut x_ref);
+            let mut out_ref = vec![0.0f32; samples * rb * n];
+            for s in 0..samples {
+                let xrow = &x_ref[s * cb * n..(s + 1) * cb * n];
+                let orow = &mut out_ref[s * rb * n..(s + 1) * rb * n];
+                for i in 0..rb {
+                    for j in 0..cb {
+                        crate::rdfft::spectral::mul_acc(
+                            &mut orow[i * n..(i + 1) * n],
+                            &specs[(i * cb + j) * n..][..n],
+                            &xrow[j * n..(j + 1) * n],
+                        );
+                    }
+                }
+            }
+            inverse_batch(&plan, &mut out_ref);
+
+            let mut x_fused = x0.clone();
+            let mut out_fused = vec![0.0f32; samples * rb * n];
+            block_circulant_forward_batch(&plan, &mut x_fused, &mut out_fused, &specs, rb, cb);
+            assert_eq!(out_fused, out_ref, "rb={rb} cb={cb} n={n}");
+            // and the input holds the same saved spectra
+            assert_eq!(x_fused, x_ref, "saved x-hat rb={rb} cb={cb} n={n}");
+        }
+    }
+
+    #[test]
+    fn block_transpose_sweep_matches_three_pass_reference() {
+        for (rb, cb, n, samples) in [(2usize, 2usize, 8usize, 3usize), (4, 2, 16, 2)] {
+            let plan = cached(n);
+            let mut specs = rand_vec(rb * cb * n, (rb * 7 + cb) as u64);
+            forward_batch(&plan, &mut specs);
+            let g0 = rand_vec(samples * rb * n, (n * 3 + samples) as u64);
+
+            let mut g_ref = g0.clone();
+            forward_batch(&plan, &mut g_ref);
+            let mut dx_ref = vec![0.0f32; samples * cb * n];
+            for s in 0..samples {
+                let grow = &g_ref[s * rb * n..(s + 1) * rb * n];
+                let dxrow = &mut dx_ref[s * cb * n..(s + 1) * cb * n];
+                for j in 0..cb {
+                    for i in 0..rb {
+                        crate::rdfft::spectral::conj_mul_acc(
+                            &mut dxrow[j * n..(j + 1) * n],
+                            &specs[(i * cb + j) * n..][..n],
+                            &grow[i * n..(i + 1) * n],
+                        );
+                    }
+                }
+            }
+            inverse_batch(&plan, &mut dx_ref);
+
+            let mut g_fused = g0.clone();
+            let mut dx_fused = vec![0.0f32; samples * cb * n];
+            block_circulant_transpose_batch(&plan, &mut g_fused, &mut dx_fused, &specs, rb, cb);
+            assert_eq!(dx_fused, dx_ref, "rb={rb} cb={cb} n={n}");
+            assert_eq!(g_fused, g_ref, "saved g-hat rb={rb} cb={cb} n={n}");
+        }
+    }
+
+    #[test]
+    fn block_residual_sweep_computes_x_plus_wx() {
+        let (rb, cb, n, samples) = (2usize, 2usize, 16usize, 3usize);
+        let plan = cached(n);
+        let mut specs = rand_vec(rb * cb * n, 99);
+        forward_batch(&plan, &mut specs);
+        let x0 = rand_vec(samples * cb * n, 101);
+
+        let mut x_plain = x0.clone();
+        let mut wx = vec![0.0f32; samples * rb * n];
+        block_circulant_forward_batch(&plan, &mut x_plain, &mut wx, &specs, rb, cb);
+
+        let mut x_res = x0.clone();
+        let mut out = vec![0.0f32; samples * rb * n];
+        block_circulant_forward_residual_batch(&plan, &mut x_res, &mut out, &specs, rb, cb);
+
+        // out must equal x + Wx to transform-roundtrip precision
+        for i in 0..out.len() {
+            let want = x0[i] + wx[i];
+            assert!(
+                (out[i] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "i={i}: {} vs {}",
+                out[i],
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn transforms_survive_a_panicked_engine_worker_thread() {
+        // A thread that panics after touching the plan cache and the
+        // engine must not poison anything for later transforms
+        // (regression for the plan-cache RwLock poisoning bug).
+        let joined = std::thread::spawn(|| {
+            let plan = cached(64);
+            let mut buf = vec![0.25f32; 64 * 4];
+            forward_batch(&plan, &mut buf);
+            panic!("injected worker panic");
+        })
+        .join();
+        assert!(joined.is_err(), "worker must have panicked");
+        let plan = cached(64);
+        let mut buf = vec![0.5f32; 64 * 5];
+        forward_batch(&plan, &mut buf);
+        inverse_batch(&plan, &mut buf);
+        for v in buf {
+            assert!((v - 0.5).abs() < 1e-4);
+        }
     }
 }

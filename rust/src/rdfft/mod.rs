@@ -21,7 +21,11 @@
 //! * [`forward`]   — in-place forward transform (§4.1, Proposition 1)
 //! * [`inverse`]   — in-place inverse transform (§4.2, Eq. 7)
 //! * [`engine`]    — batch-major execution engine (fused stages, SoA
-//!   twiddles, scoped-thread batches) behind every batched entry point
+//!   twiddles, scoped-thread batches) behind every batched entry point,
+//!   including the fused circulant pipeline
+//!   ([`engine::circulant_apply_batch`] and the block-circulant sweeps):
+//!   forward stages → packed spectral product → inverse stages in one
+//!   cache-resident sweep per tile instead of three full passes
 //! * [`spectral`]  — packed-domain elementwise complex ops (⊙, conj-⊙)
 //! * [`circulant`] — circulant & block-circulant products + gradients (Eq. 4/5)
 //! * [`bf16`]      — software bfloat16 and the bf16 transform path
@@ -39,7 +43,11 @@ pub mod spectral;
 pub mod twod;
 
 pub use circulant::{BlockCirculant, Circulant};
-pub use engine::{forward_batch, inverse_batch, EngineConfig};
+pub use engine::{
+    block_circulant_forward_batch, block_circulant_forward_residual_batch,
+    block_circulant_transpose_batch, circulant_apply_batch, forward_batch, inverse_batch,
+    EngineConfig, SpectralOp,
+};
 pub use forward::{rdfft_batch, rdfft_inplace};
 pub use inverse::{irdfft_batch, irdfft_inplace};
 pub use plan::Plan;

@@ -188,13 +188,26 @@ impl Plan {
 /// plan is O(n log n) and done once. Read-mostly after warmup, so lookups
 /// take a shared `RwLock` read guard — concurrent batch-engine workers do
 /// not serialize on the cache the way the previous `Mutex` made them.
+///
+/// Lock poisoning is recovered, not propagated: a bench/test thread that
+/// panics while touching the cache must not fail every later transform in
+/// the process (`unwrap()` on a poisoned guard would). The map holds only
+/// fully-built `Arc<Plan>`s — an entry is inserted after `Plan::new`
+/// returns — so a poisoned guard's data is always consistent and
+/// `into_inner` is safe. The size check also runs *before* any lock is
+/// taken, so the one fallible call inside the write section cannot panic
+/// mid-insert.
 pub fn cached(n: usize) -> Arc<Plan> {
+    assert!(
+        super::is_supported_size(n),
+        "rdFFT size must be a power of two >= 2, got {n}"
+    );
     static CACHE: OnceLock<RwLock<HashMap<usize, Arc<Plan>>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
-    if let Some(plan) = cache.read().unwrap().get(&n) {
+    if let Some(plan) = cache.read().unwrap_or_else(|e| e.into_inner()).get(&n) {
         return plan.clone();
     }
-    let mut map = cache.write().unwrap();
+    let mut map = cache.write().unwrap_or_else(|e| e.into_inner());
     map.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
 }
 
@@ -253,6 +266,30 @@ mod tests {
         let a = cached(32);
         let b = cached(32);
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn cached_rejects_bad_sizes_before_locking() {
+        // The panic must fire in the caller (argument validation), never
+        // while a cache guard is held — see the poisoning regression
+        // below.
+        let joined = std::thread::spawn(|| cached(24)).join();
+        assert!(joined.is_err(), "non-power-of-two must panic");
+    }
+
+    #[test]
+    fn cache_survives_a_panicking_thread() {
+        // Regression: one panicking thread (here via the size validation,
+        // historically via any panic while a guard was held) must not
+        // poison the cache for every later transform.
+        let joined = std::thread::spawn(|| {
+            let _ = cached(96); // 96 is not a power of two -> panic
+        })
+        .join();
+        assert!(joined.is_err());
+        // Later lookups — including first-time builds — must still work.
+        assert_eq!(cached(64).n(), 64);
+        assert_eq!(cached(2048).n(), 2048);
     }
 
     #[test]

@@ -23,6 +23,16 @@ fn vec_pm1(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
 }
 
+/// n-scaled tolerance: f32 butterfly error grows ~O(log n) with the stage
+/// count and ~O(√n) with coefficient magnitude through n = 1024
+/// butterflies, so every comparison scales a base epsilon as
+/// `base · √n · (log2 n + 1)` instead of using a fixed cutoff — the fixed
+/// epsilons were tight at n = 4 and flaky at n = 1024. All seeds in this
+/// suite are pinned constants, so CI runs are deterministic.
+fn n_tol(n: usize, base: f32) -> f32 {
+    base * (n as f32).sqrt() * ((n as f32).log2() + 1.0)
+}
+
 /// Sizes the differential sweep covers (ISSUE: n in {4..1024}).
 const SIZES: [usize; 9] = [4, 8, 16, 32, 64, 128, 256, 512, 1024];
 /// Odd / non-aligned batch counts.
@@ -36,7 +46,7 @@ fn forward_batch_matches_independent_complex_fft() {
             let x = vec_pm1(&mut rng, n * b);
             let mut got = x.clone();
             engine::forward_batch(&cached(n), &mut got);
-            let tol = 1e-3 * (n as f32).sqrt();
+            let tol = n_tol(n, 1e-4);
             for r in 0..b {
                 let row = &x[r * n..(r + 1) * n];
                 let want = complex_fft::fft_out_of_place(row, Category::Other);
@@ -66,10 +76,11 @@ fn forward_matches_rfft_packing_contract() {
         engine::forward_batch(&cached(n), &mut packed);
         let spec = rfft::rfft_alloc(&x, Category::Other);
         assert_eq!(spec.len(), n / 2 + 1);
+        let tol = n_tol(n, 1e-6);
         for k in 0..=n / 2 {
             let (re, im) = layout::get(&packed, k);
             assert!(
-                (re - spec[k].0).abs() < 1e-4 && (im - spec[k].1).abs() < 1e-4,
+                (re - spec[k].0).abs() < tol && (im - spec[k].1).abs() < tol,
                 "n={n} k={k}"
             );
         }
@@ -96,14 +107,15 @@ fn inverse_batch_matches_independent_complex_ifft() {
                     cplx[k] = complex_fft::Complex::new(full[k].0, full[k].1);
                 }
                 let want = complex_fft::ifft_out_of_place(&cplx, Category::Other);
+                let tol = n_tol(n, 3e-6).max(2e-5);
                 for i in 0..n {
                     let g = got[r * n + i];
                     assert!(
-                        (g - want[i].re).abs() < 1e-3,
+                        (g - want[i].re).abs() < tol,
                         "n={n} b={b} row={r} i={i}: {g} vs {}",
                         want[i].re
                     );
-                    assert!(want[i].im.abs() < 1e-3, "imag leakage n={n} i={i}");
+                    assert!(want[i].im.abs() < tol, "imag leakage n={n} i={i}");
                 }
             }
         }
@@ -118,7 +130,7 @@ fn forward_matches_f64_dft_oracle_small_sizes() {
         let mut got = x.clone();
         engine::forward_batch(&cached(n), &mut got);
         let want = naive_dft(&x);
-        let tol = 1e-3 * (n as f32).sqrt();
+        let tol = n_tol(n, 1e-4);
         for k in 0..=n / 2 {
             let (re, im) = layout::get(&got, k);
             assert!((re - want[k].0).abs() < tol, "n={n} k={k} re");
@@ -147,11 +159,12 @@ fn circulant_layer_backends_agree_on_odd_batches() {
             let mut rng = Rng::new(seed);
             let x: Vec<f32> = vec_pm1(&mut rng, b * d);
 
+            let tol = n_tol(p, 3e-5).max(1e-3);
             let y_ours = ours.forward(Tensor::from_vec(b, d, x.clone(), Category::Other));
             let y_fft = fft.forward(Tensor::from_vec(b, d, x.clone(), Category::Other));
             for i in 0..b * d {
                 assert!(
-                    (y_ours.as_slice()[i] - y_fft.as_slice()[i]).abs() < 1e-3,
+                    (y_ours.as_slice()[i] - y_fft.as_slice()[i]).abs() < tol,
                     "d={d} p={p} b={b} i={i}: ours vs fft"
                 );
             }
@@ -162,7 +175,7 @@ fn circulant_layer_backends_agree_on_odd_batches() {
             let dx_fft = fft.backward(Tensor::from_vec(b, d, g, Category::Other));
             for i in 0..b * d {
                 assert!(
-                    (dx_ours.as_slice()[i] - dx_fft.as_slice()[i]).abs() < 1e-3,
+                    (dx_ours.as_slice()[i] - dx_fft.as_slice()[i]).abs() < tol,
                     "d={d} p={p} b={b} i={i}: dx ours vs fft"
                 );
             }
@@ -189,6 +202,108 @@ fn block_circulant_forward_matches_dense_oracle_across_sizes() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Fused circulant pipeline (ISSUE tentpole: fused agrees with the
+// unfused forward → product → inverse path across n ∈ {4..1024} and odd
+// batches, and allocates nothing after plan construction)
+// ---------------------------------------------------------------------
+
+#[test]
+fn fused_circulant_apply_matches_unfused_across_sizes_and_odd_batches() {
+    use rdfft::rdfft::{spectral, SpectralOp};
+    for &n in &SIZES {
+        for &b in &BATCHES {
+            let mut rng = Rng::new((n * 131 + b) as u64);
+            let mut spec = vec_pm1(&mut rng, n);
+            engine::forward_batch(&cached(n), &mut spec);
+            let x = vec_pm1(&mut rng, n * b);
+            for op in [SpectralOp::Mul, SpectralOp::MulConjB] {
+                let mut fused = x.clone();
+                engine::circulant_apply_batch(&cached(n), &mut fused, &spec, op);
+                // Unfused oracle: three full passes.
+                let mut reference = x.clone();
+                engine::forward_batch(&cached(n), &mut reference);
+                for row in reference.chunks_exact_mut(n) {
+                    match op {
+                        SpectralOp::Mul => spectral::mul_inplace(row, &spec),
+                        SpectralOp::MulConjB => spectral::mul_conjb_inplace(row, &spec),
+                    }
+                }
+                engine::inverse_batch(&cached(n), &mut reference);
+                let tol = n_tol(n, 1e-6);
+                for i in 0..n * b {
+                    assert!(
+                        (fused[i] - reference[i]).abs() <= tol,
+                        "n={n} b={b} op={op:?} i={i}: {} vs {}",
+                        fused[i],
+                        reference[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_block_sweeps_match_unfused_oracles_across_sizes() {
+    for &(rows, cols, p) in &[(16usize, 16usize, 4usize), (32, 64, 16), (128, 128, 32)] {
+        let mut rng = Rng::new((rows * 17 + cols + p) as u64);
+        let c = vec_pm1(&mut rng, (rows / p) * (cols / p) * p);
+        let bc = BlockCirculant::from_block_columns(rows, cols, p, &c);
+        let x = vec_pm1(&mut rng, cols);
+        let g0 = vec_pm1(&mut rng, rows);
+        let tol = n_tol(p, 1e-6);
+
+        let mut x_f = x.clone();
+        let mut out_f = vec![0.0f32; rows];
+        bc.forward_inplace(&mut x_f, &mut out_f);
+        let mut x_u = x.clone();
+        let mut out_u = vec![0.0f32; rows];
+        bc.forward_inplace_unfused(&mut x_u, &mut out_u);
+        for i in 0..rows {
+            assert!((out_f[i] - out_u[i]).abs() <= tol, "fwd {rows}x{cols} p={p} i={i}");
+        }
+        for i in 0..cols {
+            assert!((x_f[i] - x_u[i]).abs() <= tol, "x-hat {rows}x{cols} p={p} i={i}");
+        }
+
+        let mut g_f = g0.clone();
+        let mut dx_f = vec![0.0f32; cols];
+        let mut dc_f = vec![0.0f32; bc.num_params()];
+        bc.backward(&x_f, &mut g_f, &mut dx_f, &mut dc_f);
+        let mut g_u = g0.clone();
+        let mut dx_u = vec![0.0f32; cols];
+        let mut dc_u = vec![0.0f32; bc.num_params()];
+        bc.backward_unfused(&x_u, &mut g_u, &mut dx_u, &mut dc_u);
+        for i in 0..cols {
+            assert!((dx_f[i] - dx_u[i]).abs() <= tol, "dx {rows}x{cols} p={p} i={i}");
+        }
+        for i in 0..dc_f.len() {
+            assert!((dc_f[i] - dc_u[i]).abs() <= tol, "dc {rows}x{cols} p={p} i={i}");
+        }
+    }
+}
+
+#[test]
+fn fused_circulant_apply_allocates_nothing_after_plan_construction() {
+    use rdfft::rdfft::SpectralOp;
+    let n = 512;
+    let plan = cached(n); // plan construction happens here
+    let mut rng = Rng::new(4242);
+    let mut spec = vec_pm1(&mut rng, n);
+    engine::forward_batch(&plan, &mut spec);
+    let mut buf = vec_pm1(&mut rng, n * 9);
+    memtrack::reset();
+    let before = memtrack::snapshot().alloc_count;
+    engine::circulant_apply_batch(&plan, &mut buf, &spec, SpectralOp::Mul);
+    engine::circulant_apply_batch(&plan, &mut buf, &spec, SpectralOp::MulConjB);
+    assert_eq!(
+        memtrack::snapshot().alloc_count,
+        before,
+        "fused pipeline must not allocate tracked memory"
+    );
 }
 
 // ---------------------------------------------------------------------
