@@ -76,10 +76,11 @@ fn main() {
 
     // ------------------------------------------------------------------
     // Batch execution ablation: scalar per-row loop vs the batch-major
-    // engine vs engine + scoped threads — the shared grid from
-    // experiments (fwd+inv roundtrips keep values bounded across timed
-    // iterations; also prints the batch=1 latency gate and writes
-    // BENCH_rdfft.json). Exits non-zero if the latency gate regresses.
+    // engine vs engine + threads, plus the persistent-pool vs per-call
+    // scoped-thread scaling grid — the shared grid from experiments
+    // (fwd+inv roundtrips keep values bounded across timed iterations;
+    // also prints the batch=1 latency gate and writes BENCH_rdfft.json
+    // with the pool gates). Exits non-zero if a hard gate regresses.
     // ------------------------------------------------------------------
     println!();
     let fast = std::env::args().any(|a| a == "--fast");

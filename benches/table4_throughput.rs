@@ -1,8 +1,10 @@
 //! Bench: Table 4 — fine-tuning throughput and task-accuracy parity
 //! across methods (FF / LoRA / circulant×{fft, rfft, ours}), preceded by
 //! the batch-engine throughput ablation (scalar row loop vs batch-major
-//! vs batch-major + scoped threads), which also writes the
-//! machine-readable `BENCH_rdfft.json` (schema in EXPERIMENTS.md §Perf).
+//! vs batch-major + threads, plus the persistent-pool vs per-call
+//! scoped-thread scaling grid at threads ∈ {1, 2, 4}), which also writes
+//! the machine-readable `BENCH_rdfft.json` (schema v2 — records +
+//! acceptance gates — in EXPERIMENTS.md §Perf).
 //!
 //! `cargo bench --bench table4_throughput`
 

@@ -23,6 +23,7 @@ use crate::baselines::rfft::{irfft_alloc, rfft_alloc, rfft_conj, rfft_mul, RfftV
 use crate::memtrack::{Category, ScopedCategory};
 use crate::rdfft::plan::cached;
 use crate::rdfft::{engine, spectral};
+use crate::runtime::pool::ExecCtx;
 use std::sync::Arc;
 
 /// FFT backend selection for [`CirculantLayer`] — the three columns of
@@ -47,10 +48,21 @@ impl Backend {
     }
 }
 
+/// Layer-local saved state of one replica-free shard pass: whatever the
+/// layer's [`Layer::shard_forward_residual`] needs to hand to the
+/// matching [`Layer::shard_backward_residual`], opaque to the stack
+/// (each layer downcasts its own type). Lives entirely inside one pool
+/// job, so worker-thread memtrack accounting stays balanced.
+pub type ShardSaved = Box<dyn std::any::Any + Send>;
+
 /// A trainable layer: forward saves what backward needs; backward consumes
 /// the grad w.r.t. the output and returns the grad w.r.t. the input,
 /// accumulating parameter gradients internally.
-pub trait Layer {
+///
+/// `Send + Sync` is a supertrait: the data-parallel trainer shares one
+/// layer immutably across pool workers (replica-free sharding — the
+/// shard hooks below take `&self` and externalize every mutable piece).
+pub trait Layer: Send + Sync {
     fn forward(&mut self, x: Tensor) -> Tensor;
     fn backward(&mut self, grad_out: Tensor) -> Tensor;
     /// SGD update from accumulated gradients, then zero them.
@@ -80,6 +92,61 @@ pub trait Layer {
     fn backward_residual(&mut self, grad_out: Tensor) -> Tensor {
         residual_backward_fallback(self, grad_out)
     }
+
+    // ------------- replica-free data-parallel hooks -------------
+    //
+    // The trainer shards a batch's rows across pool workers. Workers
+    // share the layer's parameters *immutably* (no model replicas) and
+    // keep all per-shard state — saved activations, the gradient
+    // accumulation buffers — local to the shard job. Gradients from all
+    // shards are then combined by a deterministic fixed-order tree
+    // reduction (`autograd::optim::tree_reduce_with`), so results are
+    // bit-identical run-to-run at any thread count.
+
+    /// True when this layer implements the shard hooks below. Layers
+    /// without support force the trainer onto the serial step.
+    fn supports_shard_exec(&self) -> bool {
+        false
+    }
+
+    /// Shapes `(rows, cols)` of the gradient tensors this layer
+    /// accumulates into during a shard pass — identical order and length
+    /// to the pairs [`Layer::for_each_param`] visits. Used to size the
+    /// pooled shard arena. Empty for layers without shard support.
+    fn grad_shapes(&self) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
+
+    /// One-time per-step preparation on the submitting thread, before
+    /// any shard job runs (e.g. the rdFFT layer transforms its parameter
+    /// buffer to block spectra so shard jobs can read it immutably).
+    fn begin_shard_step(&mut self) {}
+
+    /// Residual forward `y = x + layer(x)` of one shard: parameters
+    /// read-only, every saved tensor inside the returned [`ShardSaved`].
+    /// Must be bit-identical per row to [`Layer::forward_residual`].
+    fn shard_forward_residual(&self, _x: Tensor) -> (Tensor, ShardSaved) {
+        unimplemented!("layer has no shard support (see supports_shard_exec)")
+    }
+
+    /// Residual backward of one shard: consumes the saved state,
+    /// accumulates parameter gradients into `grads` (same order/shapes
+    /// as [`Layer::grad_shapes`]; the rdFFT layer accumulates *spectra*
+    /// here — see [`Layer::finish_shard_grads`]), returns dx.
+    fn shard_backward_residual(
+        &self,
+        _grad_out: Tensor,
+        _saved: ShardSaved,
+        _grads: &mut [Tensor],
+    ) -> Tensor {
+        unimplemented!("layer has no shard support (see supports_shard_exec)")
+    }
+
+    /// Convert the tree-reduced shard gradients into the canonical (time)
+    /// domain [`Layer::for_each_param`] expects — one call per step, on
+    /// the submitting thread, after the reduction. Default: gradients are
+    /// already canonical.
+    fn finish_shard_grads(&mut self, _grads: &mut [Tensor]) {}
 }
 
 /// The clone-and-add residual forward, shared by the [`Layer`] trait
@@ -125,6 +192,23 @@ impl Dense {
     pub fn weight(&self) -> &Tensor {
         &self.w
     }
+
+    /// Replica-free shard forward (no residual): `y = x·Wᵀ` with the
+    /// weight read-only. Used directly by the stack's readout.
+    pub fn shard_forward(&self, x: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros_cat(x.rows, self.w.rows, Category::Intermediates);
+        matmul_nt(x, &self.w, &mut out);
+        out
+    }
+
+    /// Replica-free shard backward (no residual): accumulates `dW += gᵀx`
+    /// into the external `dw` buffer and returns `dx = g·W`.
+    pub fn shard_backward(&self, g: &Tensor, x: &Tensor, dw: &mut Tensor) -> Tensor {
+        matmul_tn_acc(g, x, dw);
+        let mut dx = Tensor::zeros_cat(g.rows, self.w.cols, Category::Intermediates);
+        matmul_nn(g, &self.w, &mut dx);
+        dx
+    }
 }
 
 impl Layer for Dense {
@@ -158,6 +242,37 @@ impl Layer for Dense {
 
     fn for_each_param(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
         f(self.w.as_mut_slice(), self.dw.as_mut_slice());
+    }
+
+    fn supports_shard_exec(&self) -> bool {
+        // the residual hooks below assume the block is square (the
+        // stack's blocks always are)
+        self.w.rows == self.w.cols
+    }
+
+    fn grad_shapes(&self) -> Vec<(usize, usize)> {
+        vec![(self.w.rows, self.w.cols)]
+    }
+
+    /// Same op order as `residual_forward_fallback` + [`Dense::forward`]
+    /// (matmul fill, then the skip add), so rows are bit-identical to the
+    /// serial path.
+    fn shard_forward_residual(&self, x: Tensor) -> (Tensor, ShardSaved) {
+        let mut y = self.shard_forward(&x);
+        y.axpy(&x, 1.0);
+        (y, Box::new(x))
+    }
+
+    fn shard_backward_residual(
+        &self,
+        grad_out: Tensor,
+        saved: ShardSaved,
+        grads: &mut [Tensor],
+    ) -> Tensor {
+        let x = *saved.downcast::<Tensor>().expect("Dense shard state is the saved input");
+        let mut dx = self.shard_backward(&grad_out, &x, &mut grads[0]);
+        dx.axpy(&grad_out, 1.0);
+        dx
     }
 }
 
@@ -284,6 +399,55 @@ impl Layer for Lora {
         f(self.a.as_mut_slice(), self.da.as_mut_slice());
         f(self.b.as_mut_slice(), self.db.as_mut_slice());
     }
+
+    fn supports_shard_exec(&self) -> bool {
+        self.w0.rows == self.w0.cols
+    }
+
+    fn grad_shapes(&self) -> Vec<(usize, usize)> {
+        vec![(self.a.rows, self.a.cols), (self.b.rows, self.b.cols)]
+    }
+
+    /// Op-for-op the serial residual forward ([`Lora::forward`] then the
+    /// skip add), with `x`/`xa` saved in the shard state instead of
+    /// `self`.
+    fn shard_forward_residual(&self, x: Tensor) -> (Tensor, ShardSaved) {
+        let mut out = Tensor::zeros_cat(x.rows, self.w0.rows, Category::Intermediates);
+        matmul_nt(&x, &self.w0, &mut out);
+        let mut xa = Tensor::zeros_cat(x.rows, self.a.rows, Category::Intermediates);
+        matmul_nt(&x, &self.a, &mut xa);
+        let mut delta = Tensor::zeros_cat(x.rows, self.b.rows, Category::Intermediates);
+        matmul_nt(&xa, &self.b, &mut delta);
+        out.axpy(&delta, self.scale);
+        out.axpy(&x, 1.0);
+        (out, Box::new((x, xa)))
+    }
+
+    fn shard_backward_residual(
+        &self,
+        grad_out: Tensor,
+        saved: ShardSaved,
+        grads: &mut [Tensor],
+    ) -> Tensor {
+        let (x, xa) = *saved
+            .downcast::<(Tensor, Tensor)>()
+            .expect("LoRA shard state is (x, x·Aᵀ)");
+        let mut g_scaled = grad_out.clone_as(Category::Intermediates);
+        g_scaled.scale(self.scale);
+        // dB += scale · gᵀ·xa — into the shard's buffer, grads[1]
+        matmul_tn_acc(&g_scaled, &xa, &mut grads[1]);
+        let mut dxa = Tensor::zeros_cat(grad_out.rows, self.b.cols, Category::Intermediates);
+        matmul_nn(&g_scaled, &self.b, &mut dxa);
+        // dA += dxaᵀ·x — grads[0]
+        matmul_tn_acc(&dxa, &x, &mut grads[0]);
+        let mut dx = Tensor::zeros_cat(grad_out.rows, self.w0.cols, Category::Intermediates);
+        matmul_nn(&grad_out, &self.w0, &mut dx);
+        let mut dx2 = Tensor::zeros_cat(grad_out.rows, self.a.cols, Category::Intermediates);
+        matmul_nn(&dxa, &self.a, &mut dx2);
+        dx.axpy(&dx2, 1.0);
+        dx.axpy(&grad_out, 1.0);
+        dx
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -316,6 +480,11 @@ pub struct CirculantLayer {
     /// the kernel's shared-memory tile). Allocated once, tracked.
     workspace: Tensor,
     plan: Arc<crate::rdfft::Plan>,
+    /// Execution context every engine call of this layer dispatches on
+    /// (pool + tuning). Defaults to the global context; the stack
+    /// installs its own via [`CirculantLayer::set_exec`] so one `ExecCtx`
+    /// governs a whole model instead of ad-hoc `EngineConfig`s per call.
+    exec: ExecCtx,
     // saved-for-backward state (backend-dependent)
     saved_x: Option<Tensor>,           // rdfft: block spectra of x (in x's own buffer!)
     saved_rfft_x: Vec<RfftVec>,        // rfft: spectra of x blocks per row
@@ -349,6 +518,7 @@ impl CirculantLayer {
             c_in_freq: false,
             workspace,
             plan: cached(p),
+            exec: ExecCtx::global(),
             saved_x: None,
             saved_rfft_x: Vec::new(),
             saved_rfft_c: Vec::new(),
@@ -363,6 +533,10 @@ impl CirculantLayer {
     pub fn block_size(&self) -> usize {
         self.p
     }
+    /// Install the execution context all engine calls dispatch on.
+    pub fn set_exec(&mut self, exec: ExecCtx) {
+        self.exec = exec;
+    }
     fn rb(&self) -> usize {
         self.rows / self.p
     }
@@ -376,7 +550,7 @@ impl CirculantLayer {
     /// it holding spectra (eval-only use, or inspection).
     pub fn ensure_time_domain(&mut self) {
         if self.c_in_freq {
-            engine::inverse_batch(&self.plan, self.c.as_mut_slice());
+            engine::inverse_batch_ctx(&self.plan, self.c.as_mut_slice(), &self.exec);
             self.c_in_freq = false;
         }
     }
@@ -385,7 +559,7 @@ impl CirculantLayer {
     /// is still in the time domain.
     fn ensure_freq_domain(&mut self) {
         if !self.c_in_freq {
-            engine::forward_batch(&self.plan, self.c.as_mut_slice());
+            engine::forward_batch_ctx(&self.plan, self.c.as_mut_slice(), &self.exec);
             self.c_in_freq = true;
         }
     }
@@ -403,13 +577,14 @@ impl CirculantLayer {
         // cache-resident pass per sample instead of three whole-tensor
         // passes. The output activation is mandatory for any method.
         let mut out = Tensor::zeros_cat(b, self.rows, Category::Intermediates);
-        engine::block_circulant_forward_batch(
+        engine::block_circulant_forward_batch_ctx(
             &self.plan,
             x.as_mut_slice(),
             out.as_mut_slice(),
             self.c.as_slice(),
             self.rb(),
             self.cb(),
+            &self.exec,
         );
         self.saved_x = Some(x);
         out
@@ -424,13 +599,14 @@ impl CirculantLayer {
         let b = x.rows;
         self.ensure_freq_domain();
         let mut out = Tensor::zeros_cat(b, self.rows, Category::Intermediates);
-        engine::block_circulant_forward_residual_batch(
+        engine::block_circulant_forward_residual_batch_ctx(
             &self.plan,
             x.as_mut_slice(),
             out.as_mut_slice(),
             self.c.as_slice(),
             self.rb(),
             self.cb(),
+            &self.exec,
         );
         self.saved_x = Some(x);
         out
@@ -461,45 +637,23 @@ impl CirculantLayer {
             // — the same ops either way, bit-identically.
             let pre_transformed = engine::default_would_thread(b * cb, p);
             if pre_transformed {
-                engine::forward_batch(&self.plan, dx.as_mut_slice());
+                engine::forward_batch_ctx(&self.plan, dx.as_mut_slice(), &self.exec);
             }
             for r in 0..b {
                 let row = dx.row_mut(r);
-                // ĝ for this sample, in place (row aliases grad-output).
-                if !pre_transformed {
-                    engine::forward_rows(&self.plan, row, cb.max(1));
-                }
-                // dĉ_ij += conj(x̂_j) ⊙ ĝ_i — straight into the
-                // (mandatory) grad buffer while ĝ is hot.
-                let xrow = x_hat.row(r);
-                for i in 0..rb {
-                    for j in 0..cb {
-                        let d = &mut self.dc.as_mut_slice()[(i * cb + j) * p..][..p];
-                        spectral::conj_mul_acc(
-                            d,
-                            &xrow[j * p..(j + 1) * p],
-                            &row[i * p..(i + 1) * p],
-                        );
-                    }
-                }
-                // dx_j = IFFT([ĝ_j +] Σ_i conj(ĉ_ij) ⊙ ĝ_i) into the
-                // workspace, then overwrite the sample's grad-output row.
-                let ws = self.workspace.as_mut_slice();
-                for (j, sb) in ws.chunks_exact_mut(p).enumerate() {
-                    sb.fill(0.0);
-                    for i in 0..rb {
-                        let ch = &self.c.as_slice()[(i * cb + j) * p..][..p];
-                        spectral::conj_mul_acc(sb, ch, &row[i * p..(i + 1) * p]);
-                    }
-                    if residual {
-                        // Skip-path gradient, added as spectra (linear).
-                        for (o, v) in sb.iter_mut().zip(&row[j * p..(j + 1) * p]) {
-                            *o += v;
-                        }
-                    }
-                }
-                engine::inverse_rows(&self.plan, ws, cb.max(1));
-                row.copy_from_slice(ws);
+                circulant_backward_square_row(
+                    &self.plan,
+                    self.c.as_slice(),
+                    p,
+                    rb,
+                    cb,
+                    row,
+                    x_hat.row(r),
+                    self.dc.as_mut_slice(),
+                    self.workspace.as_mut_slice(),
+                    !pre_transformed,
+                    residual,
+                );
             }
             dx
         } else {
@@ -508,13 +662,14 @@ impl CirculantLayer {
             // transpose sweep turns g into ĝ in place and produces dx in
             // the same pass.
             let mut dx = Tensor::zeros_cat(b, self.cols, Category::Intermediates);
-            engine::block_circulant_transpose_batch(
+            engine::block_circulant_transpose_batch_ctx(
                 &self.plan,
                 g.as_mut_slice(),
                 dx.as_mut_slice(),
                 self.c.as_slice(),
                 rb,
                 cb,
+                &self.exec,
             );
             // dĉ += conj(x̂) ⊙ ĝ from the spectra the sweep left behind.
             for r in 0..b {
@@ -536,8 +691,8 @@ impl CirculantLayer {
         // Leave the frequency domain: gradient blocks IFFT in place
         // (Eq. 5's final IFFT), parameter blocks IFFT back so SGD happens
         // on time-domain c, identical to the fft/rfft backends.
-        engine::inverse_batch(&self.plan, self.dc.as_mut_slice());
-        engine::inverse_batch(&self.plan, self.c.as_mut_slice());
+        engine::inverse_batch_ctx(&self.plan, self.dc.as_mut_slice(), &self.exec);
+        engine::inverse_batch_ctx(&self.plan, self.c.as_mut_slice(), &self.exec);
         self.c_in_freq = false;
         dx
     }
@@ -730,6 +885,61 @@ impl CirculantLayer {
     }
 }
 
+/// One sample of the square rdFFT backward sweep, shared **verbatim** by
+/// the serial path ([`CirculantLayer::backward_rdfft`], accumulating into
+/// the layer's own `dc`/workspace) and the replica-free shard hook
+/// ([`Layer::shard_backward_residual`], accumulating into shard-local
+/// buffers). Their bitwise equality is a load-bearing contract (the
+/// data-parallel determinism suite), so the float ops live in exactly one
+/// place. Per row: optional in-place ĝ transform, dĉ += conj(x̂)⊙ĝ, the
+/// conjugated dx products (+ optional spectral skip) into `ws`, inverse
+/// stages, and the in-place overwrite of the grad-output row with dx.
+#[allow(clippy::too_many_arguments)]
+fn circulant_backward_square_row(
+    plan: &crate::rdfft::Plan,
+    c_spec: &[f32],
+    p: usize,
+    rb: usize,
+    cb: usize,
+    row: &mut [f32],
+    xrow: &[f32],
+    dc: &mut [f32],
+    ws: &mut [f32],
+    transform_row: bool,
+    residual: bool,
+) {
+    // ĝ for this sample, in place (row aliases grad-output) — skipped
+    // when the caller already transformed the whole tensor.
+    if transform_row {
+        engine::forward_rows(plan, row, cb.max(1));
+    }
+    // dĉ_ij += conj(x̂_j) ⊙ ĝ_i — straight into the grad buffer while ĝ
+    // is hot.
+    for i in 0..rb {
+        for j in 0..cb {
+            let d = &mut dc[(i * cb + j) * p..][..p];
+            spectral::conj_mul_acc(d, &xrow[j * p..(j + 1) * p], &row[i * p..(i + 1) * p]);
+        }
+    }
+    // dx_j = IFFT([ĝ_j +] Σ_i conj(ĉ_ij) ⊙ ĝ_i) into the workspace, then
+    // overwrite the sample's grad-output row.
+    for (j, sb) in ws.chunks_exact_mut(p).enumerate() {
+        sb.fill(0.0);
+        for i in 0..rb {
+            let ch = &c_spec[(i * cb + j) * p..][..p];
+            spectral::conj_mul_acc(sb, ch, &row[i * p..(i + 1) * p]);
+        }
+        if residual {
+            // Skip-path gradient, added as spectra (linear).
+            for (o, v) in sb.iter_mut().zip(&row[j * p..(j + 1) * p]) {
+                *o += v;
+            }
+        }
+    }
+    engine::inverse_rows(plan, ws, cb.max(1));
+    row.copy_from_slice(ws);
+}
+
 impl Layer for CirculantLayer {
     fn forward(&mut self, x: Tensor) -> Tensor {
         assert_eq!(x.cols, self.cols);
@@ -765,6 +975,83 @@ impl Layer for CirculantLayer {
             return self.backward_rdfft(grad_out, true);
         }
         residual_backward_fallback(self, grad_out)
+    }
+
+    fn supports_shard_exec(&self) -> bool {
+        // the replica-free hooks read `c` as shared spectra — only the
+        // in-place backend keeps parameters in a worker-shareable form
+        self.backend == Backend::RdFft && self.rows == self.cols
+    }
+
+    fn grad_shapes(&self) -> Vec<(usize, usize)> {
+        vec![(self.dc.rows, self.dc.cols)]
+    }
+
+    /// Transform `c` to block spectra once on the submitting thread;
+    /// shard jobs then read it immutably.
+    fn begin_shard_step(&mut self) {
+        self.ensure_freq_domain();
+    }
+
+    fn shard_forward_residual(&self, mut x: Tensor) -> (Tensor, ShardSaved) {
+        debug_assert!(self.c_in_freq, "begin_shard_step must run before shard jobs");
+        let b = x.rows;
+        let mut out = Tensor::zeros_cat(b, self.rows, Category::Intermediates);
+        engine::block_circulant_forward_residual_batch_ctx(
+            &self.plan,
+            x.as_mut_slice(),
+            out.as_mut_slice(),
+            self.c.as_slice(),
+            self.rb(),
+            self.cb(),
+            &self.exec,
+        );
+        // x's buffer now holds x̂ — the shard-local saved-for-backward
+        // tensor (exactly what the serial path keeps in `saved_x`)
+        (out, Box::new(x))
+    }
+
+    /// The serial [`CirculantLayer::backward_rdfft`] residual sweep with
+    /// every mutable piece externalized: dĉ accumulates into the shard's
+    /// `grads[0]` buffer (as *spectra* — [`Layer::finish_shard_grads`]
+    /// applies the one shared inverse after the tree reduction, exactly
+    /// where the serial path inverts its whole-step accumulation), and
+    /// the one-row dx workspace is shard-local. Per row, the float ops
+    /// and their order match the serial path bit-for-bit.
+    fn shard_backward_residual(
+        &self,
+        mut g: Tensor,
+        saved: ShardSaved,
+        grads: &mut [Tensor],
+    ) -> Tensor {
+        let x_hat = *saved.downcast::<Tensor>().expect("rdFFT shard state is x̂");
+        let (p, rb, cb) = (self.p, self.rb(), self.cb());
+        let b = g.rows;
+        let mut ws = Tensor::zeros_cat(1, self.cols, Category::Intermediates);
+        let dc = grads[0].as_mut_slice();
+        for r in 0..b {
+            let row = g.row_mut(r);
+            circulant_backward_square_row(
+                &self.plan,
+                self.c.as_slice(),
+                p,
+                rb,
+                cb,
+                row,
+                x_hat.row(r),
+                dc,
+                ws.as_mut_slice(),
+                true,
+                true,
+            );
+        }
+        g
+    }
+
+    /// One inverse over the *reduced* dĉ — the linearity of the
+    /// transform is what lets shard spectra sum before the single IFFT.
+    fn finish_shard_grads(&mut self, grads: &mut [Tensor]) {
+        engine::inverse_batch_ctx(&self.plan, grads[0].as_mut_slice(), &self.exec);
     }
 
     fn sgd_step(&mut self, lr: f32) {
@@ -1039,6 +1326,54 @@ mod tests {
         assert_eq!(memtrack::snapshot().alloc_count - before, 1, "output tensor only");
         let _dx = l.backward_residual(g);
         assert_eq!(memtrack::snapshot().alloc_count - before, 1, "backward allocates nothing");
+    }
+
+    /// The replica-free shard hooks must reproduce the serial residual
+    /// paths bit-for-bit per row — the foundation of the data-parallel
+    /// trainer's any-thread-count determinism.
+    #[test]
+    fn shard_hooks_match_serial_residual_paths() {
+        let (b, d) = (5usize, 32usize);
+        // Twin layers per method (same seed): the circulant parameter
+        // buffer roundtrips through the frequency domain during a step,
+        // so reference and shard passes must each start from pristine
+        // parameters to compare bitwise.
+        fn make_layer(kind: usize, d: usize) -> Box<dyn Layer> {
+            match kind {
+                0 => Box::new(Dense::new(d, d, 21)),
+                1 => Box::new(Lora::new(d, d, 4, 22)),
+                _ => Box::new(CirculantLayer::new(Backend::RdFft, d, d, 8, 23)),
+            }
+        }
+        for kind in 0..3usize {
+            let make = || make_layer(kind, d);
+            let mut reference = make();
+            let mut sharded = make();
+            assert!(reference.supports_shard_exec());
+            let shapes = sharded.grad_shapes();
+            assert!(!shapes.is_empty());
+
+            let x = input(b, d, 31);
+            let x2 = x.clone_as(Category::Intermediates);
+            // serial reference
+            let y_ref = reference.forward_residual(x);
+            let dx_ref = reference.backward_residual(grad_ones(b, d));
+            let mut dg_ref: Vec<Vec<f32>> = Vec::new();
+            reference.for_each_param(&mut |_, g| dg_ref.push(g.to_vec()));
+
+            // shard path (one shard covering the whole batch)
+            let mut grads: Vec<Tensor> =
+                shapes.iter().map(|&(r, c)| Tensor::zeros_cat(r, c, Category::Gradients)).collect();
+            sharded.begin_shard_step();
+            let (y_sh, saved) = sharded.shard_forward_residual(x2);
+            assert_eq!(y_ref.as_slice(), y_sh.as_slice(), "forward must be bit-identical");
+            let dx_sh = sharded.shard_backward_residual(grad_ones(b, d), saved, &mut grads);
+            sharded.finish_shard_grads(&mut grads);
+            assert_eq!(dx_ref.as_slice(), dx_sh.as_slice(), "dx must be bit-identical");
+            for (gr, gs) in dg_ref.iter().zip(&grads) {
+                assert_eq!(&gr[..], gs.as_slice(), "param grads must be bit-identical");
+            }
+        }
     }
 
     #[test]

@@ -25,6 +25,6 @@ pub mod tensor;
 pub mod train;
 
 pub use layers::{Backend, CirculantLayer, Dense, FrozenDense, Layer, Lora};
-pub use optim::{OptimKind, Optimizer, OptimizerBank};
-pub use stack::{SpectralStack, StackConfig};
+pub use optim::{tree_reduce_with, OptimKind, Optimizer, OptimizerBank};
+pub use stack::{ShardArena, SpectralStack, StackConfig, GRAD_SHARDS};
 pub use tensor::Tensor;

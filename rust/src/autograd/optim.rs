@@ -160,6 +160,28 @@ impl OptimizerBank {
     }
 }
 
+/// Deterministic fixed-order pairwise tree reduction: after the call,
+/// `items[0]` holds the reduction of every item (`combine(dst, src)`
+/// folds `src` into `dst`). The combine *sequence* depends only on
+/// `items.len()` — stride-doubling pairs `(0,1) (2,3) … (0,2) (4,6) … (0,4) …`
+/// — never on thread scheduling, which is what makes the data-parallel
+/// trainer's gradient sums bit-identical run-to-run at any worker count.
+/// Items past index 0 are left in a combined-into state; callers treat
+/// them as scratch (the shard arena re-zeroes every step).
+pub fn tree_reduce_with<T>(items: &mut [T], mut combine: impl FnMut(&mut T, &T)) {
+    let n = items.len();
+    let mut stride = 1usize;
+    while stride < n {
+        let mut i = 0usize;
+        while i + stride < n {
+            let (head, tail) = items.split_at_mut(i + stride);
+            combine(&mut head[i], &tail[0]);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +299,31 @@ mod tests {
         let mut bank = OptimizerBank::new(OptimKind::Sgd, 0.1);
         let mut p = vec![0.0f32; 2];
         bank.apply(3, &mut p, &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn tree_reduce_sums_any_length_and_is_order_fixed() {
+        for n in 0..12usize {
+            let mut v: Vec<u64> = (1..=n as u64).collect();
+            tree_reduce_with(&mut v, |a, b| *a += *b);
+            if n > 0 {
+                assert_eq!(v[0], (n as u64) * (n as u64 + 1) / 2, "n={n}");
+            }
+        }
+        // the combine order is a pure function of len: record it
+        let mut log = Vec::new();
+        let mut idx: Vec<usize> = (0..5).collect();
+        tree_reduce_with(&mut idx, |a, b| log.push((*a, *b)));
+        assert_eq!(log, vec![(0, 1), (2, 3), (0, 2), (0, 4)]);
+    }
+
+    #[test]
+    fn tree_reduce_grouping_differs_from_sequential_but_sum_matches() {
+        // float regression guard: the tree shape is ((a+b)+(c+d)) — fixed
+        let mut v = vec![0.1f32, 0.2, 0.3, 0.4];
+        tree_reduce_with(&mut v, |a, b| *a += *b);
+        let tree = ((0.1f32 + 0.2) + (0.3 + 0.4)) as f32;
+        assert_eq!(v[0], tree);
     }
 
     #[test]

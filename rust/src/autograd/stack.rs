@@ -26,11 +26,12 @@
 //! (in place, for the rdFFT backend), so the stack adds no per-layer
 //! activation copies of its own.
 
-use super::layers::{Dense, Layer};
-use super::optim::OptimizerBank;
-use super::tensor::{softmax_xent, Tensor};
+use super::layers::{Dense, Layer, ShardSaved};
+use super::optim::{tree_reduce_with, OptimizerBank};
+use super::tensor::{softmax_xent, softmax_xent_shard, Tensor};
 use super::train::Method;
 use crate::memtrack::{self, Category};
+use crate::runtime::pool::ExecCtx;
 
 /// Configuration of a [`SpectralStack`].
 #[derive(Debug, Clone)]
@@ -114,21 +115,58 @@ pub struct SpectralStack {
     readout: Dense,
     /// ReLU masks saved by the last forward, one per block.
     masks: Vec<ReluMask>,
+    /// Execution context installed into every block: one pool + tuning
+    /// for the whole model instead of ad-hoc `EngineConfig`s per call.
+    exec: ExecCtx,
 }
 
 impl SpectralStack {
     pub fn new(cfg: StackConfig) -> Self {
+        Self::build(cfg, None, ExecCtx::global())
+    }
+
+    /// [`SpectralStack::new`] with an explicit execution context (pool +
+    /// engine tuning + scratch category), threaded into every block.
+    pub fn with_exec(cfg: StackConfig, exec: ExecCtx) -> Self {
+        Self::build(cfg, None, exec)
+    }
+
+    /// Heterogeneous stack: block `k` uses `methods[k]` instead of
+    /// `cfg.method` (e.g. the determinism suite's Dense + LoRA + rdFFT
+    /// tower). `methods.len()` must equal `cfg.depth`.
+    pub fn new_mixed(cfg: StackConfig, methods: &[Method]) -> Self {
+        Self::build(cfg, Some(methods), ExecCtx::global())
+    }
+
+    /// [`SpectralStack::new_mixed`] with an explicit execution context.
+    pub fn new_mixed_with_exec(cfg: StackConfig, methods: &[Method], exec: ExecCtx) -> Self {
+        Self::build(cfg, Some(methods), exec)
+    }
+
+    fn build(cfg: StackConfig, methods: Option<&[Method]>, exec: ExecCtx) -> Self {
+        if let Some(ms) = methods {
+            assert_eq!(ms.len(), cfg.depth, "one method per block");
+        }
         let scale = (1.0 / cfg.d as f32).sqrt();
         let embed = Tensor::rand(cfg.vocab, cfg.d, scale, cfg.seed + 100, Category::Weights);
         let pos_scale: Vec<f32> = (0..cfg.ctx).map(|j| 1.0 / (1.0 + j as f32)).collect();
-        let blocks: Vec<Box<dyn Layer>> =
-            (0..cfg.depth).map(|k| cfg.method.build(cfg.d, cfg.seed + k as u64)).collect();
+        let blocks: Vec<Box<dyn Layer>> = (0..cfg.depth)
+            .map(|k| {
+                let m = methods.map(|ms| ms[k]).unwrap_or(cfg.method);
+                m.build_with(cfg.d, cfg.seed + k as u64, &exec)
+            })
+            .collect();
         let readout = Dense::new(cfg.vocab, cfg.d, cfg.seed + 999);
-        SpectralStack { cfg, embed, pos_scale, blocks, readout, masks: Vec::new() }
+        SpectralStack { cfg, embed, pos_scale, blocks, readout, masks: Vec::new(), exec }
     }
 
     pub fn config(&self) -> &StackConfig {
         &self.cfg
+    }
+
+    /// The execution context the stack's blocks dispatch on.
+    pub fn exec(&self) -> &ExecCtx {
+        &self.exec
     }
 
     /// Trainable scalars across blocks and readout.
@@ -216,6 +254,158 @@ impl SpectralStack {
         loss
     }
 
+    /// True when every block implements the replica-free shard hooks
+    /// (the readout always does — the stack drives it directly), i.e.
+    /// [`SpectralStack::train_step_sharded`] is available.
+    pub fn supports_shard_exec(&self) -> bool {
+        self.blocks.iter().all(|b| b.supports_shard_exec())
+    }
+
+    /// One data-parallel training step: the batch's rows are split into
+    /// the **fixed** shard structure of [`ShardArena`] (a function of the
+    /// batch size only — never of the worker count), each shard runs a
+    /// replica-free forward+backward as a pool job on the stack's own
+    /// [`ExecCtx`] (the one its blocks dispatch on — a single context
+    /// governs the whole model, so trainer fan-out and layer engine calls
+    /// can never target divergent pools; parameters shared immutably,
+    /// saved state and gradient accumulation local to the shard), and the
+    /// shard gradients/losses are combined by a deterministic fixed-order
+    /// tree reduction. Results are therefore bit-identical run-to-run at
+    /// **any** thread count — `--threads 4` reproduces `--threads 1`
+    /// exactly.
+    pub fn train_step_sharded(
+        &mut self,
+        ctx_bytes: &[u8],
+        labels: &[usize],
+        bank: &mut OptimizerBank,
+        arena: &mut ShardArena,
+    ) -> f32 {
+        assert!(
+            self.supports_shard_exec(),
+            "a block without shard support must train via train_step"
+        );
+        let b = labels.len();
+        assert!(b > 0, "empty batch");
+        assert_eq!(ctx_bytes.len(), b * self.cfg.ctx, "context batch must be b*ctx bytes");
+        let shard_rows = (b + GRAD_SHARDS - 1) / GRAD_SHARDS;
+
+        // Shared prep on the submitting thread: parameter spectra for the
+        // circulant blocks, zeroed shard buffers.
+        for blk in &mut self.blocks {
+            blk.begin_shard_step();
+        }
+        arena.zero();
+
+        // Fan the shards out. The final shard runs on this thread too via
+        // the pool's self-help while waiting on the latch; worker-side
+        // activation scratch merges back into this thread's memtrack at
+        // scope end.
+        let ctx_len = self.cfg.ctx;
+        let stack: &SpectralStack = self;
+        let layout = &arena.layout;
+        stack
+            .exec
+            .pool()
+            .scope(|sc| {
+                let mut row0 = 0usize;
+                for (shard, loss_slot) in
+                    arena.shards.iter_mut().zip(arena.losses.iter_mut())
+                {
+                    if row0 >= b {
+                        break;
+                    }
+                    let rows = shard_rows.min(b - row0);
+                    let bytes = &ctx_bytes[row0 * ctx_len..(row0 + rows) * ctx_len];
+                    let lbls = &labels[row0..row0 + rows];
+                    sc.submit(move || {
+                        *loss_slot = stack.shard_grad_pass(bytes, lbls, shard, layout, b);
+                    });
+                    row0 += rows;
+                }
+            })
+            .unwrap_or_else(|p| p.resume());
+
+        // Deterministic fixed-order tree reductions (losses and grads):
+        // the combine sequence depends only on the slot count.
+        tree_reduce_with(&mut arena.losses, |a, b| *a += *b);
+        let loss_sum = arena.losses[0];
+        tree_reduce_with(&mut arena.shards, |dst, src| {
+            for (d, s) in dst.grads.iter_mut().zip(&src.grads) {
+                d.axpy(s, 1.0);
+            }
+        });
+
+        // Per-block post-processing of the reduced gradients (the rdFFT
+        // blocks apply their one shared inverse transform here), then the
+        // same visitor tail as the serial step: fold into the layers' own
+        // grad buffers, optimizer update, zero.
+        {
+            let reduced = &mut arena.shards[0].grads;
+            for (k, blk) in self.blocks.iter_mut().enumerate() {
+                let (off, a) = (arena.layout.offset[k], arena.layout.arity[k]);
+                blk.finish_shard_grads(&mut reduced[off..off + a]);
+            }
+        }
+        let reduced = &arena.shards[0];
+        let mut idx = 0usize;
+        self.for_each_param(&mut |p, g| {
+            let r = reduced.grads[idx].as_slice();
+            debug_assert_eq!(r.len(), g.len(), "arena layout must mirror for_each_param");
+            for (gv, rv) in g.iter_mut().zip(r) {
+                *gv += *rv;
+            }
+            bank.apply(idx, p, g);
+            for v in g.iter_mut() {
+                *v = 0.0;
+            }
+            idx += 1;
+        });
+        (loss_sum / b as f64) as f32
+    }
+
+    /// Forward+backward one shard with every piece of step state local to
+    /// the call: parameters read-only, activations/saved tensors owned by
+    /// the shard job, parameter gradients accumulated into the shard's
+    /// arena buffers. Returns the shard's f64 row-loss sum (gradients are
+    /// already scaled by `1/full_batch`, so shards compose exactly).
+    fn shard_grad_pass(
+        &self,
+        ctx_bytes: &[u8],
+        labels: &[usize],
+        shard: &mut GradShard,
+        layout: &ShardLayout,
+        full_batch: usize,
+    ) -> f64 {
+        let mut h = self.features(ctx_bytes);
+        let mut saved: Vec<ShardSaved> = Vec::with_capacity(self.blocks.len());
+        let mut masks: Vec<ReluMask> = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            let (mut t, s) = blk.shard_forward_residual(h);
+            masks.push(ReluMask::forward(&mut t));
+            saved.push(s);
+            h = t;
+        }
+        let logits = self.readout.shard_forward(&h);
+        let mut dl = Tensor::zeros_cat(logits.rows, logits.cols, Category::Intermediates);
+        let loss = softmax_xent_shard(&logits, labels, &mut dl, full_batch);
+        drop(logits);
+
+        // Arena layout: block grad tensors in block order, readout last
+        // (precomputed once in ShardArena::new).
+        let (block_grads, readout_grads) = shard.grads.split_at_mut(layout.block_tensors);
+        let mut g = self.readout.shard_backward(&dl, &h, &mut readout_grads[0]);
+        drop(dl);
+        drop(h);
+        for idx in (0..self.blocks.len()).rev() {
+            let mask = masks.pop().expect("one mask per block");
+            let sv = saved.pop().expect("one saved state per block");
+            mask.backward(&mut g);
+            let (off, a) = (layout.offset[idx], layout.arity[idx]);
+            g = self.blocks[idx].shard_backward_residual(g, sv, &mut block_grads[off..off + a]);
+        }
+        loss
+    }
+
     /// Loss on a batch without training (drops all saved state after).
     pub fn eval_loss(&mut self, ctx_bytes: &[u8], labels: &[usize]) -> f32 {
         let logits = self.forward(ctx_bytes);
@@ -240,6 +430,100 @@ impl SpectralStack {
         }
         self.readout.clear_saved();
         self.masks.clear();
+    }
+}
+
+/// Number of fixed gradient shards per data-parallel step. Deliberately a
+/// constant: the shard structure is a function of the batch size alone
+/// (never the worker count), which is what makes sharded training
+/// bit-identical at any `--threads` value — workers merely execute a
+/// fixed set of shard jobs. Parallelism per step is capped at this many
+/// jobs; raising it trades arena memory for scaling headroom.
+pub const GRAD_SHARDS: usize = 8;
+
+/// One shard's gradient accumulation buffers — one tensor per trainable
+/// tensor, in [`Layer::for_each_param`] order (blocks, then readout).
+pub struct GradShard {
+    grads: Vec<Tensor>,
+}
+
+/// Precomputed tensor-to-block mapping of the arena (a pure function of
+/// the stack's construction): per block, how many grad tensors it owns
+/// and where they start. Computed once in [`ShardArena::new`] so the
+/// per-shard jobs never rebuild it.
+struct ShardLayout {
+    arity: Vec<usize>,
+    offset: Vec<usize>,
+    /// Total block tensors; the readout's single tensor follows them.
+    block_tensors: usize,
+}
+
+/// Pooled scratch arena for [`SpectralStack::train_step_sharded`]:
+/// [`GRAD_SHARDS`] gradient-shard buffer sets plus the per-shard loss
+/// slots, allocated **once** (tracked under the chosen category) and
+/// reused every step. Shard jobs still allocate their transient
+/// activations per pass (as the serial step does, plus a one-row dx
+/// workspace per circulant shard); the arena keeps the *accumulation*
+/// state pooled.
+pub struct ShardArena {
+    shards: Vec<GradShard>,
+    losses: Vec<f64>,
+    layout: ShardLayout,
+}
+
+impl ShardArena {
+    /// Size the arena for `stack` (shapes mirror its `for_each_param`
+    /// visit). `cat` is the memtrack category the buffers are charged to
+    /// — the trainer passes its context's
+    /// [`ExecCtx::scratch_category`].
+    pub fn new(stack: &SpectralStack, cat: Category) -> ShardArena {
+        assert!(
+            stack.supports_shard_exec(),
+            "every block needs shard support to build a shard arena"
+        );
+        let mut shapes: Vec<(usize, usize)> = Vec::new();
+        let mut arity = Vec::with_capacity(stack.blocks.len());
+        let mut offset = Vec::with_capacity(stack.blocks.len());
+        for blk in &stack.blocks {
+            let block_shapes = blk.grad_shapes();
+            offset.push(shapes.len());
+            arity.push(block_shapes.len());
+            shapes.extend(block_shapes);
+        }
+        let block_tensors = shapes.len();
+        shapes.extend(stack.readout.grad_shapes());
+        let shards = (0..GRAD_SHARDS)
+            .map(|_| GradShard {
+                grads: shapes
+                    .iter()
+                    .map(|&(r, c)| Tensor::zeros_cat(r, c, cat))
+                    .collect(),
+            })
+            .collect();
+        ShardArena {
+            shards,
+            losses: vec![0.0; GRAD_SHARDS],
+            layout: ShardLayout { arity, offset, block_tensors },
+        }
+    }
+
+    fn zero(&mut self) {
+        for sh in &mut self.shards {
+            for g in &mut sh.grads {
+                g.fill(0.0);
+            }
+        }
+        for l in &mut self.losses {
+            *l = 0.0;
+        }
+    }
+
+    /// Tracked bytes held by the arena (reported by the trainer).
+    pub fn tracked_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.grads.iter().map(|g| g.len() * 4).sum::<usize>())
+            .sum()
     }
 }
 
@@ -349,6 +633,54 @@ mod tests {
         assert_eq!(sizes, sizes2);
         assert_eq!(sizes.iter().sum::<usize>(), stack.num_trainable());
         assert_eq!(sizes.len(), 4); // 3 circulant blocks + readout
+    }
+
+    #[test]
+    fn mixed_stack_builds_and_trains() {
+        let cfg = StackConfig { d: 32, depth: 3, ctx: 4, seed: 6, ..Default::default() };
+        let methods = [
+            Method::FullFinetune,
+            Method::Lora { rank: 4 },
+            Method::Circulant { backend: Backend::RdFft, p: 8 },
+        ];
+        let mut stack = SpectralStack::new_mixed(cfg, &methods);
+        assert!(stack.supports_shard_exec());
+        let mut bank = OptimizerBank::new(OptimKind::Sgd, 0.3);
+        let (bytes, labels) = batch(8, 4, 13);
+        let first = stack.train_step(&bytes, &labels, &mut bank);
+        let mut last = first;
+        for _ in 0..60 {
+            last = stack.train_step(&bytes, &labels, &mut bank);
+        }
+        assert!(last < first * 0.8, "mixed stack must train: {first} -> {last}");
+    }
+
+    #[test]
+    fn sharded_step_tracks_classic_step_closely() {
+        // Shard accumulation regroups float sums, so classic vs sharded
+        // agree to float noise (bitwise identity is across thread counts,
+        // asserted in rust/tests/parallel_training.rs).
+        let cfg = StackConfig { d: 32, depth: 2, ctx: 4, seed: 8, ..Default::default() };
+        let mut classic = SpectralStack::new(cfg.clone());
+        let exec = ExecCtx::with_threads(2);
+        let mut sharded = SpectralStack::with_exec(cfg, exec.clone());
+        let mut arena = ShardArena::new(&sharded, exec.scratch_category());
+        let mut bank_c = OptimizerBank::new(OptimKind::Sgd, 0.2);
+        let mut bank_s = OptimizerBank::new(OptimKind::Sgd, 0.2);
+        for step in 0..4 {
+            let (bytes, labels) = batch(16, 4, 40 + step);
+            let lc = classic.train_step(&bytes, &labels, &mut bank_c);
+            let ls = sharded.train_step_sharded(&bytes, &labels, &mut bank_s, &mut arena);
+            assert!((lc - ls).abs() < 1e-4, "step {step}: {lc} vs {ls}");
+        }
+        let mut pc = Vec::new();
+        classic.for_each_param(&mut |p, _| pc.extend_from_slice(p));
+        let mut ps = Vec::new();
+        sharded.for_each_param(&mut |p, _| ps.extend_from_slice(p));
+        assert_eq!(pc.len(), ps.len());
+        for i in 0..pc.len() {
+            assert!((pc[i] - ps[i]).abs() < 1e-4, "param {i}: {} vs {}", pc[i], ps[i]);
+        }
     }
 
     #[test]

@@ -191,27 +191,44 @@ pub fn relu_backward_inplace(g: &mut Tensor, y: &Tensor) {
 /// Softmax cross-entropy over logits `[b, classes]` with integer labels.
 /// Returns mean loss; writes `d(loss)/d(logits)` into `grad` (same shape).
 pub fn softmax_xent(logits: &Tensor, labels: &[usize], grad: &mut Tensor) -> f32 {
+    let b = logits.rows;
+    (softmax_xent_shard(logits, labels, grad, b) / b as f64) as f32
+}
+
+/// [`softmax_xent`] over one *shard* of a larger batch: row gradients are
+/// scaled by `1/denom` — the **full** batch size, so shard gradients
+/// compose exactly with the serial step's — and the return value is the
+/// shard's f64 row-loss **sum**, not yet divided, so shard losses can be
+/// combined by a deterministic fixed-order reduction before the single
+/// division. `softmax_xent` is this with `denom = rows` (same float ops).
+pub fn softmax_xent_shard(
+    logits: &Tensor,
+    labels: &[usize],
+    grad: &mut Tensor,
+    denom: usize,
+) -> f64 {
     assert_eq!(labels.len(), logits.rows);
     assert_eq!(grad.rows, logits.rows);
     assert_eq!(grad.cols, logits.cols);
+    assert!(denom >= logits.rows, "denom is the full batch size");
     let b = logits.rows;
     let mut loss = 0.0f64;
     for i in 0..b {
         let row = logits.row(i);
         let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0.0f64;
+        let mut denom_z = 0.0f64;
         for &v in row {
-            denom += ((v - maxv) as f64).exp();
+            denom_z += ((v - maxv) as f64).exp();
         }
-        let logz = denom.ln() + maxv as f64;
+        let logz = denom_z.ln() + maxv as f64;
         loss += logz - row[labels[i]] as f64;
         let grow = grad.row_mut(i);
         for (j, g) in grow.iter_mut().enumerate() {
             let p = (((row[j] as f64) - logz).exp()) as f32;
-            *g = (p - if j == labels[i] { 1.0 } else { 0.0 }) / b as f32;
+            *g = (p - if j == labels[i] { 1.0 } else { 0.0 }) / denom as f32;
         }
     }
-    (loss / b as f64) as f32
+    loss
 }
 
 /// Tiny deterministic RNG (xorshift64*), used everywhere randomness is

@@ -24,11 +24,38 @@ impl Method {
     }
 
     pub fn build(&self, d: usize, seed: u64) -> Box<dyn Layer> {
+        self.build_with(d, seed, &crate::runtime::pool::ExecCtx::global())
+    }
+
+    /// True when square layers built from this method implement the
+    /// replica-free shard hooks ([`Layer::supports_shard_exec`]) — lets
+    /// the trainer decide on data-parallel mode *before* constructing a
+    /// model or spawning a pool. Only the out-of-place circulant
+    /// backends lack the hooks.
+    pub fn supports_shard_exec(&self) -> bool {
+        !matches!(
+            self,
+            Method::Circulant { backend: Backend::Fft | Backend::Rfft, .. }
+        )
+    }
+
+    /// [`Method::build`] with an explicit execution context installed
+    /// into the layer (the circulant layer dispatches every engine call
+    /// on it; the dense/LoRA layers are pure matmuls today and carry no
+    /// context of their own).
+    pub fn build_with(
+        &self,
+        d: usize,
+        seed: u64,
+        exec: &crate::runtime::pool::ExecCtx,
+    ) -> Box<dyn Layer> {
         match *self {
             Method::FullFinetune => Box::new(Dense::new(d, d, seed)),
             Method::Lora { rank } => Box::new(Lora::new(d, d, rank, seed)),
             Method::Circulant { backend, p } => {
-                Box::new(CirculantLayer::new(backend, d, d, p, seed))
+                let mut layer = CirculantLayer::new(backend, d, d, p, seed);
+                layer.set_exec(exec.clone());
+                Box::new(layer)
             }
         }
     }

@@ -80,34 +80,65 @@ fn stats_from(mut samples: Vec<f64>) -> Stats {
 /// `BENCH_rdfft.json` (schema documented in EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone)]
 pub struct BenchRecord {
-    /// Execution mode: `"scalar"`, `"batch_major"`, or `"batch_threads"`.
+    /// Execution mode: `"scalar"`, `"batch_major"`, `"batch_threads"`,
+    /// `"circulant_unfused"`, `"circulant_fused"`, or the pool grid's
+    /// `"batch_scoped"` / `"batch_pool"` / `"circulant_fused_scoped"` /
+    /// `"circulant_fused_pool"`.
     pub mode: String,
     /// Transform size.
     pub n: usize,
     /// Rows per call.
     pub batch: usize,
+    /// Thread lanes the mode was pinned to (`0` = auto / not pinned —
+    /// the pre-pool modes).
+    pub threads: usize,
     /// Stats over the timed closure (one fwd+inv roundtrip of the batch).
     pub stats: Stats,
     /// Transforms per second: `2 * batch / median_seconds`.
     pub transforms_per_sec: f64,
     /// Throughput relative to the scalar row loop at the same (n, batch).
+    /// `circulant_fused` rows carry fused-vs-unfused; `*_pool` rows carry
+    /// pool-vs-scoped at the same thread count.
     pub speedup_vs_scalar: f64,
 }
 
-/// Write engine benchmark records as JSON (hand-rolled: serde is
-/// unavailable offline; the reader side is `runtime::json`).
-pub fn write_bench_json(path: &std::path::Path, records: &[BenchRecord]) -> std::io::Result<()> {
+/// One acceptance gate evaluated by the engine bench, serialized next to
+/// the records so CI (and the PR driver) can read pass/fail without
+/// re-parsing the grid.
+#[derive(Debug, Clone)]
+pub struct BenchGate {
+    /// e.g. `"pool_vs_scoped_batch"`.
+    pub name: String,
+    pub threads: usize,
+    pub n: usize,
+    pub batch: usize,
+    /// Measured ratio (higher is better).
+    pub ratio: f64,
+    /// Acceptance target for the ratio.
+    pub target: f64,
+    pub pass: bool,
+}
+
+/// Write engine benchmark records + gates as JSON, schema
+/// `bench_rdfft/v2` (hand-rolled: serde is unavailable offline; the
+/// reader side is `runtime::json`).
+pub fn write_bench_json(
+    path: &std::path::Path,
+    records: &[BenchRecord],
+    gates: &[BenchGate],
+) -> std::io::Result<()> {
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"bench_rdfft/v1\",\n  \"records\": [\n");
+    s.push_str("{\n  \"schema\": \"bench_rdfft/v2\",\n  \"records\": [\n");
     for (i, r) in records.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"mode\": \"{}\", \"n\": {}, \"batch\": {}, \
+            "    {{\"mode\": \"{}\", \"n\": {}, \"batch\": {}, \"threads\": {}, \
              \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"p10_ns\": {:.1}, \
              \"p90_ns\": {:.1}, \"iters\": {}, \"transforms_per_sec\": {:.1}, \
              \"speedup_vs_scalar\": {:.3}}}{}\n",
             r.mode,
             r.n,
             r.batch,
+            r.threads,
             r.stats.median_ns,
             r.stats.mean_ns,
             r.stats.p10_ns,
@@ -116,6 +147,21 @@ pub fn write_bench_json(path: &std::path::Path, records: &[BenchRecord]) -> std:
             r.transforms_per_sec,
             r.speedup_vs_scalar,
             if i + 1 == records.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ],\n  \"gates\": [\n");
+    for (i, g) in gates.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"threads\": {}, \"n\": {}, \"batch\": {}, \
+             \"ratio\": {:.3}, \"target\": {:.3}, \"pass\": {}}}{}\n",
+            g.name,
+            g.threads,
+            g.n,
+            g.batch,
+            g.ratio,
+            g.target,
+            g.pass,
+            if i + 1 == gates.len() { "" } else { "," },
         ));
     }
     s.push_str("  ]\n}\n");
@@ -180,25 +226,41 @@ mod tests {
     #[test]
     fn bench_json_roundtrips_through_parser() {
         let rec = BenchRecord {
-            mode: "batch_major".into(),
+            mode: "batch_pool".into(),
             n: 256,
             batch: 8,
+            threads: 4,
             stats: Stats { mean_ns: 10.0, median_ns: 9.0, p10_ns: 8.0, p90_ns: 12.0, iters: 5 },
             transforms_per_sec: 1.6e9,
             speedup_vs_scalar: 2.25,
+        };
+        let gate = BenchGate {
+            name: "pool_vs_scoped_batch".into(),
+            threads: 4,
+            n: 4096,
+            batch: 32,
+            ratio: 1.31,
+            target: 1.15,
+            pass: true,
         };
         let dir = std::env::temp_dir()
             .join(format!("rdfft_benchjson_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("BENCH_rdfft.json");
-        write_bench_json(&path, &[rec.clone(), rec]).unwrap();
+        write_bench_json(&path, &[rec.clone(), rec], &[gate]).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let v = crate::runtime::json::parse(&text).expect("valid json");
-        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_rdfft/v1"));
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_rdfft/v2"));
         let recs = v.get("records").unwrap().as_arr().unwrap();
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].get("n").unwrap().as_usize(), Some(256));
-        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("batch_major"));
+        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("batch_pool"));
+        assert_eq!(recs[0].get("threads").unwrap().as_usize(), Some(4));
         assert!((recs[0].get("speedup_vs_scalar").unwrap().as_f64().unwrap() - 2.25).abs() < 1e-9);
+        let gates = v.get("gates").unwrap().as_arr().unwrap();
+        assert_eq!(gates.len(), 1);
+        assert_eq!(gates[0].get("name").unwrap().as_str(), Some("pool_vs_scoped_batch"));
+        assert_eq!(gates[0].get("pass").unwrap().as_bool(), Some(true));
+        assert!((gates[0].get("ratio").unwrap().as_f64().unwrap() - 1.31).abs() < 1e-9);
     }
 }

@@ -323,21 +323,27 @@ pub fn optim_ablation() {
 }
 
 /// Batch-engine ablation: scalar per-row loop vs batch-major engine vs
-/// batch-major + scoped threads, over (n × batch), plus the circulant
-/// fused-vs-unfused pipeline comparison (the tentpole's acceptance
-/// rows). Each timed closure is one forward+inverse roundtrip of the
-/// whole batch (keeps values bounded across iterations). Prints the grid
-/// and writes the machine-readable records to `BENCH_rdfft.json` (schema
-/// in EXPERIMENTS.md §Perf).
+/// batch-major + threads, over (n × batch), the circulant
+/// fused-vs-unfused pipeline comparison, and the persistent-pool vs
+/// per-call scoped-thread scaling grid (threads ∈ {1, 2, 4} at
+/// n = 4096, batch = 32 — the `*_pool` acceptance rows, with the
+/// ≥ 1.15× pool-vs-scoped gate emitted into the JSON). Each timed
+/// closure is one forward+inverse roundtrip of the whole batch (keeps
+/// values bounded across iterations). Prints the grids and writes the
+/// machine-readable records + gates to `BENCH_rdfft.json` (schema v2 in
+/// EXPERIMENTS.md §Perf).
 ///
-/// Returns `false` when a gate failed — the single-row latency gate
-/// (engine batch=1 slower than the scalar path beyond measurement
-/// slack) or the fused-circulant gate (fused sweep slower than the
-/// unfused three-pass pipeline on a ≥ 8 Ki-element cell) — so bench
+/// Returns `false` when a hard gate failed — the single-row latency
+/// gate (engine batch=1 slower than the scalar path beyond measurement
+/// slack), the fused-circulant gate (fused sweep slower than the
+/// unfused three-pass pipeline on a ≥ 8 Ki-element cell), or the pool
+/// outright regressing below the scoped path at threads = 4 — so bench
 /// binaries can exit non-zero instead of burying a `REGRESSED` cell in
-/// the log.
+/// the log. The 1.15× pool target itself is reported in the `gates`
+/// array (pass/fail), not hard-gated: shared CI boxes are too noisy.
 pub fn bench_rdfft_engine(fast: bool) -> bool {
-    use crate::coordinator::benchlib::{write_bench_json, BenchRecord};
+    use crate::coordinator::benchlib::{write_bench_json, BenchGate, BenchRecord};
+    use crate::runtime::pool::ExecCtx;
     use crate::rdfft::engine::{self, EngineConfig, SpectralOp};
     use crate::rdfft::forward::rdfft_batch_scalar;
     use crate::rdfft::inverse::irdfft_batch_scalar;
@@ -347,6 +353,9 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
     let ns = [256usize, 1024, 4096];
     let batches: &[usize] = if fast { &[1, 8] } else { &[1, 8, 32] };
     let serial = EngineConfig::serial();
+    // Pre-build the grid's plans as parallel pool jobs so no timed cell
+    // pays first-use plan construction.
+    crate::rdfft::plan::warm_cache(&ns, &ExecCtx::global());
 
     println!("# rdFFT batch engine — fwd+inv roundtrip, median ns per row-transform\n");
     println!(
@@ -416,6 +425,7 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
                     mode: mode.to_string(),
                     n,
                     batch: b,
+                    threads: 0,
                     transforms_per_sec: tps(&stats),
                     stats,
                     speedup_vs_scalar: speedup,
@@ -476,6 +486,7 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
                     mode: mode.to_string(),
                     n,
                     batch: b,
+                    threads: 0,
                     transforms_per_sec: tps(&stats),
                     stats,
                     speedup_vs_scalar: speedup,
@@ -483,15 +494,141 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
             }
         }
     }
+    // ------------------------------------------------------------------
+    // Persistent pool vs per-call scoped threads — the thread-scaling
+    // grid at the tentpole's acceptance cell (n = 4096, batch = 32),
+    // threads ∈ {1, 2, 4}. Scoped rows pay a fresh std::thread::scope
+    // spawn per call (the pre-pool behaviour, kept as the oracle); pool
+    // rows dispatch the same chunks as jobs on parked workers.
+    // `speedup_vs_scalar` on `*_pool` rows carries pool-vs-scoped at
+    // equal thread count — the ≥ 1.15× acceptance ratio at threads = 4.
+    // ------------------------------------------------------------------
+    let mut gates: Vec<BenchGate> = Vec::new();
+    {
+        let (pn, pb) = (4096usize, 32usize);
+        let pplan = cached(pn);
+        let mut pbuf: Vec<f32> =
+            (0..pn * pb).map(|i| ((i * 29 + 13) % 97) as f32 / 48.0 - 1.0).collect();
+        let mut pspec = vec![0.0f32; pn];
+        pspec[0] = 1.0;
+        rdfft::rdfft_inplace(&pplan, &mut pspec);
+        println!(
+            "\n# persistent pool vs per-call scoped threads — n={pn}, batch={pb}, \
+             fwd+inv roundtrip (batch) and fused circulant apply, ns/row"
+        );
+        println!(
+            "{:<8}{:>14}{:>12}{:>8}{:>14}{:>12}{:>8}",
+            "threads", "scoped", "pool", "pool×", "f-scoped", "f-pool", "pool×"
+        );
+        for &t in &[1usize, 2, 4] {
+            let cfg_t = EngineConfig { max_threads: t, ..EngineConfig::new() };
+            let ctx_t = ExecCtx::with_threads(t);
+            let s_scoped = bench(budget, || {
+                engine::forward_batch_scoped(&pplan, &mut pbuf, &cfg_t);
+                engine::inverse_batch_scoped(&pplan, &mut pbuf, &cfg_t);
+                std::hint::black_box(&pbuf[0]);
+            });
+            let s_pool = bench(budget, || {
+                engine::forward_batch_ctx(&pplan, &mut pbuf, &ctx_t);
+                engine::inverse_batch_ctx(&pplan, &mut pbuf, &ctx_t);
+                std::hint::black_box(&pbuf[0]);
+            });
+            let f_scoped = bench(budget, || {
+                engine::circulant_apply_batch_scoped(
+                    &pplan, &mut pbuf, &pspec, SpectralOp::Mul, &cfg_t,
+                );
+                std::hint::black_box(&pbuf[0]);
+            });
+            let f_pool = bench(budget, || {
+                engine::circulant_apply_batch_ctx(
+                    &pplan, &mut pbuf, &pspec, SpectralOp::Mul, &ctx_t,
+                );
+                std::hint::black_box(&pbuf[0]);
+            });
+            let bx = s_scoped.median_ns / s_pool.median_ns.max(1.0);
+            let fx = f_scoped.median_ns / f_pool.median_ns.max(1.0);
+            println!(
+                "{:<8}{:>14.0}{:>12.0}{:>8.2}{:>14.0}{:>12.0}{:>8.2}",
+                t,
+                s_scoped.median_ns / (2.0 * pb as f64),
+                s_pool.median_ns / (2.0 * pb as f64),
+                bx,
+                f_scoped.median_ns / pb as f64,
+                f_pool.median_ns / pb as f64,
+                fx
+            );
+            let ptps = |s: &crate::coordinator::benchlib::Stats| {
+                2.0 * pb as f64 / (s.median_ns.max(1.0) / 1e9)
+            };
+            for (mode, stats, speedup) in [
+                ("batch_scoped", s_scoped, 1.0),
+                ("batch_pool", s_pool, bx),
+                ("circulant_fused_scoped", f_scoped, 1.0),
+                ("circulant_fused_pool", f_pool, fx),
+            ] {
+                records.push(BenchRecord {
+                    mode: mode.to_string(),
+                    n: pn,
+                    batch: pb,
+                    threads: t,
+                    transforms_per_sec: ptps(&stats),
+                    stats,
+                    speedup_vs_scalar: speedup,
+                });
+            }
+            if t == 4 {
+                // The acceptance gate (emitted into BENCH_rdfft.json):
+                // pool ≥ 1.15× the per-call scoped path at threads = 4.
+                // `pass` records the target honestly; only a clear
+                // regression (< 0.85×, i.e. beyond the same noise band
+                // that keeps 1.15× advisory) hard-fails the bench —
+                // shared CI boxes routinely wobble a true ~1.1× ratio
+                // a few percent either side of 1.0.
+                for (name, ratio) in [
+                    ("pool_vs_scoped_batch", bx),
+                    ("pool_vs_scoped_circulant_fused", fx),
+                ] {
+                    if ratio < 0.85 {
+                        gates_ok = false;
+                    }
+                    gates.push(BenchGate {
+                        name: name.to_string(),
+                        threads: t,
+                        n: pn,
+                        batch: pb,
+                        ratio,
+                        target: 1.15,
+                        pass: ratio >= 1.15,
+                    });
+                }
+            }
+        }
+        for g in &gates {
+            println!(
+                "gate {}: ratio {:.2} (target {:.2}) -> {}",
+                g.name,
+                g.ratio,
+                g.target,
+                if g.pass { "pass" } else { "MISS" }
+            );
+        }
+    }
+
     println!(
         "\n(gates: batch-major+threads >= 2x scalar at batch >= 8 where the\n\
          work threshold engages; batch=1 must ride the spawn-free path and\n\
          stay at or below scalar latency; circulant fused× target >= 1.2\n\
-         on the grid — see EXPERIMENTS.md §Perf)"
+         on the grid; pool >= 1.15x per-call scoped threads at threads=4 —\n\
+         see EXPERIMENTS.md §Perf)"
     );
     let path = std::path::Path::new("BENCH_rdfft.json");
-    match write_bench_json(path, &records) {
-        Ok(()) => println!("wrote {} ({} records)", path.display(), records.len()),
+    match write_bench_json(path, &records, &gates) {
+        Ok(()) => println!(
+            "wrote {} ({} records, {} gates)",
+            path.display(),
+            records.len(),
+            gates.len()
+        ),
         Err(e) => eprintln!("failed to write {}: {e}", path.display()),
     }
     gates_ok

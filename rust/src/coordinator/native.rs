@@ -11,9 +11,10 @@
 //! evidence for the multi-layer case.
 
 use crate::autograd::optim::{OptimKind, OptimizerBank};
-use crate::autograd::stack::{SpectralStack, StackConfig};
+use crate::autograd::stack::{ShardArena, SpectralStack, StackConfig};
 use crate::data::{Batcher, CorpusGen};
 use crate::memtrack::{self, Category, Snapshot};
+use crate::runtime::pool::ExecCtx;
 use anyhow::Result;
 use std::io::Write;
 use std::path::PathBuf;
@@ -34,6 +35,12 @@ pub struct NativeTrainerConfig {
     pub log_csv: Option<PathBuf>,
     /// Print progress lines at eval points.
     pub verbose: bool,
+    /// Data-parallel worker lanes. `0` = the classic serial step;
+    /// `N >= 1` = the sharded step on a dedicated `ExecCtx` with `N`
+    /// lanes (`N - 1` pool workers + the submitting thread). The shard
+    /// structure is fixed, so every `N >= 1` produces **bit-identical**
+    /// losses and parameters — `N` only changes wall-clock.
+    pub threads: usize,
 }
 
 impl Default for NativeTrainerConfig {
@@ -50,6 +57,7 @@ impl Default for NativeTrainerConfig {
             seed: 0,
             log_csv: None,
             verbose: true,
+            threads: 0,
         }
     }
 }
@@ -78,6 +86,8 @@ pub struct NativeReport {
     pub peak_by_cat: [usize; 5],
     pub trainable_params: usize,
     pub optimizer_state_bytes: usize,
+    /// Data-parallel lanes the run used (0 = classic serial step).
+    pub threads: usize,
 }
 
 impl NativeReport {
@@ -106,6 +116,12 @@ pub struct NativeTrainer {
     cfg: NativeTrainerConfig,
     stack: SpectralStack,
     bank: OptimizerBank,
+    /// `Some` when the run is data-parallel: the dedicated context whose
+    /// pool the shard jobs run on ...
+    exec: Option<ExecCtx>,
+    /// ... and the pooled gradient-shard arena (allocated once, tracked
+    /// under `Gradients`, reused every step).
+    arena: Option<ShardArena>,
 }
 
 impl NativeTrainer {
@@ -123,9 +139,24 @@ impl NativeTrainer {
              drop tracked tensors/operators before constructing one"
         );
         memtrack::reset();
-        let stack = SpectralStack::new(cfg.stack.clone());
+        // Decide on data-parallel mode BEFORE building anything: a method
+        // without shard support (fft/rfft circulant backends) falls back
+        // to the classic serial step without ever spawning pool workers.
+        let parallel = cfg.threads > 0 && cfg.stack.method.supports_shard_exec();
+        let (stack, exec) = if parallel {
+            // One ExecCtx governs the whole run: the blocks' engine
+            // dispatch and the trainer's shard fan-out share its pool;
+            // shard-arena scratch is charged to Gradients.
+            let exec =
+                ExecCtx::with_threads(cfg.threads).with_category(Category::Gradients);
+            (SpectralStack::with_exec(cfg.stack.clone(), exec.clone()), Some(exec))
+        } else {
+            (SpectralStack::new(cfg.stack.clone()), None)
+        };
+        let arena =
+            exec.as_ref().map(|e| ShardArena::new(&stack, e.scratch_category()));
         let bank = OptimizerBank::new(cfg.optim, cfg.lr);
-        NativeTrainer { cfg, stack, bank }
+        NativeTrainer { cfg, stack, bank, exec, arena }
     }
 
     pub fn stack(&self) -> &SpectralStack {
@@ -137,6 +168,7 @@ impl NativeTrainer {
         let cfg = self.cfg.clone();
         let ctx = cfg.stack.ctx;
         let method = cfg.stack.method.label();
+        let threads = self.exec.as_ref().map(|e| e.threads()).unwrap_or(0);
         if cfg.verbose {
             println!(
                 "[train-native] method={method} d={} depth={} ctx={ctx} optim={} lr={} | {} trainable params",
@@ -146,6 +178,23 @@ impl NativeTrainer {
                 cfg.lr,
                 self.stack.num_trainable(),
             );
+            if threads > 0 {
+                let arena_kib = self
+                    .arena
+                    .as_ref()
+                    .map(|a| a.tracked_bytes() / 1024)
+                    .unwrap_or(0);
+                println!(
+                    "[train-native] data-parallel: {threads} lane(s), fixed-shard \
+                     deterministic reduction ({arena_kib} KiB grad-shard arena)"
+                );
+            } else if cfg.threads > 0 {
+                println!(
+                    "[train-native] --threads {} requested but a block lacks shard \
+                     support (fft/rfft backends are out-of-place); using the serial step",
+                    cfg.threads
+                );
+            }
         }
         let text = CorpusGen::new(cfg.seed).text(cfg.corpus_bytes);
         // try_new: a corpus too small for the context window is a typed,
@@ -181,7 +230,14 @@ impl NativeTrainer {
             // Typed BatchError surfaces as a clean CLI failure on tiny
             // corpora instead of a panic inside the sampler.
             let (ctxs, labels) = batcher.next_context_batch(ctx)?;
-            let loss = self.stack.train_step(&ctxs, &labels, &mut self.bank);
+            // The sharded step fans out on the stack's own ExecCtx (the
+            // trainer installed it at construction).
+            let loss = match self.arena.as_mut() {
+                Some(arena) => self
+                    .stack
+                    .train_step_sharded(&ctxs, &labels, &mut self.bank, arena),
+                None => self.stack.train_step(&ctxs, &labels, &mut self.bank),
+            };
             tokens_seen += cfg.batch * ctx;
             losses.push((step, loss));
             let snap = memtrack::snapshot();
@@ -248,6 +304,7 @@ impl NativeTrainer {
             peak_by_cat: snap.peak_by_cat,
             trainable_params: self.stack.num_trainable(),
             optimizer_state_bytes: self.bank.state_bytes(),
+            threads,
         })
     }
 }
@@ -274,6 +331,7 @@ pub fn measure_native_run(
         seed: 7,
         log_csv: None,
         verbose: false,
+        threads: 0,
     };
     let mut t = NativeTrainer::new(cfg);
     t.run().expect("native run cannot fail: no CSV path and a 32 KiB corpus")
@@ -323,6 +381,57 @@ mod tests {
             3,
         );
         assert_eq!(adam.optimizer_state_bytes, 2 * adam.trainable_params * 4);
+    }
+
+    #[test]
+    fn threaded_run_bit_identical_to_single_lane() {
+        let mk = |threads: usize| NativeTrainerConfig {
+            stack: small_stack(Method::Circulant { backend: Backend::RdFft, p: 8 }),
+            optim: OptimKind::Sgd,
+            lr: 0.2,
+            steps: 10,
+            batch: 8,
+            eval_every: 0,
+            eval_batches: 0,
+            corpus_bytes: 16 * 1024,
+            seed: 5,
+            log_csv: None,
+            verbose: false,
+            threads,
+        };
+        let r1 = {
+            let mut t = NativeTrainer::new(mk(1));
+            t.run().unwrap()
+        };
+        let r2 = {
+            let mut t = NativeTrainer::new(mk(2));
+            t.run().unwrap()
+        };
+        assert_eq!(r2.threads, 2);
+        assert_eq!(r1.threads, 1);
+        assert_eq!(r1.losses, r2.losses, "loss curves must be bit-identical");
+        assert_eq!(r1.final_loss.to_bits(), r2.final_loss.to_bits());
+    }
+
+    #[test]
+    fn unsupported_backend_falls_back_to_serial_step() {
+        // fft backend has no shard hooks: --threads must degrade
+        // gracefully to the classic step, not panic.
+        let cfg = NativeTrainerConfig {
+            stack: small_stack(Method::Circulant { backend: Backend::Fft, p: 8 }),
+            steps: 3,
+            batch: 4,
+            eval_every: 0,
+            eval_batches: 0,
+            corpus_bytes: 16 * 1024,
+            verbose: false,
+            threads: 2,
+            ..Default::default()
+        };
+        let mut t = NativeTrainer::new(cfg);
+        let r = t.run().unwrap();
+        assert_eq!(r.threads, 0, "fallback must report the serial step");
+        assert_eq!(r.losses.len(), 3);
     }
 
     #[test]

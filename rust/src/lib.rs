@@ -24,9 +24,12 @@
 //!   end-to-end training example.
 //! * [`data`] — synthetic corpus / classification data generators and
 //!   batching used by the coordinator.
-//! * [`runtime`] — PJRT CPU client wrapper that loads the AOT-compiled HLO
-//!   artifacts produced by `python/compile/aot.py` (the L2 JAX model with
-//!   the L1 Pallas rdFFT kernel inside) and executes them from Rust.
+//! * [`runtime`] — the execution runtime: the persistent worker pool +
+//!   [`runtime::pool::ExecCtx`] handle every threaded compute path
+//!   dispatches through (engine → layers → trainer), plus the PJRT CPU
+//!   client wrapper that loads the AOT-compiled HLO artifacts produced by
+//!   `python/compile/aot.py` (the L2 JAX model with the L1 Pallas rdFFT
+//!   kernel inside) and executes them from Rust.
 //! * [`coordinator`] — the L3 training orchestrator: training loop, metrics,
 //!   evaluation, and the experiment drivers that regenerate every table and
 //!   figure of the paper.

@@ -57,8 +57,17 @@ impl Args {
         self.flags.iter().find(|(n, _)| n == name).and_then(|(_, v)| v.as_deref())
     }
 
-    fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Numeric flag with parse-or-fail semantics: an absent flag yields
+    /// the default, but a present-without-value or malformed one is a
+    /// user error — never a silent fallback that trains the wrong run.
+    fn get_num(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.iter().find(|(n, _)| n == name) {
+            None => Ok(default),
+            Some((_, Some(v))) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+            Some((_, None)) => anyhow::bail!("--{name} expects a number"),
+        }
     }
 }
 
@@ -74,6 +83,8 @@ fn usage() -> ! {
                     [--batch B=16] [--p P=16] [--method circulant|dense|lora]\n\
                     [--backend ours|fft|rfft] [--optim sgd|momentum|adam]\n\
                     [--lr F] [--csv FILE] [--seed S=0] [--eval-every N=25]\n\
+                    [--threads T]  data-parallel step on a persistent\n\
+                    worker pool (T lanes; bit-identical losses for any T)\n\
                     [--max-peak-mib M]  (exits non-zero if loss fails to\n\
                     drop or the memtrack peak exceeds M)\n\
            table-native  native multi-layer peak-memory grid [--fast]\n\
@@ -94,9 +105,9 @@ fn usage() -> ! {
 fn cmd_train(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let cfg = TrainerConfig {
-        steps: args.get_usize("steps", 300),
-        eval_every: args.get_usize("eval-every", 50),
-        seed: args.get_usize("seed", 0) as u64,
+        steps: args.get_num("steps", 300)?,
+        eval_every: args.get_num("eval-every", 50)?,
+        seed: args.get_num("seed", 0)? as u64,
         log_csv: args.get("csv").map(PathBuf::from),
         checkpoint: args.get("ckpt").map(PathBuf::from),
         ..Default::default()
@@ -120,12 +131,12 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         "rfft" => Backend::Rfft,
         other => bail!("unknown backend {other:?} (ours|fft|rfft)"),
     };
-    let d = args.get_usize("d", 64);
-    let p = args.get_usize("p", 16);
+    let d = args.get_num("d", 64)?;
+    let p = args.get_num("p", 16)?;
     let method = match args.get("method").unwrap_or("circulant") {
         "circulant" => Method::Circulant { backend, p },
         "dense" | "full" => Method::FullFinetune,
-        "lora" => Method::Lora { rank: args.get_usize("rank", 8) },
+        "lora" => Method::Lora { rank: args.get_num("rank", 8)? },
         other => bail!("unknown method {other:?} (circulant|dense|lora)"),
     };
     if let Method::Circulant { p, .. } = method {
@@ -148,23 +159,27 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         None => default_lr,
     };
     // One --seed drives both model init and the corpus/batch stream.
-    let seed = args.get_usize("seed", 0) as u64;
+    let seed = args.get_num("seed", 0)? as u64;
+    // Absent --threads = serial step; a present-but-malformed lane count
+    // is a user error (get_num), never "serial silently".
+    let threads = args.get_num("threads", 0)?;
     let cfg = NativeTrainerConfig {
         stack: StackConfig {
             d,
-            depth: args.get_usize("depth", 2),
-            ctx: args.get_usize("ctx", 8),
+            depth: args.get_num("depth", 2)?,
+            ctx: args.get_num("ctx", 8)?,
             method,
             seed,
             ..Default::default()
         },
         optim,
         lr,
-        steps: args.get_usize("steps", 150),
-        batch: args.get_usize("batch", 16),
-        eval_every: args.get_usize("eval-every", 25),
+        steps: args.get_num("steps", 150)?,
+        batch: args.get_num("batch", 16)?,
+        eval_every: args.get_num("eval-every", 25)?,
         seed,
         log_csv: args.get("csv").map(PathBuf::from),
+        threads,
         ..Default::default()
     };
     let mut trainer = NativeTrainer::new(cfg);
@@ -213,7 +228,7 @@ fn main() -> Result<()> {
         "table2" => experiments::table2(),
         "table3" => experiments::table3(),
         "table4" => experiments::table4(args.has("fast")),
-        "fig2" => experiments::fig2(args.get_usize("d", 1024), args.has("fast")),
+        "fig2" => experiments::fig2(args.get_num("d", 1024)?, args.has("fast")),
         "audit" => experiments::alloc_audit(),
         "optim" => experiments::optim_ablation(),
         "engine" => {

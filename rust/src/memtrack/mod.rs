@@ -10,6 +10,11 @@
 //! `torch.cuda.max_memory_allocated` + a category breakdown gives.
 //!
 //! Tracking is thread-local so `cargo test` threads do not interfere.
+//! Pool worker threads are the one sanctioned crossing: each job's
+//! activity is captured as a [`WorkerDelta`] and merged back into the
+//! *submitting* thread's tracker when the scope completes, so threaded
+//! execution never hides scratch from the peak accounting (see
+//! `runtime::pool`).
 
 use std::cell::RefCell;
 
@@ -163,6 +168,119 @@ pub fn snapshot() -> Snapshot {
             alloc_count: t.alloc_count,
         }
     })
+}
+
+/// Aggregated allocation activity of one pool job that ran on a worker
+/// thread. The tracker is thread-local, so without this mechanism any
+/// scratch a [`crate::runtime::pool::WorkerPool`] job allocates would
+/// silently vanish from the submitting thread's peak accounting. Workers
+/// capture a delta per job ([`take_job_delta`]), the scope latch collects
+/// them, and the submitting thread folds them into its own tracker at
+/// scope end ([`merge_worker_deltas`] — at most the pool's worker count
+/// of them modeled as concurrent).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WorkerDelta {
+    /// Peak total bytes the job(s) reached on the worker tracker.
+    pub peak_total: usize,
+    /// Per-category composition at that peak.
+    pub at_peak: [usize; 5],
+    /// Independent per-category peaks.
+    pub peak_by_cat: [usize; 5],
+    /// Allocations performed by the job(s).
+    pub alloc_count: usize,
+}
+
+impl WorkerDelta {
+    pub fn is_empty(&self) -> bool {
+        self.alloc_count == 0 && self.peak_total == 0
+    }
+
+    /// Fold another delta into this one as if the two were concurrent:
+    /// peaks add (keeping `at_peak` summing to `peak_total`). The scope
+    /// merge ([`merge_worker_deltas`]) applies this to at most the
+    /// pool-lane count of job deltas, so sequential jobs on one worker
+    /// don't stack.
+    pub fn absorb(&mut self, other: &WorkerDelta) {
+        self.peak_total += other.peak_total;
+        for i in 0..5 {
+            self.at_peak[i] += other.at_peak[i];
+            self.peak_by_cat[i] += other.peak_by_cat[i];
+        }
+        self.alloc_count += other.alloc_count;
+    }
+}
+
+/// Capture the calling (worker) thread's tracker as a mergeable delta and
+/// reset it for the next job. The worker resets before each job, so the
+/// captured state is exactly that job's activity. Jobs must drop every
+/// tracked buffer they allocate before returning (scoped borrows make
+/// that the natural shape); live bytes at capture time are dropped from
+/// the record.
+pub fn take_job_delta() -> WorkerDelta {
+    TRACKER.with(|t| {
+        let mut t = t.borrow_mut();
+        let d = WorkerDelta {
+            peak_total: t.peak_total,
+            at_peak: t.at_peak,
+            peak_by_cat: t.peak_by_cat,
+            alloc_count: t.alloc_count,
+        };
+        *t = Tracker::default();
+        d
+    })
+}
+
+/// Fold one scope's worker-job deltas into the calling thread's tracker,
+/// modeling at most `max_concurrent` of them (the pool's worker count) as
+/// simultaneously live: the jobs with the largest peaks form the modeled
+/// concurrent set — a worker runs its jobs sequentially, so summing
+/// *every* job's peak would overstate the footprint whenever jobs exceed
+/// lanes (e.g. 8 fixed gradient shards on 1 worker). Allocation counts
+/// are exact across all jobs regardless.
+pub fn merge_worker_deltas(deltas: &[WorkerDelta], max_concurrent: usize) {
+    if deltas.is_empty() {
+        return;
+    }
+    let mut order: Vec<usize> = (0..deltas.len()).collect();
+    order.sort_by(|&a, &b| deltas[b].peak_total.cmp(&deltas[a].peak_total));
+    let mut combined = WorkerDelta::default();
+    for (rank, &i) in order.iter().enumerate() {
+        if rank < max_concurrent.max(1) {
+            // in the modeled concurrent set: the one canonical fold
+            combined.absorb(&deltas[i]);
+        } else {
+            // sequential overflow: counted, but its peak doesn't stack
+            combined.alloc_count += deltas[i].alloc_count;
+        }
+    }
+    merge_worker_delta(&combined);
+}
+
+/// Fold a worker-side delta into the calling thread's tracker, as if the
+/// worker's transient peak had happened here on top of the current live
+/// bytes: the submitting thread was at `current` while its jobs ran, so
+/// the process-wide step peak is `current + delta.peak`.
+pub fn merge_worker_delta(d: &WorkerDelta) {
+    if d.is_empty() {
+        return;
+    }
+    TRACKER.with(|t| {
+        let mut t = t.borrow_mut();
+        t.alloc_count += d.alloc_count;
+        let cur: usize = t.current.iter().sum();
+        if cur + d.peak_total > t.peak_total {
+            t.peak_total = cur + d.peak_total;
+            for i in 0..5 {
+                t.at_peak[i] = t.current[i] + d.at_peak[i];
+            }
+        }
+        for i in 0..5 {
+            let c = t.current[i] + d.peak_by_cat[i];
+            if c > t.peak_by_cat[i] {
+                t.peak_by_cat[i] = c;
+            }
+        }
+    });
 }
 
 /// The category new tensors default to: the innermost [`ScopedCategory`],
@@ -346,6 +464,66 @@ mod tests {
         let _a = TrackedVec::zeros(8, Category::Other);
         let _b = TrackedVec::zeros(8, Category::Other);
         assert_eq!(snapshot().alloc_count, 2);
+    }
+
+    #[test]
+    fn job_delta_roundtrip_captures_and_clears() {
+        reset();
+        {
+            let _tmp = TrackedVec::zeros(256, Category::Intermediates); // 1 KiB
+        }
+        let d = take_job_delta();
+        assert_eq!(d.peak_total, 1024);
+        assert_eq!(d.at_peak[Category::Intermediates.index()], 1024);
+        assert_eq!(d.alloc_count, 1);
+        // the tracker was reset by the capture
+        assert_eq!(snapshot().peak_total, 0);
+        assert_eq!(snapshot().alloc_count, 0);
+    }
+
+    #[test]
+    fn merged_delta_stacks_on_live_bytes() {
+        reset();
+        let _live = TrackedVec::zeros(512, Category::Weights); // 2 KiB live
+        let mut d = WorkerDelta {
+            peak_total: 4096,
+            at_peak: [0, 0, 0, 4096, 0],
+            peak_by_cat: [0, 0, 0, 4096, 0],
+            alloc_count: 3,
+        };
+        // two concurrent jobs: absorb doubles the worker-side peak
+        let d2 = d;
+        d.absorb(&d2);
+        merge_worker_delta(&d);
+        let s = snapshot();
+        assert_eq!(s.peak_total, 2048 + 8192, "worker peak stacks on live bytes");
+        assert_eq!(s.at_peak[Category::Weights.index()], 2048);
+        assert_eq!(s.at_peak[Category::Intermediates.index()], 8192);
+        assert_eq!(s.peak_by_cat[Category::Intermediates.index()], 8192);
+        assert_eq!(s.alloc_count, 7, "1 live alloc + 2×3 job allocs");
+        // at_peak still sums to peak_total (report consistency invariant)
+        assert_eq!(s.at_peak.iter().sum::<usize>(), s.peak_total);
+        // empty deltas are no-ops
+        merge_worker_delta(&WorkerDelta::default());
+        assert_eq!(snapshot().peak_total, s.peak_total);
+    }
+
+    #[test]
+    fn delta_merge_caps_modeled_concurrency_at_lane_count() {
+        reset();
+        let d = |peak: usize, allocs: usize| WorkerDelta {
+            peak_total: peak,
+            at_peak: [0, 0, 0, peak, 0],
+            peak_by_cat: [0, 0, 0, peak, 0],
+            alloc_count: allocs,
+        };
+        // 4 jobs on 2 lanes: only the two largest peaks stack; every
+        // allocation is still counted.
+        merge_worker_deltas(&[d(100, 1), d(400, 1), d(200, 1), d(300, 1)], 2);
+        let s = snapshot();
+        assert_eq!(s.peak_total, 700, "top-2 peaks only (400 + 300)");
+        assert_eq!(s.alloc_count, 4);
+        assert_eq!(s.at_peak.iter().sum::<usize>(), s.peak_total);
     }
 
     #[test]

@@ -69,6 +69,13 @@ impl Circulant {
         engine::circulant_apply_batch(&self.plan, x, &self.c_hat, SpectralOp::Mul);
     }
 
+    /// [`Self::matvec_batch_inplace`] under an explicit
+    /// [`crate::runtime::pool::ExecCtx`] (that context's pool + engine
+    /// tuning; bit-identical results).
+    pub fn matvec_batch_inplace_ctx(&self, x: &mut [f32], ctx: &crate::runtime::pool::ExecCtx) {
+        engine::circulant_apply_batch_ctx(&self.plan, x, &self.c_hat, SpectralOp::Mul, ctx);
+    }
+
     /// `g := Cᵀ g` — the input-gradient product of Eq. 5
     /// (`∂L/∂x = IFFT(conj(ĉ) ⊙ FFT(g))`), fully in place, fused.
     pub fn matvec_transpose_inplace(&self, g: &mut [f32]) {

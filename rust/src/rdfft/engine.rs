@@ -23,16 +23,21 @@
 //!    to amortize twiddle loads; large stages iterate `k` innermost so the
 //!    four element streams stay stride-±1 for the autovectorizer.
 //!
-//! 3. **Scoped-thread row parallelism.** Batches above a tunable work
-//!    threshold split into contiguous row chunks under
-//!    [`std::thread::scope`] (no external crates). Thresholds are chosen
-//!    so `batch = 1` latency never pays a spawn, and every worker has
-//!    enough rows to amortize one. See `EXPERIMENTS.md` §Perf for the
-//!    measured ablation and `BENCH_rdfft.json` for the machine-readable
-//!    numbers.
+//! 3. **Pooled row parallelism.** Batches above a tunable work threshold
+//!    split into contiguous row chunks dispatched as jobs on a persistent
+//!    [`WorkerPool`] (parked OS threads, no external crates) — by default
+//!    the process-wide pool, or the one carried by an explicit
+//!    [`ExecCtx`] (`*_ctx` entry points). Thresholds are chosen so
+//!    `batch = 1` latency never touches the pool, and every worker chunk
+//!    has enough rows to amortize a wakeup. The pre-pool per-call
+//!    [`std::thread::scope`] path survives as the `*_scoped` fallback
+//!    oracle (benches compare pool-vs-scoped; tests assert bitwise
+//!    agreement). See `EXPERIMENTS.md` §Perf for the measured ablation
+//!    and `BENCH_rdfft.json` for the machine-readable numbers.
 
 use super::plan::Plan;
 use super::spectral;
+use crate::runtime::pool::{ExecCtx, WorkerPool};
 
 /// Tuning knobs for the batch engine. [`EngineConfig::default`] is what
 /// the public batch entry points use; benches and tests construct
@@ -49,7 +54,9 @@ pub struct EngineConfig {
     /// Target elements per worker chunk: the batch is split into at most
     /// `total_elems / par_chunk_elems` chunks (capped by core count).
     pub par_chunk_elems: usize,
-    /// Hard cap on worker threads. 0 = `available_parallelism()`.
+    /// Hard cap on parallel chunks per call (including the calling
+    /// thread's). 0 = `available_parallelism()`; an explicit value is
+    /// trusted as-is so `--threads N` means N on every machine.
     pub max_threads: usize,
 }
 
@@ -106,14 +113,39 @@ pub fn inverse_batch(plan: &Plan, buf: &mut [f32]) {
     inverse_batch_with(plan, buf, &EngineConfig::new());
 }
 
-/// [`forward_batch`] with explicit tuning.
+/// [`forward_batch`] with explicit tuning (dispatched on the global pool).
 pub fn forward_batch_with(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, forward_rows);
+    run_batch(plan, buf, cfg, Dispatch::global(), forward_rows);
 }
 
-/// [`inverse_batch`] with explicit tuning.
+/// [`inverse_batch`] with explicit tuning (dispatched on the global pool).
 pub fn inverse_batch_with(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, inverse_rows);
+    run_batch(plan, buf, cfg, Dispatch::global(), inverse_rows);
+}
+
+/// [`forward_batch`] under an explicit [`ExecCtx`]: that context's pool
+/// and engine tuning decide the dispatch.
+pub fn forward_batch_ctx(plan: &Plan, buf: &mut [f32], ctx: &ExecCtx) {
+    run_batch(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), forward_rows);
+}
+
+/// [`inverse_batch`] under an explicit [`ExecCtx`].
+pub fn inverse_batch_ctx(plan: &Plan, buf: &mut [f32], ctx: &ExecCtx) {
+    run_batch(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), inverse_rows);
+}
+
+/// [`forward_batch_with`] on per-call scoped threads — the pre-pool
+/// execution path, kept as the differential oracle and as the bench
+/// baseline the pool rows are judged against. Numerics are identical to
+/// the pooled path (same chunking, same kernels; only *where* a chunk
+/// runs differs).
+pub fn forward_batch_scoped(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
+    run_batch(plan, buf, cfg, Dispatch::Scoped, forward_rows);
+}
+
+/// [`inverse_batch_with`] on per-call scoped threads (fallback oracle).
+pub fn inverse_batch_scoped(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
+    run_batch(plan, buf, cfg, Dispatch::Scoped, inverse_rows);
 }
 
 // ---------------------------------------------------------------------
@@ -142,7 +174,7 @@ pub fn circulant_apply_batch(plan: &Plan, buf: &mut [f32], spec: &[f32], op: Spe
     circulant_apply_batch_with(plan, buf, spec, op, &EngineConfig::new());
 }
 
-/// [`circulant_apply_batch`] with explicit tuning.
+/// [`circulant_apply_batch`] with explicit tuning (global pool).
 pub fn circulant_apply_batch_with(
     plan: &Plan,
     buf: &mut [f32],
@@ -150,8 +182,42 @@ pub fn circulant_apply_batch_with(
     op: SpectralOp,
     cfg: &EngineConfig,
 ) {
+    circulant_apply_dispatch(plan, buf, spec, op, cfg, Dispatch::global());
+}
+
+/// [`circulant_apply_batch`] under an explicit [`ExecCtx`].
+pub fn circulant_apply_batch_ctx(
+    plan: &Plan,
+    buf: &mut [f32],
+    spec: &[f32],
+    op: SpectralOp,
+    ctx: &ExecCtx,
+) {
+    circulant_apply_dispatch(plan, buf, spec, op, ctx.engine_config(), Dispatch::from_ctx(ctx));
+}
+
+/// [`circulant_apply_batch_with`] on per-call scoped threads (fallback
+/// oracle / bench baseline).
+pub fn circulant_apply_batch_scoped(
+    plan: &Plan,
+    buf: &mut [f32],
+    spec: &[f32],
+    op: SpectralOp,
+    cfg: &EngineConfig,
+) {
+    circulant_apply_dispatch(plan, buf, spec, op, cfg, Dispatch::Scoped);
+}
+
+fn circulant_apply_dispatch(
+    plan: &Plan,
+    buf: &mut [f32],
+    spec: &[f32],
+    op: SpectralOp,
+    cfg: &EngineConfig,
+    disp: Dispatch<'_>,
+) {
     assert_eq!(spec.len(), plan.n(), "spectrum length must equal plan size");
-    run_batch(plan, buf, cfg, move |plan: &Plan, chunk: &mut [f32], tile_rows: usize| {
+    run_batch(plan, buf, cfg, disp, move |plan: &Plan, chunk: &mut [f32], tile_rows: usize| {
         circulant_rows(plan, chunk, tile_rows, spec, op);
     });
 }
@@ -189,10 +255,10 @@ pub fn block_circulant_forward_batch(
     rb: usize,
     cb: usize,
 ) {
-    block_apply(plan, x, out, specs, rb, cb, false, false, &EngineConfig::new());
+    block_apply(plan, x, out, specs, rb, cb, false, false, &EngineConfig::new(), Dispatch::global());
 }
 
-/// [`block_circulant_forward_batch`] with explicit tuning.
+/// [`block_circulant_forward_batch`] with explicit tuning (global pool).
 pub fn block_circulant_forward_batch_with(
     plan: &Plan,
     x: &mut [f32],
@@ -202,7 +268,23 @@ pub fn block_circulant_forward_batch_with(
     cb: usize,
     cfg: &EngineConfig,
 ) {
-    block_apply(plan, x, out, specs, rb, cb, false, false, cfg);
+    block_apply(plan, x, out, specs, rb, cb, false, false, cfg, Dispatch::global());
+}
+
+/// [`block_circulant_forward_batch`] under an explicit [`ExecCtx`].
+pub fn block_circulant_forward_batch_ctx(
+    plan: &Plan,
+    x: &mut [f32],
+    out: &mut [f32],
+    specs: &[f32],
+    rb: usize,
+    cb: usize,
+    ctx: &ExecCtx,
+) {
+    block_apply(
+        plan, x, out, specs, rb, cb, false, false,
+        ctx.engine_config(), Dispatch::from_ctx(ctx),
+    );
 }
 
 /// [`block_circulant_forward_batch`] with the frequency-domain residual
@@ -220,7 +302,25 @@ pub fn block_circulant_forward_residual_batch(
     cb: usize,
 ) {
     assert_eq!(rb, cb, "the freq-domain residual needs a square block layout");
-    block_apply(plan, x, out, specs, rb, cb, false, true, &EngineConfig::new());
+    block_apply(plan, x, out, specs, rb, cb, false, true, &EngineConfig::new(), Dispatch::global());
+}
+
+/// [`block_circulant_forward_residual_batch`] under an explicit
+/// [`ExecCtx`].
+pub fn block_circulant_forward_residual_batch_ctx(
+    plan: &Plan,
+    x: &mut [f32],
+    out: &mut [f32],
+    specs: &[f32],
+    rb: usize,
+    cb: usize,
+    ctx: &ExecCtx,
+) {
+    assert_eq!(rb, cb, "the freq-domain residual needs a square block layout");
+    block_apply(
+        plan, x, out, specs, rb, cb, false, true,
+        ctx.engine_config(), Dispatch::from_ctx(ctx),
+    );
 }
 
 /// Fused block-circulant **transpose** sweep (the Eq. 5 input-gradient
@@ -238,7 +338,23 @@ pub fn block_circulant_transpose_batch(
     rb: usize,
     cb: usize,
 ) {
-    block_apply(plan, g, dx, specs, rb, cb, true, false, &EngineConfig::new());
+    block_apply(plan, g, dx, specs, rb, cb, true, false, &EngineConfig::new(), Dispatch::global());
+}
+
+/// [`block_circulant_transpose_batch`] under an explicit [`ExecCtx`].
+pub fn block_circulant_transpose_batch_ctx(
+    plan: &Plan,
+    g: &mut [f32],
+    dx: &mut [f32],
+    specs: &[f32],
+    rb: usize,
+    cb: usize,
+    ctx: &ExecCtx,
+) {
+    block_apply(
+        plan, g, dx, specs, rb, cb, true, false,
+        ctx.engine_config(), Dispatch::from_ctx(ctx),
+    );
 }
 
 /// Shared fused block sweep behind the three public block entries.
@@ -256,6 +372,7 @@ fn block_apply(
     transpose: bool,
     residual: bool,
     cfg: &EngineConfig,
+    disp: Dispatch<'_>,
 ) {
     let n = plan.n();
     let (in_blocks, out_blocks) = if transpose { (rb, cb) } else { (cb, rb) };
@@ -277,34 +394,18 @@ fn block_apply(
     // samples are the split unit.
     let workers =
         planned_workers(samples * (in_blocks + out_blocks), n, cfg).min(samples);
-    let sweep = |xs: &mut [f32], os: &mut [f32]| {
+    let sweep = move |xs: &mut [f32], os: Option<&mut [f32]>| {
+        let os = os.expect("block sweep chunks always pair input with output");
         for (s_in, s_out) in xs.chunks_exact_mut(in_row).zip(os.chunks_exact_mut(out_row)) {
             block_apply_sample(plan, s_in, s_out, specs, cb, transpose, residual);
         }
     };
     if workers <= 1 {
-        sweep(input, out);
+        sweep(input, Some(out));
         return;
     }
     let chunk = (samples + workers - 1) / workers;
-    std::thread::scope(|sc| {
-        let mut rest_in = input;
-        let mut rest_out = out;
-        while rest_in.len() > chunk * in_row {
-            let (ci, ti) = std::mem::take(&mut rest_in).split_at_mut(chunk * in_row);
-            let (co, to) = std::mem::take(&mut rest_out).split_at_mut(chunk * out_row);
-            sc.spawn(move || {
-                for (s_in, s_out) in
-                    ci.chunks_exact_mut(in_row).zip(co.chunks_exact_mut(out_row))
-                {
-                    block_apply_sample(plan, s_in, s_out, specs, cb, transpose, residual);
-                }
-            });
-            rest_in = ti;
-            rest_out = to;
-        }
-        sweep(rest_in, rest_out);
-    });
+    dispatch_rows(disp, input, Some(out), chunk * in_row, chunk * out_row, sweep);
 }
 
 /// One sample of the fused block sweep: forward-stage the input blocks
@@ -346,10 +447,39 @@ fn block_apply_sample(
     inverse_rows(plan, out, out_blocks.max(1));
 }
 
-/// Shared driver: validate, decide serial vs scoped-thread execution,
-/// dispatch `kernel` over contiguous row chunks. Generic so the fused
-/// circulant pipeline can close over its spectrum without boxing.
-fn run_batch<K>(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig, kernel: K)
+/// Execution backend for one threaded engine call. The pool is the
+/// production path; per-call scoped threads are the pre-pool fallback
+/// oracle, kept for differential benches/tests.
+#[derive(Clone, Copy)]
+enum Dispatch<'a> {
+    /// Jobs on the process-wide pool, **resolved only at fan-out time**:
+    /// serial calls (below the work thresholds) never spawn it.
+    Global,
+    /// Jobs on a specific persistent [`WorkerPool`].
+    Pool(&'a WorkerPool),
+    /// One `std::thread::scope` spawn per chunk (the old behaviour).
+    Scoped,
+}
+
+impl<'a> Dispatch<'a> {
+    /// The process-wide default pool (lazy).
+    fn global() -> Dispatch<'static> {
+        Dispatch::Global
+    }
+
+    /// A context's dispatch: its dedicated pool, or the lazy global one.
+    fn from_ctx(ctx: &'a ExecCtx) -> Dispatch<'a> {
+        match ctx.dedicated_pool() {
+            Some(p) => Dispatch::Pool(p),
+            None => Dispatch::Global,
+        }
+    }
+}
+
+/// Shared driver: validate, decide serial vs parallel execution, dispatch
+/// `kernel` over contiguous row chunks. Generic so the fused circulant
+/// pipeline can close over its spectrum without boxing.
+fn run_batch<K>(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig, disp: Dispatch<'_>, kernel: K)
 where
     K: Fn(&Plan, &mut [f32], usize) + Copy + Send + Sync,
 {
@@ -360,24 +490,97 @@ where
         return;
     }
     let workers = planned_workers(rows, n, cfg);
+    let tile_rows = cfg.tile_rows;
     if workers <= 1 {
-        kernel(plan, buf, cfg.tile_rows);
+        kernel(plan, buf, tile_rows);
         return;
     }
     // Contiguous row chunks; `ceil` so the chunk count never exceeds
-    // `workers`. Scoped threads may borrow `buf` and `plan` directly.
+    // `workers`. Jobs may borrow `buf` and `plan` directly: both the
+    // pool scope and thread::scope guarantee completion before return.
     let chunk_rows = (rows + workers - 1) / workers;
-    let tile_rows = cfg.tile_rows;
-    std::thread::scope(|s| {
-        let mut rest = buf;
-        while rest.len() > chunk_rows * n {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(chunk_rows * n);
-            s.spawn(move || kernel(plan, chunk, tile_rows));
-            rest = tail;
-        }
-        // Run the final chunk on the calling thread: one fewer spawn.
-        kernel(plan, rest, tile_rows);
+    dispatch_rows(disp, buf, None, chunk_rows * n, 0, move |chunk, _| {
+        kernel(plan, chunk, tile_rows)
     });
+}
+
+/// The one chunking/dispatch loop behind every threaded engine path
+/// (deduplicating the two near-identical spawn loops `run_batch` and
+/// `block_apply` used to carry): split `input` — and, for the block
+/// sweeps, the parallel `out` buffer — into contiguous chunks of
+/// `chunk_in`/`chunk_out` elements, run all but the last chunk on the
+/// selected backend, and the final chunk on the calling thread (one
+/// fewer dispatch; on the pool path the calling thread additionally
+/// helps drain its own queued chunks while waiting).
+fn dispatch_rows<J>(
+    disp: Dispatch<'_>,
+    input: &mut [f32],
+    out: Option<&mut [f32]>,
+    chunk_in: usize,
+    chunk_out: usize,
+    job: J,
+) where
+    J: Fn(&mut [f32], Option<&mut [f32]>) + Copy + Send + Sync,
+{
+    debug_assert!(chunk_in > 0, "chunk size must be positive");
+    match disp {
+        // Resolve (and, on first use, spawn) the process-wide pool only
+        // here — a call that stays serial never reaches this point.
+        Dispatch::Global => dispatch_rows(
+            Dispatch::Pool(WorkerPool::global().as_ref()),
+            input,
+            out,
+            chunk_in,
+            chunk_out,
+            job,
+        ),
+        Dispatch::Scoped => std::thread::scope(|s| {
+            let (ri, ro) = split_chunks(input, out, chunk_in, chunk_out, |ci, co| {
+                s.spawn(move || job(ci, co));
+            });
+            job(ri, ro);
+        }),
+        Dispatch::Pool(pool) => {
+            let done = pool.scope(|sc| {
+                let (ri, ro) = split_chunks(input, out, chunk_in, chunk_out, |ci, co| {
+                    sc.submit(move || job(ci, co));
+                });
+                job(ri, ro);
+            });
+            if let Err(p) = done {
+                // Mirror thread::scope: a panicking chunk kernel panics
+                // the submitting call (the pool itself stays healthy).
+                p.resume();
+            }
+        }
+    }
+}
+
+/// The chunk-splitting walk shared by both dispatch backends (so the
+/// scoped oracle and the pool path can never drift apart in how they
+/// pair input/output chunks): hands every full chunk to `spawn` and
+/// returns the final (possibly short) chunk for the calling thread.
+fn split_chunks<'a>(
+    mut rest_in: &'a mut [f32],
+    mut rest_out: Option<&'a mut [f32]>,
+    chunk_in: usize,
+    chunk_out: usize,
+    mut spawn: impl FnMut(&'a mut [f32], Option<&'a mut [f32]>),
+) -> (&'a mut [f32], Option<&'a mut [f32]>) {
+    while rest_in.len() > chunk_in {
+        let (ci, ti) = std::mem::take(&mut rest_in).split_at_mut(chunk_in);
+        let co = match rest_out.take() {
+            Some(o) => {
+                let (co, to) = o.split_at_mut(chunk_out);
+                rest_out = Some(to);
+                Some(co)
+            }
+            None => None,
+        };
+        spawn(ci, co);
+        rest_in = ti;
+    }
+    (rest_in, rest_out)
 }
 
 /// True when a batch of `rows` length-`n` rows would split across worker
@@ -396,7 +599,11 @@ fn planned_workers(rows: usize, n: usize, cfg: &EngineConfig) -> usize {
         return 1;
     }
     let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
-    let cap = if cfg.max_threads == 0 { cores } else { cfg.max_threads.min(cores) };
+    // An explicit cap is trusted as-is (not clamped to the core count):
+    // the thread-scaling bench grid and `ExecCtx::with_threads(N)` must
+    // mean N on every machine, and chunks beyond the pool's capacity
+    // simply queue.
+    let cap = if cfg.max_threads == 0 { cores } else { cfg.max_threads };
     let by_work = (total / cfg.par_chunk_elems.max(1)).max(1);
     by_work.min(cap).min(rows)
 }
@@ -772,6 +979,63 @@ mod tests {
             inverse_batch_with(&plan, &mut threaded, &cfg);
             assert_eq!(serial, threaded, "inv n={n} b={b}");
         }
+    }
+
+    #[test]
+    fn pool_scoped_and_serial_paths_agree_bitwise() {
+        // The pool is the production dispatcher, scoped threads the
+        // fallback oracle: same chunking, same kernels, so all three
+        // execution backends must agree bit-for-bit.
+        let cfg = force_threads();
+        let ctx = crate::runtime::pool::ExecCtx::with_threads(3).with_engine_config(cfg);
+        for (n, b) in [(8usize, 5usize), (64, 13), (256, 6)] {
+            let plan = cached(n);
+            let x = rand_vec(n * b, 4242 + n as u64);
+            let mut serial = x.clone();
+            forward_batch_with(&plan, &mut serial, &EngineConfig::serial());
+            let mut scoped = x.clone();
+            forward_batch_scoped(&plan, &mut scoped, &cfg);
+            let mut pooled = x.clone();
+            forward_batch_ctx(&plan, &mut pooled, &ctx);
+            assert_eq!(serial, scoped, "fwd scoped n={n} b={b}");
+            assert_eq!(serial, pooled, "fwd pooled n={n} b={b}");
+            inverse_batch_with(&plan, &mut serial, &EngineConfig::serial());
+            inverse_batch_scoped(&plan, &mut scoped, &cfg);
+            inverse_batch_ctx(&plan, &mut pooled, &ctx);
+            assert_eq!(serial, scoped, "inv scoped n={n} b={b}");
+            assert_eq!(serial, pooled, "inv pooled n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn pooled_block_sweeps_match_default_path() {
+        let ctx = crate::runtime::pool::ExecCtx::with_threads(3)
+            .with_engine_config(force_threads());
+        let (rb, cb, n, samples) = (2usize, 2usize, 16usize, 7usize);
+        let plan = cached(n);
+        let mut specs = rand_vec(rb * cb * n, 17);
+        forward_batch(&plan, &mut specs);
+        let x0 = rand_vec(samples * cb * n, 18);
+
+        let mut x_ref = x0.clone();
+        let mut out_ref = vec![0.0f32; samples * rb * n];
+        block_circulant_forward_batch(&plan, &mut x_ref, &mut out_ref, &specs, rb, cb);
+
+        let mut x_pool = x0.clone();
+        let mut out_pool = vec![0.0f32; samples * rb * n];
+        block_circulant_forward_batch_ctx(&plan, &mut x_pool, &mut out_pool, &specs, rb, cb, &ctx);
+        assert_eq!(out_pool, out_ref);
+        assert_eq!(x_pool, x_ref);
+
+        let g0 = rand_vec(samples * rb * n, 19);
+        let mut g_ref = g0.clone();
+        let mut dx_ref = vec![0.0f32; samples * cb * n];
+        block_circulant_transpose_batch(&plan, &mut g_ref, &mut dx_ref, &specs, rb, cb);
+        let mut g_pool = g0.clone();
+        let mut dx_pool = vec![0.0f32; samples * cb * n];
+        block_circulant_transpose_batch_ctx(&plan, &mut g_pool, &mut dx_pool, &specs, rb, cb, &ctx);
+        assert_eq!(dx_pool, dx_ref);
+        assert_eq!(g_pool, g_ref);
     }
 
     #[test]

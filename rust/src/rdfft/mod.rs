@@ -45,8 +45,9 @@ pub mod twod;
 pub use circulant::{BlockCirculant, Circulant};
 pub use engine::{
     block_circulant_forward_batch, block_circulant_forward_residual_batch,
-    block_circulant_transpose_batch, circulant_apply_batch, forward_batch, inverse_batch,
-    EngineConfig, SpectralOp,
+    block_circulant_transpose_batch, circulant_apply_batch, circulant_apply_batch_ctx,
+    forward_batch, forward_batch_ctx, inverse_batch, inverse_batch_ctx, EngineConfig,
+    SpectralOp,
 };
 pub use forward::{rdfft_batch, rdfft_inplace};
 pub use inverse::{irdfft_batch, irdfft_inplace};

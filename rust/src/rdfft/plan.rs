@@ -192,11 +192,14 @@ impl Plan {
 /// Lock poisoning is recovered, not propagated: a bench/test thread that
 /// panics while touching the cache must not fail every later transform in
 /// the process (`unwrap()` on a poisoned guard would). The map holds only
-/// fully-built `Arc<Plan>`s — an entry is inserted after `Plan::new`
-/// returns — so a poisoned guard's data is always consistent and
-/// `into_inner` is safe. The size check also runs *before* any lock is
-/// taken, so the one fallible call inside the write section cannot panic
-/// mid-insert.
+/// fully-built `Arc<Plan>`s, and `Plan::new` runs *outside* any lock —
+/// both the size check and the O(n log n) construction happen before the
+/// write guard is taken, so nothing fallible runs mid-insert **and**
+/// concurrent first-time builders (the pool jobs of [`warm_cache`], cold
+/// starts racing on different sizes) construct in parallel instead of
+/// serializing on the write lock. Two threads racing on the *same* new
+/// size each build a plan; the loser's copy is dropped and the cache
+/// keeps exactly one canonical `Arc`.
 pub fn cached(n: usize) -> Arc<Plan> {
     assert!(
         super::is_supported_size(n),
@@ -207,8 +210,34 @@ pub fn cached(n: usize) -> Arc<Plan> {
     if let Some(plan) = cache.read().unwrap_or_else(|e| e.into_inner()).get(&n) {
         return plan.clone();
     }
+    let built = Arc::new(Plan::new(n));
     let mut map = cache.write().unwrap_or_else(|e| e.into_inner());
-    map.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
+    map.entry(n).or_insert(built).clone()
+}
+
+/// Pre-build plans for `sizes` as parallel jobs on `ctx`'s worker pool —
+/// startup warmup so a model's first training step never pays the
+/// O(n log n) plan constructions inside the hot loop (a depth-K stack at
+/// mixed block sizes touches several). Sizes are validated up front on
+/// the calling thread (a bad size panics here, not inside a worker);
+/// already-cached sizes are cheap cache hits, and two jobs racing on the
+/// same new size resolve benignly (`cached` keeps exactly one plan).
+pub fn warm_cache(sizes: &[usize], ctx: &crate::runtime::pool::ExecCtx) {
+    for &n in sizes {
+        assert!(
+            super::is_supported_size(n),
+            "rdFFT size must be a power of two >= 2, got {n}"
+        );
+    }
+    ctx.pool()
+        .scope(|sc| {
+            for &n in sizes {
+                sc.submit(move || {
+                    let _ = cached(n);
+                });
+            }
+        })
+        .unwrap_or_else(|p| p.resume());
 }
 
 #[cfg(test)]
@@ -302,6 +331,14 @@ mod tests {
             assert!(n == 64 || n == 128 || n == 256);
         }
         assert!(Arc::ptr_eq(&cached(64), &cached(64)));
+    }
+
+    #[test]
+    fn warm_cache_builds_shared_plans_via_the_pool() {
+        let ctx = crate::runtime::pool::ExecCtx::with_threads(3);
+        warm_cache(&[512, 1024, 512], &ctx);
+        assert_eq!(cached(512).n(), 512);
+        assert!(Arc::ptr_eq(&cached(1024), &cached(1024)));
     }
 
     #[test]

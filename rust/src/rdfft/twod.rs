@@ -23,6 +23,7 @@
 
 use super::engine;
 use super::plan::{cached, Plan};
+use crate::runtime::pool::ExecCtx;
 use std::sync::Arc;
 
 /// Columns gathered per transpose tile in the column pass.
@@ -60,24 +61,42 @@ impl Plan2 {
     }
 
     /// Forward 2-D packed transform, in place (`&mut self` for the
-    /// reusable transpose tile).
+    /// reusable transpose tile). Dispatches on the default engine
+    /// runtime (the global pool).
     pub fn forward_inplace(&mut self, buf: &mut [f32]) {
         assert_eq!(buf.len(), self.rows * self.cols);
         engine::forward_batch(&self.row_plan, buf);
-        self.col_pass(buf, true);
+        self.col_pass(buf, true, None);
     }
 
     /// Exact inverse of [`Self::forward_inplace`].
     pub fn inverse_inplace(&mut self, buf: &mut [f32]) {
         assert_eq!(buf.len(), self.rows * self.cols);
-        self.col_pass(buf, false);
+        self.col_pass(buf, false, None);
         engine::inverse_batch(&self.row_plan, buf);
+    }
+
+    /// [`Self::forward_inplace`] under an explicit [`ExecCtx`]: both the
+    /// row pass and the tiled column pass run on that context's pool with
+    /// its engine tuning. Bit-identical to the default path.
+    pub fn forward_inplace_ctx(&mut self, buf: &mut [f32], ctx: &ExecCtx) {
+        assert_eq!(buf.len(), self.rows * self.cols);
+        engine::forward_batch_ctx(&self.row_plan, buf, ctx);
+        self.col_pass(buf, true, Some(ctx));
+    }
+
+    /// [`Self::inverse_inplace`] under an explicit [`ExecCtx`].
+    pub fn inverse_inplace_ctx(&mut self, buf: &mut [f32], ctx: &ExecCtx) {
+        assert_eq!(buf.len(), self.rows * self.cols);
+        self.col_pass(buf, false, Some(ctx));
+        engine::inverse_batch_ctx(&self.row_plan, buf, ctx);
     }
 
     /// Transform every column: gather up to `COL_TILE` columns into the
     /// persistent tile (each becoming one contiguous engine row), run one
-    /// batched transform, scatter back.
-    fn col_pass(&mut self, buf: &mut [f32], forward: bool) {
+    /// batched transform, scatter back. `ctx = None` uses the default
+    /// engine runtime.
+    fn col_pass(&mut self, buf: &mut [f32], forward: bool, ctx: Option<&ExecCtx>) {
         let (r, c) = (self.rows, self.cols);
         let tile_cols = self.tile.len() / r;
         let mut c0 = 0usize;
@@ -89,10 +108,11 @@ impl Plan2 {
                 }
             }
             let seg = &mut self.tile[..tc * r];
-            if forward {
-                engine::forward_batch(&self.col_plan, seg);
-            } else {
-                engine::inverse_batch(&self.col_plan, seg);
+            match (forward, ctx) {
+                (true, None) => engine::forward_batch(&self.col_plan, seg),
+                (false, None) => engine::inverse_batch(&self.col_plan, seg),
+                (true, Some(cx)) => engine::forward_batch_ctx(&self.col_plan, seg, cx),
+                (false, Some(cx)) => engine::inverse_batch_ctx(&self.col_plan, seg, cx),
             }
             for t in 0..tc {
                 for i in 0..r {
@@ -132,6 +152,23 @@ mod tests {
                 assert!((buf[i] - x[i]).abs() < 1e-3, "({r}x{c}) i={i}");
             }
         }
+    }
+
+    #[test]
+    fn ctx_passes_match_default_passes_bitwise() {
+        let ctx = ExecCtx::with_threads(3);
+        let (r, c) = (32usize, 64usize);
+        let x = rand_mat(r, c, 77);
+        let mut plan_a = Plan2::new(r, c);
+        let mut a = x.clone();
+        plan_a.forward_inplace(&mut a);
+        let mut plan_b = Plan2::new(r, c);
+        let mut b = x.clone();
+        plan_b.forward_inplace_ctx(&mut b, &ctx);
+        assert_eq!(a, b, "forward ctx pass must be bit-identical");
+        plan_a.inverse_inplace(&mut a);
+        plan_b.inverse_inplace_ctx(&mut b, &ctx);
+        assert_eq!(a, b, "inverse ctx pass must be bit-identical");
     }
 
     #[test]

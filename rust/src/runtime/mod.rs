@@ -6,12 +6,19 @@
 //! CPU client, and exposes typed step functions to the coordinator. Python
 //! never runs on the training path — after `make artifacts` the `repro`
 //! binary is self-contained.
+//!
+//! This module also hosts the process's execution runtime proper:
+//! [`pool`] — the persistent worker pool plus the [`ExecCtx`] handle that
+//! the engine, the layers, and the native trainer dispatch all threaded
+//! compute through (no per-call thread spawns anywhere on the hot path).
 
 pub mod json;
 pub mod manifest;
+pub mod pool;
 pub mod xla_stub;
 
 pub use manifest::{Manifest, ParamSpec};
+pub use pool::{ExecCtx, JobPanic, Scope, WorkerPool};
 
 use anyhow::{anyhow, Context, Result};
 // The offline build links the typed stub; a real deployment swaps this

@@ -1,0 +1,696 @@
+//! Persistent worker-pool runtime + the `ExecCtx` execution handle.
+//!
+//! Every threaded code path used to pay a fresh `std::thread::scope`
+//! spawn per call — microseconds of kernel work per worker on every
+//! batched transform, repeated thousands of times per training run. This
+//! module replaces that with **one** set of parked OS threads per pool:
+//! jobs are enqueued under a `Mutex` + `Condvar` (channel-free, no
+//! external crates, mirroring the engine's no-dependency discipline),
+//! workers park on the condvar between jobs, and a per-scope completion
+//! latch gives the submitter the same borrows-stay-valid guarantee
+//! `std::thread::scope` provides: [`WorkerPool::scope`] does not return
+//! until every submitted job has finished, so jobs may borrow stack data.
+//!
+//! Design points, each with a lifecycle test below:
+//!
+//! * **Scoped submission.** [`Scope::submit`] accepts non-`'static`
+//!   closures; the lifetime is erased internally ([`Scope`] is invariant
+//!   in `'scope`, the rayon construction) and re-anchored by the latch
+//!   wait in [`WorkerPool::scope`].
+//! * **Panic isolation.** A panicking job poisons only itself: the worker
+//!   catches the unwind, the latch still releases, and the scope surfaces
+//!   the first payload as `Err(`[`JobPanic`]`)` — later jobs and later
+//!   scopes are unaffected.
+//! * **Nested submission runs inline.** A job that submits to a pool from
+//!   a worker thread (e.g. an engine batch call inside a data-parallel
+//!   trainer shard) executes the nested job on the spot instead of
+//!   queueing it — queue-and-wait from inside a worker could deadlock
+//!   once every worker waits on jobs only parked behind itself.
+//! * **The submitter helps.** While waiting on the latch, the submitting
+//!   thread drains jobs *of its own scope* from the queue, so a pool of
+//!   `N-1` workers plus the submitter saturates `N` threads. Only
+//!   own-scope jobs are stolen: running another thread's job here would
+//!   credit its allocations to the wrong thread-local memory tracker.
+//! * **Worker allocations stay visible.** `memtrack`'s tracker is
+//!   thread-local, so allocations made inside pool jobs would silently
+//!   vanish from the submitter's peak accounting. Workers capture their
+//!   per-job tracker delta ([`crate::memtrack::take_job_delta`]); at
+//!   scope end the collected deltas merge into the submitting thread
+//!   ([`crate::memtrack::merge_worker_deltas`]), modeling at most the
+//!   pool's worker count of them as concurrent — a worker runs its jobs
+//!   sequentially, so stacking every job's peak would overstate the
+//!   footprint when jobs outnumber lanes.
+//! * **Graceful shutdown.** Dropping the pool flags shutdown, wakes every
+//!   parked worker, and joins them. Scopes borrow the pool, so a drop
+//!   can never race an active scope.
+//!
+//! [`ExecCtx`] is the lightweight handle threaded through the execution
+//! layers (engine → layers → stack → trainer): a pool reference, the
+//! engine tuning ([`EngineConfig`]), and the memtrack category scratch
+//! buffers should be charged to. Cloning is cheap (one `Arc` bump).
+
+use crate::memtrack::{self, Category};
+use crate::rdfft::engine::EngineConfig;
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+thread_local! {
+    /// True on threads spawned by any [`WorkerPool`]; submissions from
+    /// such threads run inline (see the module docs on nesting).
+    static IS_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// A queued unit of work: the type-erased job plus the latch of the scope
+/// that submitted it.
+struct Job {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    latch: Arc<ScopeLatch>,
+}
+
+/// Queue state guarded by the pool mutex.
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// State shared between the pool handle and its workers.
+struct Shared {
+    queue: Mutex<Queue>,
+    /// Workers park here between jobs; `push` wakes one.
+    work_cv: Condvar,
+}
+
+/// Non-poisoning lock: a panic inside a *job* is caught before any pool
+/// lock is held, but tests inject panics liberally — recover like the
+/// plan cache does instead of cascading.
+fn lock_queue(shared: &Shared) -> MutexGuard<'_, Queue> {
+    shared.queue.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Shared {
+    fn push(&self, job: Job) {
+        lock_queue(self).jobs.push_back(job);
+        self.work_cv.notify_one();
+    }
+
+    /// Remove and return one queued job belonging to `latch`'s scope (the
+    /// submitter's self-help path). `None` when none of ours is queued.
+    fn try_pop_for(&self, latch: &Arc<ScopeLatch>) -> Option<Job> {
+        let mut q = lock_queue(self);
+        let idx = q.jobs.iter().position(|j| Arc::ptr_eq(&j.latch, latch))?;
+        q.jobs.remove(idx)
+    }
+}
+
+/// Per-scope completion latch: counts outstanding jobs, collects the
+/// workers' per-job memtrack deltas, and records the first panic payload.
+struct ScopeLatch {
+    state: Mutex<LatchState>,
+    done_cv: Condvar,
+}
+
+struct LatchState {
+    pending: usize,
+    /// One delta per job that ran on a worker (kept individually so the
+    /// scope-end merge can model at most the pool's lane count of them
+    /// as concurrent instead of stacking sequential jobs' peaks).
+    deltas: Vec<memtrack::WorkerDelta>,
+    payload: Option<Box<dyn Any + Send>>,
+    failed: usize,
+}
+
+impl ScopeLatch {
+    fn new() -> Arc<ScopeLatch> {
+        Arc::new(ScopeLatch {
+            state: Mutex::new(LatchState {
+                pending: 0,
+                deltas: Vec::new(),
+                payload: None,
+                failed: 0,
+            }),
+            done_cv: Condvar::new(),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, LatchState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn add_pending(&self) {
+        self.lock().pending += 1;
+    }
+
+    /// One job finished (`delta` is `Some` when it ran on a worker whose
+    /// thread-local tracker captured it; inline/helped jobs tracked
+    /// directly on the submitting thread pass `None`).
+    fn complete(
+        &self,
+        delta: Option<memtrack::WorkerDelta>,
+        panic: Option<Box<dyn Any + Send>>,
+    ) {
+        let mut s = self.lock();
+        if let Some(d) = delta {
+            if !d.is_empty() {
+                s.deltas.push(d);
+            }
+        }
+        if let Some(p) = panic {
+            s.failed += 1;
+            if s.payload.is_none() {
+                s.payload = Some(p);
+            }
+        }
+        s.pending -= 1;
+        if s.pending == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Record a panic from a job that ran inline (never counted pending).
+    fn record_panic(&self, p: Box<dyn Any + Send>) {
+        let mut s = self.lock();
+        s.failed += 1;
+        if s.payload.is_none() {
+            s.payload = Some(p);
+        }
+    }
+}
+
+/// Error of a scope in which at least one job panicked. The scope itself
+/// completed — every job ran to completion or unwound, the latch
+/// released, and the pool stays healthy — so callers can choose between
+/// handling the failure and re-raising it ([`JobPanic::resume`]).
+pub struct JobPanic {
+    /// How many jobs of the scope panicked.
+    pub failed: usize,
+    payload: Box<dyn Any + Send>,
+}
+
+impl JobPanic {
+    /// Re-raise the first captured panic on the calling thread —
+    /// `std::thread::scope`'s behaviour, used by the engine paths.
+    pub fn resume(self) -> ! {
+        std::panic::resume_unwind(self.payload)
+    }
+
+    /// Best-effort panic message (for logs/tests).
+    pub fn message(&self) -> &str {
+        if let Some(s) = self.payload.downcast_ref::<&'static str>() {
+            s
+        } else if let Some(s) = self.payload.downcast_ref::<String>() {
+            s
+        } else {
+            "<non-string panic payload>"
+        }
+    }
+}
+
+impl std::fmt::Debug for JobPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "JobPanic(failed={}, {:?})", self.failed, self.message())
+    }
+}
+
+impl std::fmt::Display for JobPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} pool job(s) panicked: {}", self.failed, self.message())
+    }
+}
+
+impl std::error::Error for JobPanic {}
+
+/// A persistent pool of parked worker threads. See the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` parked OS threads. `workers == 0` is
+    /// a valid serial pool: every submission runs inline on the
+    /// submitting thread (the deterministic `--threads 1` baseline).
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("rdfft-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// The process-wide default pool (`available_parallelism - 1` workers
+    /// — the submitting thread is the final lane), built on first use.
+    /// Never dropped; every default engine entry point dispatches here.
+    pub fn global() -> &'static Arc<WorkerPool> {
+        static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let cores =
+                std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+            Arc::new(WorkerPool::new(cores.saturating_sub(1)))
+        })
+    }
+
+    /// Number of pool worker threads (the submitting thread adds one more
+    /// lane of parallelism on top during a scope).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `op`, allowing it to submit borrowed jobs via the [`Scope`];
+    /// returns only after every submitted job has completed. Worker-side
+    /// memtrack deltas are merged into the calling thread before
+    /// returning. `Err` when at least one job panicked (see
+    /// [`JobPanic`]); a panic in `op` itself is re-raised after the latch
+    /// wait (jobs never outlive their borrows, even on that path).
+    pub fn scope<'scope, OP, R>(&'scope self, op: OP) -> Result<R, JobPanic>
+    where
+        OP: FnOnce(&Scope<'scope>) -> R + 'scope,
+    {
+        let scope =
+            Scope { pool: self, latch: ScopeLatch::new(), _marker: PhantomData };
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| op(&scope)));
+        let (deltas, failure) = self.finish_scope(&scope.latch);
+        // At most `workers()` jobs can be live on workers at once; jobs
+        // beyond that ran sequentially, so their peaks must not stack.
+        memtrack::merge_worker_deltas(&deltas, self.workers());
+        let value = match result {
+            Ok(v) => v,
+            // `op` panicked: jobs it already submitted have been waited
+            // for above, so the unwind is safe to continue.
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        match failure {
+            None => Ok(value),
+            Some((failed, payload)) => Err(JobPanic { failed, payload }),
+        }
+    }
+
+    /// Wait for the scope's jobs, helping with our own queued jobs while
+    /// waiting (see the module docs).
+    fn finish_scope(
+        &self,
+        latch: &Arc<ScopeLatch>,
+    ) -> (Vec<memtrack::WorkerDelta>, Option<(usize, Box<dyn Any + Send>)>) {
+        loop {
+            if let Some(job) = self.shared.try_pop_for(latch) {
+                // Helped jobs run on the submitting thread: allocations
+                // land in the right tracker directly, no delta needed.
+                let r = std::panic::catch_unwind(AssertUnwindSafe(job.run));
+                latch.complete(None, r.err());
+                continue;
+            }
+            // None of our jobs is queued: the rest are running on workers
+            // (submission is over, nested jobs run inline), so their
+            // completions are guaranteed to notify `done_cv`.
+            let mut s = latch.lock();
+            if s.pending == 0 {
+                let deltas = std::mem::take(&mut s.deltas);
+                let failure = s.payload.take().map(|p| (s.failed, p));
+                return (deltas, failure);
+            }
+            let _unused =
+                latch.done_cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        lock_queue(&self.shared).shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WorkerPool(workers={})", self.workers())
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IS_POOL_WORKER.with(|w| w.set(true));
+    loop {
+        let job = {
+            let mut q = lock_queue(&shared);
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break Some(j);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(job) = job else { return };
+        // Fresh tracker per job: the delta below is exactly this job's
+        // allocation activity. Jobs must not move tracked storage across
+        // the job boundary (scoped borrows make that the natural shape).
+        memtrack::reset();
+        let result = std::panic::catch_unwind(AssertUnwindSafe(job.run));
+        let delta = memtrack::take_job_delta();
+        job.latch.complete(Some(delta), result.err());
+    }
+}
+
+/// Submission handle passed to the closure of [`WorkerPool::scope`].
+/// Invariant in `'scope` (the `PhantomData` below), so a submitted job
+/// can never be assumed to live longer than the scope that waits on it.
+pub struct Scope<'scope> {
+    pool: &'scope WorkerPool,
+    latch: Arc<ScopeLatch>,
+    _marker: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'scope> Scope<'scope> {
+    /// Submit a job. May borrow anything alive for `'scope`; runs inline
+    /// when the pool has no workers or when called from a pool worker
+    /// (nested submission — see the module docs).
+    pub fn submit<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        if self.pool.workers() == 0 || IS_POOL_WORKER.with(|w| w.get()) {
+            if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(f)) {
+                self.latch.record_panic(p);
+            }
+            return;
+        }
+        self.latch.add_pending();
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: the only way this closure outlives `'scope` would be
+        // `WorkerPool::scope` returning before the job completes, and
+        // `finish_scope` waits for `pending == 0` on every path
+        // (including a panicking `op`). `Scope` is invariant in `'scope`,
+        // so callers cannot shrink the lifetime after submission.
+        let job: Box<dyn FnOnce() + Send + 'static> =
+            unsafe { std::mem::transmute(job) };
+        self.pool.shared.push(Job { run: job, latch: Arc::clone(&self.latch) });
+    }
+}
+
+// ---------------------------------------------------------------------
+// ExecCtx
+// ---------------------------------------------------------------------
+
+/// The execution-context handle threaded through engine → layers → stack
+/// → trainer: which pool to dispatch on, how the engine should tune its
+/// chunking, and which memtrack category scratch buffers belong to.
+/// Cloning is one `Arc` bump; every layer of a model shares one context.
+#[derive(Clone)]
+pub struct ExecCtx {
+    /// `None` = the process-wide pool, resolved lazily on first use —
+    /// merely constructing layers/contexts must never spawn threads.
+    pool: Option<Arc<WorkerPool>>,
+    cfg: EngineConfig,
+    cat: Category,
+}
+
+impl ExecCtx {
+    /// The default context: the process-wide pool (created lazily, only
+    /// when a call actually parallelizes), default engine tuning, scratch
+    /// charged to `Intermediates`. This is what every ctx-less engine
+    /// entry point resolves to.
+    pub fn global() -> ExecCtx {
+        ExecCtx { pool: None, cfg: EngineConfig::new(), cat: Category::Intermediates }
+    }
+
+    /// A context with its own pool targeting `threads` total lanes of
+    /// parallelism: `threads - 1` pool workers plus the submitting thread
+    /// (which helps while waiting). `threads <= 1` yields a serial pool —
+    /// every job runs inline in submission order, the deterministic
+    /// baseline the data-parallel trainer compares against.
+    pub fn with_threads(threads: usize) -> ExecCtx {
+        let t = threads.max(1);
+        ExecCtx {
+            pool: Some(Arc::new(WorkerPool::new(t - 1))),
+            cfg: EngineConfig { max_threads: t, ..EngineConfig::new() },
+            cat: Category::Intermediates,
+        }
+    }
+
+    /// Serial context: no workers, engine chunking disabled. The fully
+    /// deterministic single-thread oracle.
+    pub fn serial() -> ExecCtx {
+        ExecCtx {
+            pool: Some(Arc::new(WorkerPool::new(0))),
+            cfg: EngineConfig::serial(),
+            cat: Category::Intermediates,
+        }
+    }
+
+    /// Replace the engine tuning (builder style).
+    pub fn with_engine_config(mut self, cfg: EngineConfig) -> ExecCtx {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Replace the scratch category (builder style).
+    pub fn with_category(mut self, cat: Category) -> ExecCtx {
+        self.cat = cat;
+        self
+    }
+
+    /// The pool this context dispatches on. Resolving a global context
+    /// materializes the process-wide pool; callers that only *might*
+    /// parallelize should prefer [`ExecCtx::dedicated_pool`] and fall
+    /// back lazily (as the engine does).
+    pub fn pool(&self) -> &WorkerPool {
+        match &self.pool {
+            Some(p) => p.as_ref(),
+            None => WorkerPool::global().as_ref(),
+        }
+    }
+
+    /// The context's dedicated pool, or `None` for a global context —
+    /// lets the engine defer process-wide pool creation until a call
+    /// actually fans out.
+    pub fn dedicated_pool(&self) -> Option<&WorkerPool> {
+        self.pool.as_deref()
+    }
+
+    pub fn engine_config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Category for scratch storage allocated on behalf of this context
+    /// (the data-parallel trainer's gradient-shard arena, for one).
+    pub fn scratch_category(&self) -> Category {
+        self.cat
+    }
+
+    /// Total parallel lanes this context targets (workers + submitter).
+    /// Materializes the global pool for a global context.
+    pub fn threads(&self) -> usize {
+        self.pool().workers() + 1
+    }
+}
+
+impl std::fmt::Debug for ExecCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.pool {
+            Some(p) => write!(
+                f,
+                "ExecCtx(threads={}, cat={}, cfg={:?})",
+                p.workers() + 1,
+                self.cat.name(),
+                self.cfg
+            ),
+            None => write!(f, "ExecCtx(global, cat={}, cfg={:?})", self.cat.name(), self.cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memtrack::{self, Category, TrackedVec};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_borrowed_jobs_to_completion() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u32; 64];
+        let chunks: Vec<&mut [u32]> = data.chunks_mut(16).collect();
+        pool.scope(|sc| {
+            for (i, chunk) in chunks.into_iter().enumerate() {
+                sc.submit(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 16 + j) as u32;
+                    }
+                });
+            }
+        })
+        .expect("no job panics");
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+    }
+
+    #[test]
+    fn drop_while_idle_joins_cleanly() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.workers(), 4);
+        drop(pool); // must not hang or panic
+        // ... and a used pool also shuts down cleanly
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|sc| {
+            for _ in 0..8 {
+                sc.submit(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        })
+        .unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+        drop(pool);
+    }
+
+    #[test]
+    fn panicking_job_poisons_only_itself() {
+        let pool = WorkerPool::new(2);
+        let ran = AtomicUsize::new(0);
+        let err = pool
+            .scope(|sc| {
+                sc.submit(|| panic!("injected job panic"));
+                for _ in 0..4 {
+                    sc.submit(|| {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            })
+            .expect_err("one job panicked");
+        assert_eq!(err.failed, 1);
+        assert!(err.message().contains("injected job panic"), "{err:?}");
+        // the latch released (we got here) and the healthy jobs all ran
+        assert_eq!(ran.load(Ordering::SeqCst), 4);
+        // the pool is still fully usable afterwards
+        let again = AtomicUsize::new(0);
+        pool.scope(|sc| {
+            for _ in 0..3 {
+                sc.submit(|| {
+                    again.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        })
+        .unwrap();
+        assert_eq!(again.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn nested_submission_from_a_worker_runs_inline_without_deadlock() {
+        let pool = Arc::new(WorkerPool::new(1)); // one worker: a queued
+        // nested job could never run if nesting queued instead of inlining
+        let hits = AtomicUsize::new(0);
+        let p2 = Arc::clone(&pool);
+        pool.scope(|sc| {
+            sc.submit(|| {
+                // runs on the single worker; nested scope must inline
+                p2.scope(|inner| {
+                    for _ in 0..4 {
+                        inner.submit(|| {
+                            hits.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                })
+                .unwrap();
+            });
+        })
+        .unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn serial_pool_runs_everything_inline_in_submission_order() {
+        let pool = WorkerPool::new(0);
+        let order = Mutex::new(Vec::new());
+        pool.scope(|sc| {
+            for i in 0..5 {
+                let o = &order;
+                sc.submit(move || o.lock().unwrap().push(i));
+            }
+        })
+        .unwrap();
+        assert_eq!(order.into_inner().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn worker_job_allocations_merge_into_submitter_snapshot() {
+        // The memtrack satellite: scratch allocated on a pool worker must
+        // show up in the submitting thread's Snapshot.
+        let pool = WorkerPool::new(2);
+        memtrack::reset();
+        let base = memtrack::snapshot();
+        assert_eq!(base.peak_total, 0);
+        pool.scope(|sc| {
+            for _ in 0..2 {
+                sc.submit(|| {
+                    let tmp = TrackedVec::zeros(1024, Category::Intermediates);
+                    std::hint::black_box(&tmp[0]);
+                });
+            }
+        })
+        .unwrap();
+        let s = memtrack::snapshot();
+        // At least one 4 KiB scratch buffer must be visible in the peak
+        // (jobs the submitter helps with are tracked directly and don't
+        // stack with worker deltas, so the exact peak is 4–8 KiB
+        // depending on who ran what — the blind spot being fixed is the
+        // pre-pool behaviour where the peak stayed at 0).
+        assert!(s.peak_total >= 4096, "worker scratch missing from peak: {}", s.peak_total);
+        assert!(s.at_peak[Category::Intermediates.index()] >= 4096);
+        assert_eq!(s.alloc_count, 2, "every job's allocation must be counted");
+        // the scratch was dropped inside the jobs: nothing stays live
+        assert_eq!(s.current_total(), 0);
+    }
+
+    #[test]
+    fn exec_ctx_thread_counts_and_serial_mode() {
+        let one = ExecCtx::with_threads(1);
+        assert_eq!(one.threads(), 1);
+        assert_eq!(one.pool().workers(), 0);
+        let four = ExecCtx::with_threads(4);
+        assert_eq!(four.threads(), 4);
+        assert_eq!(four.engine_config().max_threads, 4);
+        let s = ExecCtx::serial();
+        assert_eq!(s.threads(), 1);
+        let tagged = ExecCtx::serial().with_category(Category::Gradients);
+        assert_eq!(tagged.scratch_category(), Category::Gradients);
+    }
+
+    #[test]
+    fn scope_waits_for_jobs_before_propagating_op_panic() {
+        let pool = WorkerPool::new(2);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let ran2 = Arc::clone(&ran);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _ = pool.scope(|sc| {
+                let r = Arc::clone(&ran2);
+                sc.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    r.fetch_add(1, Ordering::SeqCst);
+                });
+                panic!("op panic after submit");
+            });
+        }));
+        assert!(caught.is_err());
+        // the submitted job completed before the panic propagated
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+}

@@ -23,6 +23,7 @@ fn run(method: Method, d: usize, depth: usize, batch: usize, steps: usize) -> Na
         seed: 4,
         log_csv: None,
         verbose: false,
+        threads: 0,
     };
     let mut t = NativeTrainer::new(cfg);
     t.run().expect("native run")

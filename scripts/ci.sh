@@ -29,6 +29,14 @@ fi
   --steps 20 --d 64 --depth 2 --p 16 --batch 8 --eval-every 10 \
   --max-peak-mib 8
 
+# Data-parallel smoke: the same run through the worker-pool sharded step
+# (--threads 2), with the same loss gate and peak budget. The budget is
+# unchanged on purpose: the pooled grad-shard arena plus worker-merged
+# activation scratch must stay within the serial envelope at this scale.
+"$REPRO" train-native \
+  --steps 20 --d 64 --depth 2 --p 16 --batch 8 --eval-every 10 \
+  --threads 2 --max-peak-mib 8
+
 # Engine grid: writes BENCH_rdfft.json (fused + unfused circulant rows)
 # and exits non-zero if the batch=1 latency gate regresses. The workflow
 # uploads the JSON next to the loss-curve CSV.
