@@ -22,7 +22,7 @@ use crate::baselines::complex_fft::{fft_out_of_place, ifft_out_of_place, Complex
 use crate::baselines::rfft::{irfft_alloc, rfft_alloc, rfft_conj, rfft_mul, RfftVec};
 use crate::memtrack::{Category, ScopedCategory};
 use crate::rdfft::plan::cached;
-use crate::rdfft::{engine, spectral};
+use crate::rdfft::{engine, simd, spectral};
 use crate::runtime::pool::ExecCtx;
 use std::sync::Arc;
 
@@ -653,6 +653,7 @@ impl CirculantLayer {
                     self.workspace.as_mut_slice(),
                     !pre_transformed,
                     residual,
+                    simd::select(self.exec.engine_config().force_scalar),
                 );
             }
             dx
@@ -678,7 +679,8 @@ impl CirculantLayer {
                 for i in 0..rb {
                     for j in 0..cb {
                         let d = &mut self.dc.as_mut_slice()[(i * cb + j) * p..][..p];
-                        spectral::conj_mul_acc(
+                        spectral::conj_mul_acc_with(
+                            simd::select(self.exec.engine_config().force_scalar),
                             d,
                             &xrow[j * p..(j + 1) * p],
                             &grow[i * p..(i + 1) * p],
@@ -907,18 +909,24 @@ fn circulant_backward_square_row(
     ws: &mut [f32],
     transform_row: bool,
     residual: bool,
+    kern: crate::rdfft::Kernels,
 ) {
     // ĝ for this sample, in place (row aliases grad-output) — skipped
     // when the caller already transformed the whole tensor.
     if transform_row {
-        engine::forward_rows(plan, row, cb.max(1));
+        engine::forward_rows_with(plan, row, cb.max(1), kern);
     }
     // dĉ_ij += conj(x̂_j) ⊙ ĝ_i — straight into the grad buffer while ĝ
     // is hot.
     for i in 0..rb {
         for j in 0..cb {
             let d = &mut dc[(i * cb + j) * p..][..p];
-            spectral::conj_mul_acc(d, &xrow[j * p..(j + 1) * p], &row[i * p..(i + 1) * p]);
+            spectral::conj_mul_acc_with(
+                kern,
+                d,
+                &xrow[j * p..(j + 1) * p],
+                &row[i * p..(i + 1) * p],
+            );
         }
     }
     // dx_j = IFFT([ĝ_j +] Σ_i conj(ĉ_ij) ⊙ ĝ_i) into the workspace, then
@@ -927,7 +935,7 @@ fn circulant_backward_square_row(
         sb.fill(0.0);
         for i in 0..rb {
             let ch = &c_spec[(i * cb + j) * p..][..p];
-            spectral::conj_mul_acc(sb, ch, &row[i * p..(i + 1) * p]);
+            spectral::conj_mul_acc_with(kern, sb, ch, &row[i * p..(i + 1) * p]);
         }
         if residual {
             // Skip-path gradient, added as spectra (linear).
@@ -936,7 +944,7 @@ fn circulant_backward_square_row(
             }
         }
     }
-    engine::inverse_rows(plan, ws, cb.max(1));
+    engine::inverse_rows_with(plan, ws, cb.max(1), kern);
     row.copy_from_slice(ws);
 }
 
@@ -1043,6 +1051,7 @@ impl Layer for CirculantLayer {
                 ws.as_mut_slice(),
                 true,
                 true,
+                simd::select(self.exec.engine_config().force_scalar),
             );
         }
         g

@@ -614,12 +614,122 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
         }
     }
 
+    // ------------------------------------------------------------------
+    // SIMD lane kernels vs the forced-scalar oracle — the PR-6 acceptance
+    // cell (n = 4096, batch = 32), measured serially so the ratio
+    // isolates the lane kernels from thread scaling. Emitted as the
+    // `batch_simd` / `circulant_fused_simd` rows (speedup_vs_scalar =
+    // auto-arm vs forced-scalar at equal config) plus the
+    // `simd_vs_scalar` gates (target ≥ 1.5 on AVX2+FMA hardware). On
+    // machines without FMA lanes the auto arm is the bit-identical
+    // portable quad arm and the ratio sits near 1.0 — the gate records
+    // that honestly (pass=false) without hard-failing; a hard failure
+    // needs the FMA arm to actually *regress* below 0.9× scalar.
+    // ------------------------------------------------------------------
+    {
+        use crate::rdfft::simd;
+        let (sn, sb) = (4096usize, 32usize);
+        let splan = cached(sn);
+        let mut sbuf: Vec<f32> =
+            (0..sn * sb).map(|i| ((i * 37 + 11) % 89) as f32 / 44.0 - 1.0).collect();
+        let mut sspec = vec![0.0f32; sn];
+        sspec[0] = 1.0;
+        rdfft::rdfft_inplace(&splan, &mut sspec);
+        let scalar_cfg = EngineConfig::forced_scalar_serial();
+        let simd_cfg = EngineConfig::serial();
+        let arm = simd::active();
+        println!(
+            "\n# SIMD lane kernels vs forced-scalar oracle — n={sn}, batch={sb}, serial, \
+             active arm: {arm:?}"
+        );
+        let s_scal = bench(budget, || {
+            engine::forward_batch_with(&splan, &mut sbuf, &scalar_cfg);
+            engine::inverse_batch_with(&splan, &mut sbuf, &scalar_cfg);
+            std::hint::black_box(&sbuf[0]);
+        });
+        let s_simd = bench(budget, || {
+            engine::forward_batch_with(&splan, &mut sbuf, &simd_cfg);
+            engine::inverse_batch_with(&splan, &mut sbuf, &simd_cfg);
+            std::hint::black_box(&sbuf[0]);
+        });
+        let f_scal = bench(budget, || {
+            engine::circulant_apply_batch_with(&splan, &mut sbuf, &sspec, SpectralOp::Mul, &scalar_cfg);
+            std::hint::black_box(&sbuf[0]);
+        });
+        let f_simd = bench(budget, || {
+            engine::circulant_apply_batch_with(&splan, &mut sbuf, &sspec, SpectralOp::Mul, &simd_cfg);
+            std::hint::black_box(&sbuf[0]);
+        });
+        let sx = s_scal.median_ns / s_simd.median_ns.max(1.0);
+        let fx = f_scal.median_ns / f_simd.median_ns.max(1.0);
+        println!(
+            "{:<24}{:>14}{:>14}{:>8}",
+            "mode", "scalar ns/row", "simd ns/row", "simd×"
+        );
+        println!(
+            "{:<24}{:>14.0}{:>14.0}{:>8.2}",
+            "batch fwd+inv",
+            s_scal.median_ns / (2.0 * sb as f64),
+            s_simd.median_ns / (2.0 * sb as f64),
+            sx
+        );
+        println!(
+            "{:<24}{:>14.0}{:>14.0}{:>8.2}",
+            "circulant fused",
+            f_scal.median_ns / sb as f64,
+            f_simd.median_ns / sb as f64,
+            fx
+        );
+        let stps = |s: &crate::coordinator::benchlib::Stats, per: f64| {
+            per * sb as f64 / (s.median_ns.max(1.0) / 1e9)
+        };
+        for (mode, stats, speedup, per) in [
+            ("batch_forced_scalar", s_scal, 1.0, 2.0),
+            ("batch_simd", s_simd, sx, 2.0),
+            ("circulant_fused_forced_scalar", f_scal, 1.0, 1.0),
+            ("circulant_fused_simd", f_simd, fx, 1.0),
+        ] {
+            records.push(BenchRecord {
+                mode: mode.to_string(),
+                n: sn,
+                batch: sb,
+                threads: 0,
+                transforms_per_sec: stps(&stats, per),
+                stats,
+                speedup_vs_scalar: speedup,
+            });
+        }
+        let fma_active = arm == crate::rdfft::Kernels::AvxFma;
+        for (name, ratio) in [("simd_vs_scalar", sx), ("simd_vs_scalar_circulant_fused", fx)] {
+            // A clear regression of the active FMA arm hard-fails; the
+            // 1.5× target itself is recorded, not hard-gated (portable
+            // arms and noisy shared boxes legitimately miss it).
+            if fma_active && ratio < 0.9 {
+                gates_ok = false;
+            }
+            gates.push(BenchGate {
+                name: name.to_string(),
+                threads: 0,
+                n: sn,
+                batch: sb,
+                ratio,
+                target: 1.5,
+                pass: ratio >= 1.5,
+            });
+            println!(
+                "gate {name}: ratio {ratio:.2} (target 1.50) -> {}",
+                if ratio >= 1.5 { "pass" } else { "MISS" }
+            );
+        }
+    }
+
     println!(
         "\n(gates: batch-major+threads >= 2x scalar at batch >= 8 where the\n\
          work threshold engages; batch=1 must ride the spawn-free path and\n\
          stay at or below scalar latency; circulant fused× target >= 1.2\n\
-         on the grid; pool >= 1.15x per-call scoped threads at threads=4 —\n\
-         see EXPERIMENTS.md §Perf)"
+         on the grid; pool >= 1.15x per-call scoped threads at threads=4;\n\
+         SIMD lane kernels >= 1.5x the forced-scalar oracle at n=4096\n\
+         b=32 on AVX2+FMA hardware — see EXPERIMENTS.md §Perf)"
     );
     let path = std::path::Path::new("BENCH_rdfft.json");
     match write_bench_json(path, &records, &gates) {

@@ -87,6 +87,8 @@ fn usage() -> ! {
                     worker pool (T lanes; bit-identical losses for any T)\n\
                     [--max-peak-mib M]  (exits non-zero if loss fails to\n\
                     drop or the memtrack peak exceeds M)\n\
+                    [--force-scalar]  disable the SIMD lane kernels\n\
+                    (also RDFFT_FORCE_SCALAR=1; dispatch is on by default)\n\
            table-native  native multi-layer peak-memory grid [--fast]\n\
            table1   single-layer peak-memory grid   [--fast]\n\
            table2   full-model memory decomposition\n\
@@ -96,7 +98,8 @@ fn usage() -> ! {
            audit    zero-allocation audit\n\
            optim    optimizer-state memory ablation\n\
            engine   batch-engine throughput ablation [--fast]\n\
-                    (writes BENCH_rdfft.json)\n\
+                    [--force-scalar]  pin the legacy scalar kernels\n\
+                    (writes BENCH_rdfft.json incl. simd_vs_scalar gates)\n\
            report   all of the above (fast variants)"
     );
     std::process::exit(2);
@@ -220,6 +223,13 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else { usage() };
     let args = Args::parse(&argv[1..]);
+    // Process-wide SIMD kill switch: must run before the first transform
+    // so the cached dispatch decision never flips mid-run. The env-var
+    // form (RDFFT_FORCE_SCALAR=1) is handled inside the dispatcher and
+    // drives the CI force-scalar matrix leg.
+    if args.has("force-scalar") {
+        rdfft::rdfft::simd::force_scalar_global();
+    }
     match cmd.as_str() {
         "train" => cmd_train(&args)?,
         "train-native" => cmd_train_native(&args)?,

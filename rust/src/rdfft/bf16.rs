@@ -5,8 +5,19 @@
 //! natively. We mirror the hardware practice: storage is bf16 (2 bytes),
 //! butterfly arithmetic runs in f32 (exactly what TPU/VPU and CUDA
 //! `__nv_bfloat16` FMA paths do), results round back to bf16 per element.
+//!
+//! The butterfly **math** routes through the same width-4 lane kernels as
+//! the f32 engine ([`super::simd`]): four 4-groups' values are widened to
+//! f32 lane arrays, run one quad butterfly ([`super::simd::fwd_quad_arrays`] /
+//! [`super::simd::inv_quad_arrays`]), and round back per element — so the
+//! AVX2+FMA arm fuses the complex multiplies here too, while the
+//! forced-scalar arm reproduces the legacy per-element loop bit-for-bit
+//! (conversion order and rounding are unchanged on every arm; only FMA
+//! contraction inside the f32 math can differ, far below bf16's own
+//! rounding).
 
 use super::plan::Plan;
+use super::simd::{self, Kernels};
 
 /// bfloat16: the top 16 bits of an IEEE-754 f32.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -52,6 +63,7 @@ impl From<Bf16> for f32 {
 /// In-place forward rdFFT over a bf16 buffer (storage bf16, math f32).
 pub fn rdfft_inplace_bf16(plan: &Plan, buf: &mut [Bf16]) {
     assert_eq!(buf.len(), plan.n());
+    let kern = simd::active();
     for &(i, j) in plan.swaps() {
         buf.swap(i as usize, j as usize);
     }
@@ -70,7 +82,39 @@ pub fn rdfft_inplace_bf16(plan: &Plan, buf: &mut [Bf16]) {
                 let idx = s + m + m / 2;
                 buf[idx] = Bf16::from_f32(-buf[idx].to_f32());
             }
-            for (k, &(wr, wi)) in (1..m / 2).zip(tw.iter()) {
+            let half = m / 2;
+            let mut k = 1usize;
+            // Quad groups through the lane kernels (widen → quad → round).
+            if kern != Kernels::LegacyScalar {
+                while k + 4 <= half {
+                    let mut er = [0.0f32; 4];
+                    let mut ei = [0.0f32; 4];
+                    let mut or_ = [0.0f32; 4];
+                    let mut oi = [0.0f32; 4];
+                    let mut wr4 = [0.0f32; 4];
+                    let mut wi4 = [0.0f32; 4];
+                    for l in 0..4 {
+                        er[l] = buf[s + k + l].to_f32();
+                        ei[l] = buf[s + m - k - l].to_f32();
+                        or_[l] = buf[s + m + k + l].to_f32();
+                        oi[l] = buf[s + two_m - k - l].to_f32();
+                        let (wr, wi) = tw[k - 1 + l];
+                        wr4[l] = wr;
+                        wi4[l] = wi;
+                    }
+                    let (rk, ik, rm, im) = simd::fwd_quad_arrays(kern, er, ei, or_, oi, wr4, wi4);
+                    for l in 0..4 {
+                        buf[s + k + l] = Bf16::from_f32(rk[l]);
+                        buf[s + two_m - k - l] = Bf16::from_f32(ik[l]);
+                        buf[s + m - k - l] = Bf16::from_f32(rm[l]);
+                        buf[s + m + k + l] = Bf16::from_f32(im[l]);
+                    }
+                    k += 4;
+                }
+            }
+            // Scalar tail (and the whole sweep on the forced-scalar arm).
+            while k < half {
+                let (wr, wi) = tw[k - 1];
                 let (er, ei) = (buf[s + k].to_f32(), buf[s + m - k].to_f32());
                 let (or_, oi) = (buf[s + m + k].to_f32(), buf[s + two_m - k].to_f32());
                 let tr = wr * or_ - wi * oi;
@@ -79,6 +123,7 @@ pub fn rdfft_inplace_bf16(plan: &Plan, buf: &mut [Bf16]) {
                 buf[s + two_m - k] = Bf16::from_f32(ei + ti);
                 buf[s + m - k] = Bf16::from_f32(er - tr);
                 buf[s + m + k] = Bf16::from_f32(ti - ei);
+                k += 1;
             }
             s += two_m;
         }
@@ -89,6 +134,7 @@ pub fn rdfft_inplace_bf16(plan: &Plan, buf: &mut [Bf16]) {
 /// In-place inverse rdFFT over a bf16 buffer.
 pub fn irdfft_inplace_bf16(plan: &Plan, buf: &mut [Bf16]) {
     assert_eq!(buf.len(), plan.n());
+    let kern = simd::active();
     let n = plan.n();
     let mut m = n / 2;
     while m >= 1 {
@@ -104,7 +150,37 @@ pub fn irdfft_inplace_bf16(plan: &Plan, buf: &mut [Bf16]) {
                 let idx = s + m + m / 2;
                 buf[idx] = Bf16::from_f32(-buf[idx].to_f32());
             }
-            for (k, &(wr, wi)) in (1..m / 2).zip(tw.iter()) {
+            let half = m / 2;
+            let mut k = 1usize;
+            if kern != Kernels::LegacyScalar {
+                while k + 4 <= half {
+                    let mut av = [0.0f32; 4];
+                    let mut bv = [0.0f32; 4];
+                    let mut cv = [0.0f32; 4];
+                    let mut dv = [0.0f32; 4];
+                    let mut wr4 = [0.0f32; 4];
+                    let mut wi4 = [0.0f32; 4];
+                    for l in 0..4 {
+                        av[l] = buf[s + k + l].to_f32();
+                        bv[l] = buf[s + m - k - l].to_f32();
+                        cv[l] = buf[s + two_m - k - l].to_f32();
+                        dv[l] = buf[s + m + k + l].to_f32();
+                        let (wr, wi) = tw[k - 1 + l];
+                        wr4[l] = wr;
+                        wi4[l] = wi;
+                    }
+                    let (er, ei, or_, oi) = simd::inv_quad_arrays(kern, av, bv, cv, dv, wr4, wi4);
+                    for l in 0..4 {
+                        buf[s + k + l] = Bf16::from_f32(er[l]);
+                        buf[s + m - k - l] = Bf16::from_f32(ei[l]);
+                        buf[s + m + k + l] = Bf16::from_f32(or_[l]);
+                        buf[s + two_m - k - l] = Bf16::from_f32(oi[l]);
+                    }
+                    k += 4;
+                }
+            }
+            while k < half {
+                let (wr, wi) = tw[k - 1];
                 let a = buf[s + k].to_f32();
                 let b = buf[s + m - k].to_f32();
                 let c = buf[s + two_m - k].to_f32();
@@ -119,6 +195,7 @@ pub fn irdfft_inplace_bf16(plan: &Plan, buf: &mut [Bf16]) {
                 buf[s + m - k] = Bf16::from_f32(ei);
                 buf[s + m + k] = Bf16::from_f32(or_);
                 buf[s + two_m - k] = Bf16::from_f32(oi);
+                k += 1;
             }
             s += two_m;
         }

@@ -18,6 +18,7 @@
 use super::engine::{self, SpectralOp};
 use super::forward::rdfft_inplace;
 use super::inverse::irdfft_inplace;
+use super::simd;
 use super::plan::{cached, Plan};
 use super::spectral;
 use crate::memtrack::{Category, Registration};
@@ -229,7 +230,9 @@ impl BlockCirculant {
         for (i, ob) in out.chunks_exact_mut(p).enumerate() {
             for (j, xb) in x.chunks_exact(p).enumerate() {
                 let ch = &self.c_hat[(i * cb + j) * p..][..p];
-                spectral::mul_acc(ob, ch, xb);
+                // Same dispatched product as the fused sweep, so the
+                // fused-vs-unfused differential stays bit-exact per arm.
+                spectral::mul_acc_with(simd::active(), ob, ch, xb);
             }
         }
         // One batched inverse over all rb accumulated output blocks.
@@ -267,12 +270,13 @@ impl BlockCirculant {
             cb,
         );
         // dĉ_ij += conj(x̂_j) ⊙ ĝ_i  — accumulated in the frequency domain
-        // from the ĝ the sweep left behind; the optimizer step works on
-        // spectra directly so no inverse here.
+        // from the ĝ the sweep left behind (lane-dispatched like every
+        // other product); the optimizer step works on spectra directly so
+        // no inverse here.
         for (i, gb) in g.chunks_exact(p).enumerate() {
             for (j, xb) in x_hat.chunks_exact(p).enumerate() {
                 let d = &mut dc[(i * cb + j) * p..][..p];
-                spectral::conj_mul_acc(d, xb, gb);
+                spectral::conj_mul_acc_with(simd::active(), d, xb, gb);
             }
         }
     }
@@ -293,7 +297,7 @@ impl BlockCirculant {
         for (i, gb) in g.chunks_exact(p).enumerate() {
             for (j, xb) in x_hat.chunks_exact(p).enumerate() {
                 let d = &mut dc[(i * cb + j) * p..][..p];
-                spectral::conj_mul_acc(d, xb, gb);
+                spectral::conj_mul_acc_with(simd::active(), d, xb, gb);
             }
         }
         // dx_j = IFFT( Σ_i conj(ĉ_ij) ⊙ ĝ_i ): accumulate every block,
@@ -302,7 +306,7 @@ impl BlockCirculant {
             dxb.fill(0.0);
             for (i, gb) in g.chunks_exact(p).enumerate() {
                 let ch = &self.c_hat[(i * cb + j) * p..][..p];
-                spectral::conj_mul_acc(dxb, ch, gb);
+                spectral::conj_mul_acc_with(simd::active(), dxb, ch, gb);
             }
         }
         engine::inverse_batch(&self.plan, dx);
@@ -506,14 +510,32 @@ mod tests {
 
     #[test]
     fn fused_matvec_matches_unfused_oracle() {
+        // The unfused oracle runs the fully-scalar per-row legacy path,
+        // so the forced-scalar fused sweep must reproduce it bit-for-bit;
+        // the auto-dispatched sweep may differ only by FMA contraction.
         for n in [4usize, 16, 64, 512] {
             let circ = Circulant::from_first_column(&rand_vec(n, n as u64));
             let x = rand_vec(n, 2 * n as u64 + 1);
-            let mut fused = x.clone();
-            circ.matvec_inplace(&mut fused);
             let mut reference = x.clone();
             circ.matvec_inplace_unfused(&mut reference);
-            assert_eq!(fused, reference, "n={n}");
+            let mut forced = x.clone();
+            engine::circulant_apply_batch_with(
+                &cached(n),
+                &mut forced,
+                circ.spectrum(),
+                SpectralOp::Mul,
+                &crate::rdfft::EngineConfig::forced_scalar(),
+            );
+            assert_eq!(forced, reference, "forced n={n}");
+            let mut auto = x.clone();
+            circ.matvec_inplace(&mut auto);
+            let tol = 1e-4 * (n as f32).sqrt();
+            for i in 0..n {
+                assert!(
+                    (auto[i] - reference[i]).abs() <= tol * (1.0 + reference[i].abs()),
+                    "auto n={n} i={i}"
+                );
+            }
         }
     }
 

@@ -112,7 +112,11 @@ impl BlockCirculantBf16 {
 /// the input blocks in place (they end holding their packed spectra),
 /// accumulate the packed products into each output block and inverse it
 /// immediately — one pass over the operand, zero allocations, storage
-/// 2 bytes/scalar throughout with f32 butterfly arithmetic.
+/// 2 bytes/scalar throughout with f32 butterfly arithmetic. The
+/// butterflies inherit the width-4 lane dispatch through
+/// [`rdfft_inplace_bf16`]/[`irdfft_inplace_bf16`] (quads of widened
+/// 4-groups); the products stay per-element because every
+/// multiply-accumulate rounds through bf16 storage.
 /// `transpose` selects the Eq. 5 direction (`conj(ĉ_ij) ⊙ ĝ_i` into
 /// input-grad block j) over the Eq. 4 forward (`ĉ_ij ⊙ x̂_j` into output
 /// block i); `cb` is the weight layout's column-block count.

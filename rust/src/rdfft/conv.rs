@@ -8,6 +8,10 @@
 //!   filter: O(log p) per sample, constant memory, suitable for
 //!   arbitrarily long streams. All FFT work is in-place in reused
 //!   buffers; steady-state processing performs **zero** allocations.
+//!
+//! Every path here is a thin composition of engine batch calls, so the
+//! convolutions inherit the SIMD lane dispatch (and `--force-scalar`)
+//! without any conv-specific kernel code.
 
 use super::engine::{self, SpectralOp};
 use super::forward::rdfft_inplace;

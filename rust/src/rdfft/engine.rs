@@ -32,10 +32,23 @@
 //!    has enough rows to amortize a wakeup. The pre-pool per-call
 //!    [`std::thread::scope`] path survives as the `*_scoped` fallback
 //!    oracle (benches compare pool-vs-scoped; tests assert bitwise
-//!    agreement). See `EXPERIMENTS.md` §Perf for the measured ablation
-//!    and `BENCH_rdfft.json` for the machine-readable numbers.
+//!    agreement).
+//!
+//! 4. **SIMD lane kernels with runtime dispatch.** Inside every row tile,
+//!    the 4-group butterflies and the packed spectral products run as
+//!    width-4 lane quads ([`super::simd`]): AVX2+FMA on x86_64 when the
+//!    CPU has it, a bit-identical portable quad arm otherwise, and the
+//!    legacy scalar loops behind [`EngineConfig::force_scalar`] (or the
+//!    process-wide `--force-scalar` / `RDFFT_FORCE_SCALAR=1` overrides)
+//!    as the always-available differential oracle. The arm is resolved
+//!    once per call, so results are deterministic across repeats, pool
+//!    sizes, and thread counts.
+//!
+//! See `EXPERIMENTS.md` §Perf for the measured ablation and
+//! `BENCH_rdfft.json` for the machine-readable numbers.
 
 use super::plan::Plan;
+use super::simd::{self, Kernels};
 use super::spectral;
 use crate::runtime::pool::{ExecCtx, WorkerPool};
 
@@ -58,6 +71,13 @@ pub struct EngineConfig {
     /// thread's). 0 = `available_parallelism()`; an explicit value is
     /// trusted as-is so `--threads N` means N on every machine.
     pub max_threads: usize,
+    /// Route every butterfly/product kernel of this call through the
+    /// legacy scalar loops instead of the runtime-dispatched SIMD lanes
+    /// ([`crate::rdfft::simd`]) — the differential oracle, bit-identical
+    /// to the pre-SIMD engine. The process-wide overrides (`--force-scalar`,
+    /// `RDFFT_FORCE_SCALAR=1`) force the same arm for calls that never see
+    /// a config.
+    pub force_scalar: bool,
 }
 
 impl EngineConfig {
@@ -71,6 +91,7 @@ impl EngineConfig {
             par_min_rows: 4,
             par_chunk_elems: 1 << 14,
             max_threads: 0,
+            force_scalar: false,
         }
     }
 
@@ -84,6 +105,33 @@ impl EngineConfig {
             par_min_rows: usize::MAX,
             par_chunk_elems: 1 << 14,
             max_threads: 0,
+            force_scalar: false,
+        }
+    }
+
+    /// Default tuning with the SIMD dispatch disabled: every kernel runs
+    /// the legacy scalar loops. This is the per-call oracle knob the
+    /// differential suite and the `simd_vs_scalar` bench rows use.
+    pub const fn forced_scalar() -> Self {
+        EngineConfig {
+            tile_rows: 8,
+            par_min_elems: 1 << 15,
+            par_min_rows: 4,
+            par_chunk_elems: 1 << 14,
+            max_threads: 0,
+            force_scalar: true,
+        }
+    }
+
+    /// Serial tuning with SIMD disabled (scalar kernels, no threads).
+    pub const fn forced_scalar_serial() -> Self {
+        EngineConfig {
+            tile_rows: 8,
+            par_min_elems: 1 << 15,
+            par_min_rows: usize::MAX,
+            par_chunk_elems: 1 << 14,
+            max_threads: 0,
+            force_scalar: true,
         }
     }
 }
@@ -115,23 +163,23 @@ pub fn inverse_batch(plan: &Plan, buf: &mut [f32]) {
 
 /// [`forward_batch`] with explicit tuning (dispatched on the global pool).
 pub fn forward_batch_with(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, Dispatch::global(), forward_rows);
+    run_batch(plan, buf, cfg, Dispatch::global(), forward_rows_with);
 }
 
 /// [`inverse_batch`] with explicit tuning (dispatched on the global pool).
 pub fn inverse_batch_with(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, Dispatch::global(), inverse_rows);
+    run_batch(plan, buf, cfg, Dispatch::global(), inverse_rows_with);
 }
 
 /// [`forward_batch`] under an explicit [`ExecCtx`]: that context's pool
 /// and engine tuning decide the dispatch.
 pub fn forward_batch_ctx(plan: &Plan, buf: &mut [f32], ctx: &ExecCtx) {
-    run_batch(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), forward_rows);
+    run_batch(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), forward_rows_with);
 }
 
 /// [`inverse_batch`] under an explicit [`ExecCtx`].
 pub fn inverse_batch_ctx(plan: &Plan, buf: &mut [f32], ctx: &ExecCtx) {
-    run_batch(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), inverse_rows);
+    run_batch(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), inverse_rows_with);
 }
 
 /// [`forward_batch_with`] on per-call scoped threads — the pre-pool
@@ -140,12 +188,12 @@ pub fn inverse_batch_ctx(plan: &Plan, buf: &mut [f32], ctx: &ExecCtx) {
 /// the pooled path (same chunking, same kernels; only *where* a chunk
 /// runs differs).
 pub fn forward_batch_scoped(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, Dispatch::Scoped, forward_rows);
+    run_batch(plan, buf, cfg, Dispatch::Scoped, forward_rows_with);
 }
 
 /// [`inverse_batch_with`] on per-call scoped threads (fallback oracle).
 pub fn inverse_batch_scoped(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, Dispatch::Scoped, inverse_rows);
+    run_batch(plan, buf, cfg, Dispatch::Scoped, inverse_rows_with);
 }
 
 // ---------------------------------------------------------------------
@@ -217,25 +265,39 @@ fn circulant_apply_dispatch(
     disp: Dispatch<'_>,
 ) {
     assert_eq!(spec.len(), plan.n(), "spectrum length must equal plan size");
-    run_batch(plan, buf, cfg, disp, move |plan: &Plan, chunk: &mut [f32], tile_rows: usize| {
-        circulant_rows(plan, chunk, tile_rows, spec, op);
-    });
+    run_batch(
+        plan,
+        buf,
+        cfg,
+        disp,
+        move |plan: &Plan, chunk: &mut [f32], tile_rows: usize, kern: Kernels| {
+            circulant_rows(plan, chunk, tile_rows, spec, op, kern);
+        },
+    );
 }
 
 /// One worker's share of the fused pipeline: per tile, forward stages →
 /// packed product → inverse stages in a single sweep. Composes the same
-/// [`forward_rows`]/[`inverse_rows`] kernels as the plain batch paths
-/// (each tile is exactly one of their tiles), so the fused path can
-/// never diverge from `forward_batch`/`inverse_batch` numerics.
-fn circulant_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize, spec: &[f32], op: SpectralOp) {
+/// [`forward_rows_with`]/[`inverse_rows_with`] kernels as the plain batch
+/// paths (each tile is exactly one of their tiles) on the same dispatch
+/// arm, so the fused path can never diverge from
+/// `forward_batch`/`inverse_batch` numerics.
+fn circulant_rows(
+    plan: &Plan,
+    buf: &mut [f32],
+    tile_rows: usize,
+    spec: &[f32],
+    op: SpectralOp,
+    kern: Kernels,
+) {
     let n = plan.n();
     for tile in buf.chunks_mut(tile_rows.max(1) * n) {
-        forward_rows(plan, tile, tile_rows);
+        forward_rows_with(plan, tile, tile_rows, kern);
         match op {
-            SpectralOp::Mul => spectral::mul_rows_inplace(tile, spec),
-            SpectralOp::MulConjB => spectral::mul_conjb_rows_inplace(tile, spec),
+            SpectralOp::Mul => spectral::mul_rows_with(kern, tile, spec),
+            SpectralOp::MulConjB => spectral::mul_conjb_rows_with(kern, tile, spec),
         }
-        inverse_rows(plan, tile, tile_rows);
+        inverse_rows_with(plan, tile, tile_rows, kern);
     }
 }
 
@@ -391,13 +453,15 @@ fn block_apply(
     let out_row = out_blocks * n;
     // Thread planning counts the whole sweep's row-transform work
     // (in + out blocks per sample), capped by the sample count since
-    // samples are the split unit.
+    // samples are the split unit. The kernel arm is resolved once here
+    // and shared by every chunk, so all workers run identical float ops.
+    let kern = simd::select(cfg.force_scalar);
     let workers =
         planned_workers(samples * (in_blocks + out_blocks), n, cfg).min(samples);
     let sweep = move |xs: &mut [f32], os: Option<&mut [f32]>| {
         let os = os.expect("block sweep chunks always pair input with output");
         for (s_in, s_out) in xs.chunks_exact_mut(in_row).zip(os.chunks_exact_mut(out_row)) {
-            block_apply_sample(plan, s_in, s_out, specs, cb, transpose, residual);
+            block_apply_sample(plan, s_in, s_out, specs, cb, transpose, residual, kern);
         }
     };
     if workers <= 1 {
@@ -411,7 +475,9 @@ fn block_apply(
 /// One sample of the fused block sweep: forward-stage the input blocks
 /// (kept as spectra), product-accumulate into the zeroed output blocks
 /// (+ optional freq-domain residual), inverse-stage the output blocks —
-/// all while the sample is cache-resident.
+/// all while the sample is cache-resident. Butterflies and products all
+/// run on the one `kern` arm the caller resolved.
+#[allow(clippy::too_many_arguments)]
 fn block_apply_sample(
     plan: &Plan,
     input: &mut [f32],
@@ -420,10 +486,11 @@ fn block_apply_sample(
     cb: usize,
     transpose: bool,
     residual: bool,
+    kern: Kernels,
 ) {
     let n = plan.n();
     let in_blocks = input.len() / n;
-    forward_rows(plan, input, in_blocks.max(1));
+    forward_rows_with(plan, input, in_blocks.max(1), kern);
     out.fill(0.0);
     for (oi, ob) in out.chunks_exact_mut(n).enumerate() {
         for (ii, xb) in input.chunks_exact(n).enumerate() {
@@ -431,9 +498,9 @@ fn block_apply_sample(
             let (i, j) = if transpose { (ii, oi) } else { (oi, ii) };
             let ch = &specs[(i * cb + j) * n..][..n];
             if transpose {
-                spectral::conj_mul_acc(ob, ch, xb);
+                spectral::conj_mul_acc_with(kern, ob, ch, xb);
             } else {
-                spectral::mul_acc(ob, ch, xb);
+                spectral::mul_acc_with(kern, ob, ch, xb);
             }
         }
         if residual {
@@ -444,7 +511,7 @@ fn block_apply_sample(
         }
     }
     let out_blocks = out.len() / n;
-    inverse_rows(plan, out, out_blocks.max(1));
+    inverse_rows_with(plan, out, out_blocks.max(1), kern);
 }
 
 /// Execution backend for one threaded engine call. The pool is the
@@ -476,12 +543,14 @@ impl<'a> Dispatch<'a> {
     }
 }
 
-/// Shared driver: validate, decide serial vs parallel execution, dispatch
-/// `kernel` over contiguous row chunks. Generic so the fused circulant
-/// pipeline can close over its spectrum without boxing.
+/// Shared driver: validate, decide serial vs parallel execution, resolve
+/// the kernel arm, dispatch `kernel` over contiguous row chunks. Generic
+/// so the fused circulant pipeline can close over its spectrum without
+/// boxing. The arm is resolved **once per call** — every chunk of the
+/// batch, on every worker, runs identical float ops.
 fn run_batch<K>(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig, disp: Dispatch<'_>, kernel: K)
 where
-    K: Fn(&Plan, &mut [f32], usize) + Copy + Send + Sync,
+    K: Fn(&Plan, &mut [f32], usize, Kernels) + Copy + Send + Sync,
 {
     let n = plan.n();
     assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");
@@ -489,10 +558,11 @@ where
     if rows == 0 {
         return;
     }
+    let kern = simd::select(cfg.force_scalar);
     let workers = planned_workers(rows, n, cfg);
     let tile_rows = cfg.tile_rows;
     if workers <= 1 {
-        kernel(plan, buf, tile_rows);
+        kernel(plan, buf, tile_rows, kern);
         return;
     }
     // Contiguous row chunks; `ceil` so the chunk count never exceeds
@@ -500,7 +570,7 @@ where
     // pool scope and thread::scope guarantee completion before return.
     let chunk_rows = (rows + workers - 1) / workers;
     dispatch_rows(disp, buf, None, chunk_rows * n, 0, move |chunk, _| {
-        kernel(plan, chunk, tile_rows)
+        kernel(plan, chunk, tile_rows, kern)
     });
 }
 
@@ -615,17 +685,25 @@ fn planned_workers(rows: usize, n: usize, cfg: &EngineConfig) -> usize {
 /// Forward kernel over one contiguous chunk of rows: fused bit-reversal +
 /// first two stages per row, then tiled batch-major stages. Public so
 /// fused consumers (the circulant pipeline, the layer backward) can
-/// compose it with their own product stages without a thread dispatch.
+/// compose it with their own product stages without a thread dispatch;
+/// runs on the auto-dispatched kernel arm ([`simd::active`]).
 pub fn forward_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
+    forward_rows_with(plan, buf, tile_rows, simd::active());
+}
+
+/// [`forward_rows`] on an explicit kernel arm (what `run_batch` resolves
+/// from [`EngineConfig::force_scalar`]).
+pub fn forward_rows_with(plan: &Plan, buf: &mut [f32], tile_rows: usize, kern: Kernels) {
     let n = plan.n();
-    // Pass 1 (per row): fused bit-reversal + stages m = 1, 2.
+    // Pass 1 (per row): fused bit-reversal + stages m = 1, 2. Trivial
+    // twiddles (±1, ∓i) — identical scalar ops on every dispatch arm.
     for row in buf.chunks_exact_mut(n) {
         fused_bitrev_stage12(plan, row);
     }
     // Pass 2 (per row tile): remaining stages, batch-major.
     if n > 4 {
         for tile in buf.chunks_mut(tile_rows.max(1) * n) {
-            forward_stages_tile(plan, tile);
+            forward_stages_tile(plan, tile, kern);
         }
     }
 }
@@ -633,12 +711,17 @@ pub fn forward_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
 /// Inverse kernel over one contiguous chunk of rows. Mirrors
 /// [`forward_rows`] in reverse: tiled stages down to m = 4, then a fused
 /// per-row undo of stages m = 2, 1, then the bit-reversal. Public for the
-/// same fused consumers as [`forward_rows`].
+/// same fused consumers as [`forward_rows`]; auto-dispatched arm.
 pub fn inverse_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
+    inverse_rows_with(plan, buf, tile_rows, simd::active());
+}
+
+/// [`inverse_rows`] on an explicit kernel arm.
+pub fn inverse_rows_with(plan: &Plan, buf: &mut [f32], tile_rows: usize, kern: Kernels) {
     let n = plan.n();
     if n > 4 {
         for tile in buf.chunks_mut(tile_rows.max(1) * n) {
-            inverse_stages_tile(plan, tile);
+            inverse_stages_tile(plan, tile, kern);
         }
     }
     for row in buf.chunks_exact_mut(n) {
@@ -722,7 +805,16 @@ pub fn fused_inverse_stage21(row: &mut [f32], n: usize) {
 }
 
 /// Forward stages m = 4 .. n/2 over a tile of rows, batch-major.
-fn forward_stages_tile(plan: &Plan, tile: &mut [f32]) {
+///
+/// Two kernel arms: [`Kernels::LegacyScalar`] runs the pre-SIMD loops
+/// byte-for-byte (row-inner below [`SMALL_M`], k-inner above); the lane
+/// arms hand each row block's 4-group sweep to the width-4 quad kernels
+/// ([`simd::fwd_groups_dispatch`]) fed by the plan's lane-padded
+/// stage-major twiddles. Groups at different `k` are slot-disjoint, so
+/// the quad split never reorders any per-element op — the portable lane
+/// arm stays bit-identical to the scalar one; only FMA contraction on
+/// the AVX arm can differ (within the documented tolerance).
+fn forward_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
     let n = plan.n();
     let rows = tile.len() / n;
     debug_assert_eq!(tile.len(), rows * n);
@@ -734,7 +826,7 @@ fn forward_stages_tile(plan: &Plan, tile: &mut [f32]) {
         let mut s = 0usize;
         while s < n {
             // Trivial lanes (k = 0 DC/Nyquist combine, k = m/2 sign
-            // flip), per row.
+            // flip), per row — scalar on every arm.
             for r in 0..rows {
                 let base = r * n + s;
                 let e = tile[base];
@@ -752,7 +844,13 @@ fn forward_stages_tile(plan: &Plan, tile: &mut [f32]) {
             // over `rows` rows. Bounds checks cost ~25% here (see
             // EXPERIMENTS.md §Perf).
             unsafe {
-                if m <= SMALL_M {
+                if kern != Kernels::LegacyScalar {
+                    let (lwr, lwi) = plan.stage_lane_twiddles(m);
+                    for r in 0..rows {
+                        let blk = tile.get_unchecked_mut(r * n + s..r * n + s + two_m);
+                        simd::fwd_groups_dispatch(kern, blk, m, lwr, lwi);
+                    }
+                } else if m <= SMALL_M {
                     // Row-inner: one twiddle load serves every row in the
                     // tile at this (stage, k).
                     for k in 1..half {
@@ -787,8 +885,9 @@ fn forward_stages_tile(plan: &Plan, tile: &mut [f32]) {
     }
 }
 
-/// Inverse stages m = n/2 .. 4 over a tile of rows, batch-major.
-fn inverse_stages_tile(plan: &Plan, tile: &mut [f32]) {
+/// Inverse stages m = n/2 .. 4 over a tile of rows, batch-major (same
+/// two-arm structure as [`forward_stages_tile`]).
+fn inverse_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
     let n = plan.n();
     let rows = tile.len() / n;
     debug_assert_eq!(tile.len(), rows * n);
@@ -810,7 +909,13 @@ fn inverse_stages_tile(plan: &Plan, tile: &mut [f32]) {
             }
             // SAFETY: same bounds argument as forward_stages_tile.
             unsafe {
-                if m <= SMALL_M {
+                if kern != Kernels::LegacyScalar {
+                    let (lhr, lhi) = plan.stage_lane_inv_twiddles(m);
+                    for r in 0..rows {
+                        let blk = tile.get_unchecked_mut(r * n + s..r * n + s + two_m);
+                        simd::inv_groups_dispatch(kern, blk, m, lhr, lhi);
+                    }
+                } else if m <= SMALL_M {
                     for k in 1..half {
                         let hrk = *hr.get_unchecked(k - 1);
                         let hik = *hi.get_unchecked(k - 1);
@@ -939,28 +1044,53 @@ mod tests {
     }
 
     #[test]
-    fn forward_batch_matches_scalar_rows_exactly() {
+    fn forced_scalar_forward_batch_matches_scalar_rows_exactly() {
+        // The force_scalar arm is the pre-SIMD engine, bit-for-bit equal
+        // to the per-row scalar loop; the auto arm agrees within the FMA
+        // tolerance (and bitwise whenever FMA lanes are not active).
         for (n, b) in [(2usize, 3usize), (4, 5), (16, 1), (64, 7), (256, 9), (1024, 4)] {
             let plan = cached(n);
             let x = rand_vec(n * b, (n + b) as u64);
             let mut scalar = x.clone();
             rdfft_batch_scalar(&plan, &mut scalar);
-            let mut engine = x.clone();
-            forward_batch(&plan, &mut engine);
-            assert_eq!(engine, scalar, "n={n} b={b}");
+            let mut forced = x.clone();
+            forward_batch_with(&plan, &mut forced, &EngineConfig::forced_scalar());
+            assert_eq!(forced, scalar, "n={n} b={b}");
+            let mut auto = x.clone();
+            forward_batch(&plan, &mut auto);
+            if simd::active() != Kernels::AvxFma {
+                assert_eq!(auto, scalar, "non-FMA arm must be bitwise n={n} b={b}");
+            }
+            for i in 0..n * b {
+                assert!(
+                    (auto[i] - scalar[i]).abs() <= 1e-4 * (n as f32).sqrt(),
+                    "n={n} b={b} i={i}"
+                );
+            }
         }
     }
 
     #[test]
-    fn inverse_batch_matches_scalar_rows_exactly() {
+    fn forced_scalar_inverse_batch_matches_scalar_rows_exactly() {
         for (n, b) in [(2usize, 3usize), (4, 5), (16, 1), (64, 7), (256, 9), (1024, 4)] {
             let plan = cached(n);
             let x = rand_vec(n * b, (2 * n + b) as u64);
             let mut scalar = x.clone();
             irdfft_batch_scalar(&plan, &mut scalar);
-            let mut engine = x.clone();
-            inverse_batch(&plan, &mut engine);
-            assert_eq!(engine, scalar, "n={n} b={b}");
+            let mut forced = x.clone();
+            inverse_batch_with(&plan, &mut forced, &EngineConfig::forced_scalar());
+            assert_eq!(forced, scalar, "n={n} b={b}");
+            let mut auto = x.clone();
+            inverse_batch(&plan, &mut auto);
+            if simd::active() != Kernels::AvxFma {
+                assert_eq!(auto, scalar, "non-FMA arm must be bitwise n={n} b={b}");
+            }
+            for i in 0..n * b {
+                assert!(
+                    (auto[i] - scalar[i]).abs() <= 1e-4 * (n as f32).sqrt().max(1.0),
+                    "n={n} b={b} i={i}"
+                );
+            }
         }
     }
 
@@ -1062,10 +1192,10 @@ mod tests {
         let mut scalar = x.clone();
         rdfft_inplace(&plan, &mut scalar);
         let mut engine = x.clone();
-        forward_batch(&plan, &mut engine);
+        forward_batch_with(&plan, &mut engine, &EngineConfig::forced_scalar());
         assert_eq!(engine, scalar);
         irdfft_inplace(&plan, &mut scalar);
-        inverse_batch(&plan, &mut engine);
+        inverse_batch_with(&plan, &mut engine, &EngineConfig::forced_scalar());
         assert_eq!(engine, scalar);
     }
 
@@ -1100,15 +1230,17 @@ mod tests {
         s
     }
 
-    /// Unfused three-pass reference: forward batch, per-row product,
-    /// inverse batch — the differential oracle for the fused pipeline.
+    /// Unfused three-pass reference: forward batch, row-product sweep,
+    /// inverse batch — the differential oracle for the fused pipeline's
+    /// *structure*. All three passes run on the same auto-dispatched
+    /// kernel arm as the fused sweep, so fused-vs-unfused stays a
+    /// bit-exact comparison on every arm (scalar-vs-SIMD drift is bounded
+    /// separately in rust/tests/differential.rs).
     fn unfused_apply(plan: &super::super::plan::Plan, buf: &mut [f32], spec: &[f32], op: SpectralOp) {
         forward_batch(plan, buf);
-        for row in buf.chunks_exact_mut(plan.n()) {
-            match op {
-                SpectralOp::Mul => crate::rdfft::spectral::mul_inplace(row, spec),
-                SpectralOp::MulConjB => crate::rdfft::spectral::mul_conjb_inplace(row, spec),
-            }
+        match op {
+            SpectralOp::Mul => crate::rdfft::spectral::mul_rows_inplace(buf, spec),
+            SpectralOp::MulConjB => crate::rdfft::spectral::mul_conjb_rows_inplace(buf, spec),
         }
         inverse_batch(plan, buf);
     }
@@ -1192,7 +1324,10 @@ mod tests {
                 let orow = &mut out_ref[s * rb * n..(s + 1) * rb * n];
                 for i in 0..rb {
                     for j in 0..cb {
-                        crate::rdfft::spectral::mul_acc(
+                        // Same dispatched product as the fused sweep, so
+                        // the comparison stays bit-exact on every arm.
+                        crate::rdfft::spectral::mul_acc_with(
+                            simd::active(),
                             &mut orow[i * n..(i + 1) * n],
                             &specs[(i * cb + j) * n..][..n],
                             &xrow[j * n..(j + 1) * n],
@@ -1227,7 +1362,8 @@ mod tests {
                 let dxrow = &mut dx_ref[s * cb * n..(s + 1) * cb * n];
                 for j in 0..cb {
                     for i in 0..rb {
-                        crate::rdfft::spectral::conj_mul_acc(
+                        crate::rdfft::spectral::conj_mul_acc_with(
+                            simd::active(),
                             &mut dxrow[j * n..(j + 1) * n],
                             &specs[(i * cb + j) * n..][..n],
                             &grow[i * n..(i + 1) * n],
@@ -1293,5 +1429,77 @@ mod tests {
         for v in buf {
             assert!((v - 0.5).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn simd_arm_roundtrips_and_tracks_forced_scalar() {
+        // Auto-dispatch (whatever arm this machine resolves) must
+        // round-trip and stay within the n-scaled FMA tolerance of the
+        // forced-scalar oracle across sizes straddling the quad width.
+        for (n, b) in [(4usize, 3usize), (8, 5), (16, 7), (64, 9), (512, 4), (4096, 2)] {
+            let plan = cached(n);
+            let x = rand_vec(n * b, 7777 + n as u64);
+            let mut auto = x.clone();
+            forward_batch(&plan, &mut auto);
+            let mut forced = x.clone();
+            forward_batch_with(&plan, &mut forced, &EngineConfig::forced_scalar());
+            let tol = 1e-5 * (n as f32).sqrt() * ((n as f32).log2() + 1.0);
+            for i in 0..n * b {
+                assert!(
+                    (auto[i] - forced[i]).abs() <= tol,
+                    "fwd n={n} b={b} i={i}: {} vs {}",
+                    auto[i],
+                    forced[i]
+                );
+            }
+            inverse_batch(&plan, &mut auto);
+            for i in 0..n * b {
+                assert!((auto[i] - x[i]).abs() < 1e-3, "roundtrip n={n} b={b} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_simd_apply_tracks_forced_scalar_apply() {
+        let (n, b) = (256usize, 9usize);
+        let plan = cached(n);
+        let mut spec = rand_vec(n, 4242);
+        forward_batch_with(&plan, &mut spec, &EngineConfig::forced_scalar());
+        for op in [SpectralOp::Mul, SpectralOp::MulConjB] {
+            let x = rand_vec(n * b, 999 + n as u64);
+            let mut auto = x.clone();
+            circulant_apply_batch(&plan, &mut auto, &spec, op);
+            let mut forced = x.clone();
+            circulant_apply_batch_with(&plan, &mut forced, &spec, op, &EngineConfig::forced_scalar());
+            let tol = 1e-4 * (n as f32).sqrt();
+            for i in 0..n * b {
+                assert!(
+                    (auto[i] - forced[i]).abs() <= tol * (1.0 + forced[i].abs()),
+                    "op={op:?} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_is_identical_across_pool_thread_counts() {
+        // Auto-dispatch resolves the arm once per call from a cached
+        // process-wide decision, so results are identical whichever pool
+        // executes the chunks and however many workers it has.
+        let (n, b) = (128usize, 13usize);
+        let plan = cached(n);
+        let x = rand_vec(n * b, 31337);
+        let cfg = force_threads();
+        let mut lanes1 = x.clone();
+        let ctx1 = crate::runtime::pool::ExecCtx::with_threads(1).with_engine_config(cfg);
+        forward_batch_ctx(&plan, &mut lanes1, &ctx1);
+        let mut lanes4 = x.clone();
+        let ctx4 = crate::runtime::pool::ExecCtx::with_threads(4).with_engine_config(cfg);
+        forward_batch_ctx(&plan, &mut lanes4, &ctx4);
+        assert_eq!(lanes1, lanes4, "thread count must not change SIMD results");
+        // Repeated runs on the same machine are bit-identical too.
+        let mut again = x.clone();
+        forward_batch_ctx(&plan, &mut again, &ctx4);
+        assert_eq!(lanes4, again, "repeat run must be bit-identical");
     }
 }

@@ -30,14 +30,19 @@ pub fn rdfft_inplace(plan: &Plan, buf: &mut [f32]) {
 /// Batched variant: `buf` holds `batch` contiguous rows of length
 /// `plan.n()`; each row is transformed independently, in place. Routed
 /// through the batch-major [`super::engine`] (fused first stages, SoA
-/// twiddles, scoped-thread row chunks above the work threshold); output
-/// is bit-identical to the per-row scalar path.
+/// twiddles, pooled row chunks above the work threshold, and the
+/// runtime-dispatched SIMD lane kernels of [`super::simd`]). Output is
+/// bit-identical to the per-row scalar path on the forced-scalar and
+/// portable arms; the AVX2+FMA arm agrees within the n-scaled tolerance
+/// (EXPERIMENTS.md §Perf iteration 6).
 pub fn rdfft_batch(plan: &Plan, buf: &mut [f32]) {
     super::engine::forward_batch(plan, buf);
 }
 
 /// The pre-engine serial row loop, kept as the equivalence/ablation
-/// reference: per-row scalar transforms, nothing fused, nothing batched.
+/// reference: per-row scalar transforms, nothing fused, nothing batched,
+/// no SIMD — the oracle `EngineConfig::force_scalar` must reproduce
+/// bit-for-bit (rust/tests/differential.rs pins that contract).
 pub fn rdfft_batch_scalar(plan: &Plan, buf: &mut [f32]) {
     let n = plan.n();
     assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");

@@ -23,13 +23,16 @@ pub fn irdfft_inplace(plan: &Plan, buf: &mut [f32]) {
 }
 
 /// Batched variant of [`irdfft_inplace`] over contiguous rows, routed
-/// through the batch-major [`super::engine`]; output is bit-identical to
-/// the per-row scalar path.
+/// through the batch-major [`super::engine`] and its runtime-dispatched
+/// SIMD lane kernels; bit-identical to the per-row scalar path on the
+/// forced-scalar and portable arms, within the n-scaled tolerance on the
+/// AVX2+FMA arm.
 pub fn irdfft_batch(plan: &Plan, buf: &mut [f32]) {
     super::engine::inverse_batch(plan, buf);
 }
 
-/// The pre-engine serial row loop (equivalence/ablation reference).
+/// The pre-engine serial row loop (equivalence/ablation reference; the
+/// bitwise oracle for `EngineConfig::force_scalar`).
 pub fn irdfft_batch_scalar(plan: &Plan, buf: &mut [f32]) {
     let n = plan.n();
     assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");

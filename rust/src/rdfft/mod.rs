@@ -27,6 +27,10 @@
 //!   forward stages → packed spectral product → inverse stages in one
 //!   cache-resident sweep per tile instead of three full passes
 //! * [`spectral`]  — packed-domain elementwise complex ops (⊙, conj-⊙)
+//! * [`simd`]      — width-4 lane micro-kernels (butterfly 4-groups,
+//!   packed products) with runtime dispatch: AVX2+FMA on x86_64, a
+//!   bit-identical portable quad arm elsewhere, and the legacy scalar
+//!   loops behind `force_scalar` as the differential oracle
 //! * [`circulant`] — circulant & block-circulant products + gradients (Eq. 4/5)
 //! * [`bf16`]      — software bfloat16 and the bf16 transform path
 
@@ -39,6 +43,7 @@ pub mod forward;
 pub mod inverse;
 pub mod layout;
 pub mod plan;
+pub mod simd;
 pub mod spectral;
 pub mod twod;
 
@@ -49,6 +54,7 @@ pub use engine::{
     forward_batch, forward_batch_ctx, inverse_batch, inverse_batch_ctx, EngineConfig,
     SpectralOp,
 };
+pub use simd::Kernels;
 pub use forward::{rdfft_batch, rdfft_inplace};
 pub use inverse::{irdfft_batch, irdfft_inplace};
 pub use plan::Plan;

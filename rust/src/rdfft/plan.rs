@@ -32,14 +32,23 @@ pub struct Plan {
     /// batch engine's fused permutation pass needs per-index targets (the
     /// pairwise `swaps` list cannot be interleaved with butterflies).
     rev: Vec<u32>,
-    /// SoA twiddles for the batch engine: same stage layout as
-    /// `twiddles`, but real and imaginary parts in separate slices so the
-    /// innermost engine loops read stride-1 lanes.
-    wr: Vec<f32>,
-    wi: Vec<f32>,
-    /// SoA pre-halved inverse twiddles (`wr/2`, `wi/2`).
-    inv_wr: Vec<f32>,
-    inv_wi: Vec<f32>,
+    /// SoA twiddles, stage-major in **lane-padded** order: real and
+    /// imaginary parts in separate slices (stride-1 for the innermost
+    /// engine loops), each stage's run indexed `k − 1` and zero-padded to
+    /// a multiple of [`super::simd::LANES`] so every stage starts at a
+    /// lane-aligned offset (`lane_off`) and the SIMD quad loops sweep
+    /// exact width-4 chunks of one contiguous stream. The scalar SoA
+    /// accessors return pad-free subslices of the same storage — one
+    /// copy serves both the legacy and the lane kernels.
+    lane_wr: Vec<f32>,
+    lane_wi: Vec<f32>,
+    /// Lane-padded pre-halved inverse twiddles (`wr/2`, `wi/2`), same
+    /// layout.
+    lane_inv_wr: Vec<f32>,
+    lane_inv_wi: Vec<f32>,
+    /// Per-stage base offsets into the `lane_*` arrays (stage `s` has
+    /// half-block `m = 2^s`); every entry is a multiple of the lane width.
+    lane_off: Vec<usize>,
 }
 
 impl Plan {
@@ -64,21 +73,33 @@ impl Plan {
         // both AoS (scalar path) and SoA (batch engine).
         let mut twiddles = Vec::new();
         let mut inv_twiddles = Vec::new();
-        let (mut wr_v, mut wi_v) = (Vec::new(), Vec::new());
-        let (mut inv_wr, mut inv_wi) = (Vec::new(), Vec::new());
         let mut stage_off = Vec::with_capacity(log2n as usize);
+        let lanes = super::simd::LANES;
+        let (mut lane_wr, mut lane_wi) = (Vec::new(), Vec::new());
+        let (mut lane_inv_wr, mut lane_inv_wi) = (Vec::new(), Vec::new());
+        let mut lane_off = Vec::with_capacity(log2n as usize);
         for s in 0..log2n {
             let m = 1usize << s;
             stage_off.push(twiddles.len());
+            lane_off.push(lane_wr.len());
             for k in 1..m / 2 {
                 let theta = std::f64::consts::TAU * k as f64 / (2 * m) as f64;
                 let (wr, wi) = (theta.cos() as f32, (-theta.sin()) as f32);
                 twiddles.push((wr, wi));
                 inv_twiddles.push((0.5 * wr, 0.5 * wi));
-                wr_v.push(wr);
-                wi_v.push(wi);
-                inv_wr.push(0.5 * wr);
-                inv_wi.push(0.5 * wi);
+                lane_wr.push(wr);
+                lane_wi.push(wi);
+                lane_inv_wr.push(0.5 * wr);
+                lane_inv_wi.push(0.5 * wi);
+            }
+            // Zero-pad the stage run to a whole number of lanes; the quad
+            // kernels never *use* pad entries (tails run scalar), the pad
+            // only keeps every stage's base lane-aligned.
+            while lane_wr.len() % lanes != 0 {
+                lane_wr.push(0.0);
+                lane_wi.push(0.0);
+                lane_inv_wr.push(0.0);
+                lane_inv_wi.push(0.0);
             }
         }
 
@@ -90,10 +111,11 @@ impl Plan {
             inv_twiddles,
             stage_off,
             rev,
-            wr: wr_v,
-            wi: wi_v,
-            inv_wr,
-            inv_wi,
+            lane_wr,
+            lane_wi,
+            lane_inv_wr,
+            lane_inv_wi,
+            lane_off,
         }
     }
 
@@ -122,23 +144,48 @@ impl Plan {
     }
 
     /// SoA forward twiddles `(wr, wi)` for the stage with half-block `m`
-    /// (entries for `k = 1 .. m/2-1`, like [`Self::stage_twiddles`]).
+    /// (entries for `k = 1 .. m/2-1`, like [`Self::stage_twiddles`]) — a
+    /// pad-free view into the lane-padded storage.
     #[inline]
     pub fn stage_twiddles_soa(&self, m: usize) -> (&[f32], &[f32]) {
         let s = m.trailing_zeros() as usize;
-        let start = self.stage_off[s];
+        let start = self.lane_off[s];
         let len = (m / 2).saturating_sub(1);
-        (&self.wr[start..start + len], &self.wi[start..start + len])
+        (&self.lane_wr[start..start + len], &self.lane_wi[start..start + len])
     }
 
     /// SoA pre-halved inverse twiddles `(wr/2, wi/2)` for the stage with
-    /// half-block `m`.
+    /// half-block `m` (pad-free view into the lane-padded storage).
     #[inline]
     pub fn stage_inv_twiddles_soa(&self, m: usize) -> (&[f32], &[f32]) {
         let s = m.trailing_zeros() as usize;
-        let start = self.stage_off[s];
+        let start = self.lane_off[s];
         let len = (m / 2).saturating_sub(1);
-        (&self.inv_wr[start..start + len], &self.inv_wi[start..start + len])
+        (&self.lane_inv_wr[start..start + len], &self.lane_inv_wi[start..start + len])
+    }
+
+    /// Lane-padded SoA forward twiddles for the stage with half-block `m`:
+    /// entries for `k = 1 .. m/2-1` at index `k − 1` (identical values to
+    /// [`Self::stage_twiddles_soa`]), zero-padded to a multiple of the
+    /// lane width. The SIMD quad kernels read full width-4 chunks of
+    /// these; the pad entries are never consumed (tails run scalar).
+    #[inline]
+    pub fn stage_lane_twiddles(&self, m: usize) -> (&[f32], &[f32]) {
+        let s = m.trailing_zeros() as usize;
+        let start = self.lane_off[s];
+        let end = self.lane_off.get(s + 1).copied().unwrap_or(self.lane_wr.len());
+        (&self.lane_wr[start..end], &self.lane_wi[start..end])
+    }
+
+    /// Lane-padded SoA pre-halved inverse twiddles (`wr/2`, `wi/2`) for
+    /// the stage with half-block `m` (layout of
+    /// [`Self::stage_lane_twiddles`]).
+    #[inline]
+    pub fn stage_lane_inv_twiddles(&self, m: usize) -> (&[f32], &[f32]) {
+        let s = m.trailing_zeros() as usize;
+        let start = self.lane_off[s];
+        let end = self.lane_off.get(s + 1).copied().unwrap_or(self.lane_inv_wr.len());
+        (&self.lane_inv_wr[start..end], &self.lane_inv_wi[start..end])
     }
 
     /// Twiddle slice for the stage with half-block `m` (entries for
@@ -180,7 +227,12 @@ impl Plan {
             + self.inv_twiddles.len() * 8
             + self.stage_off.len() * 8
             + self.rev.len() * 4
-            + (self.wr.len() + self.wi.len() + self.inv_wr.len() + self.inv_wi.len()) * 4
+            + (self.lane_wr.len()
+                + self.lane_wi.len()
+                + self.lane_inv_wr.len()
+                + self.lane_inv_wi.len())
+                * 4
+            + self.lane_off.len() * 8
     }
 }
 
@@ -374,11 +426,43 @@ mod tests {
     fn heap_bytes_counts_soa_twiddle_arrays() {
         let plan = Plan::new(16);
         let tw: usize = [1usize, 2, 4, 8].iter().map(|&m| (m / 2).saturating_sub(1)).sum();
+        // Lane arrays pad each stage's run (0, 0, 1, 3 entries) up to a
+        // multiple of the lane width: 0 + 0 + 4 + 4 entries.
+        let lanes = crate::rdfft::simd::LANES;
+        let lane_tw: usize = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&m| {
+                let v = (m / 2).saturating_sub(1);
+                (v + lanes - 1) / lanes * lanes
+            })
+            .sum();
         let expected = plan.swaps().len() * 8     // swap pairs
             + tw * 8 * 2                          // AoS fwd + inv twiddles
             + 4 * 8                               // stage_off
             + 16 * 4                              // rev table
-            + tw * 4 * 4; // SoA wr/wi/inv_wr/inv_wi
+            + lane_tw * 4 * 4                     // lane-padded SoA quads
+            + 4 * 8; // lane_off
         assert_eq!(plan.heap_bytes(), expected);
+    }
+
+    #[test]
+    fn lane_twiddles_match_soa_twiddles_with_zero_pad() {
+        let plan = Plan::new(256);
+        let lanes = crate::rdfft::simd::LANES;
+        for m in [4usize, 8, 16, 32, 64, 128] {
+            let (wr, wi) = plan.stage_twiddles_soa(m);
+            let (lwr, lwi) = plan.stage_lane_twiddles(m);
+            let (hr, hi) = plan.stage_inv_twiddles_soa(m);
+            let (lhr, lhi) = plan.stage_lane_inv_twiddles(m);
+            assert_eq!(lwr.len() % lanes, 0, "m={m} lane pad");
+            assert!(lwr.len() >= wr.len() && lwr.len() < wr.len() + lanes, "m={m}");
+            for k in 0..wr.len() {
+                assert_eq!((lwr[k], lwi[k]), (wr[k], wi[k]), "m={m} k={k}");
+                assert_eq!((lhr[k], lhi[k]), (hr[k], hi[k]), "m={m} k={k} inv");
+            }
+            for k in wr.len()..lwr.len() {
+                assert_eq!((lwr[k], lwi[k], lhr[k], lhi[k]), (0.0, 0.0, 0.0, 0.0), "pad m={m}");
+            }
+        }
     }
 }

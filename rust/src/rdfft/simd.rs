@@ -1,0 +1,1076 @@
+//! SIMD micro-kernels for the butterfly and packed-spectral hot loops.
+//!
+//! Every rdFFT hot loop bottoms out in one of two shapes:
+//!
+//! * the symmetric **4-group butterfly** of Proposition 1 (forward and
+//!   inverse), sweeping `k = 1 .. m/2` inside a `2m`-block with two
+//!   ascending and two descending stride-1 element streams, and
+//! * the **packed conjugate-symmetric product** (Eq. 4/5), sweeping
+//!   `k = 1 .. n/2` of a packed row against a shared spectrum with the
+//!   same two-ascending / two-descending access pattern.
+//!
+//! Groups at different `k` touch disjoint slots (`{k, m−k, m+k, 2m−k}`
+//! partitions the block; `{k, n−k}` partitions the row), so four
+//! consecutive groups can run as one width-4 f32 lane operation with no
+//! cross-lane dependency. This module implements both shapes **once**
+//! against the tiny [`Lanes4`] trait and instantiates them twice:
+//!
+//! * [`ScalarQuad`] — portable scalar quads, plain mul/add (no FMA). The
+//!   per-element operations and their order are *identical* to the legacy
+//!   scalar loops, so this arm is **bit-for-bit equal** to the pre-SIMD
+//!   kernels on every platform.
+//! * `AvxFma` (x86_64) — 128-bit SSE lanes compiled with AVX2+FMA
+//!   enabled, selected at runtime via `is_x86_feature_detected!`. FMA
+//!   contracts `a·b ± c·d` into one rounding, so this arm may differ
+//!   from the scalar oracle by a few ulps per butterfly — the
+//!   differential suite bounds the drift with the n-scaled tolerance
+//!   (EXPERIMENTS.md §Perf iteration 6, "tolerance policy").
+//!
+//! Dispatch is resolved **once per engine call** ([`select`]) from three
+//! inputs, in priority order: the process-wide override (the CLI's
+//! `--force-scalar`, [`force_scalar_global`]), the `RDFFT_FORCE_SCALAR`
+//! environment variable (the CI matrix's force-scalar leg), and the
+//! per-call [`crate::rdfft::engine::EngineConfig::force_scalar`] flag.
+//! The legacy scalar loops stay reachable through all three, so the
+//! pre-SIMD kernels remain available as the differential oracle
+//! (`rust/tests/differential.rs` asserts the forced arm is bitwise
+//! identical to them). Selection is deterministic for the life of the
+//! process: the same arm runs on every call, every pool worker, every
+//! repetition — the dispatch-determinism proptests depend on that.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lane width of every kernel in this module.
+pub const LANES: usize = 4;
+
+/// Which kernel arm a call executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernels {
+    /// The pre-SIMD scalar loops, bit-for-bit — the differential oracle.
+    LegacyScalar,
+    /// Portable width-4 scalar quads (no FMA); bitwise identical to
+    /// [`Kernels::LegacyScalar`], structured as straight-line lane code.
+    Portable,
+    /// x86_64 lanes compiled with AVX2+FMA (runtime-detected). Never
+    /// selected on other architectures.
+    AvxFma,
+}
+
+// Cached dispatch decision: 0 = unresolved, then Kernels + 1.
+const K_UNRESOLVED: u8 = 0;
+const K_SCALAR: u8 = 1;
+const K_PORTABLE: u8 = 2;
+const K_AVXFMA: u8 = 3;
+static ACTIVE: AtomicU8 = AtomicU8::new(K_UNRESOLVED);
+
+fn decode(v: u8) -> Kernels {
+    match v {
+        K_SCALAR => Kernels::LegacyScalar,
+        K_AVXFMA => Kernels::AvxFma,
+        _ => Kernels::Portable,
+    }
+}
+
+/// Cached CPU capability check (independent of the dispatch override, so
+/// the safe entry points can sanitize a caller-supplied arm even when the
+/// auto decision was forced to scalar).
+#[cfg(target_arch = "x86_64")]
+fn avx_fma_available() -> bool {
+    use std::sync::OnceLock;
+    static AVAIL: OnceLock<bool> = OnceLock::new();
+    *AVAIL.get_or_init(|| is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx_fma_available() -> bool {
+    false
+}
+
+/// Downgrade an arm the current CPU cannot execute: `AvxFma` on a machine
+/// without AVX2+FMA becomes `Portable` (numerically identical to the
+/// scalar oracle). This is what keeps the safe dispatchers sound —
+/// `Kernels` is a plain public enum, so a safe caller may hand us any
+/// variant.
+#[inline]
+fn sanitize(kern: Kernels) -> Kernels {
+    if kern == Kernels::AvxFma && !avx_fma_available() {
+        Kernels::Portable
+    } else {
+        kern
+    }
+}
+
+fn resolve() -> u8 {
+    if std::env::var("RDFFT_FORCE_SCALAR")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+    {
+        return K_SCALAR;
+    }
+    if avx_fma_available() {
+        return K_AVXFMA;
+    }
+    K_PORTABLE
+}
+
+/// The arm auto-dispatch runs (resolved once, then cached). Honors the
+/// process-wide overrides but not per-call `EngineConfig::force_scalar` —
+/// engine entry points combine both via [`select`].
+pub fn active() -> Kernels {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    if v != K_UNRESOLVED {
+        return decode(v);
+    }
+    let r = resolve();
+    ACTIVE.store(r, Ordering::Relaxed);
+    decode(r)
+}
+
+/// Resolve the arm for one engine call: a per-call force wins, otherwise
+/// the cached auto decision (which itself honors the global overrides).
+pub fn select(force_scalar: bool) -> Kernels {
+    if force_scalar {
+        Kernels::LegacyScalar
+    } else {
+        active()
+    }
+}
+
+/// Process-wide kill switch (the CLI's `--force-scalar`): every later
+/// [`active`]/[`select`] resolves to the legacy scalar loops. Call before
+/// the first transform; flipping mid-run is safe but makes earlier and
+/// later calls incomparable bitwise.
+pub fn force_scalar_global() {
+    ACTIVE.store(K_SCALAR, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// The lane abstraction
+// ---------------------------------------------------------------------
+
+/// Four f32 lanes: loads/stores over contiguous (optionally reversed)
+/// quads plus the arithmetic the butterfly and product kernels need.
+///
+/// All methods are `unsafe`: pointer variants trust the caller's bounds
+/// reasoning (the kernels document theirs), and the x86 implementation
+/// additionally requires AVX2+FMA to be present at runtime — guaranteed
+/// by [`select`] before any lane kernel runs.
+pub trait Lanes4: Copy {
+    type V: Copy;
+    unsafe fn splat(v: f32) -> Self::V;
+    /// Lanes `[p[0], p[1], p[2], p[3]]`.
+    unsafe fn load(p: *const f32) -> Self::V;
+    /// Lanes `[p[3], p[2], p[1], p[0]]` — the descending-stream load.
+    unsafe fn load_rev(p: *const f32) -> Self::V;
+    unsafe fn store(p: *mut f32, v: Self::V);
+    /// Store lane `i` to `p[3 - i]` (inverse of [`Lanes4::load_rev`]).
+    unsafe fn store_rev(p: *mut f32, v: Self::V);
+    unsafe fn add(a: Self::V, b: Self::V) -> Self::V;
+    unsafe fn sub(a: Self::V, b: Self::V) -> Self::V;
+    unsafe fn mul(a: Self::V, b: Self::V) -> Self::V;
+    /// `a·b + c` — fused on the FMA arm, two-rounding on the portable arm
+    /// (matching the scalar oracle exactly).
+    unsafe fn mla(a: Self::V, b: Self::V, c: Self::V) -> Self::V;
+    /// `a·b − c` — fused on the FMA arm.
+    unsafe fn mls(a: Self::V, b: Self::V, c: Self::V) -> Self::V;
+}
+
+/// Portable quad arm: plain f32 scalar ops on `[f32; 4]`, bitwise equal
+/// to the legacy scalar loops lane-for-lane.
+#[derive(Clone, Copy)]
+pub struct ScalarQuad;
+
+impl Lanes4 for ScalarQuad {
+    type V = [f32; 4];
+
+    #[inline(always)]
+    unsafe fn splat(v: f32) -> [f32; 4] {
+        [v; 4]
+    }
+
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> [f32; 4] {
+        [*p, *p.add(1), *p.add(2), *p.add(3)]
+    }
+
+    #[inline(always)]
+    unsafe fn load_rev(p: *const f32) -> [f32; 4] {
+        [*p.add(3), *p.add(2), *p.add(1), *p]
+    }
+
+    #[inline(always)]
+    unsafe fn store(p: *mut f32, v: [f32; 4]) {
+        *p = v[0];
+        *p.add(1) = v[1];
+        *p.add(2) = v[2];
+        *p.add(3) = v[3];
+    }
+
+    #[inline(always)]
+    unsafe fn store_rev(p: *mut f32, v: [f32; 4]) {
+        *p.add(3) = v[0];
+        *p.add(2) = v[1];
+        *p.add(1) = v[2];
+        *p = v[3];
+    }
+
+    #[inline(always)]
+    unsafe fn add(a: [f32; 4], b: [f32; 4]) -> [f32; 4] {
+        [a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]]
+    }
+
+    #[inline(always)]
+    unsafe fn sub(a: [f32; 4], b: [f32; 4]) -> [f32; 4] {
+        [a[0] - b[0], a[1] - b[1], a[2] - b[2], a[3] - b[3]]
+    }
+
+    #[inline(always)]
+    unsafe fn mul(a: [f32; 4], b: [f32; 4]) -> [f32; 4] {
+        [a[0] * b[0], a[1] * b[1], a[2] * b[2], a[3] * b[3]]
+    }
+
+    #[inline(always)]
+    unsafe fn mla(a: [f32; 4], b: [f32; 4], c: [f32; 4]) -> [f32; 4] {
+        // Deliberately NOT f32::mul_add: the portable arm must round the
+        // product and the sum separately, like the scalar oracle.
+        [
+            a[0] * b[0] + c[0],
+            a[1] * b[1] + c[1],
+            a[2] * b[2] + c[2],
+            a[3] * b[3] + c[3],
+        ]
+    }
+
+    #[inline(always)]
+    unsafe fn mls(a: [f32; 4], b: [f32; 4], c: [f32; 4]) -> [f32; 4] {
+        [
+            a[0] * b[0] - c[0],
+            a[1] * b[1] - c[1],
+            a[2] * b[2] - c[2],
+            a[3] * b[3] - c[3],
+        ]
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::Lanes4;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// 128-bit f32x4 lanes with FMA. The wrappers that instantiate the
+    /// generic kernels with this type carry
+    /// `#[target_feature(enable = "avx2,fma")]`, so these intrinsics
+    /// inline into feature-enabled code.
+    #[derive(Clone, Copy)]
+    pub struct AvxFma;
+
+    impl Lanes4 for AvxFma {
+        type V = __m128;
+
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> __m128 {
+            _mm_set1_ps(v)
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> __m128 {
+            _mm_loadu_ps(p)
+        }
+
+        #[inline(always)]
+        unsafe fn load_rev(p: *const f32) -> __m128 {
+            let v = _mm_loadu_ps(p);
+            _mm_shuffle_ps(v, v, 0x1B) // lanes [3,2,1,0]
+        }
+
+        #[inline(always)]
+        unsafe fn store(p: *mut f32, v: __m128) {
+            _mm_storeu_ps(p, v)
+        }
+
+        #[inline(always)]
+        unsafe fn store_rev(p: *mut f32, v: __m128) {
+            _mm_storeu_ps(p, _mm_shuffle_ps(v, v, 0x1B))
+        }
+
+        #[inline(always)]
+        unsafe fn add(a: __m128, b: __m128) -> __m128 {
+            _mm_add_ps(a, b)
+        }
+
+        #[inline(always)]
+        unsafe fn sub(a: __m128, b: __m128) -> __m128 {
+            _mm_sub_ps(a, b)
+        }
+
+        #[inline(always)]
+        unsafe fn mul(a: __m128, b: __m128) -> __m128 {
+            _mm_mul_ps(a, b)
+        }
+
+        #[inline(always)]
+        unsafe fn mla(a: __m128, b: __m128, c: __m128) -> __m128 {
+            _mm_fmadd_ps(a, b, c)
+        }
+
+        #[inline(always)]
+        unsafe fn mls(a: __m128, b: __m128, c: __m128) -> __m128 {
+            _mm_fmsub_ps(a, b, c)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Butterfly group kernels
+// ---------------------------------------------------------------------
+
+/// One quad of forward symmetric 4-groups (`k = k0 .. k0+3`) of a
+/// `2m`-block at `blk`. Lane `i` computes group `k0 + i`, with the exact
+/// per-element expression of the scalar butterfly.
+///
+/// # Safety
+/// `blk` points at a block of `two_m = 2m` f32s; `1 ≤ k0` and
+/// `k0 + 3 < m/2`; `wr`/`wi` hold the stage twiddles indexed `k − 1` with
+/// at least `k0 + 2` entries readable from `k0 − 1`.
+#[inline(always)]
+unsafe fn fwd_quad<L: Lanes4>(
+    blk: *mut f32,
+    m: usize,
+    two_m: usize,
+    k0: usize,
+    wr: *const f32,
+    wi: *const f32,
+) {
+    let er = L::load(blk.add(k0)); //                E.re, ascending
+    let ei = L::load_rev(blk.add(m - k0 - 3)); //    E.im, descending
+    let or_ = L::load(blk.add(m + k0)); //           O.re, ascending
+    let oi = L::load_rev(blk.add(two_m - k0 - 3)); //O.im, descending
+    let w_r = L::load(wr.add(k0 - 1));
+    let w_i = L::load(wi.add(k0 - 1));
+    // T = W·O
+    let tr = L::mls(w_r, or_, L::mul(w_i, oi)); // wr*or − wi*oi
+    let ti = L::mla(w_r, oi, L::mul(w_i, or_)); // wr*oi + wi*or
+    L::store(blk.add(k0), L::add(er, tr)); //              Re y_k
+    L::store_rev(blk.add(two_m - k0 - 3), L::add(ei, ti)); // Im y_k
+    L::store_rev(blk.add(m - k0 - 3), L::sub(er, tr)); //  Re y_{m−k}
+    L::store(blk.add(m + k0), L::sub(ti, ei)); //          Im y_{m−k}
+}
+
+/// One quad of inverse symmetric 4-groups (pre-halved twiddles `hr`/`hi`,
+/// see [`crate::rdfft::inverse`]).
+///
+/// # Safety
+/// Same contract as [`fwd_quad`].
+#[inline(always)]
+unsafe fn inv_quad<L: Lanes4>(
+    blk: *mut f32,
+    m: usize,
+    two_m: usize,
+    k0: usize,
+    hr: *const f32,
+    hi: *const f32,
+) {
+    let a = L::load(blk.add(k0)); //                 er + tr
+    let b = L::load_rev(blk.add(m - k0 - 3)); //     er − tr
+    let c = L::load_rev(blk.add(two_m - k0 - 3)); // ei + ti
+    let d = L::load(blk.add(m + k0)); //             ti − ei
+    let h_r = L::load(hr.add(k0 - 1));
+    let h_i = L::load(hi.add(k0 - 1));
+    let half = L::splat(0.5);
+    let apb = L::add(a, b);
+    let amb = L::sub(a, b);
+    let cpd = L::add(c, d);
+    let cmd = L::sub(c, d);
+    let er = L::mul(half, apb); //               0.5·(a+b)
+    let ei = L::mul(half, cmd); //               0.5·(c−d)
+    let or_ = L::mla(amb, h_r, L::mul(cpd, h_i)); // (a−b)·hr + (c+d)·hi
+    let oi = L::mls(cpd, h_r, L::mul(amb, h_i)); //  (c+d)·hr − (a−b)·hi
+    L::store(blk.add(k0), er);
+    L::store_rev(blk.add(m - k0 - 3), ei);
+    L::store(blk.add(m + k0), or_);
+    L::store_rev(blk.add(two_m - k0 - 3), oi);
+}
+
+/// The scalar forward 4-group (identical float ops to the legacy kernel;
+/// the quad loops' tail).
+///
+/// # Safety
+/// `blk` has length `2m`; `1 ≤ k < m/2`.
+#[inline(always)]
+unsafe fn fwd_group_scalar(blk: *mut f32, m: usize, two_m: usize, k: usize, wr: f32, wi: f32) {
+    let er = *blk.add(k);
+    let ei = *blk.add(m - k);
+    let or_ = *blk.add(m + k);
+    let oi = *blk.add(two_m - k);
+    let tr = wr * or_ - wi * oi;
+    let ti = wr * oi + wi * or_;
+    *blk.add(k) = er + tr;
+    *blk.add(two_m - k) = ei + ti;
+    *blk.add(m - k) = er - tr;
+    *blk.add(m + k) = ti - ei;
+}
+
+/// The scalar inverse 4-group (legacy ops; the quad loops' tail).
+///
+/// # Safety
+/// `blk` has length `2m`; `1 ≤ k < m/2`.
+#[inline(always)]
+unsafe fn inv_group_scalar(blk: *mut f32, m: usize, two_m: usize, k: usize, hr: f32, hi: f32) {
+    let a = *blk.add(k);
+    let b = *blk.add(m - k);
+    let c = *blk.add(two_m - k);
+    let d = *blk.add(m + k);
+    let er = 0.5 * (a + b);
+    let ei = 0.5 * (c - d);
+    let or_ = (a - b) * hr + (c + d) * hi;
+    let oi = (c + d) * hr - (a - b) * hi;
+    *blk.add(k) = er;
+    *blk.add(m - k) = ei;
+    *blk.add(m + k) = or_;
+    *blk.add(two_m - k) = oi;
+}
+
+/// All forward 4-groups of one `2m`-block: vector quads, then a scalar
+/// tail of up to `LANES − 1` groups (plus everything when `m/2 − 1 < 4`).
+///
+/// # Safety
+/// `blk.len() == 2m`; `wr`/`wi` hold at least `m/2 − 1` stage-twiddle
+/// entries (index `k − 1`).
+#[inline(always)]
+unsafe fn fwd_groups<L: Lanes4>(blk: &mut [f32], m: usize, wr: &[f32], wi: &[f32]) {
+    let two_m = 2 * m;
+    debug_assert_eq!(blk.len(), two_m);
+    let half = m / 2;
+    debug_assert!(half == 0 || wr.len() >= half - 1);
+    let p = blk.as_mut_ptr();
+    let (wrp, wip) = (wr.as_ptr(), wi.as_ptr());
+    let mut k = 1usize;
+    while k + LANES <= half {
+        fwd_quad::<L>(p, m, two_m, k, wrp, wip);
+        k += LANES;
+    }
+    while k < half {
+        fwd_group_scalar(p, m, two_m, k, *wrp.add(k - 1), *wip.add(k - 1));
+        k += 1;
+    }
+}
+
+/// All inverse 4-groups of one `2m`-block (quads + scalar tail).
+///
+/// # Safety
+/// Same contract as [`fwd_groups`] with pre-halved twiddles.
+#[inline(always)]
+unsafe fn inv_groups<L: Lanes4>(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
+    let two_m = 2 * m;
+    debug_assert_eq!(blk.len(), two_m);
+    let half = m / 2;
+    debug_assert!(half == 0 || hr.len() >= half - 1);
+    let p = blk.as_mut_ptr();
+    let (hrp, hip) = (hr.as_ptr(), hi.as_ptr());
+    let mut k = 1usize;
+    while k + LANES <= half {
+        inv_quad::<L>(p, m, two_m, k, hrp, hip);
+        k += LANES;
+    }
+    while k < half {
+        inv_group_scalar(p, m, two_m, k, *hrp.add(k - 1), *hip.add(k - 1));
+        k += 1;
+    }
+}
+
+// Monomorphic feature-gated instantiations: `#[inline(always)]` generics
+// inline *into* the target_feature wrapper, which is what lets the
+// intrinsics fuse into straight-line AVX2+FMA code.
+
+unsafe fn fwd_groups_portable(blk: &mut [f32], m: usize, wr: &[f32], wi: &[f32]) {
+    fwd_groups::<ScalarQuad>(blk, m, wr, wi)
+}
+
+unsafe fn inv_groups_portable(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
+    inv_groups::<ScalarQuad>(blk, m, hr, hi)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn fwd_groups_avx(blk: &mut [f32], m: usize, wr: &[f32], wi: &[f32]) {
+    fwd_groups::<x86::AvxFma>(blk, m, wr, wi)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn inv_groups_avx(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
+    inv_groups::<x86::AvxFma>(blk, m, hr, hi)
+}
+
+/// Dispatch the forward 4-group sweep of one block onto `kern`.
+///
+/// # Safety
+/// `blk.len() == 2m`; `wr`/`wi` hold at least `m/2 − 1` entries; when
+/// `kern` is [`Kernels::AvxFma`] the CPU must support AVX2+FMA (guaranteed
+/// when the value came from [`select`]).
+#[inline(always)]
+pub unsafe fn fwd_groups_dispatch(kern: Kernels, blk: &mut [f32], m: usize, wr: &[f32], wi: &[f32]) {
+    match kern {
+        Kernels::LegacyScalar => {
+            let two_m = 2 * m;
+            let p = blk.as_mut_ptr();
+            for k in 1..m / 2 {
+                fwd_group_scalar(p, m, two_m, k, wr[k - 1], wi[k - 1]);
+            }
+        }
+        Kernels::Portable => fwd_groups_portable(blk, m, wr, wi),
+        Kernels::AvxFma => {
+            #[cfg(target_arch = "x86_64")]
+            fwd_groups_avx(blk, m, wr, wi);
+            #[cfg(not(target_arch = "x86_64"))]
+            fwd_groups_portable(blk, m, wr, wi);
+        }
+    }
+}
+
+/// Dispatch the inverse 4-group sweep of one block onto `kern`.
+///
+/// # Safety
+/// Same contract as [`fwd_groups_dispatch`] with pre-halved twiddles.
+#[inline(always)]
+pub unsafe fn inv_groups_dispatch(kern: Kernels, blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
+    match kern {
+        Kernels::LegacyScalar => {
+            let two_m = 2 * m;
+            let p = blk.as_mut_ptr();
+            for k in 1..m / 2 {
+                inv_group_scalar(p, m, two_m, k, hr[k - 1], hi[k - 1]);
+            }
+        }
+        Kernels::Portable => inv_groups_portable(blk, m, hr, hi),
+        Kernels::AvxFma => {
+            #[cfg(target_arch = "x86_64")]
+            inv_groups_avx(blk, m, hr, hi);
+            #[cfg(not(target_arch = "x86_64"))]
+            inv_groups_portable(blk, m, hr, hi);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Packed conjugate-symmetric product kernels
+// ---------------------------------------------------------------------
+
+/// `a ⊙= b` over one packed row (quads + scalar tail; DC/Nyquist scalar).
+///
+/// # Safety
+/// `a.len() == b.len()`, even, ≥ 2.
+#[inline(always)]
+unsafe fn mul_row<L: Lanes4>(a: &mut [f32], b: &[f32]) {
+    let n = a.len();
+    debug_assert!(n >= 2 && n % 2 == 0 && b.len() == n);
+    let half = n / 2;
+    let ap = a.as_mut_ptr();
+    let bp = b.as_ptr();
+    *ap *= *bp;
+    *ap.add(half) *= *bp.add(half);
+    let mut k = 1usize;
+    while k + LANES <= half {
+        let ar = L::load(ap.add(k));
+        let ai = L::load_rev(ap.add(n - k - 3));
+        let br = L::load(bp.add(k));
+        let bi = L::load_rev(bp.add(n - k - 3));
+        let re = L::mls(ar, br, L::mul(ai, bi)); // ar·br − ai·bi
+        let im = L::mla(ar, bi, L::mul(ai, br)); // ar·bi + ai·br
+        L::store(ap.add(k), re);
+        L::store_rev(ap.add(n - k - 3), im);
+        k += LANES;
+    }
+    while k < half {
+        let (ar, ai) = (*ap.add(k), *ap.add(n - k));
+        let (br, bi) = (*bp.add(k), *bp.add(n - k));
+        *ap.add(k) = ar * br - ai * bi;
+        *ap.add(n - k) = ar * bi + ai * br;
+        k += 1;
+    }
+}
+
+/// `a ⊙= conj(b)` over one packed row.
+///
+/// # Safety
+/// `a.len() == b.len()`, even, ≥ 2.
+#[inline(always)]
+unsafe fn mul_conjb_row<L: Lanes4>(a: &mut [f32], b: &[f32]) {
+    let n = a.len();
+    debug_assert!(n >= 2 && n % 2 == 0 && b.len() == n);
+    let half = n / 2;
+    let ap = a.as_mut_ptr();
+    let bp = b.as_ptr();
+    *ap *= *bp;
+    *ap.add(half) *= *bp.add(half);
+    let mut k = 1usize;
+    while k + LANES <= half {
+        let ar = L::load(ap.add(k));
+        let ai = L::load_rev(ap.add(n - k - 3));
+        let br = L::load(bp.add(k));
+        let bi = L::load_rev(bp.add(n - k - 3));
+        let re = L::mla(ar, br, L::mul(ai, bi)); // ar·br + ai·bi
+        let im = L::mls(ai, br, L::mul(ar, bi)); // ai·br − ar·bi
+        L::store(ap.add(k), re);
+        L::store_rev(ap.add(n - k - 3), im);
+        k += LANES;
+    }
+    while k < half {
+        let (ar, ai) = (*ap.add(k), *ap.add(n - k));
+        let (br, bi) = (*bp.add(k), *bp.add(n - k));
+        *ap.add(k) = ar * br + ai * bi;
+        *ap.add(n - k) = ai * br - ar * bi;
+        k += 1;
+    }
+}
+
+/// `acc += a ⊙ b` over one packed row.
+///
+/// # Safety
+/// All three slices share one even length ≥ 2.
+#[inline(always)]
+unsafe fn mul_acc_row<L: Lanes4>(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = acc.len();
+    debug_assert!(n >= 2 && n % 2 == 0 && a.len() == n && b.len() == n);
+    let half = n / 2;
+    let cp = acc.as_mut_ptr();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    *cp += *ap * *bp;
+    *cp.add(half) += *ap.add(half) * *bp.add(half);
+    let mut k = 1usize;
+    while k + LANES <= half {
+        let ar = L::load(ap.add(k));
+        let ai = L::load_rev(ap.add(n - k - 3));
+        let br = L::load(bp.add(k));
+        let bi = L::load_rev(bp.add(n - k - 3));
+        let re = L::mls(ar, br, L::mul(ai, bi));
+        let im = L::mla(ar, bi, L::mul(ai, br));
+        L::store(cp.add(k), L::add(L::load(cp.add(k)), re));
+        let ci = L::load_rev(cp.add(n - k - 3));
+        L::store_rev(cp.add(n - k - 3), L::add(ci, im));
+        k += LANES;
+    }
+    while k < half {
+        let (ar, ai) = (*ap.add(k), *ap.add(n - k));
+        let (br, bi) = (*bp.add(k), *bp.add(n - k));
+        *cp.add(k) += ar * br - ai * bi;
+        *cp.add(n - k) += ar * bi + ai * br;
+        k += 1;
+    }
+}
+
+/// `acc += conj(a) ⊙ b` over one packed row.
+///
+/// # Safety
+/// All three slices share one even length ≥ 2.
+#[inline(always)]
+unsafe fn conj_mul_acc_row<L: Lanes4>(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = acc.len();
+    debug_assert!(n >= 2 && n % 2 == 0 && a.len() == n && b.len() == n);
+    let half = n / 2;
+    let cp = acc.as_mut_ptr();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    *cp += *ap * *bp;
+    *cp.add(half) += *ap.add(half) * *bp.add(half);
+    let mut k = 1usize;
+    while k + LANES <= half {
+        let ar = L::load(ap.add(k));
+        let ai = L::load_rev(ap.add(n - k - 3));
+        let br = L::load(bp.add(k));
+        let bi = L::load_rev(bp.add(n - k - 3));
+        let re = L::mla(ar, br, L::mul(ai, bi)); // ar·br + ai·bi
+        let im = L::mls(ar, bi, L::mul(ai, br)); // ar·bi − ai·br
+        L::store(cp.add(k), L::add(L::load(cp.add(k)), re));
+        let ci = L::load_rev(cp.add(n - k - 3));
+        L::store_rev(cp.add(n - k - 3), L::add(ci, im));
+        k += LANES;
+    }
+    while k < half {
+        let (ar, ai) = (*ap.add(k), *ap.add(n - k));
+        let (br, bi) = (*bp.add(k), *bp.add(n - k));
+        *cp.add(k) += ar * br + ai * bi;
+        *cp.add(n - k) += ar * bi - ai * br;
+        k += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mul_row_avx(a: &mut [f32], b: &[f32]) {
+    mul_row::<x86::AvxFma>(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mul_conjb_row_avx(a: &mut [f32], b: &[f32]) {
+    mul_conjb_row::<x86::AvxFma>(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mul_acc_row_avx(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    mul_acc_row::<x86::AvxFma>(acc, a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn conj_mul_acc_row_avx(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    conj_mul_acc_row::<x86::AvxFma>(acc, a, b)
+}
+
+/// `a ⊙= b` (packed) on the selected arm. Legacy arm is
+/// [`crate::rdfft::spectral::mul_inplace`] bit-for-bit; the portable arm
+/// matches it too; AVX2+FMA agrees within the n-scaled tolerance.
+pub fn mul_inplace_with(kern: Kernels, a: &mut [f32], b: &[f32]) {
+    match sanitize(kern) {
+        Kernels::LegacyScalar => crate::rdfft::spectral::mul_inplace(a, b),
+        Kernels::Portable => unsafe { mul_row::<ScalarQuad>(a, b) },
+        Kernels::AvxFma => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            mul_row_avx(a, b);
+            #[cfg(not(target_arch = "x86_64"))]
+            mul_row::<ScalarQuad>(a, b);
+        },
+    }
+}
+
+/// `a ⊙= conj(b)` (packed) on the selected arm.
+pub fn mul_conjb_inplace_with(kern: Kernels, a: &mut [f32], b: &[f32]) {
+    match sanitize(kern) {
+        Kernels::LegacyScalar => crate::rdfft::spectral::mul_conjb_inplace(a, b),
+        Kernels::Portable => unsafe { mul_conjb_row::<ScalarQuad>(a, b) },
+        Kernels::AvxFma => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            mul_conjb_row_avx(a, b);
+            #[cfg(not(target_arch = "x86_64"))]
+            mul_conjb_row::<ScalarQuad>(a, b);
+        },
+    }
+}
+
+/// `acc += a ⊙ b` (packed) on the selected arm.
+pub fn mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
+    match sanitize(kern) {
+        Kernels::LegacyScalar => crate::rdfft::spectral::mul_acc(acc, a, b),
+        Kernels::Portable => unsafe { mul_acc_row::<ScalarQuad>(acc, a, b) },
+        Kernels::AvxFma => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            mul_acc_row_avx(acc, a, b);
+            #[cfg(not(target_arch = "x86_64"))]
+            mul_acc_row::<ScalarQuad>(acc, a, b);
+        },
+    }
+}
+
+/// `acc += conj(a) ⊙ b` (packed) on the selected arm.
+pub fn conj_mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
+    match sanitize(kern) {
+        Kernels::LegacyScalar => crate::rdfft::spectral::conj_mul_acc(acc, a, b),
+        Kernels::Portable => unsafe { conj_mul_acc_row::<ScalarQuad>(acc, a, b) },
+        Kernels::AvxFma => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            conj_mul_acc_row_avx(acc, a, b);
+            #[cfg(not(target_arch = "x86_64"))]
+            conj_mul_acc_row::<ScalarQuad>(acc, a, b);
+        },
+    }
+}
+
+// ---------------------------------------------------------------------
+// bf16 twin: lane math on pre-widened quads
+// ---------------------------------------------------------------------
+
+/// One forward butterfly quad on pre-widened f32 lane arrays — the bf16
+/// twin gathers four 4-groups' values (`to_f32`), runs this, and rounds
+/// the four outputs back per element. Returns
+/// `(re_k, im_k, re_mk, im_mk)` lane arrays.
+pub fn fwd_quad_arrays(
+    kern: Kernels,
+    er: [f32; 4],
+    ei: [f32; 4],
+    or_: [f32; 4],
+    oi: [f32; 4],
+    wr: [f32; 4],
+    wi: [f32; 4],
+) -> ([f32; 4], [f32; 4], [f32; 4], [f32; 4]) {
+    #[inline(always)]
+    unsafe fn go<L: Lanes4>(
+        er: [f32; 4],
+        ei: [f32; 4],
+        or_: [f32; 4],
+        oi: [f32; 4],
+        wr: [f32; 4],
+        wi: [f32; 4],
+    ) -> ([f32; 4], [f32; 4], [f32; 4], [f32; 4]) {
+        let (erv, eiv) = (L::load(er.as_ptr()), L::load(ei.as_ptr()));
+        let (orv, oiv) = (L::load(or_.as_ptr()), L::load(oi.as_ptr()));
+        let (wrv, wiv) = (L::load(wr.as_ptr()), L::load(wi.as_ptr()));
+        let tr = L::mls(wrv, orv, L::mul(wiv, oiv));
+        let ti = L::mla(wrv, oiv, L::mul(wiv, orv));
+        let mut out = ([0.0f32; 4], [0.0f32; 4], [0.0f32; 4], [0.0f32; 4]);
+        L::store(out.0.as_mut_ptr(), L::add(erv, tr));
+        L::store(out.1.as_mut_ptr(), L::add(eiv, ti));
+        L::store(out.2.as_mut_ptr(), L::sub(erv, tr));
+        L::store(out.3.as_mut_ptr(), L::sub(ti, eiv));
+        out
+    }
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn go_avx(
+        er: [f32; 4],
+        ei: [f32; 4],
+        or_: [f32; 4],
+        oi: [f32; 4],
+        wr: [f32; 4],
+        wi: [f32; 4],
+    ) -> ([f32; 4], [f32; 4], [f32; 4], [f32; 4]) {
+        go::<x86::AvxFma>(er, ei, or_, oi, wr, wi)
+    }
+    match sanitize(kern) {
+        Kernels::AvxFma => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            return go_avx(er, ei, or_, oi, wr, wi);
+            #[cfg(not(target_arch = "x86_64"))]
+            return go::<ScalarQuad>(er, ei, or_, oi, wr, wi);
+        },
+        _ => unsafe { go::<ScalarQuad>(er, ei, or_, oi, wr, wi) },
+    }
+}
+
+/// One inverse butterfly quad on pre-widened lane arrays, with **full**
+/// (not pre-halved) twiddles — the op shape of the bf16 inverse twin:
+/// `er = ½(a+b)`, `ei = ½(c−d)`, `or = ½(a−b)·wr + ½(c+d)·wi`,
+/// `oi = ½(c+d)·wr − ½(a−b)·wi`. Returns `(er, ei, or, oi)`.
+pub fn inv_quad_arrays(
+    kern: Kernels,
+    a: [f32; 4],
+    b: [f32; 4],
+    c: [f32; 4],
+    d: [f32; 4],
+    wr: [f32; 4],
+    wi: [f32; 4],
+) -> ([f32; 4], [f32; 4], [f32; 4], [f32; 4]) {
+    #[inline(always)]
+    unsafe fn go<L: Lanes4>(
+        a: [f32; 4],
+        b: [f32; 4],
+        c: [f32; 4],
+        d: [f32; 4],
+        wr: [f32; 4],
+        wi: [f32; 4],
+    ) -> ([f32; 4], [f32; 4], [f32; 4], [f32; 4]) {
+        let (av, bv) = (L::load(a.as_ptr()), L::load(b.as_ptr()));
+        let (cv, dv) = (L::load(c.as_ptr()), L::load(d.as_ptr()));
+        let (wrv, wiv) = (L::load(wr.as_ptr()), L::load(wi.as_ptr()));
+        let half = L::splat(0.5);
+        let er = L::mul(half, L::add(av, bv));
+        let tr = L::mul(half, L::sub(av, bv));
+        let ti = L::mul(half, L::add(cv, dv));
+        let ei = L::mul(half, L::sub(cv, dv));
+        let or_ = L::mla(tr, wrv, L::mul(ti, wiv));
+        let oi = L::mls(ti, wrv, L::mul(tr, wiv));
+        let mut out = ([0.0f32; 4], [0.0f32; 4], [0.0f32; 4], [0.0f32; 4]);
+        L::store(out.0.as_mut_ptr(), er);
+        L::store(out.1.as_mut_ptr(), ei);
+        L::store(out.2.as_mut_ptr(), or_);
+        L::store(out.3.as_mut_ptr(), oi);
+        out
+    }
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn go_avx(
+        a: [f32; 4],
+        b: [f32; 4],
+        c: [f32; 4],
+        d: [f32; 4],
+        wr: [f32; 4],
+        wi: [f32; 4],
+    ) -> ([f32; 4], [f32; 4], [f32; 4], [f32; 4]) {
+        go::<x86::AvxFma>(a, b, c, d, wr, wi)
+    }
+    match sanitize(kern) {
+        Kernels::AvxFma => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            return go_avx(a, b, c, d, wr, wi);
+            #[cfg(not(target_arch = "x86_64"))]
+            return go::<ScalarQuad>(a, b, c, d, wr, wi);
+        },
+        _ => unsafe { go::<ScalarQuad>(a, b, c, d, wr, wi) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f64 / (1u64 << 31) as f64 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn selection_is_cached_and_deterministic() {
+        let a = active();
+        for _ in 0..4 {
+            assert_eq!(active(), a);
+        }
+        assert_eq!(select(true), Kernels::LegacyScalar);
+        assert_eq!(select(false), a);
+    }
+
+    #[test]
+    fn scalar_quad_load_store_roundtrip_and_reversal() {
+        let src = [1.0f32, 2.0, 3.0, 4.0];
+        unsafe {
+            let v = ScalarQuad::load(src.as_ptr());
+            let r = ScalarQuad::load_rev(src.as_ptr());
+            assert_eq!(v, [1.0, 2.0, 3.0, 4.0]);
+            assert_eq!(r, [4.0, 3.0, 2.0, 1.0]);
+            let mut out = [0.0f32; 4];
+            ScalarQuad::store_rev(out.as_mut_ptr(), v);
+            assert_eq!(out, [4.0, 3.0, 2.0, 1.0]);
+            // store_rev ∘ load_rev == identity
+            ScalarQuad::store_rev(out.as_mut_ptr(), r);
+            assert_eq!(out, src);
+        }
+    }
+
+    #[test]
+    fn portable_forward_groups_match_legacy_scalar_bitwise() {
+        // One 2m-block per m; portable quads must equal the scalar loop
+        // bit-for-bit (same ops, same order, lane-disjoint groups).
+        for m in [8usize, 16, 32, 64, 128] {
+            let two_m = 2 * m;
+            let wr = rand_vec(m / 2 - 1, m as u64);
+            let wi = rand_vec(m / 2 - 1, 7 * m as u64);
+            let base = rand_vec(two_m, 13 * m as u64);
+            let mut scalar = base.clone();
+            let mut quad = base.clone();
+            unsafe {
+                fwd_groups_dispatch(Kernels::LegacyScalar, &mut scalar, m, &wr, &wi);
+                fwd_groups_dispatch(Kernels::Portable, &mut quad, m, &wr, &wi);
+            }
+            assert_eq!(scalar, quad, "m={m}");
+        }
+    }
+
+    #[test]
+    fn portable_inverse_groups_match_legacy_scalar_bitwise() {
+        for m in [8usize, 16, 32, 64, 128] {
+            let two_m = 2 * m;
+            let hr = rand_vec(m / 2 - 1, 3 * m as u64);
+            let hi = rand_vec(m / 2 - 1, 11 * m as u64);
+            let base = rand_vec(two_m, 17 * m as u64);
+            let mut scalar = base.clone();
+            let mut quad = base.clone();
+            unsafe {
+                inv_groups_dispatch(Kernels::LegacyScalar, &mut scalar, m, &hr, &hi);
+                inv_groups_dispatch(Kernels::Portable, &mut quad, m, &hr, &hi);
+            }
+            assert_eq!(scalar, quad, "m={m}");
+        }
+    }
+
+    #[test]
+    fn inverse_groups_undo_forward_groups() {
+        // With matching (wr,wi) and pre-halved (wr/2, wi/2), the inverse
+        // group sweep must undo the forward one to f32 precision.
+        let m = 64usize;
+        let theta = |k: usize| std::f64::consts::TAU * k as f64 / (2 * m) as f64;
+        let wr: Vec<f32> = (1..m / 2).map(|k| theta(k).cos() as f32).collect();
+        let wi: Vec<f32> = (1..m / 2).map(|k| (-theta(k).sin()) as f32).collect();
+        let hr: Vec<f32> = wr.iter().map(|v| 0.5 * v).collect();
+        let hi: Vec<f32> = wi.iter().map(|v| 0.5 * v).collect();
+        for kern in [Kernels::LegacyScalar, Kernels::Portable, active()] {
+            let base = rand_vec(2 * m, 29);
+            let mut buf = base.clone();
+            unsafe {
+                fwd_groups_dispatch(kern, &mut buf, m, &wr, &wi);
+                inv_groups_dispatch(kern, &mut buf, m, &hr, &hi);
+            }
+            for i in 0..2 * m {
+                // k = 0 and k = m/2 lanes are untouched by the group
+                // kernels, so every index must round-trip.
+                assert!((buf[i] - base[i]).abs() < 1e-4, "kern={kern:?} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn portable_products_match_legacy_scalar_bitwise() {
+        for n in [4usize, 8, 16, 64, 256] {
+            let a0 = rand_vec(n, n as u64);
+            let b = rand_vec(n, 2 * n as u64);
+            let acc0 = rand_vec(n, 3 * n as u64);
+
+            let mut s = a0.clone();
+            crate::rdfft::spectral::mul_inplace(&mut s, &b);
+            let mut q = a0.clone();
+            mul_inplace_with(Kernels::Portable, &mut q, &b);
+            assert_eq!(s, q, "mul n={n}");
+
+            let mut s = a0.clone();
+            crate::rdfft::spectral::mul_conjb_inplace(&mut s, &b);
+            let mut q = a0.clone();
+            mul_conjb_inplace_with(Kernels::Portable, &mut q, &b);
+            assert_eq!(s, q, "conjb n={n}");
+
+            let mut s = acc0.clone();
+            crate::rdfft::spectral::mul_acc(&mut s, &a0, &b);
+            let mut q = acc0.clone();
+            mul_acc_with(Kernels::Portable, &mut q, &a0, &b);
+            assert_eq!(s, q, "mul_acc n={n}");
+
+            let mut s = acc0.clone();
+            crate::rdfft::spectral::conj_mul_acc(&mut s, &a0, &b);
+            let mut q = acc0.clone();
+            conj_mul_acc_with(Kernels::Portable, &mut q, &a0, &b);
+            assert_eq!(s, q, "conj_mul_acc n={n}");
+        }
+    }
+
+    #[test]
+    fn active_arm_products_agree_with_scalar_within_tolerance() {
+        // On AVX2+FMA machines the auto arm re-associates via FMA; the
+        // drift per lane is a few ulps of the operand magnitudes.
+        let kern = active();
+        for n in [16usize, 64, 1024] {
+            let a0 = rand_vec(n, 5 + n as u64);
+            let b = rand_vec(n, 9 + n as u64);
+            let mut s = a0.clone();
+            crate::rdfft::spectral::mul_inplace(&mut s, &b);
+            let mut q = a0.clone();
+            mul_inplace_with(kern, &mut q, &b);
+            for i in 0..n {
+                assert!((s[i] - q[i]).abs() <= 1e-5 * (1.0 + s[i].abs()), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fwd_quad_arrays_matches_scalar_groups() {
+        let er = [0.5f32, -1.0, 2.0, 0.25];
+        let ei = [1.5f32, 0.0, -0.5, 1.0];
+        let or_ = [-0.75f32, 0.3, 1.1, -2.0];
+        let oi = [0.2f32, -0.6, 0.9, 0.4];
+        let wr = [1.0f32, 0.7071, 0.0, -0.7071];
+        let wi = [0.0f32, -0.7071, -1.0, -0.7071];
+        let (rk, ik, rm, im) = fwd_quad_arrays(Kernels::Portable, er, ei, or_, oi, wr, wi);
+        for l in 0..4 {
+            let tr = wr[l] * or_[l] - wi[l] * oi[l];
+            let ti = wr[l] * oi[l] + wi[l] * or_[l];
+            assert_eq!(rk[l], er[l] + tr);
+            assert_eq!(ik[l], ei[l] + ti);
+            assert_eq!(rm[l], er[l] - tr);
+            assert_eq!(im[l], ti - ei[l]);
+        }
+    }
+}

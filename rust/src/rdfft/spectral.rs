@@ -104,29 +104,66 @@ pub fn scale_inplace(a: &mut [f32], s: f32) {
 // ---------------------------------------------------------------------
 // Row-tile kernels (the product stage of the fused circulant pipeline)
 // ---------------------------------------------------------------------
+//
+// The row kernels are where the packed products run hot (one shared
+// spectrum against a cache-resident tile of row spectra), so they
+// dispatch onto the SIMD lane kernels ([`crate::rdfft::simd`]): width-4
+// quads over the `k`-ascending / `(n−k)`-descending streams, scalar
+// tails. The per-row functions above stay pure legacy scalar — they are
+// the differential oracle the `force_scalar` arm must reproduce
+// bit-for-bit.
+
+use super::simd::{self, Kernels};
 
 /// `row ⊙= spec` for every contiguous length-`spec.len()` row of `tile` —
 /// the tile-level product stage of the fused circulant pipeline
-/// ([`crate::rdfft::engine::circulant_apply_batch`]): one shared spectrum
-/// applied to a cache-resident tile of row spectra. Zero allocation.
+/// ([`crate::rdfft::engine::circulant_apply_batch`]), auto-dispatched onto
+/// the active SIMD arm. Zero allocation.
 #[inline]
 pub fn mul_rows_inplace(tile: &mut [f32], spec: &[f32]) {
-    let n = spec.len();
-    debug_assert!(n >= 2 && tile.len() % n == 0);
-    for row in tile.chunks_exact_mut(n) {
-        mul_inplace(row, spec);
-    }
+    mul_rows_with(simd::active(), tile, spec);
 }
 
 /// `row ⊙= conj(spec)` for every row of `tile` — the transpose/backward
-/// (Eq. 5) product stage of the fused pipeline. Zero allocation.
+/// (Eq. 5) product stage of the fused pipeline, auto-dispatched. Zero
+/// allocation.
 #[inline]
 pub fn mul_conjb_rows_inplace(tile: &mut [f32], spec: &[f32]) {
+    mul_conjb_rows_with(simd::active(), tile, spec);
+}
+
+/// [`mul_rows_inplace`] on an explicit kernel arm (the engine resolves
+/// the arm once per batch call from `EngineConfig::force_scalar`).
+#[inline]
+pub fn mul_rows_with(kern: Kernels, tile: &mut [f32], spec: &[f32]) {
     let n = spec.len();
     debug_assert!(n >= 2 && tile.len() % n == 0);
     for row in tile.chunks_exact_mut(n) {
-        mul_conjb_inplace(row, spec);
+        simd::mul_inplace_with(kern, row, spec);
     }
+}
+
+/// [`mul_conjb_rows_inplace`] on an explicit kernel arm.
+#[inline]
+pub fn mul_conjb_rows_with(kern: Kernels, tile: &mut [f32], spec: &[f32]) {
+    let n = spec.len();
+    debug_assert!(n >= 2 && tile.len() % n == 0);
+    for row in tile.chunks_exact_mut(n) {
+        simd::mul_conjb_inplace_with(kern, row, spec);
+    }
+}
+
+/// [`mul_acc`] on an explicit kernel arm (the block sweeps' product
+/// stage; `Kernels::LegacyScalar` is exactly [`mul_acc`]).
+#[inline]
+pub fn mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
+    simd::mul_acc_with(kern, acc, a, b);
+}
+
+/// [`conj_mul_acc`] on an explicit kernel arm.
+#[inline]
+pub fn conj_mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
+    simd::conj_mul_acc_with(kern, acc, a, b);
 }
 
 #[cfg(test)]
@@ -224,20 +261,35 @@ mod tests {
         let spec = spectrum_of(&(0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect::<Vec<_>>());
         let tile: Vec<f32> = (0..rows * n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
         for conj in [false, true] {
-            let mut fused = tile.clone();
+            // Forced-scalar rows kernel ≡ per-row legacy kernel, bitwise.
+            let mut forced = tile.clone();
             let mut reference = tile.clone();
             if conj {
-                mul_conjb_rows_inplace(&mut fused, &spec);
+                mul_conjb_rows_with(Kernels::LegacyScalar, &mut forced, &spec);
                 for row in reference.chunks_exact_mut(n) {
                     mul_conjb_inplace(row, &spec);
                 }
             } else {
-                mul_rows_inplace(&mut fused, &spec);
+                mul_rows_with(Kernels::LegacyScalar, &mut forced, &spec);
                 for row in reference.chunks_exact_mut(n) {
                     mul_inplace(row, &spec);
                 }
             }
-            assert_eq!(fused, reference, "conj={conj}");
+            assert_eq!(forced, reference, "conj={conj}");
+            // Auto-dispatched rows kernel agrees within FMA slack (exact
+            // on non-FMA arms).
+            let mut auto = tile.clone();
+            if conj {
+                mul_conjb_rows_inplace(&mut auto, &spec);
+            } else {
+                mul_rows_inplace(&mut auto, &spec);
+            }
+            for i in 0..auto.len() {
+                assert!(
+                    (auto[i] - reference[i]).abs() <= 1e-5 * (1.0 + reference[i].abs()),
+                    "conj={conj} i={i}"
+                );
+            }
         }
     }
 

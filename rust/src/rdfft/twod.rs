@@ -20,6 +20,11 @@
 //! contiguous engine batches. The inverse runs the passes in the opposite
 //! order, so `irdfft2(rdfft2(x)) == x` holds to float precision with zero
 //! allocation beyond the plan's persistent tile.
+//!
+//! Both passes inherit the engine's SIMD lane dispatch (and its
+//! `force_scalar` escape hatch) for free: the row pass and every gathered
+//! column tile are plain engine batch calls, so 2-D transforms run the
+//! width-4 butterfly quads without any 2-D-specific kernel code.
 
 use super::engine;
 use super::plan::{cached, Plan};
@@ -232,12 +237,18 @@ mod tests {
 
     #[test]
     fn column_tiling_matches_untiled_column_loop() {
-        // wide matrix exercises multiple tiles, including a partial one
+        // wide matrix exercises multiple tiles, including a partial one.
+        // The 2-D pass runs on the forced-scalar arm so the comparison
+        // against the per-row/per-column legacy scalar loop stays
+        // bitwise; the auto arm's drift is bounded by the differential
+        // suite at the 1-D level.
+        let ctx = ExecCtx::serial()
+            .with_engine_config(crate::rdfft::EngineConfig::forced_scalar_serial());
         let (r, c) = (16usize, 32usize);
         let mut plan = Plan2::new(r, c);
         let x = rand_mat(r, c, 9);
         let mut got = x.clone();
-        plan.forward_inplace(&mut got);
+        plan.forward_inplace_ctx(&mut got, &ctx);
 
         // reference: row pass + one-column-at-a-time scalar column pass
         let mut want = x;

@@ -307,6 +307,164 @@ fn fused_circulant_apply_allocates_nothing_after_plan_construction() {
 }
 
 // ---------------------------------------------------------------------
+// SIMD lane kernels vs the scalar oracle (ISSUE satellite: n ∈ {4..4096}
+// incl. non-power-of-lane tails, odd batches, forced-scalar vs
+// auto-dispatch, zero allocation on the SIMD path, and bitwise identity
+// of force_scalar with the pre-SIMD scalar kernels)
+// ---------------------------------------------------------------------
+
+use rdfft::rdfft::forward::rdfft_batch_scalar;
+use rdfft::rdfft::inverse::irdfft_batch_scalar;
+use rdfft::rdfft::simd::{self, Kernels};
+use rdfft::rdfft::EngineConfig;
+
+/// The SIMD sweep sizes: every size from one quad below the lane width
+/// (all-tail) up to the bench acceptance cell. n ∈ {4, 8} have zero full
+/// quads, n = 16 has exactly one with a 3-group tail, and no m-stage's
+/// group count is a multiple of 4 — the tails are always exercised.
+const SIMD_SIZES: [usize; 11] = [4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+
+#[test]
+fn force_scalar_is_bitwise_identical_to_pre_simd_scalar_kernels() {
+    // The acceptance contract: `EngineConfig::force_scalar` reproduces
+    // the seed-era scalar row loops bit-for-bit, at every size and odd
+    // batch, forward and inverse, plain and fused.
+    let forced = EngineConfig::forced_scalar();
+    for &n in &SIMD_SIZES {
+        for &b in &[1usize, 3, 7] {
+            let mut rng = Rng::new((n * 53 + b) as u64);
+            let x = vec_pm1(&mut rng, n * b);
+
+            let mut scalar = x.clone();
+            rdfft_batch_scalar(&cached(n), &mut scalar);
+            let mut eng = x.clone();
+            engine::forward_batch_with(&cached(n), &mut eng, &forced);
+            assert_eq!(eng, scalar, "fwd n={n} b={b}");
+
+            irdfft_batch_scalar(&cached(n), &mut scalar);
+            engine::inverse_batch_with(&cached(n), &mut eng, &forced);
+            assert_eq!(eng, scalar, "inv n={n} b={b}");
+        }
+    }
+}
+
+#[test]
+fn forced_fused_apply_is_bitwise_identical_to_scalar_three_pass() {
+    use rdfft::rdfft::{spectral, SpectralOp};
+    let forced = EngineConfig::forced_scalar();
+    for &n in &[4usize, 16, 128, 1024] {
+        let mut rng = Rng::new(606 + n as u64);
+        let mut spec = vec_pm1(&mut rng, n);
+        rdfft_batch_scalar(&cached(n), &mut spec);
+        let x = vec_pm1(&mut rng, n * 5);
+        for op in [SpectralOp::Mul, SpectralOp::MulConjB] {
+            let mut fused = x.clone();
+            engine::circulant_apply_batch_with(&cached(n), &mut fused, &spec, op, &forced);
+            let mut reference = x.clone();
+            rdfft_batch_scalar(&cached(n), &mut reference);
+            for row in reference.chunks_exact_mut(n) {
+                match op {
+                    SpectralOp::Mul => spectral::mul_inplace(row, &spec),
+                    SpectralOp::MulConjB => spectral::mul_conjb_inplace(row, &spec),
+                }
+            }
+            irdfft_batch_scalar(&cached(n), &mut reference);
+            assert_eq!(fused, reference, "n={n} op={op:?}");
+        }
+    }
+}
+
+#[test]
+fn simd_auto_dispatch_matches_forced_scalar_within_tolerance() {
+    // Auto-dispatch may run FMA lanes; agreement with the forced-scalar
+    // oracle is bounded by the n-scaled tolerance (and is bitwise
+    // whenever the resolved arm is not AvxFma — asserted, so the
+    // portable quad arm can never silently drift).
+    let forced = EngineConfig::forced_scalar();
+    for &n in &SIMD_SIZES {
+        for &b in &[1usize, 3, 7, 13] {
+            let mut rng = Rng::new((n * 71 + b) as u64);
+            let x = vec_pm1(&mut rng, n * b);
+            let mut auto = x.clone();
+            engine::forward_batch(&cached(n), &mut auto);
+            let mut scal = x.clone();
+            engine::forward_batch_with(&cached(n), &mut scal, &forced);
+            if simd::active() != Kernels::AvxFma {
+                assert_eq!(auto, scal, "non-FMA arm must be bitwise n={n} b={b}");
+            }
+            let tol = n_tol(n, 1e-5);
+            for i in 0..n * b {
+                assert!(
+                    (auto[i] - scal[i]).abs() <= tol,
+                    "fwd n={n} b={b} i={i}: {} vs {}",
+                    auto[i],
+                    scal[i]
+                );
+            }
+            engine::inverse_batch(&cached(n), &mut auto);
+            engine::inverse_batch_with(&cached(n), &mut scal, &forced);
+            for i in 0..n * b {
+                assert!((auto[i] - scal[i]).abs() <= tol, "inv n={n} b={b} i={i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_path_allocates_nothing_after_plan_construction() {
+    use rdfft::rdfft::SpectralOp;
+    // The lane kernels are pure register/stack code: the auto-dispatched
+    // engine must stay allocation-free like the scalar engine.
+    let n = 1024;
+    let plan = cached(n);
+    let mut rng = Rng::new(777);
+    let mut spec = vec_pm1(&mut rng, n);
+    engine::forward_batch(&plan, &mut spec);
+    let mut buf = vec_pm1(&mut rng, n * 8);
+    memtrack::reset();
+    let before = memtrack::snapshot().alloc_count;
+    engine::forward_batch(&plan, &mut buf);
+    engine::inverse_batch(&plan, &mut buf);
+    engine::circulant_apply_batch(&plan, &mut buf, &spec, SpectralOp::Mul);
+    assert_eq!(
+        memtrack::snapshot().alloc_count,
+        before,
+        "SIMD engine paths must not allocate tracked memory"
+    );
+}
+
+#[test]
+fn simd_dispatch_is_deterministic_across_runs_and_pool_threads() {
+    use rdfft::runtime::pool::ExecCtx;
+    // The arm resolves once per process, so auto-dispatch results are a
+    // pure function of the input: identical across repeated runs and
+    // across pool sizes 1 and 4 (same chunking, same kernels).
+    let fan_out = EngineConfig {
+        par_min_rows: 2,
+        par_min_elems: 0,
+        par_chunk_elems: 1,
+        max_threads: 4,
+        ..EngineConfig::new()
+    };
+    for &n in &[64usize, 512, 4096] {
+        let mut rng = Rng::new(n as u64 * 3 + 1);
+        let x = vec_pm1(&mut rng, n * 9);
+        let ctx1 = ExecCtx::with_threads(1).with_engine_config(fan_out);
+        let ctx4 = ExecCtx::with_threads(4).with_engine_config(fan_out);
+        let mut a = x.clone();
+        engine::forward_batch_ctx(&cached(n), &mut a, &ctx1);
+        let mut b = x.clone();
+        engine::forward_batch_ctx(&cached(n), &mut b, &ctx4);
+        assert_eq!(a, b, "pool width must not change results n={n}");
+        for _ in 0..3 {
+            let mut again = x.clone();
+            engine::forward_batch_ctx(&cached(n), &mut again, &ctx4);
+            assert_eq!(again, b, "repeated runs must be bit-identical n={n}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // bf16 path (ISSUE satellite: equivalence + parameter-byte halving)
 // ---------------------------------------------------------------------
 

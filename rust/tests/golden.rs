@@ -1,0 +1,205 @@
+//! Golden-vector known-answer tests.
+//!
+//! The differential suites compare engine paths against *each other* and
+//! against in-process oracles; this suite pins the transform against
+//! **committed** expected values (`fixtures/golden_rdfft.json`, generated
+//! by an independent pure-f64 naive-DFT oracle with a pinned seed), so a
+//! correlated regression that drifted every in-process path identically —
+//! say a twiddle-table bug shared by scalar and SIMD kernels — can no
+//! longer slip through an internally-consistent test run.
+//!
+//! Every execution arm must reproduce the fixtures within the n-scaled
+//! tolerance: the legacy scalar rows, the forced-scalar engine (also
+//! asserted bitwise-equal to the scalar rows), the auto-dispatched SIMD
+//! engine, the fused circulant pipeline, and the pooled multi-thread
+//! path.
+
+use rdfft::rdfft::engine::{self, EngineConfig, SpectralOp};
+use rdfft::rdfft::forward::rdfft_batch_scalar;
+use rdfft::rdfft::inverse::irdfft_batch_scalar;
+use rdfft::rdfft::plan::cached;
+use rdfft::runtime::json;
+use rdfft::runtime::pool::ExecCtx;
+
+/// One fixture case: exact-in-f32 input, f64-oracle packed spectrum, and
+/// the f64-oracle round-trip (== input to f64 precision).
+struct Golden {
+    n: usize,
+    input: Vec<f32>,
+    packed: Vec<f64>,
+    roundtrip: Vec<f64>,
+}
+
+fn load_cases() -> Vec<Golden> {
+    let text = include_str!("fixtures/golden_rdfft.json");
+    let doc = json::parse(text).expect("fixture must be valid JSON");
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str().map(str::to_string)).as_deref(),
+        Some("golden_rdfft/v1"),
+        "unexpected fixture schema"
+    );
+    let cases = doc.get("cases").and_then(|c| c.as_arr().map(|a| a.to_vec())).expect("cases");
+    let f64s = |v: &json::Json, key: &str| -> Vec<f64> {
+        v.get(key)
+            .and_then(|a| a.as_arr().map(|a| a.to_vec()))
+            .unwrap_or_else(|| panic!("missing {key}"))
+            .iter()
+            .map(|x| x.as_f64().expect("number"))
+            .collect()
+    };
+    cases
+        .iter()
+        .map(|c| {
+            let n = c.get("n").and_then(|v| v.as_usize()).expect("n");
+            let g = Golden {
+                n,
+                input: f64s(c, "input").iter().map(|&v| v as f32).collect(),
+                packed: f64s(c, "packed"),
+                roundtrip: f64s(c, "roundtrip"),
+            };
+            assert_eq!(g.input.len(), n);
+            assert_eq!(g.packed.len(), n);
+            assert_eq!(g.roundtrip.len(), n);
+            g
+        })
+        .collect()
+}
+
+/// n-scaled tolerance for one f32 transform's rounding against the f64
+/// oracle, widened by the expected value's magnitude (inputs span ±2, so
+/// low-frequency coefficients grow like √n).
+fn tol(n: usize, expected: f64) -> f32 {
+    1e-4 * (n as f32).sqrt() * (1.0 + expected.abs() as f32)
+}
+
+fn assert_matches_packed(got: &[f32], g: &Golden, path: &str) {
+    for k in 0..g.n {
+        let want = g.packed[k];
+        assert!(
+            (got[k] as f64 - want).abs() <= tol(g.n, want) as f64,
+            "{path}: n={} k={k}: {} vs golden {}",
+            g.n,
+            got[k],
+            want
+        );
+    }
+}
+
+fn assert_matches_roundtrip(got: &[f32], g: &Golden, path: &str) {
+    for i in 0..g.n {
+        let want = g.roundtrip[i];
+        assert!(
+            (got[i] as f64 - want).abs() <= tol(g.n, want) as f64,
+            "{path}: n={} i={i}: {} vs golden {}",
+            g.n,
+            got[i],
+            want
+        );
+    }
+}
+
+/// A tuning that forces pool fan-out even on small fixture batches.
+fn pool_cfg() -> EngineConfig {
+    EngineConfig {
+        par_min_rows: 2,
+        par_min_elems: 0,
+        par_chunk_elems: 1,
+        max_threads: 4,
+        ..EngineConfig::new()
+    }
+}
+
+#[test]
+fn forward_spectra_match_golden_on_every_arm() {
+    for g in load_cases() {
+        let plan = cached(g.n);
+
+        // Legacy per-row scalar rows — the seed-era kernels.
+        let mut scalar = g.input.clone();
+        rdfft_batch_scalar(&plan, &mut scalar);
+        assert_matches_packed(&scalar, &g, "scalar rows");
+
+        // Forced-scalar engine: bitwise-identical to the scalar rows by
+        // contract, and therefore golden too.
+        let mut forced = g.input.clone();
+        engine::forward_batch_with(&plan, &mut forced, &EngineConfig::forced_scalar());
+        assert_eq!(forced, scalar, "force_scalar must be bitwise n={}", g.n);
+
+        // Auto-dispatched SIMD engine.
+        let mut auto = g.input.clone();
+        engine::forward_batch(&plan, &mut auto);
+        assert_matches_packed(&auto, &g, "simd auto");
+
+        // Pooled path: 5 replicated rows fanned out across 4 lanes; every
+        // row must still be golden.
+        let b = 5;
+        let mut pooled: Vec<f32> = g.input.iter().copied().cycle().take(g.n * b).collect();
+        let ctx = ExecCtx::with_threads(4).with_engine_config(pool_cfg());
+        engine::forward_batch_ctx(&plan, &mut pooled, &ctx);
+        for r in 0..b {
+            assert_matches_packed(&pooled[r * g.n..(r + 1) * g.n], &g, "pooled");
+        }
+    }
+}
+
+#[test]
+fn roundtrips_match_golden_on_every_arm() {
+    for g in load_cases() {
+        let plan = cached(g.n);
+
+        let mut scalar = g.input.clone();
+        rdfft_batch_scalar(&plan, &mut scalar);
+        irdfft_batch_scalar(&plan, &mut scalar);
+        assert_matches_roundtrip(&scalar, &g, "scalar rows");
+
+        let mut forced = g.input.clone();
+        engine::forward_batch_with(&plan, &mut forced, &EngineConfig::forced_scalar());
+        engine::inverse_batch_with(&plan, &mut forced, &EngineConfig::forced_scalar());
+        assert_eq!(forced, scalar, "force_scalar roundtrip bitwise n={}", g.n);
+
+        let mut auto = g.input.clone();
+        engine::forward_batch(&plan, &mut auto);
+        engine::inverse_batch(&plan, &mut auto);
+        assert_matches_roundtrip(&auto, &g, "simd auto");
+    }
+}
+
+#[test]
+fn fused_delta_apply_reproduces_golden_roundtrip() {
+    // The fused circulant pipeline with the δ spectrum (the ⊙ identity)
+    // is a forward+product+inverse sweep — it must land on the committed
+    // round-trip values on both dispatch arms.
+    for g in load_cases() {
+        let plan = cached(g.n);
+        let mut delta = vec![0.0f32; g.n];
+        delta[0] = 1.0;
+        engine::forward_batch(&plan, &mut delta);
+        for cfg in [EngineConfig::new(), EngineConfig::forced_scalar()] {
+            let mut fused = g.input.clone();
+            engine::circulant_apply_batch_with(&plan, &mut fused, &delta, SpectralOp::Mul, &cfg);
+            assert_matches_roundtrip(&fused, &g, "fused delta");
+        }
+    }
+}
+
+#[test]
+fn pooled_roundtrip_matches_golden_rows() {
+    // Fused apply through the pool across odd batches: every replicated
+    // row must still reproduce the committed round-trip.
+    for g in load_cases() {
+        if g.n > 256 {
+            continue; // keep the pooled sweep cheap; large n covered above
+        }
+        let plan = cached(g.n);
+        let mut delta = vec![0.0f32; g.n];
+        delta[0] = 1.0;
+        engine::forward_batch(&plan, &mut delta);
+        let b = 7;
+        let mut buf: Vec<f32> = g.input.iter().copied().cycle().take(g.n * b).collect();
+        let ctx = ExecCtx::with_threads(4).with_engine_config(pool_cfg());
+        engine::circulant_apply_batch_ctx(&plan, &mut buf, &delta, SpectralOp::Mul, &ctx);
+        for r in 0..b {
+            assert_matches_roundtrip(&buf[r * g.n..(r + 1) * g.n], &g, "pooled fused");
+        }
+    }
+}

@@ -8,6 +8,12 @@
 //! reproduce `--threads 1` exactly, bit for bit, on a heterogeneous
 //! 3-layer stack (Dense + LoRA + rdFFT circulant); and the sharded path
 //! must agree with the classic serial step to float noise.
+//!
+//! With the SIMD lane kernels these runs exercise the auto-dispatched
+//! arm (AVX2+FMA where detected): the bitwise-at-any-thread-count
+//! contract survives because the arm is resolved once per process and
+//! the shard structure is thread-count-independent — this suite would
+//! catch any kernel whose result depended on which worker ran it.
 
 use rdfft::autograd::layers::Backend;
 use rdfft::autograd::optim::{OptimKind, OptimizerBank};
@@ -74,6 +80,27 @@ fn gradients_bit_identical_at_threads_1_2_4() {
             );
         }
     }
+}
+
+#[test]
+fn sharded_step_is_repeatable_with_simd_dispatch_on() {
+    // Dispatch determinism at the trainer level: the kernel arm is
+    // resolved once per process, so two fresh sharded runs at 4 lanes
+    // (and a third at 2) are bit-identical end-to-end — losses and every
+    // parameter — with the SIMD lane kernels active by default.
+    let arm_before = rdfft::rdfft::simd::active();
+    let (la, pa) = run_sharded(4, 4);
+    let (lb, pb) = run_sharded(4, 4);
+    assert_eq!(la, lb, "repeated sharded runs must produce identical losses");
+    assert_eq!(pa.len(), pb.len());
+    for i in 0..pa.len() {
+        assert_eq!(pa[i].to_bits(), pb[i].to_bits(), "param {i} differs across repeats");
+    }
+    assert_eq!(
+        rdfft::rdfft::simd::active(),
+        arm_before,
+        "the dispatch decision must stay pinned for the whole process"
+    );
 }
 
 #[test]

@@ -278,10 +278,11 @@ fn prop_bf16_conversion_roundtrip_and_monotone() {
 }
 
 /// Engine tuning variants exercised by the equivalence properties: the
-/// default (threshold-gated threads), pure serial batch-major, and a
-/// config that forces threads even on tiny batches (so odd chunk splits
-/// are covered deterministically).
-fn engine_configs() -> [EngineConfig; 3] {
+/// default (threshold-gated threads, auto SIMD dispatch), pure serial
+/// batch-major, a config that forces threads even on tiny batches (so
+/// odd chunk splits are covered deterministically), and the forced-scalar
+/// oracle arm (legacy kernels, no SIMD).
+fn engine_configs() -> [EngineConfig; 4] {
     [
         EngineConfig::new(),
         EngineConfig::serial(),
@@ -292,6 +293,7 @@ fn engine_configs() -> [EngineConfig; 3] {
             max_threads: 3,
             ..EngineConfig::new()
         },
+        EngineConfig::forced_scalar(),
     ]
 }
 

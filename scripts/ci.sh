@@ -37,12 +37,22 @@ fi
   --steps 20 --d 64 --depth 2 --p 16 --batch 8 --eval-every 10 \
   --threads 2 --max-peak-mib 8
 
-# Engine grid: writes BENCH_rdfft.json (fused + unfused circulant rows)
-# and exits non-zero if the batch=1 latency gate regresses. The workflow
-# uploads the JSON next to the loss-curve CSV.
+# Engine grid: writes BENCH_rdfft.json (fused/unfused circulant rows,
+# the pool thread grid, and the batch_simd / circulant_fused_simd rows
+# with the simd_vs_scalar gate) and exits non-zero if a hard gate
+# regresses. The workflow uploads the JSON next to the loss-curve CSV.
 "$REPRO" engine --fast
 if [[ ! -s BENCH_rdfft.json ]]; then
   echo "ci.sh: ERROR: repro engine did not produce BENCH_rdfft.json" >&2
+  exit 1
+fi
+# The committed file is a placeholder with an empty records array (no
+# toolchain in the authoring container); a measured run must have
+# replaced it. Catch the silent-no-op failure mode where the bench ran
+# but recorded nothing.
+if grep -q '"records": \[\]' BENCH_rdfft.json; then
+  echo "ci.sh: ERROR: BENCH_rdfft.json still matches the committed placeholder" >&2
+  echo "       (empty records array) — repro engine recorded no measurements." >&2
   exit 1
 fi
 
