@@ -75,6 +75,13 @@ pub trait Layer: Send + Sync {
     /// so external optimizers ([`crate::autograd::optim::OptimizerBank`])
     /// can apply stateful updates and zero the gradients. Implementations
     /// must present parameters in their canonical (time) domain.
+    ///
+    /// This visitor is also the **checkpoint contract**: crash-safe
+    /// snapshots export and restore parameters through it
+    /// (`SpectralStack::{export_params, import_params}`), so the visit
+    /// order and canonical-domain guarantee must be stable across runs —
+    /// a layer that reorders its tensors or exposes a non-canonical
+    /// domain silently breaks bit-identical resume.
     fn for_each_param(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32]));
 
     /// Residual forward `y = x + layer(x)` — the block sweep of

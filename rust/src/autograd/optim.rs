@@ -144,6 +144,77 @@ impl OptimizerBank {
         self.opts.iter().map(|o| o.state_bytes()).sum()
     }
 
+    /// Export the bank's full state for checkpointing: per-tensor step
+    /// counters, plus the first/second-moment buffers flattened in tensor
+    /// order (empty vectors for optimizers that hold no such state).
+    pub fn export_state(&self) -> (Vec<u64>, Vec<f32>, Vec<f32>) {
+        let mut steps = Vec::with_capacity(self.opts.len());
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for o in &self.opts {
+            steps.push(o.step);
+            if let Some(t) = &o.m {
+                m.extend_from_slice(&t[..]);
+            }
+            if let Some(t) = &o.v {
+                v.extend_from_slice(&t[..]);
+            }
+        }
+        (steps, m, v)
+    }
+
+    /// Restore an [`OptimizerBank::export_state`] capture. `lens` gives
+    /// the per-tensor parameter lengths in visit order (the bank is built
+    /// lazily, so a freshly-resumed bank has no tensors yet — this
+    /// pre-populates it). Length mismatches are typed errors, never
+    /// silent truncation.
+    pub fn import_state(
+        &mut self,
+        steps: &[u64],
+        m: &[f32],
+        v: &[f32],
+        lens: &[usize],
+    ) -> Result<(), String> {
+        if steps.len() != lens.len() {
+            return Err(format!(
+                "optimizer state covers {} tensors, model has {}",
+                steps.len(),
+                lens.len()
+            ));
+        }
+        let per = self.kind.state_per_param();
+        let total: usize = lens.iter().sum();
+        let expect_m = if per >= 1 { total } else { 0 };
+        let expect_v = if per >= 2 { total } else { 0 };
+        if m.len() != expect_m {
+            return Err(format!(
+                "optimizer first-moment state has {} scalars, expected {expect_m}",
+                m.len()
+            ));
+        }
+        if v.len() != expect_v {
+            return Err(format!(
+                "optimizer second-moment state has {} scalars, expected {expect_v}",
+                v.len()
+            ));
+        }
+        self.opts.clear();
+        let mut off = 0usize;
+        for (i, &len) in lens.iter().enumerate() {
+            let mut o = Optimizer::new(self.kind, self.lr, len);
+            o.step = steps[i];
+            if let Some(t) = o.m.as_mut() {
+                t.copy_from_slice(&m[off..off + len]);
+            }
+            if let Some(t) = o.v.as_mut() {
+                t.copy_from_slice(&v[off..off + len]);
+            }
+            self.opts.push(o);
+            off += len;
+        }
+        Ok(())
+    }
+
     /// Apply one update to the `idx`-th parameter tensor. `idx` must
     /// follow the visit order (0, 1, 2, ... on the first step, then the
     /// same order every step) so state lines up with its tensor.
@@ -291,6 +362,58 @@ mod tests {
         bank.apply(0, &mut p, &g);
         assert_eq!(bank.state_bytes(), 0);
         assert!((p[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bank_state_roundtrip_resumes_bit_identically() {
+        let kind = OptimKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let lens = [8usize, 3usize];
+        let run = |resume_at: Option<usize>| -> (Vec<f32>, Vec<f32>) {
+            let mut a = vec![0.0f32; 8];
+            let mut b = vec![0.0f32; 3];
+            let mut bank = OptimizerBank::new(kind, 0.05);
+            for step in 0..20 {
+                if Some(step) == resume_at {
+                    // export, rebuild a fresh (lazily-empty) bank, import:
+                    // the trajectory must continue as if nothing happened
+                    let (s, m, v) = bank.export_state();
+                    bank = OptimizerBank::new(kind, 0.05);
+                    bank.import_state(&s, &m, &v, &lens).unwrap();
+                }
+                let (_, ga) = quad_loss(&a);
+                let (_, gb) = quad_loss(&b);
+                bank.apply(0, &mut a, &ga);
+                bank.apply(1, &mut b, &gb);
+            }
+            (a, b)
+        };
+        let (ra, rb) = run(None);
+        let (xa, xb) = run(Some(10));
+        for i in 0..ra.len() {
+            assert_eq!(ra[i].to_bits(), xa[i].to_bits(), "tensor a scalar {i}");
+        }
+        for i in 0..rb.len() {
+            assert_eq!(rb[i].to_bits(), xb[i].to_bits(), "tensor b scalar {i}");
+        }
+    }
+
+    #[test]
+    fn bank_import_rejects_mismatched_state() {
+        let kind = OptimKind::Momentum { beta: 0.9 };
+        let mut src = OptimizerBank::new(kind, 0.1);
+        let mut p = vec![0.0f32; 4];
+        src.apply(0, &mut p, &[1.0; 4]);
+        let (s, m, v) = src.export_state();
+        // wrong tensor count
+        let mut dst = OptimizerBank::new(kind, 0.1);
+        assert!(dst.import_state(&s, &m, &v, &[4, 2]).is_err());
+        // wrong moment length
+        let mut dst = OptimizerBank::new(kind, 0.1);
+        assert!(dst.import_state(&s, &m[..2], &v, &[4]).is_err());
+        // correct shapes import cleanly
+        let mut dst = OptimizerBank::new(kind, 0.1);
+        assert!(dst.import_state(&s, &m, &v, &[4]).is_ok());
+        assert_eq!(dst.state_bytes(), src.state_bytes());
     }
 
     #[test]

@@ -31,7 +31,7 @@ use super::optim::{tree_reduce_with, OptimizerBank};
 use super::tensor::{softmax_xent, softmax_xent_shard, Tensor};
 use super::train::Method;
 use crate::memtrack::{self, Category};
-use crate::runtime::pool::ExecCtx;
+use crate::runtime::pool::{ExecCtx, JobPanic};
 
 /// Configuration of a [`SpectralStack`].
 #[derive(Debug, Clone)]
@@ -273,13 +273,21 @@ impl SpectralStack {
     /// tree reduction. Results are therefore bit-identical run-to-run at
     /// **any** thread count — `--threads 4` reproduces `--threads 1`
     /// exactly.
+    ///
+    /// A panicking shard job surfaces as `Err(JobPanic)` **before any
+    /// reduction or optimizer mutation** — parameters, optimizer state,
+    /// and RNG are exactly as they were when the step began, so the
+    /// caller can retry the whole step (the native trainer retries once
+    /// on [`SpectralStack::train_step_sharded_serial`]). The retried step
+    /// is bit-identical to an unfailed one: `begin_shard_step` is
+    /// idempotent and the arena re-zeroes.
     pub fn train_step_sharded(
         &mut self,
         ctx_bytes: &[u8],
         labels: &[usize],
         bank: &mut OptimizerBank,
         arena: &mut ShardArena,
-    ) -> f32 {
+    ) -> Result<f32, JobPanic> {
         assert!(
             self.supports_shard_exec(),
             "a block without shard support must train via train_step"
@@ -303,28 +311,100 @@ impl SpectralStack {
         let ctx_len = self.cfg.ctx;
         let stack: &SpectralStack = self;
         let layout = &arena.layout;
-        stack
-            .exec
-            .pool()
-            .scope(|sc| {
-                let mut row0 = 0usize;
-                for (shard, loss_slot) in
-                    arena.shards.iter_mut().zip(arena.losses.iter_mut())
-                {
-                    if row0 >= b {
-                        break;
-                    }
-                    let rows = shard_rows.min(b - row0);
-                    let bytes = &ctx_bytes[row0 * ctx_len..(row0 + rows) * ctx_len];
-                    let lbls = &labels[row0..row0 + rows];
-                    sc.submit(move || {
-                        *loss_slot = stack.shard_grad_pass(bytes, lbls, shard, layout, b);
-                    });
-                    row0 += rows;
+        let scope_result = stack.exec.pool().scope(|sc| {
+            let mut row0 = 0usize;
+            for (shard_idx, (shard, loss_slot)) in
+                arena.shards.iter_mut().zip(arena.losses.iter_mut()).enumerate()
+            {
+                if row0 >= b {
+                    break;
                 }
-            })
-            .unwrap_or_else(|p| p.resume());
+                let rows = shard_rows.min(b - row0);
+                let bytes = &ctx_bytes[row0 * ctx_len..(row0 + rows) * ctx_len];
+                let lbls = &labels[row0..row0 + rows];
+                // Fault consult on the submitting thread (fire-once, so
+                // one query per shard): the chosen victim panics inside
+                // its pool job, exercising the JobPanic surfacing path.
+                let boom = stack.exec.faults().take_shard_panic(shard_idx, GRAD_SHARDS);
+                sc.submit(move || {
+                    if boom {
+                        panic!("injected fault: shard job {shard_idx} panic");
+                    }
+                    *loss_slot = stack.shard_grad_pass(bytes, lbls, shard, layout, b);
+                });
+                row0 += rows;
+            }
+        });
+        // Surface the panic BEFORE any reduction/optimizer mutation so the
+        // model state is untouched and the step can be retried exactly.
+        if let Err(p) = scope_result {
+            return Err(p);
+        }
+        Ok(self.reduce_and_apply(arena, bank, b))
+    }
 
+    /// Scoped-serial fallback for a step whose pool fan-out panicked: the
+    /// identical shard structure and reduction, with every shard pass run
+    /// inline on the calling thread. Produces bit-identical results to
+    /// [`SpectralStack::train_step_sharded`] (same shard jobs, same
+    /// fixed-order combines — only the scheduling differs). Injected
+    /// shard faults are still consulted, so a plan scheduling two panics
+    /// at one step makes the retry fail too (the repeat-failure
+    /// hard-fail path).
+    pub fn train_step_sharded_serial(
+        &mut self,
+        ctx_bytes: &[u8],
+        labels: &[usize],
+        bank: &mut OptimizerBank,
+        arena: &mut ShardArena,
+    ) -> f32 {
+        assert!(
+            self.supports_shard_exec(),
+            "a block without shard support must train via train_step"
+        );
+        let b = labels.len();
+        assert!(b > 0, "empty batch");
+        assert_eq!(ctx_bytes.len(), b * self.cfg.ctx, "context batch must be b*ctx bytes");
+        let shard_rows = (b + GRAD_SHARDS - 1) / GRAD_SHARDS;
+
+        for blk in &mut self.blocks {
+            blk.begin_shard_step();
+        }
+        arena.zero();
+
+        let ctx_len = self.cfg.ctx;
+        let stack: &SpectralStack = self;
+        let layout = &arena.layout;
+        let mut row0 = 0usize;
+        for (shard_idx, (shard, loss_slot)) in
+            arena.shards.iter_mut().zip(arena.losses.iter_mut()).enumerate()
+        {
+            if row0 >= b {
+                break;
+            }
+            let rows = shard_rows.min(b - row0);
+            let bytes = &ctx_bytes[row0 * ctx_len..(row0 + rows) * ctx_len];
+            let lbls = &labels[row0..row0 + rows];
+            if stack.exec.faults().take_shard_panic(shard_idx, GRAD_SHARDS) {
+                panic!("injected fault: shard job {shard_idx} panic (serial)");
+            }
+            *loss_slot = stack.shard_grad_pass(bytes, lbls, shard, layout, b);
+            row0 += rows;
+        }
+        self.reduce_and_apply(arena, bank, b)
+    }
+
+    /// Shared tail of both sharded step paths: deterministic fixed-order
+    /// tree reductions of the shard losses/gradients, per-block gradient
+    /// post-processing, and the same fold→apply→zero visitor tail as the
+    /// serial step. One implementation guarantees the pool path and the
+    /// serial fallback combine results identically.
+    fn reduce_and_apply(
+        &mut self,
+        arena: &mut ShardArena,
+        bank: &mut OptimizerBank,
+        b: usize,
+    ) -> f32 {
         // Deterministic fixed-order tree reductions (losses and grads):
         // the combine sequence depends only on the slot count.
         tree_reduce_with(&mut arena.losses, |a, b| *a += *b);
@@ -430,6 +510,50 @@ impl SpectralStack {
         }
         self.readout.clear_saved();
         self.masks.clear();
+    }
+
+    /// Snapshot every trainable parameter (checkpointing): per-tensor
+    /// lengths plus the flattened values, both in `for_each_param` visit
+    /// order. The visitor guarantees canonical **time-domain** values (it
+    /// transforms spectral-resident circulant blocks back first), so the
+    /// export is an exact image of the state the optimizer updates.
+    pub fn export_params(&mut self) -> (Vec<usize>, Vec<f32>) {
+        let mut lens = Vec::new();
+        let mut flat = Vec::new();
+        self.for_each_param(&mut |p, _g| {
+            lens.push(p.len());
+            flat.extend_from_slice(p);
+        });
+        (lens, flat)
+    }
+
+    /// Restore parameters from an [`SpectralStack::export_params`]-shaped
+    /// flat vector (same visit order, same canonical time domain). Grad
+    /// accumulators are zeroed — a freshly resumed step must start from
+    /// the same clean slate a live step would. Length mismatches are
+    /// rejected without partially mutating anything the caller could
+    /// mistake for a successful restore.
+    pub fn import_params(&mut self, flat: &[f32]) -> Result<(), String> {
+        // Pre-check the total length against the model's own shape so a
+        // mismatch fails before any tensor is written.
+        let mut need = 0usize;
+        self.for_each_param(&mut |p, _g| need += p.len());
+        if need != flat.len() {
+            return Err(format!(
+                "checkpoint carries {} parameter floats, model needs {}",
+                flat.len(),
+                need
+            ));
+        }
+        let mut off = 0usize;
+        self.for_each_param(&mut |p, g| {
+            p.copy_from_slice(&flat[off..off + p.len()]);
+            off += p.len();
+            for v in g.iter_mut() {
+                *v = 0.0;
+            }
+        });
+        Ok(())
     }
 }
 
@@ -670,7 +794,9 @@ mod tests {
         for step in 0..4 {
             let (bytes, labels) = batch(16, 4, 40 + step);
             let lc = classic.train_step(&bytes, &labels, &mut bank_c);
-            let ls = sharded.train_step_sharded(&bytes, &labels, &mut bank_s, &mut arena);
+            let ls = sharded
+                .train_step_sharded(&bytes, &labels, &mut bank_s, &mut arena)
+                .expect("no faults injected");
             assert!((lc - ls).abs() < 1e-4, "step {step}: {lc} vs {ls}");
         }
         let mut pc = Vec::new();

@@ -239,6 +239,17 @@ impl Rng {
     pub fn new(seed: u64) -> Self {
         Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
     }
+    /// Raw generator state, for checkpointing. Restore with
+    /// [`Rng::from_state`] — NOT with [`Rng::new`], which transforms the
+    /// seed and would land on a different stream position.
+    pub fn state(&self) -> u64 {
+        self.0
+    }
+    /// Rebuild a generator from a [`Rng::state`] capture (bit-exact
+    /// stream continuation).
+    pub fn from_state(state: u64) -> Self {
+        Rng(state)
+    }
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.0;
         x ^= x >> 12;

@@ -13,11 +13,15 @@
 use crate::autograd::optim::{OptimKind, OptimizerBank};
 use crate::autograd::stack::{ShardArena, SpectralStack, StackConfig};
 use crate::data::{Batcher, CorpusGen};
-use crate::memtrack::{self, Category, Snapshot};
+use crate::memtrack::{self, Category, Snapshot, NUM_CATEGORIES};
+use crate::runtime::checkpoint::{self, TrainCheckpoint};
+use crate::runtime::faultinject::FaultPlan;
 use crate::runtime::pool::ExecCtx;
 use anyhow::Result;
 use std::io::Write;
+use std::panic::AssertUnwindSafe;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Native trainer configuration.
@@ -41,6 +45,20 @@ pub struct NativeTrainerConfig {
     /// structure is fixed, so every `N >= 1` produces **bit-identical**
     /// losses and parameters — `N` only changes wall-clock.
     pub threads: usize,
+    /// Directory for crash-safe checkpoints; `None` disables
+    /// checkpointing entirely (zero extra allocations on the step path).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Save a checkpoint every this many steps (and at the final step).
+    /// `0` disables periodic saves even with a directory set.
+    pub checkpoint_every: usize,
+    /// Retention: keep only the newest K checkpoint files.
+    pub checkpoint_keep: usize,
+    /// Resume from the newest valid checkpoint in `checkpoint_dir`
+    /// before training (fresh start if the directory is empty).
+    pub resume: bool,
+    /// Deterministic fault schedule (empty in normal runs). Shared with
+    /// the run's `ExecCtx` so shard jobs consult the same plan instance.
+    pub faults: Arc<FaultPlan>,
 }
 
 impl Default for NativeTrainerConfig {
@@ -58,7 +76,54 @@ impl Default for NativeTrainerConfig {
             log_csv: None,
             verbose: true,
             threads: 0,
+            checkpoint_dir: None,
+            checkpoint_every: 25,
+            checkpoint_keep: 3,
+            resume: false,
+            faults: Arc::new(FaultPlan::none()),
         }
+    }
+}
+
+impl NativeTrainerConfig {
+    /// Canonical string of every knob that shapes the training
+    /// trajectory. A checkpoint records it at save time; resume refuses a
+    /// checkpoint whose fingerprint differs — silently continuing a
+    /// different run's trajectory would be corruption, not resumption.
+    ///
+    /// Deliberately **excluded**: `threads` (any lane count of the
+    /// sharded step is bit-identical, so `--threads 4` may resume a
+    /// `--threads 1` run), `verbose`, `log_csv`, and the checkpoint knobs
+    /// themselves. The step-algorithm *class* (sharded vs classic) IS
+    /// included: the two regroup float sums differently.
+    ///
+    /// The eval schedule is included because evaluation round-trips
+    /// circulant parameters through the frequency domain between steps,
+    /// which perturbs the trajectory at the ULP level — two runs only
+    /// replay identically when they eval at the same steps.
+    pub fn fingerprint(&self) -> String {
+        let algo = if self.threads > 0 && self.stack.method.supports_shard_exec() {
+            "sharded"
+        } else {
+            "classic"
+        };
+        format!(
+            "v1;algo={algo};d={};depth={};vocab={};ctx={};method={};mseed={};\
+             optim={:?};lr={:08x};batch={};seed={};corpus={};eval={}x{}",
+            self.stack.d,
+            self.stack.depth,
+            self.stack.vocab,
+            self.stack.ctx,
+            self.stack.method.label(),
+            self.stack.seed,
+            self.optim,
+            self.lr.to_bits(),
+            self.batch,
+            self.seed,
+            self.corpus_bytes,
+            self.eval_every,
+            self.eval_batches,
+        )
     }
 }
 
@@ -81,13 +146,24 @@ pub struct NativeReport {
     /// activations + gradients).
     pub peak_bytes: usize,
     /// Category composition at the peak moment.
-    pub at_peak: [usize; 5],
+    pub at_peak: [usize; NUM_CATEGORIES],
     /// Independent per-category peaks over the run.
-    pub peak_by_cat: [usize; 5],
+    pub peak_by_cat: [usize; NUM_CATEGORIES],
     pub trainable_params: usize,
     pub optimizer_state_bytes: usize,
     /// Data-parallel lanes the run used (0 = classic serial step).
     pub threads: usize,
+    /// Steps that lost their pool fan-out to a panic and completed on the
+    /// scoped-serial fallback instead (0 in healthy runs).
+    pub degraded_steps: usize,
+    /// `Some(step)` when an injected `halt@STEP` fault stopped the run
+    /// before executing that step (in-process simulated kill).
+    pub halted_at: Option<usize>,
+    /// `Some(step)` when the run resumed from a checkpoint taken after
+    /// that step (its loss curve starts at `step + 1`).
+    pub resumed_from: Option<usize>,
+    /// Checkpoints successfully written during the run.
+    pub checkpoints_written: usize,
 }
 
 impl NativeReport {
@@ -147,8 +223,9 @@ impl NativeTrainer {
             // One ExecCtx governs the whole run: the blocks' engine
             // dispatch and the trainer's shard fan-out share its pool;
             // shard-arena scratch is charged to Gradients.
-            let exec =
-                ExecCtx::with_threads(cfg.threads).with_category(Category::Gradients);
+            let exec = ExecCtx::with_threads(cfg.threads)
+                .with_category(Category::Gradients)
+                .with_faults(cfg.faults.clone());
             (SpectralStack::with_exec(cfg.stack.clone(), exec.clone()), Some(exec))
         } else {
             (SpectralStack::new(cfg.stack.clone()), None)
@@ -161,6 +238,31 @@ impl NativeTrainer {
 
     pub fn stack(&self) -> &SpectralStack {
         &self.stack
+    }
+
+    /// Mutable stack access (the crashtest compares final parameters via
+    /// `export_params`, which needs `&mut` for the canonical-domain
+    /// guarantee).
+    pub fn stack_mut(&mut self) -> &mut SpectralStack {
+        &mut self.stack
+    }
+
+    /// Assemble a complete trainer snapshot: parameters (canonical time
+    /// domain via `for_each_param`), optimizer moments and step counters,
+    /// the batcher's RNG cursor, and the config fingerprint.
+    fn snapshot_state(&mut self, step: usize, fingerprint: &str, batcher: &Batcher) -> TrainCheckpoint {
+        let (param_lens, params) = self.stack.export_params();
+        let (optim_steps, optim_m, optim_v) = self.bank.export_state();
+        TrainCheckpoint {
+            step,
+            fingerprint: fingerprint.to_string(),
+            rng_state: batcher.rng_state(),
+            param_lens,
+            params,
+            optim_steps,
+            optim_m,
+            optim_v,
+        }
     }
 
     /// Run the loop; returns the report (loss curve + memory evidence).
@@ -209,10 +311,62 @@ impl NativeTrainer {
             None
         };
 
+        // ---- Resume (before anything mutates trainer state) ----------
+        let fp = cfg.fingerprint();
+        let mut start_step = 1usize;
+        let mut resumed_from = None;
+        if cfg.resume {
+            let dir = cfg.checkpoint_dir.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("resume requested but no checkpoint directory configured")
+            })?;
+            match checkpoint::latest_valid(dir, &fp) {
+                Ok(Some((ck, notices))) => {
+                    for n in &notices {
+                        eprintln!("[train-native] {n}");
+                    }
+                    self.stack
+                        .import_params(&ck.params)
+                        .map_err(|e| anyhow::anyhow!("restoring parameters: {e}"))?;
+                    self.bank
+                        .import_state(
+                            &ck.optim_steps,
+                            &ck.optim_m,
+                            &ck.optim_v,
+                            &ck.param_lens,
+                        )
+                        .map_err(|e| anyhow::anyhow!("restoring optimizer state: {e}"))?;
+                    batcher.restore_rng_state(ck.rng_state);
+                    start_step = ck.step + 1;
+                    resumed_from = Some(ck.step);
+                    if cfg.verbose {
+                        println!(
+                            "[train-native] resumed from step {} ({})",
+                            ck.step,
+                            dir.display()
+                        );
+                    }
+                }
+                Ok(None) => {
+                    if cfg.verbose {
+                        println!(
+                            "[train-native] no valid checkpoint in {}; starting fresh",
+                            dir.display()
+                        );
+                    }
+                }
+                // FingerprintMismatch (or an unreadable directory): a
+                // clear, propagated error rather than a silent restart.
+                Err(e) => return Err(anyhow::anyhow!("resume failed: {e}")),
+            }
+        }
+
+        // Note: a resumed run truncates and rewrites the CSV from its
+        // resume point (open_csv truncates) — the log restarts with the
+        // run, which keeps the file internally consistent.
         let mut csv = match &cfg.log_csv {
             Some(p) => Some(super::open_csv(
                 p,
-                "step,loss,eval_loss,tokens_per_sec,peak_mib,weights_mib,trainable_mib,gradients_mib,intermediates_mib,other_mib",
+                "step,loss,eval_loss,tokens_per_sec,peak_mib,weights_mib,trainable_mib,gradients_mib,intermediates_mib,other_mib,checkpoint_mib",
             )?),
             None => None,
         };
@@ -220,26 +374,112 @@ impl NativeTrainer {
         memtrack::reset_peak();
         let mut losses = Vec::with_capacity(cfg.steps);
         let mut final_eval = None;
+        let mut degraded_steps = 0usize;
+        let mut halted_at = None;
+        let mut checkpoints_written = 0usize;
+        let save_every = cfg.checkpoint_every;
         let t0 = Instant::now();
         let mut tokens_seen = 0usize;
         // Wall time spent inside evaluation, excluded from throughput so
         // eval-enabled and eval-disabled runs report the same tok/s.
         let mut eval_secs = 0.0f64;
 
-        for step in 1..=cfg.steps {
+        for step in start_step..=cfg.steps {
+            // Scope the fault plan to this step, then apply any
+            // process-level faults scheduled here.
+            cfg.faults.begin_step(step);
+            if cfg.faults.take_halt(step) {
+                eprintln!("[faultinject] halt: stopping before step {step}");
+                halted_at = Some(step);
+                break;
+            }
+            if cfg.faults.take_abort(step) {
+                eprintln!("[faultinject] abort: killing the process at step {step}");
+                std::process::abort();
+            }
             // Typed BatchError surfaces as a clean CLI failure on tiny
             // corpora instead of a panic inside the sampler.
             let (ctxs, labels) = batcher.next_context_batch(ctx)?;
             // The sharded step fans out on the stack's own ExecCtx (the
             // trainer installed it at construction).
             let loss = match self.arena.as_mut() {
-                Some(arena) => self
-                    .stack
-                    .train_step_sharded(&ctxs, &labels, &mut self.bank, arena),
+                Some(arena) => {
+                    match self.stack.train_step_sharded(&ctxs, &labels, &mut self.bank, arena) {
+                        Ok(l) => l,
+                        Err(p) => {
+                            // Graceful degradation: the panic surfaced
+                            // before any reduction or optimizer mutation,
+                            // so retrying the whole step on the scoped-
+                            // serial fallback reproduces the unfailed
+                            // step bit-exactly. A second failure is a
+                            // real defect — hard-fail.
+                            degraded_steps += 1;
+                            eprintln!(
+                                "[train-native] step {step}: pool shard job panicked \
+                                 ({}); discarding shard buffers and retrying this \
+                                 step on the serial fallback",
+                                p.message()
+                            );
+                            let retry = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                                self.stack.train_step_sharded_serial(
+                                    &ctxs,
+                                    &labels,
+                                    &mut self.bank,
+                                    arena,
+                                )
+                            }));
+                            match retry {
+                                Ok(l) => l,
+                                Err(payload) => {
+                                    let msg = payload
+                                        .downcast_ref::<&str>()
+                                        .map(|s| s.to_string())
+                                        .or_else(|| {
+                                            payload.downcast_ref::<String>().cloned()
+                                        })
+                                        .unwrap_or_else(|| "unknown panic".to_string());
+                                    anyhow::bail!(
+                                        "step {step} failed in the worker pool ({}) and \
+                                         again on the serial fallback ({msg}); giving up",
+                                        p.message()
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
                 None => self.stack.train_step(&ctxs, &labels, &mut self.bank),
             };
             tokens_seen += cfg.batch * ctx;
             losses.push((step, loss));
+
+            // Checkpoint immediately after the update and BEFORE eval:
+            // parameters are guaranteed canonical time-domain here, so
+            // the export adds zero perturbation, and a resumed run
+            // replays the identical eval/transform sequence for every
+            // later step — the placement bit-identical resume depends on.
+            if let Some(dir) = cfg.checkpoint_dir.as_ref() {
+                if save_every > 0 && (step % save_every == 0 || step == cfg.steps) {
+                    let ck = self.snapshot_state(step, &fp, &batcher);
+                    match ck.save(dir, cfg.checkpoint_keep, &cfg.faults) {
+                        Ok(path) => {
+                            checkpoints_written += 1;
+                            if cfg.verbose {
+                                println!(
+                                    "[train-native] checkpoint: {}",
+                                    path.display()
+                                );
+                            }
+                        }
+                        // A failed save must not kill training — warn
+                        // and continue; the previous checkpoints remain.
+                        Err(e) => eprintln!(
+                            "[train-native] warning: checkpoint at step {step} \
+                             failed ({e}); continuing"
+                        ),
+                    }
+                }
+            }
             let snap = memtrack::snapshot();
 
             let do_eval = eval_enabled && (step % cfg.eval_every == 0 || step == cfg.steps);
@@ -268,7 +508,7 @@ impl NativeTrainer {
                 let mib = |b: usize| b as f64 / (1024.0 * 1024.0);
                 writeln!(
                     f,
-                    "{step},{loss},{},{:.1},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
+                    "{step},{loss},{},{:.1},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
                     eval_loss.map(|e| e.to_string()).unwrap_or_default(),
                     tokens_seen as f64 / (t0.elapsed().as_secs_f64() - eval_secs).max(1e-9),
                     snap.peak_mib(),
@@ -277,10 +517,13 @@ impl NativeTrainer {
                     mib(snap.current[Category::Gradients.index()]),
                     mib(snap.current[Category::Intermediates.index()]),
                     mib(snap.current[Category::Other.index()]),
+                    mib(snap.current[Category::Checkpoint.index()]),
                 )?;
             }
         }
 
+        // Deactivate the fault plan: nothing fires outside the loop.
+        cfg.faults.begin_step(0);
         let snap: Snapshot = memtrack::snapshot();
         let secs = (t0.elapsed().as_secs_f64() - eval_secs).max(1e-9);
         // Trend windows: first/last w steps with w = min(10, steps/2), so
@@ -305,6 +548,10 @@ impl NativeTrainer {
             trainable_params: self.stack.num_trainable(),
             optimizer_state_bytes: self.bank.state_bytes(),
             threads,
+            degraded_steps,
+            halted_at,
+            resumed_from,
+            checkpoints_written,
         })
     }
 }
@@ -332,6 +579,7 @@ pub fn measure_native_run(
         log_csv: None,
         verbose: false,
         threads: 0,
+        ..Default::default()
     };
     let mut t = NativeTrainer::new(cfg);
     t.run().expect("native run cannot fail: no CSV path and a 32 KiB corpus")
@@ -398,6 +646,7 @@ mod tests {
             log_csv: None,
             verbose: false,
             threads,
+            ..Default::default()
         };
         let r1 = {
             let mut t = NativeTrainer::new(mk(1));

@@ -135,7 +135,9 @@ impl Trainer {
             for v in &flat {
                 bytes.extend_from_slice(&v.to_le_bytes());
             }
-            std::fs::write(ck, &bytes)
+            // Atomic protocol (temp → fsync → rename): a crash mid-write
+            // must never leave a torn file under the checkpoint name.
+            crate::runtime::checkpoint::atomic_write(ck, &bytes)
                 .with_context(|| format!("writing checkpoint {}", ck.display()))?;
             println!("[train] checkpoint: {} ({} params)", ck.display(), flat.len());
         }

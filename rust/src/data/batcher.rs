@@ -87,6 +87,19 @@ impl Batcher {
         self.tokens.len()
     }
 
+    /// The sampler's raw RNG state — the batcher's entire cursor (window
+    /// starts are drawn from this stream and nothing else), so persisting
+    /// it is what makes a resumed run draw the exact batch sequence the
+    /// uninterrupted run would have drawn.
+    pub fn rng_state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    /// Restore the sampler to a [`Batcher::rng_state`] capture.
+    pub fn restore_rng_state(&mut self, state: u64) {
+        self.rng = Rng::from_state(state);
+    }
+
     /// Sample a batch of random windows; targets are inputs shifted by
     /// one (the last position predicts the next byte after the window).
     pub fn next_batch(&mut self) -> (Vec<i32>, Vec<i32>) {
@@ -264,6 +277,20 @@ mod tests {
         // trainer uses it so a tiny corpus is a clean CLI error).
         let err = Batcher::try_new("ab", 1, 32, 0).unwrap_err();
         assert!(matches!(err, BatchError::CorpusTooSmall { needed: 34, .. }), "{err:?}");
+    }
+
+    #[test]
+    fn rng_state_roundtrip_resumes_the_batch_stream() {
+        // Capture mid-stream, then replay from a fresh batcher: the
+        // restored sampler must draw the exact same windows (the
+        // checkpoint/resume contract).
+        let mut a = make();
+        let _ = a.next_context_batch(8).unwrap();
+        let state = a.rng_state();
+        let expect = a.next_context_batch(8).unwrap();
+        let mut b = make();
+        b.restore_rng_state(state);
+        assert_eq!(b.next_context_batch(8).unwrap(), expect);
     }
 
     #[test]

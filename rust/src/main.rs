@@ -17,13 +17,17 @@
 //! hand-rolled matcher with the same UX.)
 
 use anyhow::{bail, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use rdfft::autograd::layers::Backend;
 use rdfft::autograd::optim::OptimKind;
 use rdfft::autograd::stack::StackConfig;
 use rdfft::autograd::train::Method;
-use rdfft::coordinator::{experiments, NativeTrainer, NativeTrainerConfig, Trainer, TrainerConfig};
+use rdfft::coordinator::{
+    experiments, NativeReport, NativeTrainer, NativeTrainerConfig, Trainer, TrainerConfig,
+};
+use rdfft::runtime::{checkpoint, FaultPlan};
 
 struct Args {
     flags: Vec<(String, Option<String>)>,
@@ -89,6 +93,18 @@ fn usage() -> ! {
                     drop or the memtrack peak exceeds M)\n\
                     [--force-scalar]  disable the SIMD lane kernels\n\
                     (also RDFFT_FORCE_SCALAR=1; dispatch is on by default)\n\
+                    [--checkpoint-dir DIR]  crash-safe checkpoints (atomic\n\
+                    writes, per-section checksums, keep-last-K retention)\n\
+                    [--checkpoint-every N=25] [--keep K=3]\n\
+                    [--resume]  continue from the newest valid checkpoint\n\
+                    (bit-identical to the uninterrupted run)\n\
+                    [--fault SPEC] [--fault-seed S]  deterministic fault\n\
+                    injection: panic-job@STEP[:JOB] | abort@STEP |\n\
+                    halt@STEP | torn-write@STEP | io-fail@STEP (comma-sep)\n\
+           crashtest  kill/resume cycles proving bit-identical resume\n\
+                    [--threads T=2]  (abort, torn-write, pool-panic, and\n\
+                    corrupted-checkpoint scenarios vs an uninterrupted\n\
+                    reference run)\n\
            table-native  native multi-layer peak-memory grid [--fast]\n\
            table1   single-layer peak-memory grid   [--fast]\n\
            table2   full-model memory decomposition\n\
@@ -166,6 +182,19 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     // Absent --threads = serial step; a present-but-malformed lane count
     // is a user error (get_num), never "serial silently".
     let threads = args.get_num("threads", 0)?;
+    // Deterministic fault schedule (tests/crashtest; empty by default).
+    let faults = match args.get("fault") {
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+            Arc::new(plan.with_seed(args.get_num("fault-seed", 0)? as u64))
+        }
+        None => {
+            if args.has("fault") {
+                bail!("--fault expects a spec, e.g. panic-job@3 or abort@10");
+            }
+            Arc::new(FaultPlan::none())
+        }
+    };
     let cfg = NativeTrainerConfig {
         stack: StackConfig {
             d,
@@ -183,10 +212,32 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         seed,
         log_csv: args.get("csv").map(PathBuf::from),
         threads,
+        checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
+        checkpoint_every: args.get_num("checkpoint-every", 25)?,
+        checkpoint_keep: args.get_num("keep", 3)?,
+        resume: args.has("resume"),
+        faults,
         ..Default::default()
     };
     let mut trainer = NativeTrainer::new(cfg);
     let report = trainer.run()?;
+    if let Some(from) = report.resumed_from {
+        println!(
+            "[train-native] resumed at step {} ({} new steps this process)",
+            from + 1,
+            report.losses.len()
+        );
+    }
+    if report.degraded_steps > 0 {
+        println!(
+            "[train-native] {} step(s) completed on the serial fallback after a \
+             pool panic",
+            report.degraded_steps
+        );
+    }
+    if let Some(at) = report.halted_at {
+        println!("[train-native] halted by injected fault before step {at}");
+    }
     println!(
         "[train-native] done: loss {:.4} -> {:.4} (trend {:.4} -> {:.4}) over {} steps, \
          peak {:.2} MiB (act+grad {:.3} MiB), {:.0} tok/s",
@@ -199,7 +250,11 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         report.activation_grad_peak() as f64 / (1024.0 * 1024.0),
         report.tokens_per_sec,
     );
-    if !report.loss_decreased() {
+    // The loss-trend gate only applies to complete, from-scratch runs: a
+    // resumed run may replay only a short (already-converged) tail, and a
+    // fault-halted run is intentionally partial.
+    if report.resumed_from.is_none() && report.halted_at.is_none() && !report.loss_decreased()
+    {
         bail!(
             "training did not reduce the loss ({:.4} -> {:.4})",
             report.head_loss,
@@ -219,6 +274,203 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The fixed small config every crashtest run (in-process and child) uses.
+/// The child process is launched through `train-native` flags, so the
+/// flag list in [`cmd_crashtest`] must mirror this exactly — the config
+/// fingerprint is what lets resume accept the child's checkpoints.
+fn crashtest_cfg(
+    dir: Option<&Path>,
+    threads: usize,
+    resume: bool,
+    faults: Arc<FaultPlan>,
+) -> NativeTrainerConfig {
+    NativeTrainerConfig {
+        stack: StackConfig {
+            d: 32,
+            depth: 2,
+            ctx: 4,
+            method: Method::Circulant { backend: Backend::RdFft, p: 8 },
+            seed: 42,
+            ..Default::default()
+        },
+        optim: OptimKind::Sgd,
+        lr: 0.2,
+        steps: 20,
+        batch: 8,
+        eval_every: 0,
+        // eval_batches stays at the config default (4) to match the
+        // child's CLI-built config; eval is off either way (eval_every=0)
+        // but the fingerprint records both knobs.
+        seed: 42,
+        log_csv: None,
+        verbose: false,
+        threads,
+        checkpoint_dir: dir.map(|p| p.to_path_buf()),
+        checkpoint_every: 5,
+        checkpoint_keep: 10,
+        resume,
+        faults,
+        ..Default::default()
+    }
+}
+
+/// `repro crashtest`: train → kill → resume cycles asserting the resumed
+/// trajectory (per-step losses AND final parameters) is **bit-identical**
+/// to an uninterrupted reference run. Kills are real `abort()`s in child
+/// processes driven by deterministic fault injection; scenarios cover a
+/// clean kill, a torn checkpoint write, a worker-pool panic (graceful
+/// degradation) followed by a kill, a corrupted checkpoint file, and a
+/// config-fingerprint mismatch.
+fn cmd_crashtest(args: &Args) -> Result<()> {
+    use std::process::Command;
+    let threads = args.get_num("threads", 2)?;
+    let exe = std::env::current_exe()?;
+    let base = std::env::temp_dir().join(format!("rdfft_crashtest_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base)?;
+
+    println!("[crashtest] reference: uninterrupted 20-step run ({threads} lane(s), no checkpointing)");
+    let (ref_losses, ref_params) = {
+        let mut t =
+            NativeTrainer::new(crashtest_cfg(None, threads, false, Arc::new(FaultPlan::none())));
+        let r = t.run()?;
+        let (_, params) = t.stack_mut().export_params();
+        (r.losses, params)
+    };
+
+    let child = |dir: &Path, fault: &str| -> Result<()> {
+        println!("[crashtest] child: train-native --fault {fault:?} (expected to die)");
+        let status = Command::new(&exe)
+            .args([
+                "train-native",
+                "--steps", "20",
+                "--d", "32",
+                "--depth", "2",
+                "--ctx", "4",
+                "--p", "8",
+                "--batch", "8",
+                "--seed", "42",
+                "--eval-every", "0",
+                "--threads", &threads.to_string(),
+                "--checkpoint-dir", dir.to_str().expect("temp paths are utf-8"),
+                "--checkpoint-every", "5",
+                "--keep", "10",
+                "--fault", fault,
+            ])
+            .status()?;
+        anyhow::ensure!(
+            !status.success(),
+            "child injected with {fault:?} exited successfully — the fault never fired"
+        );
+        Ok(())
+    };
+
+    let resume = |dir: &Path| -> Result<(NativeReport, Vec<f32>)> {
+        let mut t = NativeTrainer::new(crashtest_cfg(
+            Some(dir),
+            threads,
+            true,
+            Arc::new(FaultPlan::none()),
+        ));
+        let r = t.run()?;
+        let (_, params) = t.stack_mut().export_params();
+        Ok((r, params))
+    };
+
+    let verify = |tag: &str, r: &NativeReport, params: &[f32], expect_from: usize| -> Result<()> {
+        anyhow::ensure!(
+            r.resumed_from == Some(expect_from),
+            "[{tag}] resumed from {:?}, expected step {expect_from}",
+            r.resumed_from
+        );
+        for &(step, loss) in &r.losses {
+            let rl = ref_losses
+                .iter()
+                .find(|&&(s, _)| s == step)
+                .map(|&(_, l)| l)
+                .ok_or_else(|| anyhow::anyhow!("[{tag}] reference lacks step {step}"))?;
+            anyhow::ensure!(
+                loss.to_bits() == rl.to_bits(),
+                "[{tag}] step {step}: resumed loss {loss} != reference {rl} (not bit-identical)"
+            );
+        }
+        anyhow::ensure!(params.len() == ref_params.len(), "[{tag}] param count mismatch");
+        for i in 0..params.len() {
+            anyhow::ensure!(
+                params[i].to_bits() == ref_params[i].to_bits(),
+                "[{tag}] final param {i} differs: {} vs {}",
+                params[i],
+                ref_params[i]
+            );
+        }
+        println!(
+            "[crashtest] {tag}: resumed after step {expect_from}; {} replayed losses and \
+             {} final params bit-identical to the reference",
+            r.losses.len(),
+            params.len()
+        );
+        Ok(())
+    };
+
+    // Scenario 1: clean kill at step 10 (before the step runs) — newest
+    // checkpoint is step 5.
+    let dir_abort = base.join("abort");
+    child(&dir_abort, "abort@10")?;
+    let (r, p) = resume(&dir_abort)?;
+    verify("abort", &r, &p, 5)?;
+
+    // Scenario 2: death MID-checkpoint-write at step 10 — the torn temp
+    // file must be ignored and resume must fall back to step 5.
+    let dir_torn = base.join("torn");
+    child(&dir_torn, "torn-write@10")?;
+    let torn_tmp = std::fs::read_dir(&dir_torn)?
+        .flatten()
+        .any(|e| e.file_name().to_string_lossy().ends_with(".tmp"));
+    anyhow::ensure!(torn_tmp, "torn-write must leave a torn temp file behind");
+    let (r, p) = resume(&dir_torn)?;
+    verify("torn-write", &r, &p, 5)?;
+
+    // Scenario 3: a worker-pool panic at step 3 (step completes on the
+    // serial fallback — graceful degradation), then a kill at step 15.
+    let dir_panic = base.join("panic");
+    child(&dir_panic, "panic-job@3,abort@15")?;
+    let (r, p) = resume(&dir_panic)?;
+    verify("pool-panic", &r, &p, 10)?;
+
+    // Scenario 4: corrupt the newest checkpoint (bit flip) — the scan
+    // must skip it and fall back to the next-newest valid file.
+    // dir_abort now holds checkpoints from the completed resume run
+    // (steps 10, 15, 20 plus the child's 5).
+    let newest = checkpoint::list_checkpoints(&dir_abort)
+        .pop()
+        .ok_or_else(|| anyhow::anyhow!("no checkpoints after the abort cycle"))?;
+    anyhow::ensure!(newest.0 == 20, "newest checkpoint is step {}, expected 20", newest.0);
+    let mut bytes = std::fs::read(&newest.1)?;
+    let n = bytes.len();
+    bytes[n - 7] ^= 0x20;
+    std::fs::write(&newest.1, &bytes)?;
+    let (r, p) = resume(&dir_abort)?;
+    verify("corrupted-latest", &r, &p, 15)?;
+
+    // Scenario 5: a structurally valid checkpoint from a DIFFERENT config
+    // must be refused with a fingerprint error, never silently resumed.
+    let mut foreign = crashtest_cfg(Some(&dir_torn), threads, true, Arc::new(FaultPlan::none()));
+    foreign.lr = 0.05;
+    let err = NativeTrainer::new(foreign)
+        .run()
+        .err()
+        .ok_or_else(|| anyhow::anyhow!("resume with a foreign config must fail"))?;
+    anyhow::ensure!(
+        format!("{err:#}").contains("fingerprint"),
+        "foreign-config resume failed for the wrong reason: {err:#}"
+    );
+    println!("[crashtest] fingerprint: foreign config rejected with a clear error");
+
+    let _ = std::fs::remove_dir_all(&base);
+    println!("[crashtest] PASS: all kill/resume cycles bit-identical");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else { usage() };
@@ -233,6 +485,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&args)?,
         "train-native" => cmd_train_native(&args)?,
+        "crashtest" => cmd_crashtest(&args)?,
         "table-native" => experiments::table_native(args.has("fast")),
         "table1" => experiments::table1(args.has("fast")),
         "table2" => experiments::table2(),

@@ -33,14 +33,23 @@ pub enum Category {
     Intermediates,
     /// Anything else (optimizer state, metrics, ...).
     Other,
+    /// Checkpoint serialization buffers (save/restore I/O staging). Kept
+    /// separate so the paper-style steady-state tables stay honest: a run
+    /// with checkpointing off must show zero bytes here, and a run with
+    /// it on shows exactly what the snapshot I/O costs.
+    Checkpoint,
 }
 
-pub const CATEGORIES: [Category; 5] = [
+/// Number of categories (array width of every per-category breakdown).
+pub const NUM_CATEGORIES: usize = 6;
+
+pub const CATEGORIES: [Category; NUM_CATEGORIES] = [
     Category::Weights,
     Category::Trainable,
     Category::Gradients,
     Category::Intermediates,
     Category::Other,
+    Category::Checkpoint,
 ];
 
 impl Category {
@@ -51,6 +60,7 @@ impl Category {
             Category::Gradients => 2,
             Category::Intermediates => 3,
             Category::Other => 4,
+            Category::Checkpoint => 5,
         }
     }
     pub fn name(self) -> &'static str {
@@ -60,6 +70,7 @@ impl Category {
             Category::Gradients => "gradients",
             Category::Intermediates => "intermediates",
             Category::Other => "other",
+            Category::Checkpoint => "checkpoint",
         }
     }
 }
@@ -68,13 +79,13 @@ impl Category {
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Snapshot {
     /// Current bytes per category.
-    pub current: [usize; 5],
+    pub current: [usize; NUM_CATEGORIES],
     /// Peak total bytes observed since the last [`reset`].
     pub peak_total: usize,
     /// Per-category composition at the moment the peak total was reached.
-    pub at_peak: [usize; 5],
+    pub at_peak: [usize; NUM_CATEGORIES],
     /// Independent per-category peaks.
-    pub peak_by_cat: [usize; 5],
+    pub peak_by_cat: [usize; NUM_CATEGORIES],
     /// Number of allocations since reset (allocation-count claims:
     /// rdFFT performs **zero** intermediate allocations).
     pub alloc_count: usize,
@@ -94,10 +105,10 @@ impl Snapshot {
 
 #[derive(Default)]
 struct Tracker {
-    current: [usize; 5],
+    current: [usize; NUM_CATEGORIES],
     peak_total: usize,
-    at_peak: [usize; 5],
-    peak_by_cat: [usize; 5],
+    at_peak: [usize; NUM_CATEGORIES],
+    peak_by_cat: [usize; NUM_CATEGORIES],
     alloc_count: usize,
     /// Category override stack (see [`ScopedCategory`]).
     scope: Vec<Category>,
@@ -183,9 +194,9 @@ pub struct WorkerDelta {
     /// Peak total bytes the job(s) reached on the worker tracker.
     pub peak_total: usize,
     /// Per-category composition at that peak.
-    pub at_peak: [usize; 5],
+    pub at_peak: [usize; NUM_CATEGORIES],
     /// Independent per-category peaks.
-    pub peak_by_cat: [usize; 5],
+    pub peak_by_cat: [usize; NUM_CATEGORIES],
     /// Allocations performed by the job(s).
     pub alloc_count: usize,
 }
@@ -202,7 +213,7 @@ impl WorkerDelta {
     /// don't stack.
     pub fn absorb(&mut self, other: &WorkerDelta) {
         self.peak_total += other.peak_total;
-        for i in 0..5 {
+        for i in 0..NUM_CATEGORIES {
             self.at_peak[i] += other.at_peak[i];
             self.peak_by_cat[i] += other.peak_by_cat[i];
         }
@@ -270,11 +281,11 @@ pub fn merge_worker_delta(d: &WorkerDelta) {
         let cur: usize = t.current.iter().sum();
         if cur + d.peak_total > t.peak_total {
             t.peak_total = cur + d.peak_total;
-            for i in 0..5 {
+            for i in 0..NUM_CATEGORIES {
                 t.at_peak[i] = t.current[i] + d.at_peak[i];
             }
         }
-        for i in 0..5 {
+        for i in 0..NUM_CATEGORIES {
             let c = t.current[i] + d.peak_by_cat[i];
             if c > t.peak_by_cat[i] {
                 t.peak_by_cat[i] = c;
@@ -487,8 +498,8 @@ mod tests {
         let _live = TrackedVec::zeros(512, Category::Weights); // 2 KiB live
         let mut d = WorkerDelta {
             peak_total: 4096,
-            at_peak: [0, 0, 0, 4096, 0],
-            peak_by_cat: [0, 0, 0, 4096, 0],
+            at_peak: [0, 0, 0, 4096, 0, 0],
+            peak_by_cat: [0, 0, 0, 4096, 0, 0],
             alloc_count: 3,
         };
         // two concurrent jobs: absorb doubles the worker-side peak
@@ -513,8 +524,8 @@ mod tests {
         reset();
         let d = |peak: usize, allocs: usize| WorkerDelta {
             peak_total: peak,
-            at_peak: [0, 0, 0, peak, 0],
-            peak_by_cat: [0, 0, 0, peak, 0],
+            at_peak: [0, 0, 0, peak, 0, 0],
+            peak_by_cat: [0, 0, 0, peak, 0, 0],
             alloc_count: allocs,
         };
         // 4 jobs on 2 lanes: only the two largest peaks stack; every

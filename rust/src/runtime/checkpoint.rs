@@ -1,0 +1,672 @@
+//! Crash-safe training checkpoints.
+//!
+//! A checkpoint is the *complete* native-trainer state — every trainable
+//! parameter (via `Layer::for_each_param`, canonical time domain),
+//! the optimizer bank's per-tensor step counters and moment buffers, the
+//! batcher's RNG cursor, the step number, and a config fingerprint — in
+//! one self-validating file:
+//!
+//! ```text
+//! RDFFTCKPT1\n                      magic
+//! <u64 LE>                          header length in bytes
+//! {...single-line JSON header...}   parsed by runtime::json
+//! <params f32 LE><m f32 LE><v f32 LE>   payload sections
+//! ```
+//!
+//! The header records per-section lengths and FNV-1a-64 checksums, the
+//! RNG state and optimizer step counters as hex strings (JSON numbers are
+//! f64 and cannot carry every u64 exactly), and the fingerprint of the
+//! trajectory-affecting config. Writes are atomic (temp file → fsync →
+//! rename → directory fsync) so a crash at any instant leaves either the
+//! previous checkpoint set or the new one — never a torn file under a
+//! checkpoint name. Loads validate everything and return typed
+//! [`CheckpointError`]s; [`latest_valid`] scans a directory newest-first,
+//! skipping corrupt/truncated files (with notices) and hard-failing only
+//! on a fingerprint mismatch — a *valid* checkpoint from a *different*
+//! run config must never be silently resumed.
+//!
+//! Thread count is deliberately **not** part of the fingerprint: the
+//! sharded step is bit-identical at any lane count, so resuming a
+//! `--threads 4` run with `--threads 1` is exact.
+
+use super::faultinject::FaultPlan;
+use super::json::{self, Json};
+use crate::memtrack::{Category, Registration};
+use std::fmt;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8] = b"RDFFTCKPT1\n";
+const VERSION: usize = 1;
+
+/// Typed checkpoint failure, with enough context to act on.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Underlying I/O failure.
+    Io { path: PathBuf, err: String },
+    /// File shorter than its own declared layout.
+    Truncated { path: PathBuf, needed: usize, got: usize },
+    /// Not a checkpoint file at all.
+    BadMagic { path: PathBuf },
+    /// Structurally invalid header (byte offset is file-absolute).
+    BadHeader { path: PathBuf, offset: usize, msg: String },
+    /// A payload section's checksum does not match its header record.
+    ChecksumMismatch { path: PathBuf, section: &'static str },
+    /// The checkpoint is valid but belongs to a different run config.
+    FingerprintMismatch { path: PathBuf, expected: String, found: String },
+    /// A fault-injection spec fired (tests/crashtest only).
+    Injected(&'static str),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io { path, err } => {
+                write!(f, "{}: io error: {err}", path.display())
+            }
+            CheckpointError::Truncated { path, needed, got } => write!(
+                f,
+                "{}: truncated checkpoint ({got} bytes, layout needs {needed})",
+                path.display()
+            ),
+            CheckpointError::BadMagic { path } => {
+                write!(f, "{}: not a checkpoint file (bad magic)", path.display())
+            }
+            CheckpointError::BadHeader { path, offset, msg } => write!(
+                f,
+                "{}: invalid checkpoint header at byte {offset}: {msg}",
+                path.display()
+            ),
+            CheckpointError::ChecksumMismatch { path, section } => write!(
+                f,
+                "{}: checksum mismatch in section {section:?} (corrupted file)",
+                path.display()
+            ),
+            CheckpointError::FingerprintMismatch { path, expected, found } => write!(
+                f,
+                "{}: config fingerprint mismatch — checkpoint was written by a \
+                 different run configuration\n  expected: {expected}\n  found:    {found}",
+                path.display()
+            ),
+            CheckpointError::Injected(what) => {
+                write!(f, "injected fault: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty to catch torn or
+/// bit-flipped files (this is corruption *detection*, not cryptography).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn hex64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn from_hex64(s: &str) -> Option<u64> {
+    if s.len() > 16 || s.is_empty() {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory →
+/// write → fsync → rename over the target → best-effort directory fsync.
+/// A crash at any point leaves either the old file or the new one intact
+/// (plus possibly a stale `.…tmp` the checkpoint scanner ignores).
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("atomic-write");
+    let tmp = dir.join(format!(".{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    // Make the rename itself durable (best-effort: not every platform
+    // lets you fsync a directory handle).
+    if let Ok(d) = std::fs::File::open(&dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Canonical checkpoint file name for a step.
+pub fn checkpoint_path(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("ckpt-{step:08}.ckpt"))
+}
+
+/// `ckpt-NNNNNNNN.ckpt` files under `dir`, sorted ascending by step.
+pub fn list_checkpoints(dir: &Path) -> Vec<(usize, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(stem) = name.strip_prefix("ckpt-").and_then(|s| s.strip_suffix(".ckpt"))
+        else {
+            continue;
+        };
+        if let Ok(step) = stem.parse::<usize>() {
+            out.push((step, e.path()));
+        }
+    }
+    out.sort_by_key(|&(s, _)| s);
+    out
+}
+
+/// A complete trainer snapshot (see the module docs for the file layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainCheckpoint {
+    /// Training step the snapshot was taken *after* (1-based).
+    pub step: usize,
+    /// Canonical string of every trajectory-affecting config knob.
+    pub fingerprint: String,
+    /// Batcher RNG cursor (raw xorshift state).
+    pub rng_state: u64,
+    /// Per-tensor parameter lengths, `for_each_param` order.
+    pub param_lens: Vec<usize>,
+    /// All parameters, flattened in visit order (canonical time domain).
+    pub params: Vec<f32>,
+    /// Per-tensor optimizer step counters.
+    pub optim_steps: Vec<u64>,
+    /// First-moment buffers, flattened (empty for SGD).
+    pub optim_m: Vec<f32>,
+    /// Second-moment buffers, flattened (empty for SGD/momentum).
+    pub optim_v: Vec<f32>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn floats_to_le(dst: &mut Vec<u8>, src: &[f32]) {
+    for v in src {
+        dst.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn le_to_floats(src: &[u8]) -> Vec<f32> {
+    src.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+impl TrainCheckpoint {
+    /// Serialize to the on-disk byte layout. The staging buffer is
+    /// tracked under `Category::Checkpoint` for the lifetime of the
+    /// returned registration's scope (callers hold it across the write).
+    pub fn to_bytes(&self) -> (Vec<u8>, Registration) {
+        let mut params_b = Vec::with_capacity(self.params.len() * 4);
+        floats_to_le(&mut params_b, &self.params);
+        let mut m_b = Vec::with_capacity(self.optim_m.len() * 4);
+        floats_to_le(&mut m_b, &self.optim_m);
+        let mut v_b = Vec::with_capacity(self.optim_v.len() * 4);
+        floats_to_le(&mut v_b, &self.optim_v);
+
+        let lens: Vec<String> = self.param_lens.iter().map(|l| l.to_string()).collect();
+        let osteps: Vec<String> =
+            self.optim_steps.iter().map(|s| format!("\"{}\"", hex64(*s))).collect();
+        let header = format!(
+            concat!(
+                "{{\"version\":{},\"step\":{},\"fingerprint\":\"{}\",",
+                "\"rng\":\"{}\",\"param_lens\":[{}],\"optim_steps\":[{}],",
+                "\"m_len\":{},\"v_len\":{},",
+                "\"params_crc\":\"{}\",\"m_crc\":\"{}\",\"v_crc\":\"{}\"}}"
+            ),
+            VERSION,
+            self.step,
+            json_escape(&self.fingerprint),
+            hex64(self.rng_state),
+            lens.join(","),
+            osteps.join(","),
+            self.optim_m.len(),
+            self.optim_v.len(),
+            hex64(fnv1a(&params_b)),
+            hex64(fnv1a(&m_b)),
+            hex64(fnv1a(&v_b)),
+        );
+
+        let mut out = Vec::with_capacity(
+            MAGIC.len() + 8 + header.len() + params_b.len() + m_b.len() + v_b.len(),
+        );
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&params_b);
+        out.extend_from_slice(&m_b);
+        out.extend_from_slice(&v_b);
+        let reg = Registration::new(out.capacity(), Category::Checkpoint);
+        (out, reg)
+    }
+
+    /// Parse and validate an on-disk image. `path` is for error context
+    /// only.
+    pub fn from_bytes(path: &Path, bytes: &[u8]) -> Result<TrainCheckpoint, CheckpointError> {
+        let p = || path.to_path_buf();
+        if bytes.len() < MAGIC.len() {
+            return Err(CheckpointError::Truncated {
+                path: p(),
+                needed: MAGIC.len(),
+                got: bytes.len(),
+            });
+        }
+        if &bytes[..MAGIC.len()] != MAGIC {
+            return Err(CheckpointError::BadMagic { path: p() });
+        }
+        let hdr_off = MAGIC.len() + 8;
+        if bytes.len() < hdr_off {
+            return Err(CheckpointError::Truncated {
+                path: p(),
+                needed: hdr_off,
+                got: bytes.len(),
+            });
+        }
+        let mut len8 = [0u8; 8];
+        len8.copy_from_slice(&bytes[MAGIC.len()..hdr_off]);
+        let hdr_len = u64::from_le_bytes(len8);
+        // Explicit bounds check BEFORE any slicing: a corrupt length must
+        // be a typed error, not a panic.
+        let hdr_len = usize::try_from(hdr_len).unwrap_or(usize::MAX);
+        if hdr_len > bytes.len().saturating_sub(hdr_off) {
+            return Err(CheckpointError::Truncated {
+                path: p(),
+                needed: hdr_off.saturating_add(hdr_len),
+                got: bytes.len(),
+            });
+        }
+        let hdr_bytes = &bytes[hdr_off..hdr_off + hdr_len];
+        let hdr_str = std::str::from_utf8(hdr_bytes).map_err(|e| {
+            CheckpointError::BadHeader {
+                path: p(),
+                offset: hdr_off + e.valid_up_to(),
+                msg: "header is not UTF-8".to_string(),
+            }
+        })?;
+        let hdr = json::parse(hdr_str).map_err(|e| CheckpointError::BadHeader {
+            path: p(),
+            offset: hdr_off + e.pos,
+            msg: e.msg.clone(),
+        })?;
+        let bad = |msg: &str| CheckpointError::BadHeader {
+            path: path.to_path_buf(),
+            offset: hdr_off,
+            msg: msg.to_string(),
+        };
+
+        let version = hdr
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing/invalid \"version\""))?;
+        if version != VERSION {
+            return Err(bad(&format!("unsupported version {version} (want {VERSION})")));
+        }
+        let step = hdr
+            .get("step")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing/invalid \"step\""))?;
+        let fingerprint = hdr
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing \"fingerprint\""))?
+            .to_string();
+        let rng_state = hdr
+            .get("rng")
+            .and_then(Json::as_str)
+            .and_then(from_hex64)
+            .ok_or_else(|| bad("missing/invalid \"rng\" (16-digit hex)"))?;
+        let param_lens: Vec<usize> = hdr
+            .get("param_lens")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing \"param_lens\""))?
+            .iter()
+            .map(|j| j.as_usize())
+            .collect::<Option<Vec<usize>>>()
+            .ok_or_else(|| bad("non-integer entry in \"param_lens\""))?;
+        let optim_steps: Vec<u64> = hdr
+            .get("optim_steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing \"optim_steps\""))?
+            .iter()
+            .map(|j| j.as_str().and_then(from_hex64))
+            .collect::<Option<Vec<u64>>>()
+            .ok_or_else(|| bad("non-hex entry in \"optim_steps\""))?;
+        let m_len = hdr
+            .get("m_len")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing/invalid \"m_len\""))?;
+        let v_len = hdr
+            .get("v_len")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing/invalid \"v_len\""))?;
+        let crc_of = |key: &'static str| -> Result<u64, CheckpointError> {
+            hdr.get(key)
+                .and_then(Json::as_str)
+                .and_then(from_hex64)
+                .ok_or_else(|| bad(&format!("missing/invalid {key:?}")))
+        };
+        let params_crc = crc_of("params_crc")?;
+        let m_crc = crc_of("m_crc")?;
+        let v_crc = crc_of("v_crc")?;
+
+        let n_params: usize = param_lens.iter().sum();
+        // Overflow-safe payload layout check.
+        let payload_floats = n_params
+            .checked_add(m_len)
+            .and_then(|t| t.checked_add(v_len))
+            .ok_or_else(|| bad("section lengths overflow"))?;
+        let payload_bytes = payload_floats
+            .checked_mul(4)
+            .ok_or_else(|| bad("section lengths overflow"))?;
+        let payload_off = hdr_off + hdr_len;
+        let got = bytes.len() - payload_off;
+        if got < payload_bytes {
+            return Err(CheckpointError::Truncated {
+                path: p(),
+                needed: payload_off + payload_bytes,
+                got: bytes.len(),
+            });
+        }
+        if got > payload_bytes {
+            return Err(bad(&format!(
+                "{} trailing payload bytes beyond the declared sections",
+                got - payload_bytes
+            )));
+        }
+        let payload = &bytes[payload_off..];
+        let (params_b, rest) = payload.split_at(n_params * 4);
+        let (m_b, v_b) = rest.split_at(m_len * 4);
+        for (section, data, want) in [
+            ("params", params_b, params_crc),
+            ("optim_m", m_b, m_crc),
+            ("optim_v", v_b, v_crc),
+        ] {
+            if fnv1a(data) != want {
+                return Err(CheckpointError::ChecksumMismatch { path: p(), section });
+            }
+        }
+        Ok(TrainCheckpoint {
+            step,
+            fingerprint,
+            rng_state,
+            param_lens,
+            params: le_to_floats(params_b),
+            optim_steps,
+            optim_m: le_to_floats(m_b),
+            optim_v: le_to_floats(v_b),
+        })
+    }
+
+    /// Load and validate one checkpoint file.
+    pub fn load(path: &Path) -> Result<TrainCheckpoint, CheckpointError> {
+        let bytes = std::fs::read(path).map_err(|e| CheckpointError::Io {
+            path: path.to_path_buf(),
+            err: e.to_string(),
+        })?;
+        // The read buffer is checkpoint I/O staging: account for it while
+        // it lives so restore costs show up in the memory tables too.
+        let _reg = Registration::new(bytes.len(), Category::Checkpoint);
+        Self::from_bytes(path, &bytes)
+    }
+
+    /// Atomically write this checkpoint into `dir` (created on demand),
+    /// then prune to the newest `keep` files. `faults` can tear the write
+    /// (abort mid-temp-file) or fail it outright — the deterministic
+    /// crashes the crashtest drives.
+    pub fn save(
+        &self,
+        dir: &Path,
+        keep: usize,
+        faults: &FaultPlan,
+    ) -> Result<PathBuf, CheckpointError> {
+        let io = |e: std::io::Error| CheckpointError::Io {
+            path: dir.to_path_buf(),
+            err: e.to_string(),
+        };
+        std::fs::create_dir_all(dir).map_err(io)?;
+        if faults.take_io_fail(self.step) {
+            return Err(CheckpointError::Injected("checkpoint write io failure"));
+        }
+        let (bytes, _reg) = self.to_bytes();
+        let path = checkpoint_path(dir, self.step);
+        if faults.take_torn_write(self.step) {
+            // The crash the atomic protocol exists for: half the image in
+            // the temp file, then sudden death. The rename never happens,
+            // so no checkpoint name ever points at this torn image.
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("ckpt");
+            let tmp = dir.join(format!(".{name}.tmp"));
+            if let Ok(mut f) = std::fs::File::create(&tmp) {
+                let _ = f.write_all(&bytes[..bytes.len() / 2]);
+                let _ = f.sync_all();
+            }
+            eprintln!(
+                "[faultinject] torn-write: aborting mid-checkpoint-write at step {}",
+                self.step
+            );
+            std::process::abort();
+        }
+        atomic_write(&path, &bytes).map_err(|e| CheckpointError::Io {
+            path: path.clone(),
+            err: e.to_string(),
+        })?;
+        prune(dir, keep);
+        Ok(path)
+    }
+}
+
+/// Delete all but the newest `keep` checkpoints (best-effort; `keep` is
+/// clamped to at least 1 so retention can never delete the file just
+/// written).
+pub fn prune(dir: &Path, keep: usize) {
+    let files = list_checkpoints(dir);
+    let keep = keep.max(1);
+    if files.len() <= keep {
+        return;
+    }
+    for (_, path) in &files[..files.len() - keep] {
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+/// Find the newest usable checkpoint in `dir`. Corrupt, truncated, or
+/// unparseable files are *skipped* (with a notice per skip) and the scan
+/// falls back to the next-newest — but a structurally valid checkpoint
+/// whose fingerprint does not match is a hard error: silently resuming
+/// the wrong run would corrupt the trajectory it claims to continue.
+/// `Ok(None)` = nothing to resume (missing dir, empty dir, or every file
+/// invalid).
+pub fn latest_valid(
+    dir: &Path,
+    expected_fingerprint: &str,
+) -> Result<Option<(TrainCheckpoint, Vec<String>)>, CheckpointError> {
+    let mut notices = Vec::new();
+    let mut files = list_checkpoints(dir);
+    files.reverse();
+    for (_, path) in files {
+        match TrainCheckpoint::load(&path) {
+            Ok(ck) => {
+                if ck.fingerprint != expected_fingerprint {
+                    return Err(CheckpointError::FingerprintMismatch {
+                        path,
+                        expected: expected_fingerprint.to_string(),
+                        found: ck.fingerprint,
+                    });
+                }
+                return Ok(Some((ck, notices)));
+            }
+            Err(e) => notices.push(format!("skipping {}: {e}", path.display())),
+        }
+    }
+    // Nothing valid. Surface the skip notices so "no resume" is
+    // explainable, but it is not an error: fresh start.
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memtrack;
+
+    fn sample(step: usize) -> TrainCheckpoint {
+        TrainCheckpoint {
+            step,
+            fingerprint: "v1;d=32;test".to_string(),
+            rng_state: 0xDEADBEEF12345678,
+            param_lens: vec![4, 2],
+            params: vec![1.0, -2.5, 3.25, 0.0, 7.5, -0.125],
+            optim_steps: vec![u64::MAX, 3],
+            optim_m: vec![0.5; 6],
+            optim_v: vec![0.25; 6],
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("rdfft_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrips_bit_exactly_including_u64_state() {
+        let ck = sample(42);
+        let (bytes, _reg) = ck.to_bytes();
+        let back = TrainCheckpoint::from_bytes(Path::new("mem"), &bytes).unwrap();
+        assert_eq!(back, ck);
+        // u64::MAX is not representable as f64 — the hex encoding is what
+        // keeps it exact
+        assert_eq!(back.optim_steps[0], u64::MAX);
+    }
+
+    #[test]
+    fn serialization_buffer_is_tracked_under_checkpoint_category() {
+        memtrack::reset();
+        let ck = sample(1);
+        {
+            let (bytes, _reg) = ck.to_bytes();
+            let snap = memtrack::snapshot();
+            assert!(
+                snap.current[Category::Checkpoint.index()] >= bytes.len(),
+                "staging buffer must be visible under the checkpoint category"
+            );
+        }
+        assert_eq!(memtrack::snapshot().current[Category::Checkpoint.index()], 0);
+    }
+
+    #[test]
+    fn detects_truncation_at_every_layer() {
+        let (bytes, _reg) = sample(7).to_bytes();
+        for cut in [3usize, MAGIC.len() + 4, MAGIC.len() + 20, bytes.len() - 5] {
+            let err = TrainCheckpoint::from_bytes(Path::new("t"), &bytes[..cut])
+                .expect_err("truncated image must not parse");
+            match err {
+                CheckpointError::Truncated { .. } | CheckpointError::BadHeader { .. } => {}
+                other => panic!("cut={cut}: wrong error {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn detects_bit_flips_via_section_checksums() {
+        let (bytes, _reg) = sample(7).to_bytes();
+        // flip one bit in the params payload (last 10 bytes are optim_v;
+        // aim at the middle of the file, inside params)
+        let mut corrupt = bytes.clone();
+        let idx = bytes.len() - sample(7).optim_v.len() * 4 - sample(7).optim_m.len() * 4 - 2;
+        corrupt[idx] ^= 0x10;
+        let err = TrainCheckpoint::from_bytes(Path::new("t"), &corrupt).unwrap_err();
+        assert!(
+            matches!(err, CheckpointError::ChecksumMismatch { section: "params", .. }),
+            "{err}"
+        );
+        // garbage magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            TrainCheckpoint::from_bytes(Path::new("t"), &bad).unwrap_err(),
+            CheckpointError::BadMagic { .. }
+        ));
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_temp_and_save_prunes() {
+        let dir = tmpdir("retention");
+        let plan = FaultPlan::none();
+        for step in [2usize, 4, 6, 8] {
+            sample(step).save(&dir, 2, &plan).unwrap();
+        }
+        let files = list_checkpoints(&dir);
+        let steps: Vec<usize> = files.iter().map(|&(s, _)| s).collect();
+        assert_eq!(steps, vec![6, 8], "keep-2 retention");
+        // no stray temp files
+        let strays: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(strays.is_empty(), "temp files left behind: {strays:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_valid_skips_corruption_and_rejects_foreign_fingerprints() {
+        let dir = tmpdir("fallback");
+        let plan = FaultPlan::none();
+        sample(5).save(&dir, 10, &plan).unwrap();
+        sample(10).save(&dir, 10, &plan).unwrap();
+        // corrupt the newest in place
+        let newest = checkpoint_path(&dir, 10);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x40;
+        std::fs::write(&newest, &bytes).unwrap();
+        // a torn temp file must also be ignored by the scan
+        std::fs::write(dir.join(".ckpt-00000012.ckpt.tmp"), b"torn").unwrap();
+
+        let (ck, notices) = latest_valid(&dir, "v1;d=32;test").unwrap().unwrap();
+        assert_eq!(ck.step, 5, "must fall back past the corrupted newest");
+        assert_eq!(notices.len(), 1, "one skip notice: {notices:?}");
+        assert!(notices[0].contains("checksum"), "{notices:?}");
+
+        // fingerprint mismatch on the newest valid file is a hard error
+        let err = latest_valid(&dir, "some-other-config").unwrap_err();
+        assert!(matches!(err, CheckpointError::FingerprintMismatch { .. }), "{err}");
+        assert!(format!("{err}").contains("fingerprint"));
+
+        // empty/missing dir: clean None
+        assert!(latest_valid(Path::new("/nonexistent/rdfft"), "x").unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,288 @@
+//! Deterministic fault injection for the native training pipeline.
+//!
+//! Robustness claims are only testable if the failures are reproducible:
+//! a [`FaultPlan`] is a small, seeded schedule of failures — "panic pool
+//! job 2 at step 3", "abort the process at step 10", "tear the checkpoint
+//! write at step 5" — threaded through [`crate::runtime::pool::ExecCtx`]
+//! (so the sharded trainer's fan-out can consult it) and held by the
+//! native trainer (for process-level kills and checkpoint I/O faults).
+//! Every spec fires **exactly once**; with the same plan, the same run
+//! fails the same way every time, which is what lets `repro crashtest`
+//! assert bit-identical resume trajectories instead of hoping.
+//!
+//! Fault kinds:
+//!
+//! - `panic-job@STEP[:JOB]` — panic one shard job of the pool fan-out at
+//!   the given training step. Without `:JOB`, the victim is chosen by the
+//!   plan's seed (deterministically per step). Exercises the graceful-
+//!   degradation path: catch the surfaced `JobPanic`, retry the step once
+//!   on the scoped-serial fallback.
+//! - `abort@STEP` — `std::process::abort()` at the top of the step (the
+//!   SIGKILL-shaped crash the checkpoint subsystem defends against). Used
+//!   by `repro crashtest` child processes.
+//! - `halt@STEP` — the in-process analogue of `abort`: the trainer stops
+//!   before executing the step and returns its partial report. Usable
+//!   from `cargo test`, where a real abort would kill the harness.
+//! - `torn-write@STEP` — during the checkpoint save at the step, write
+//!   roughly half the bytes to the temp file, sync, and abort: the crash
+//!   that leaves a torn temp file behind (which the loader must ignore).
+//! - `io-fail@STEP` — the checkpoint save at the step returns an injected
+//!   I/O error (training logs a warning and continues).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// What to break.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic one pool shard job. `job: None` = seeded choice.
+    ShardPanic { job: Option<usize> },
+    /// Kill the process at the top of the step.
+    Abort,
+    /// Stop the trainer at the top of the step (in-process simulated
+    /// kill; the run returns a partial report).
+    Halt,
+    /// Abort mid-checkpoint-write, leaving a torn temp file.
+    TornWrite,
+    /// Fail the checkpoint write with an injected I/O error.
+    IoFail,
+}
+
+/// One scheduled failure. Fires at most once.
+#[derive(Debug)]
+pub struct FaultSpec {
+    step: usize,
+    kind: FaultKind,
+    fired: AtomicBool,
+}
+
+impl FaultSpec {
+    pub fn new(step: usize, kind: FaultKind) -> FaultSpec {
+        FaultSpec { step, kind, fired: AtomicBool::new(false) }
+    }
+}
+
+/// A seeded failure schedule. Cheap to share (`Arc`), consulted through
+/// `&self` only — all mutability is atomic, so the sharded trainer can
+/// query it from inside a pool scope without locks.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+    seed: u64,
+    /// The training step currently executing (set by the trainer via
+    /// [`FaultPlan::begin_step`]); 0 = no step active, so plans consulted
+    /// outside a training loop never fire (steps are 1-based).
+    current: AtomicUsize,
+}
+
+impl FaultPlan {
+    /// An empty plan (nothing ever fires). The default every `ExecCtx`
+    /// carries.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn new(specs: Vec<FaultSpec>) -> FaultPlan {
+        FaultPlan { specs, seed: 0, current: AtomicUsize::new(0) }
+    }
+
+    /// Seed for unpinned choices (the `panic-job@STEP` victim).
+    pub fn with_seed(mut self, seed: u64) -> FaultPlan {
+        self.seed = seed;
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Parse a comma-separated spec list:
+    /// `panic-job@3`, `panic-job@3:1`, `abort@10`, `halt@10`,
+    /// `torn-write@5`, `io-fail@5`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut specs = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, at) = part
+                .split_once('@')
+                .ok_or_else(|| format!("fault spec {part:?} needs NAME@STEP"))?;
+            let (step_str, job) = match at.split_once(':') {
+                Some((s, j)) => {
+                    let j: usize = j
+                        .parse()
+                        .map_err(|_| format!("fault spec {part:?}: bad job index {j:?}"))?;
+                    (s, Some(j))
+                }
+                None => (at, None),
+            };
+            let step: usize = step_str
+                .parse()
+                .map_err(|_| format!("fault spec {part:?}: bad step {step_str:?}"))?;
+            if step == 0 {
+                return Err(format!("fault spec {part:?}: steps are 1-based"));
+            }
+            let kind = match name {
+                "panic-job" => FaultKind::ShardPanic { job },
+                "abort" => FaultKind::Abort,
+                "halt" => FaultKind::Halt,
+                "torn-write" => FaultKind::TornWrite,
+                "io-fail" => FaultKind::IoFail,
+                other => {
+                    return Err(format!(
+                        "unknown fault {other:?} \
+                         (panic-job|abort|halt|torn-write|io-fail)"
+                    ))
+                }
+            };
+            if job.is_some() && kind != (FaultKind::ShardPanic { job }) {
+                return Err(format!("fault spec {part:?}: only panic-job takes :JOB"));
+            }
+            specs.push(FaultSpec::new(step, kind));
+        }
+        Ok(FaultPlan::new(specs))
+    }
+
+    /// Mark `step` (1-based) as the currently-executing training step.
+    /// The trainer calls this at the top of its loop; step-scoped queries
+    /// like [`FaultPlan::take_shard_panic`] match against it.
+    pub fn begin_step(&self, step: usize) {
+        self.current.store(step, Ordering::SeqCst);
+    }
+
+    /// Fire-once query: the first un-fired spec at `step` whose kind
+    /// matches `pred` fires and returns its kind.
+    fn take(&self, step: usize, pred: impl Fn(FaultKind) -> bool) -> Option<FaultKind> {
+        for s in &self.specs {
+            if s.step == step
+                && pred(s.kind)
+                && s.fired
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                return Some(s.kind);
+            }
+        }
+        None
+    }
+
+    /// Should shard job `job` (of `num_jobs`) panic at the current step?
+    /// Consumes the matching spec when it fires. An unpinned spec picks
+    /// its victim from the plan seed and the step — deterministic, but
+    /// not hand-chosen ("seeded fault injection").
+    pub fn take_shard_panic(&self, job: usize, num_jobs: usize) -> bool {
+        let step = self.current.load(Ordering::SeqCst);
+        if step == 0 || self.specs.is_empty() {
+            return false;
+        }
+        // Peek before take: only consume the spec when THIS job is the
+        // victim, so the query is safe to issue once per job.
+        let victim_of = |j: Option<usize>| match j {
+            Some(j) => j % num_jobs.max(1),
+            None => {
+                // splitmix-style scramble of (seed, step): stable per
+                // step, spread across steps
+                let mut x =
+                    self.seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                x ^= x >> 30;
+                x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+                x ^= x >> 27;
+                (x % num_jobs.max(1) as u64) as usize
+            }
+        };
+        for s in &self.specs {
+            let j = match s.kind {
+                FaultKind::ShardPanic { job } => job,
+                _ => continue,
+            };
+            if s.step == step
+                && victim_of(j) == job
+                && s.fired
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Fire-once: abort scheduled at `step`?
+    pub fn take_abort(&self, step: usize) -> bool {
+        self.take(step, |k| k == FaultKind::Abort).is_some()
+    }
+
+    /// Fire-once: in-process halt scheduled at `step`?
+    pub fn take_halt(&self, step: usize) -> bool {
+        self.take(step, |k| k == FaultKind::Halt).is_some()
+    }
+
+    /// Fire-once: torn checkpoint write scheduled at `step`?
+    pub fn take_torn_write(&self, step: usize) -> bool {
+        self.take(step, |k| k == FaultKind::TornWrite).is_some()
+    }
+
+    /// Fire-once: injected checkpoint I/O failure scheduled at `step`?
+    pub fn take_io_fail(&self, step: usize) -> bool {
+        self.take(step, |k| k == FaultKind::IoFail).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse("panic-job@3:1, abort@10,halt@7,torn-write@5,io-fail@5")
+            .unwrap();
+        assert_eq!(p.specs.len(), 5);
+        assert!(p.take_abort(10));
+        assert!(!p.take_abort(10), "specs fire once");
+        assert!(p.take_halt(7));
+        assert!(p.take_torn_write(5));
+        assert!(p.take_io_fail(5));
+        p.begin_step(3);
+        assert!(!p.take_shard_panic(0, 8), "job 1 was pinned, not job 0");
+        assert!(p.take_shard_panic(1, 8));
+        assert!(!p.take_shard_panic(1, 8), "fired");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("abort").is_err());
+        assert!(FaultPlan::parse("abort@x").is_err());
+        assert!(FaultPlan::parse("abort@0").is_err());
+        assert!(FaultPlan::parse("abort@3:1").is_err());
+        assert!(FaultPlan::parse("explode@3").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn unpinned_victim_is_seeded_and_deterministic() {
+        let victim = |seed: u64| -> usize {
+            let p = FaultPlan::parse("panic-job@4").unwrap().with_seed(seed);
+            p.begin_step(4);
+            for j in 0..8 {
+                if p.take_shard_panic(j, 8) {
+                    return j;
+                }
+            }
+            panic!("some job must be the victim");
+        };
+        assert_eq!(victim(1), victim(1), "same seed, same victim");
+        // across many seeds, the choice varies (it is a choice, not a
+        // constant)
+        let picks: std::collections::BTreeSet<usize> = (0..16).map(victim).collect();
+        assert!(picks.len() > 1, "seed must influence the victim");
+    }
+
+    #[test]
+    fn nothing_fires_outside_an_active_step() {
+        let p = FaultPlan::parse("panic-job@2").unwrap();
+        assert!(!p.take_shard_panic(0, 8), "no step began");
+        p.begin_step(1);
+        assert!(!p.take_shard_panic(0, 8), "wrong step");
+    }
+}

@@ -33,8 +33,21 @@ impl Json {
             _ => None,
         }
     }
+    /// Strict integer extraction: rejects negatives, fractions,
+    /// non-finite values, and anything past 2^53 (where f64 can no longer
+    /// represent every integer exactly, so `as usize` would silently
+    /// fabricate a value). The old lenient cast turned `-1` into 0 and
+    /// huge floats into `usize::MAX` — both corruption amplifiers when
+    /// the JSON came from a damaged file.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|v| v as usize)
+        let v = self.as_f64()?;
+        if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v > 9_007_199_254_740_992.0 {
+            return None;
+        }
+        if v > usize::MAX as f64 {
+            return None;
+        }
+        Some(v as usize)
     }
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -56,16 +69,24 @@ impl Json {
     }
 }
 
-/// Parse error with byte offset.
+/// Parse error with byte offset and (when known) the document's origin —
+/// a file path or other label — so a corrupt manifest or checkpoint
+/// header reports *which* file broke and *where*.
 #[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
+    pub origin: Option<String>,
 }
 
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+        match &self.origin {
+            Some(o) => {
+                write!(f, "{o}: json parse error at byte {}: {}", self.pos, self.msg)
+            }
+            None => write!(f, "json parse error at byte {}: {}", self.pos, self.msg),
+        }
     }
 }
 
@@ -84,6 +105,15 @@ pub fn parse(s: &str) -> Result<Json, JsonError> {
     Ok(v)
 }
 
+/// Parse with an origin label (usually a file path) stamped onto any
+/// error, so load-path failures name the offending file.
+pub fn parse_from(s: &str, origin: &str) -> Result<Json, JsonError> {
+    parse(s).map_err(|mut e| {
+        e.origin = Some(origin.to_string());
+        e
+    })
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -91,7 +121,7 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
-        JsonError { pos: self.i, msg: msg.to_string() }
+        JsonError { pos: self.i, msg: msg.to_string(), origin: None }
     }
 
     fn peek(&self) -> Option<u8> {
@@ -161,6 +191,9 @@ impl<'a> Parser<'a> {
         std::str::from_utf8(&self.b[start..self.i])
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
+            // JSON has no Infinity/NaN; a parse that overflows to inf
+            // (e.g. "1e999") is a malformed document, not a number.
+            .filter(|v| v.is_finite())
             .map(Json::Num)
             .ok_or_else(|| self.err("bad number"))
     }
@@ -304,6 +337,47 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
         assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_documents_with_offset_and_origin() {
+        let doc = r#"{"config": {"vocab": 256, "d_model""#;
+        let err = parse_from(doc, "artifacts/manifest.json").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("artifacts/manifest.json"), "{msg}");
+        assert!(msg.contains(&format!("byte {}", err.pos)), "{msg}");
+        assert_eq!(err.pos, doc.len(), "truncation reported at the cut");
+    }
+
+    #[test]
+    fn rejects_bit_flipped_documents() {
+        let clean = r#"{"step": 12, "rng": "00ff"}"#;
+        assert!(parse(clean).is_ok());
+        // flip a bit in the structural colon — parse must fail, not
+        // silently misread
+        let mut flipped = clean.to_string().into_bytes();
+        let colon = clean.find(':').unwrap();
+        flipped[colon] ^= 0x02;
+        let s = String::from_utf8(flipped).unwrap();
+        assert!(parse(&s).is_err(), "corrupted doc parsed: {s}");
+    }
+
+    #[test]
+    fn as_usize_is_strict() {
+        assert_eq!(parse("7").unwrap().as_usize(), Some(7));
+        assert_eq!(parse("0").unwrap().as_usize(), Some(0));
+        // a lenient `as usize` cast would turn these into 0 / MAX / junk
+        assert_eq!(parse("-1").unwrap().as_usize(), None);
+        assert_eq!(parse("2.5").unwrap().as_usize(), None);
+        assert_eq!(parse("1e300").unwrap().as_usize(), None);
+        assert_eq!(parse("\"12\"").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn rejects_overflowing_numbers() {
+        // f64 parse of 1e999 is +inf; JSON has no inf
+        assert!(parse("1e999").is_err());
+        assert!(parse("-1e999").is_err());
     }
 
     #[test]

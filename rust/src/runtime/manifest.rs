@@ -38,11 +38,17 @@ impl Manifest {
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        Self::parse(&text)
+        Self::parse_from(&text, &path.display().to_string())
     }
 
     pub fn parse(text: &str) -> Result<Self> {
-        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::parse_from(text, "<manifest>")
+    }
+
+    /// Parse with an origin label so a corrupt manifest names its file
+    /// and byte offset in the error.
+    pub fn parse_from(text: &str, origin: &str) -> Result<Self> {
+        let v = json::parse_from(text, origin).map_err(|e| anyhow!("{e}"))?;
         let cfg = v.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
         let get = |k: &str| -> Result<usize> {
             cfg.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config missing {k}"))

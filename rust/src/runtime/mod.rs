@@ -12,11 +12,15 @@
 //! the engine, the layers, and the native trainer dispatch all threaded
 //! compute through (no per-call thread spawns anywhere on the hot path).
 
+pub mod checkpoint;
+pub mod faultinject;
 pub mod json;
 pub mod manifest;
 pub mod pool;
 pub mod xla_stub;
 
+pub use checkpoint::{CheckpointError, TrainCheckpoint};
+pub use faultinject::{FaultKind, FaultPlan, FaultSpec};
 pub use manifest::{Manifest, ParamSpec};
 pub use pool::{ExecCtx, JobPanic, Scope, WorkerPool};
 

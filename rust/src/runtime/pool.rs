@@ -49,6 +49,7 @@
 //! engine tuning ([`EngineConfig`]), and the memtrack category scratch
 //! buffers should be charged to. Cloning is cheap (one `Arc` bump).
 
+use super::faultinject::FaultPlan;
 use crate::memtrack::{self, Category};
 use crate::rdfft::engine::EngineConfig;
 use std::any::Any;
@@ -419,6 +420,9 @@ pub struct ExecCtx {
     pool: Option<Arc<WorkerPool>>,
     cfg: EngineConfig,
     cat: Category,
+    /// Deterministic fault schedule (tests/crashtest); empty in normal
+    /// runs, where every query is a cheap no-op.
+    faults: Arc<FaultPlan>,
 }
 
 impl ExecCtx {
@@ -427,7 +431,12 @@ impl ExecCtx {
     /// charged to `Intermediates`. This is what every ctx-less engine
     /// entry point resolves to.
     pub fn global() -> ExecCtx {
-        ExecCtx { pool: None, cfg: EngineConfig::new(), cat: Category::Intermediates }
+        ExecCtx {
+            pool: None,
+            cfg: EngineConfig::new(),
+            cat: Category::Intermediates,
+            faults: Arc::new(FaultPlan::none()),
+        }
     }
 
     /// A context with its own pool targeting `threads` total lanes of
@@ -441,6 +450,7 @@ impl ExecCtx {
             pool: Some(Arc::new(WorkerPool::new(t - 1))),
             cfg: EngineConfig { max_threads: t, ..EngineConfig::new() },
             cat: Category::Intermediates,
+            faults: Arc::new(FaultPlan::none()),
         }
     }
 
@@ -451,6 +461,7 @@ impl ExecCtx {
             pool: Some(Arc::new(WorkerPool::new(0))),
             cfg: EngineConfig::serial(),
             cat: Category::Intermediates,
+            faults: Arc::new(FaultPlan::none()),
         }
     }
 
@@ -463,6 +474,14 @@ impl ExecCtx {
     /// Replace the scratch category (builder style).
     pub fn with_category(mut self, cat: Category) -> ExecCtx {
         self.cat = cat;
+        self
+    }
+
+    /// Attach a fault-injection schedule (builder style). Tests and the
+    /// crashtest harness use this; production contexts keep the empty
+    /// default plan.
+    pub fn with_faults(mut self, faults: Arc<FaultPlan>) -> ExecCtx {
+        self.faults = faults;
         self
     }
 
@@ -498,6 +517,12 @@ impl ExecCtx {
     /// Materializes the global pool for a global context.
     pub fn threads(&self) -> usize {
         self.pool().workers() + 1
+    }
+
+    /// The context's fault schedule (empty plan unless a test or the
+    /// crashtest harness attached one via [`ExecCtx::with_faults`]).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
     }
 }
 

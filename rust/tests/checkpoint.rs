@@ -1,0 +1,301 @@
+//! Crash-safe checkpoint/resume integration tests.
+//!
+//! The contract under test: a native training run killed at an arbitrary
+//! step and resumed from its newest valid checkpoint produces the
+//! **bit-identical** loss trajectory and final parameters of an
+//! uninterrupted run — at any thread count, through corrupted/truncated
+//! checkpoint files (skipped with fallback), and through injected
+//! worker-pool panics (graceful serial-fallback degradation). Kills here
+//! are in-process `halt@STEP` faults (a real `abort()` would take the
+//! test harness down with it); `repro crashtest` drives the same
+//! machinery with real child-process aborts.
+
+use rdfft::autograd::layers::Backend;
+use rdfft::autograd::optim::OptimKind;
+use rdfft::autograd::stack::StackConfig;
+use rdfft::autograd::train::Method;
+use rdfft::coordinator::{NativeReport, NativeTrainer, NativeTrainerConfig};
+use rdfft::memtrack::Category;
+use rdfft::runtime::checkpoint::{checkpoint_path, list_checkpoints};
+use rdfft::runtime::FaultPlan;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const STEPS: usize = 14;
+const EVERY: usize = 3;
+
+fn cfg(
+    threads: usize,
+    dir: Option<&Path>,
+    resume: bool,
+    faults: Arc<FaultPlan>,
+) -> NativeTrainerConfig {
+    NativeTrainerConfig {
+        stack: StackConfig {
+            d: 32,
+            depth: 2,
+            ctx: 4,
+            method: Method::Circulant { backend: Backend::RdFft, p: 8 },
+            seed: 9,
+            ..Default::default()
+        },
+        optim: OptimKind::Sgd,
+        lr: 0.2,
+        steps: STEPS,
+        batch: 8,
+        eval_every: 0,
+        eval_batches: 0,
+        corpus_bytes: 16 * 1024,
+        seed: 9,
+        log_csv: None,
+        verbose: false,
+        threads,
+        checkpoint_dir: dir.map(|p| p.to_path_buf()),
+        checkpoint_every: EVERY,
+        checkpoint_keep: 10,
+        resume,
+        faults,
+    }
+}
+
+fn run(c: NativeTrainerConfig) -> (NativeReport, Vec<f32>) {
+    let mut t = NativeTrainer::new(c);
+    let r = t.run().expect("run failed");
+    let (_, params) = t.stack_mut().export_params();
+    (r, params)
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rdfft_ckpt_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Assert the resumed run's replayed losses and final parameters are
+/// bit-identical to the uninterrupted reference.
+fn assert_bit_identical(
+    tag: &str,
+    reference: &(NativeReport, Vec<f32>),
+    resumed: &(NativeReport, Vec<f32>),
+) {
+    for &(step, loss) in &resumed.0.losses {
+        let rl = reference
+            .0
+            .losses
+            .iter()
+            .find(|&&(s, _)| s == step)
+            .map(|&(_, l)| l)
+            .unwrap_or_else(|| panic!("[{tag}] reference lacks step {step}"));
+        assert_eq!(
+            loss.to_bits(),
+            rl.to_bits(),
+            "[{tag}] step {step}: resumed loss {loss} != reference {rl}"
+        );
+    }
+    assert_eq!(reference.1.len(), resumed.1.len(), "[{tag}] param count");
+    for i in 0..reference.1.len() {
+        assert_eq!(
+            reference.1[i].to_bits(),
+            resumed.1[i].to_bits(),
+            "[{tag}] final param {i}: {} vs {}",
+            resumed.1[i],
+            reference.1[i]
+        );
+    }
+}
+
+#[test]
+fn kill_and_resume_is_bit_identical_at_threads_1_2_4() {
+    // One uninterrupted reference (threads=1; sharded results are
+    // thread-count-invariant, so it anchors every lane count).
+    let reference = run(cfg(1, None, false, Arc::new(FaultPlan::none())));
+    assert_eq!(reference.0.losses.len(), STEPS);
+
+    for threads in [1usize, 2, 4] {
+        let dir = tmpdir(&format!("halt_t{threads}"));
+        // Simulated kill before step 10: steps 1..=9 ran, checkpoints at
+        // 3, 6, 9.
+        let killed = run(cfg(
+            threads,
+            Some(&dir),
+            false,
+            Arc::new(FaultPlan::parse("halt@10").unwrap()),
+        ));
+        assert_eq!(killed.0.halted_at, Some(10), "threads={threads}");
+        assert_eq!(killed.0.losses.len(), 9);
+        assert_eq!(killed.0.checkpoints_written, 3);
+
+        let resumed = run(cfg(threads, Some(&dir), true, Arc::new(FaultPlan::none())));
+        assert_eq!(resumed.0.resumed_from, Some(9), "threads={threads}");
+        assert_eq!(resumed.0.losses.first().map(|&(s, _)| s), Some(10));
+        assert_bit_identical(&format!("threads={threads}"), &reference, &resumed);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn corrupted_latest_checkpoint_falls_back_to_previous() {
+    let reference = run(cfg(2, None, false, Arc::new(FaultPlan::none())));
+    let dir = tmpdir("corrupt");
+    let _ = run(cfg(2, Some(&dir), false, Arc::new(FaultPlan::parse("halt@10").unwrap())));
+
+    // Flip one payload bit in the newest checkpoint (step 9).
+    let newest = checkpoint_path(&dir, 9);
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let n = bytes.len();
+    bytes[n - 5] ^= 0x08;
+    std::fs::write(&newest, &bytes).unwrap();
+
+    let resumed = run(cfg(2, Some(&dir), true, Arc::new(FaultPlan::none())));
+    assert_eq!(
+        resumed.0.resumed_from,
+        Some(6),
+        "checksum-corrupted step-9 checkpoint must be skipped"
+    );
+    assert_bit_identical("corrupted", &reference, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_latest_checkpoint_falls_back_to_previous() {
+    let reference = run(cfg(1, None, false, Arc::new(FaultPlan::none())));
+    let dir = tmpdir("trunc");
+    let _ = run(cfg(1, Some(&dir), false, Arc::new(FaultPlan::parse("halt@10").unwrap())));
+
+    // Truncate the newest checkpoint mid-payload (a torn write that
+    // somehow landed under the real name — belt and braces beyond the
+    // atomic rename).
+    let newest = checkpoint_path(&dir, 9);
+    let bytes = std::fs::read(&newest).unwrap();
+    std::fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+
+    let resumed = run(cfg(1, Some(&dir), true, Arc::new(FaultPlan::none())));
+    assert_eq!(resumed.0.resumed_from, Some(6));
+    assert_bit_identical("truncated", &reference, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fingerprint_mismatch_is_a_clear_error_not_a_silent_resume() {
+    let dir = tmpdir("fingerprint");
+    let _ = run(cfg(1, Some(&dir), false, Arc::new(FaultPlan::parse("halt@10").unwrap())));
+
+    // Same checkpoint dir, different trajectory config (lr changed).
+    let mut foreign = cfg(1, Some(&dir), true, Arc::new(FaultPlan::none()));
+    foreign.lr = 0.05;
+    let err = NativeTrainer::new(foreign).run().expect_err("foreign config must be refused");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fingerprint"), "unhelpful error: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_without_a_checkpoint_dir_is_an_error_and_empty_dir_starts_fresh() {
+    let mut c = cfg(1, None, true, Arc::new(FaultPlan::none()));
+    c.steps = 2;
+    let err = NativeTrainer::new(c).run().expect_err("resume without dir");
+    assert!(format!("{err:#}").contains("checkpoint directory"));
+
+    let dir = tmpdir("fresh");
+    let mut c = cfg(1, Some(&dir), true, Arc::new(FaultPlan::none()));
+    c.steps = 2;
+    let (r, _) = {
+        let mut t = NativeTrainer::new(c);
+        let r = t.run().expect("empty dir = fresh start");
+        (r, ())
+    };
+    assert_eq!(r.resumed_from, None);
+    assert_eq!(r.losses.first().map(|&(s, _)| s), Some(1));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pool_panic_degrades_to_serial_retry_with_identical_results() {
+    let clean = run(cfg(2, None, false, Arc::new(FaultPlan::none())));
+    assert_eq!(clean.0.degraded_steps, 0);
+
+    // Panic pool shard job 0 at step 3: the step must complete on the
+    // scoped-serial fallback and the whole run must stay bit-identical.
+    let degraded = run(cfg(
+        2,
+        None,
+        false,
+        Arc::new(FaultPlan::parse("panic-job@3:0").unwrap()),
+    ));
+    assert_eq!(degraded.0.degraded_steps, 1, "exactly one degraded step");
+    assert_eq!(clean.0.losses.len(), degraded.0.losses.len());
+    assert_bit_identical("degraded", &clean, &degraded);
+}
+
+#[test]
+fn repeated_pool_panic_on_one_step_hard_fails() {
+    // Two panics pinned to the same shard of the same step: the pool
+    // attempt consumes one, the serial retry consumes the other — the
+    // step fails twice and the run must surface a hard error.
+    let c = cfg(
+        2,
+        None,
+        false,
+        Arc::new(FaultPlan::parse("panic-job@3:0,panic-job@3:0").unwrap()),
+    );
+    let err = NativeTrainer::new(c).run().expect_err("second failure must be fatal");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("serial fallback"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn checkpointing_off_allocates_zero_checkpoint_bytes() {
+    let (off, _) = run(cfg(1, None, false, Arc::new(FaultPlan::none())));
+    assert_eq!(
+        off.peak_by_cat[Category::Checkpoint.index()],
+        0,
+        "no checkpoint allocations when checkpointing is disabled"
+    );
+
+    let dir = tmpdir("membudget");
+    let (on, _) = run(cfg(1, Some(&dir), false, Arc::new(FaultPlan::none())));
+    assert!(
+        on.peak_by_cat[Category::Checkpoint.index()] > 0,
+        "serialization buffers must be visible under the checkpoint category"
+    );
+    // Checkpointing must not change the training-state footprint: every
+    // non-checkpoint category peak is identical with and without it.
+    for (i, (a, b)) in off.peak_by_cat.iter().zip(on.peak_by_cat.iter()).enumerate() {
+        if i != Category::Checkpoint.index() {
+            assert_eq!(a, b, "category {i} peak changed when checkpointing turned on");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn retention_keeps_only_the_newest_k_files() {
+    let dir = tmpdir("retention");
+    let mut c = cfg(1, Some(&dir), false, Arc::new(FaultPlan::none()));
+    c.checkpoint_keep = 2;
+    let (r, _) = run(c);
+    // Saves at 3, 6, 9, 12, and the final step 14; keep-2 leaves 12, 14.
+    assert_eq!(r.checkpoints_written, 5);
+    let steps: Vec<usize> = list_checkpoints(&dir).into_iter().map(|(s, _)| s).collect();
+    assert_eq!(steps, vec![12, 14]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_io_failure_warns_but_training_continues() {
+    let dir = tmpdir("iofail");
+    let (r, _) = run(cfg(
+        1,
+        Some(&dir),
+        false,
+        Arc::new(FaultPlan::parse("io-fail@3").unwrap()),
+    ));
+    // The step-3 save failed (injected); every other save landed and the
+    // run finished all its steps.
+    assert_eq!(r.losses.len(), STEPS);
+    assert_eq!(r.checkpoints_written, 4);
+    let steps: Vec<usize> = list_checkpoints(&dir).into_iter().map(|(s, _)| s).collect();
+    assert_eq!(steps, vec![6, 9, 12, 14]);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -24,6 +24,7 @@ fn run(method: Method, d: usize, depth: usize, batch: usize, steps: usize) -> Na
         log_csv: None,
         verbose: false,
         threads: 0,
+        ..Default::default()
     };
     let mut t = NativeTrainer::new(cfg);
     t.run().expect("native run")

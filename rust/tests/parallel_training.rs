@@ -56,7 +56,11 @@ fn run_sharded(threads: usize, steps: usize) -> (Vec<f32>, Vec<f32>) {
         // odd batch size on purpose: shards of unequal length must stay
         // deterministic too
         let (bytes, labels) = batch(13, 4, 100 + step as u64);
-        losses.push(stack.train_step_sharded(&bytes, &labels, &mut bank, &mut arena));
+        losses.push(
+            stack
+                .train_step_sharded(&bytes, &labels, &mut bank, &mut arena)
+                .expect("no faults injected"),
+        );
     }
     let mut params = Vec::new();
     stack.for_each_param(&mut |p, _| params.extend_from_slice(p));
@@ -118,7 +122,9 @@ fn sharded_matches_classic_serial_step_to_float_noise() {
     for step in 0..5 {
         let (bytes, labels) = batch(16, 4, 500 + step);
         let lc = classic.train_step(&bytes, &labels, &mut bank_c);
-        let ls = sharded.train_step_sharded(&bytes, &labels, &mut bank_s, &mut arena);
+        let ls = sharded
+            .train_step_sharded(&bytes, &labels, &mut bank_s, &mut arena)
+            .expect("no faults injected");
         assert!((lc - ls).abs() < 1e-4, "step {step}: classic {lc} vs sharded {ls}");
     }
     let mut pc = Vec::new();
@@ -155,7 +161,9 @@ fn worker_shard_scratch_is_visible_in_memtrack_peak() {
         let mut bank = OptimizerBank::new(OptimKind::Sgd, 0.2);
         let (bytes, labels) = batch(16, 4, 3);
         memtrack::reset_peak();
-        let _ = stack.train_step_sharded(&bytes, &labels, &mut bank, &mut arena);
+        let _ = stack
+            .train_step_sharded(&bytes, &labels, &mut bank, &mut arena)
+            .expect("no faults injected");
         let peak = memtrack::snapshot().peak_total;
         drop(arena);
         drop(stack);

@@ -37,6 +37,14 @@ fi
   --steps 20 --d 64 --depth 2 --p 16 --batch 8 --eval-every 10 \
   --threads 2 --max-peak-mib 8
 
+# Crash-safety smoke: train → kill (abort / torn checkpoint write /
+# worker-pool panic) → resume, asserting the resumed loss and parameter
+# trajectories are bit-identical to an uninterrupted run, that torn and
+# corrupted checkpoints are detected and skipped, and that a foreign
+# config's checkpoints are refused. The log is uploaded as a CI artifact
+# (pipefail is set above, so the tee does not mask a failure).
+"$REPRO" crashtest 2>&1 | tee crashtest.log
+
 # Engine grid: writes BENCH_rdfft.json (fused/unfused circulant rows,
 # the pool thread grid, and the batch_simd / circulant_fused_simd rows
 # with the simd_vs_scalar gate) and exits non-zero if a hard gate
