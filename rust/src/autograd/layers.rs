@@ -154,6 +154,32 @@ pub trait Layer: Send + Sync {
     /// the submitting thread, after the reduction. Default: gradients are
     /// already canonical.
     fn finish_shard_grads(&mut self, _grads: &mut [Tensor]) {}
+
+    // ------------- inference-serving hooks -------------
+    //
+    // The serve path runs forward-only over caller-owned arena tensors:
+    // parameters are read immutably (`&self`, shared across a whole
+    // serving session), nothing is saved for backward, and no tensor is
+    // allocated — which is what lets the server prove zero steady-state
+    // allocation per request under `Category::Serve`. Per-row outputs
+    // must be bit-identical to the training forward and independent of
+    // which other rows share the tile, so micro-batched responses never
+    // depend on arrival timing.
+
+    /// True when this layer implements [`Layer::infer_forward_residual`].
+    fn supports_infer_exec(&self) -> bool {
+        false
+    }
+
+    /// Inference-only residual forward `out = x + layer(x)` into a
+    /// caller-provided tensor of identical shape. `x` is mutable scratch
+    /// and may be destroyed (the rdFFT layer stages `x̂` in `x`'s own
+    /// buffer, exactly like the shard path). Spectral layers require a
+    /// [`Layer::begin_shard_step`] call first, so the parameter spectra
+    /// exist before the first request.
+    fn infer_forward_residual(&self, _x: &mut Tensor, _out: &mut Tensor) {
+        unimplemented!("layer has no inference support (see supports_infer_exec)")
+    }
 }
 
 /// The clone-and-add residual forward, shared by the [`Layer`] trait
@@ -280,6 +306,17 @@ impl Layer for Dense {
         let mut dx = self.shard_backward(&grad_out, &x, &mut grads[0]);
         dx.axpy(&grad_out, 1.0);
         dx
+    }
+
+    fn supports_infer_exec(&self) -> bool {
+        self.w.rows == self.w.cols
+    }
+
+    /// Allocation-free twin of [`Dense::shard_forward_residual`]: same op
+    /// order (matmul fill, then skip add), writing into the serve arena.
+    fn infer_forward_residual(&self, x: &mut Tensor, out: &mut Tensor) {
+        matmul_nt(x, &self.w, out);
+        out.axpy(x, 1.0);
     }
 }
 
@@ -1024,6 +1061,30 @@ impl Layer for CirculantLayer {
         // x's buffer now holds x̂ — the shard-local saved-for-backward
         // tensor (exactly what the serial path keeps in `saved_x`)
         (out, Box::new(x))
+    }
+
+    fn supports_infer_exec(&self) -> bool {
+        self.backend == Backend::RdFft && self.rows == self.cols
+    }
+
+    /// Allocation-free twin of [`Layer::shard_forward_residual`]: the
+    /// same per-sample fused sweep over the shared `ĉ` spectra, writing
+    /// into the serve arena. `x`'s buffer ends up holding `x̂`, which the
+    /// forward-only path simply abandons (nothing is saved for backward).
+    fn infer_forward_residual(&self, x: &mut Tensor, out: &mut Tensor) {
+        debug_assert!(self.c_in_freq, "begin_shard_step must run before inference");
+        debug_assert_eq!(x.cols, self.cols);
+        debug_assert_eq!(out.cols, self.rows);
+        out.fill(0.0);
+        engine::block_circulant_forward_residual_batch_ctx(
+            &self.plan,
+            x.as_mut_slice(),
+            out.as_mut_slice(),
+            self.c.as_slice(),
+            self.rb(),
+            self.cb(),
+            &self.exec,
+        );
     }
 
     /// The serial [`CirculantLayer::backward_rdfft`] residual sweep with

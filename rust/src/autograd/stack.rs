@@ -28,7 +28,7 @@
 
 use super::layers::{Dense, Layer, ShardSaved};
 use super::optim::{tree_reduce_with, OptimizerBank};
-use super::tensor::{softmax_xent, softmax_xent_shard, Tensor};
+use super::tensor::{matmul_nt, relu_inplace, softmax_xent, softmax_xent_shard, Tensor};
 use super::train::Method;
 use crate::memtrack::{self, Category};
 use crate::runtime::pool::{ExecCtx, JobPanic};
@@ -186,6 +186,18 @@ impl SpectralStack {
         );
         let b = ctx_bytes.len() / ctx;
         let mut h = Tensor::zeros_cat(b, self.cfg.d, Category::Intermediates);
+        self.features_into(ctx_bytes, &mut h);
+        h
+    }
+
+    /// Allocation-free [`SpectralStack::features`]: embeds into a
+    /// caller-provided `[b, d]` tensor (the serve arena's ping buffer).
+    pub fn features_into(&self, ctx_bytes: &[u8], h: &mut Tensor) {
+        let ctx = self.cfg.ctx;
+        let b = ctx_bytes.len() / ctx;
+        assert_eq!(b * ctx, ctx_bytes.len(), "context batch must be a multiple of ctx={ctx}");
+        assert_eq!((h.rows, h.cols), (b, self.cfg.d), "feature buffer shape");
+        h.fill(0.0);
         for r in 0..b {
             let row = h.row_mut(r);
             for (j, &byte) in ctx_bytes[r * ctx..(r + 1) * ctx].iter().enumerate() {
@@ -196,7 +208,6 @@ impl SpectralStack {
                 }
             }
         }
-        h
     }
 
     /// Forward the whole stack; returns logits `[b, vocab]`. Saves
@@ -554,6 +565,95 @@ impl SpectralStack {
             }
         });
         Ok(())
+    }
+
+    /// True when every block implements the allocation-free inference
+    /// hook, i.e. [`SpectralStack::infer_forward`] is available (the
+    /// readout always is — the stack drives it directly into the arena).
+    pub fn supports_infer_exec(&self) -> bool {
+        self.blocks.iter().all(|b| b.supports_infer_exec())
+    }
+
+    /// One-time preparation before serving: every block transforms its
+    /// parameters to the representation inference reads immutably (the
+    /// rdFFT block moves `c` to block spectra — the per-model `ĉ` shared
+    /// across every coalesced request). Idempotent; call again after any
+    /// parameter mutation.
+    pub fn begin_serve(&mut self) {
+        for blk in &mut self.blocks {
+            blk.begin_shard_step();
+        }
+    }
+
+    /// Inference-only forward of one fixed serve tile: embeds
+    /// `arena.tile() * ctx` flat context bytes and runs the residual
+    /// blocks + readout entirely inside the arena's ping-pong buffers —
+    /// `&self`, nothing saved for backward, zero tracked allocations.
+    /// ReLU is applied plainly (no sign-bit mask: there is no backward).
+    ///
+    /// Every op is row-independent (per-sample fused circulant sweep,
+    /// per-row matmul, elementwise ReLU), so each logits row is a pure
+    /// function of its own context bytes and the parameters: responses
+    /// are bit-identical no matter which other requests share the tile,
+    /// in which order requests arrived, or how many pool threads ran the
+    /// engine — the serve determinism contract.
+    pub fn infer_forward(&self, ctx_bytes: &[u8], arena: &mut InferArena) {
+        assert_eq!(
+            ctx_bytes.len(),
+            arena.tile * self.cfg.ctx,
+            "serve tile must be padded to exactly tile*ctx bytes"
+        );
+        self.features_into(ctx_bytes, &mut arena.h);
+        for blk in &self.blocks {
+            blk.infer_forward_residual(&mut arena.h, &mut arena.y);
+            relu_inplace(&mut arena.y);
+            std::mem::swap(&mut arena.h, &mut arena.y);
+        }
+        matmul_nt(&arena.h, self.readout.weight(), &mut arena.logits);
+    }
+}
+
+/// Reusable per-session inference buffers: two `[tile, d]` ping-pong
+/// activation tensors plus the `[tile, vocab]` logits, allocated **once**
+/// (tracked under the caller's category — the server uses
+/// [`Category::Serve`]) and reused for every request the session serves.
+/// The fixed tile height is the coalescing width; partial tiles are
+/// padded and the padded rows' outputs ignored.
+pub struct InferArena {
+    tile: usize,
+    h: Tensor,
+    y: Tensor,
+    logits: Tensor,
+}
+
+impl InferArena {
+    pub fn new(stack: &SpectralStack, tile: usize, cat: Category) -> InferArena {
+        assert!(
+            stack.supports_infer_exec(),
+            "every block needs inference support to build a serve arena"
+        );
+        assert!(tile > 0, "serve tile must hold at least one row");
+        InferArena {
+            tile,
+            h: Tensor::zeros_cat(tile, stack.cfg.d, cat),
+            y: Tensor::zeros_cat(tile, stack.cfg.d, cat),
+            logits: Tensor::zeros_cat(tile, stack.cfg.vocab, cat),
+        }
+    }
+
+    /// Fixed row count every [`SpectralStack::infer_forward`] call fills.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Logits of the last tile served (`[tile, vocab]`).
+    pub fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    /// Tracked bytes held by the arena (reported by the server).
+    pub fn tracked_bytes(&self) -> usize {
+        (self.h.len() + self.y.len() + self.logits.len()) * 4
     }
 }
 

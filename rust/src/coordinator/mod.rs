@@ -15,13 +15,16 @@
 //! | [`experiments::table4`] | Table 4 (throughput + task accuracy)    |
 //! | [`trainer::Trainer`]    | end-to-end loss-curve run (PJRT/AOT)    |
 //! | [`native::NativeTrainer`] | pure-Rust loss-curve + memory run     |
+//! | [`serve_bench::slam`]   | serving latency/throughput (BENCH_serve.json) |
 
 pub mod benchlib;
 pub mod experiments;
 pub mod native;
+pub mod serve_bench;
 pub mod trainer;
 
 pub use native::{NativeReport, NativeTrainer, NativeTrainerConfig};
+pub use serve_bench::{slam, SlamConfig};
 pub use trainer::{TrainReport, Trainer, TrainerConfig};
 
 /// Create a metrics CSV with `header` already written — shared by the

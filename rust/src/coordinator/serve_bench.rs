@@ -1,0 +1,583 @@
+//! `repro slam` — load generator + acceptance harness for the serving
+//! runtime (`runtime::server`).
+//!
+//! One slam run drives the same request set through the async session
+//! several ways and cross-checks every response against a synchronous
+//! window=1 reference:
+//!
+//! * **interleaving permutations** — concurrent clients submitting their
+//!   id slices forward and reversed, plus a closed-loop run: responses
+//!   must be bit-identical (same `(next_byte, fingerprint)` per id) in
+//!   every case, because window membership is a function of ids and rows
+//!   are compute-independent;
+//! * **thread counts** — the coalesced run repeated on a 1-lane
+//!   execution context must reproduce the same bits;
+//! * **throughput** — open-loop wall time of window=W coalescing vs
+//!   window=1 single-row serving over identical requests, reported as
+//!   the `coalesce_vs_single` ratio (target ≥ 1.2×, recorded in the
+//!   gate; a hard failure only below the clear-regression floor 0.9 so a
+//!   noisy CI box can't flake the build);
+//! * **memory** — the serving session's memtrack evidence
+//!   ([`ServeStats::steady_state_allocs`]) plus an in-process
+//!   steady-state probe on the synchronous core: zero tracked
+//!   allocations per request after warmup, hard gate.
+//!
+//! Results land in `BENCH_serve.json` (schema `bench_serve/v1`, reader:
+//! `runtime::json`): per-mode records carrying p50/p99 latency,
+//! tokens/sec and wall time, plus the named gates.
+
+use crate::autograd::layers::Backend;
+use crate::autograd::stack::{SpectralStack, StackConfig};
+use crate::autograd::train::Method;
+use crate::memtrack;
+use crate::runtime::server::{
+    spawn_session, ServeRequest, ServeResponse, ServeStats, SpectralServer, Ticket,
+};
+use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Configuration of one `repro slam` run.
+#[derive(Debug, Clone)]
+pub struct SlamConfig {
+    /// Model geometry (circulant rdFFT blocks throughout — the serve
+    /// path's target configuration).
+    pub d: usize,
+    pub depth: usize,
+    pub p: usize,
+    pub ctx: usize,
+    pub seed: u64,
+    /// Total requests per run (ids 0..requests, dense).
+    pub requests: usize,
+    /// Coalescing window = tile height of the coalesced mode.
+    pub window: usize,
+    /// Concurrent client threads submitting load.
+    pub clients: usize,
+    /// Execution-context lanes for the engine (0 = the global context).
+    pub threads: usize,
+    /// Timing rounds per mode; wall time is the best round (latencies
+    /// come from that round too).
+    pub rounds: usize,
+    /// Where to write the bench JSON (None = don't write).
+    pub bench_json: Option<PathBuf>,
+    /// Optional hard latency gate on the coalesced run's p99.
+    pub max_p99_ms: Option<f64>,
+}
+
+impl Default for SlamConfig {
+    fn default() -> Self {
+        SlamConfig {
+            d: 64,
+            depth: 2,
+            p: 16,
+            ctx: 8,
+            seed: 0,
+            requests: 512,
+            window: 8,
+            clients: 4,
+            threads: 0,
+            rounds: 3,
+            bench_json: Some(PathBuf::from("BENCH_serve.json")),
+            max_p99_ms: None,
+        }
+    }
+}
+
+/// One measured serving mode, serialized into `BENCH_serve.json`.
+#[derive(Debug, Clone)]
+pub struct ServeRecord {
+    /// `"coalesced"`, `"single"`, or `"closed_loop"`.
+    pub mode: String,
+    pub window: usize,
+    pub clients: usize,
+    pub threads: usize,
+    pub requests: usize,
+    /// Submit→serve latency percentiles (measured on the serve thread).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Next-byte predictions per second over the best round's wall time.
+    pub tokens_per_sec: f64,
+    pub wall_ms: f64,
+}
+
+/// One acceptance gate, serialized next to the records.
+#[derive(Debug, Clone)]
+pub struct ServeGate {
+    pub name: String,
+    /// Measured value (ratio, count, or milliseconds — per gate).
+    pub ratio: f64,
+    pub target: f64,
+    pub pass: bool,
+}
+
+/// Write serve bench records + gates, schema `bench_serve/v1`
+/// (hand-rolled like `benchlib::write_bench_json`; reader:
+/// `runtime::json`).
+pub fn write_serve_json(
+    path: &std::path::Path,
+    records: &[ServeRecord],
+    gates: &[ServeGate],
+) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"bench_serve/v1\",\n  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"window\": {}, \"clients\": {}, \"threads\": {}, \
+             \"requests\": {}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+             \"tokens_per_sec\": {:.1}, \"wall_ms\": {:.2}}}{}\n",
+            r.mode,
+            r.window,
+            r.clients,
+            r.threads,
+            r.requests,
+            r.p50_ms,
+            r.p99_ms,
+            r.tokens_per_sec,
+            r.wall_ms,
+            if i + 1 == records.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ],\n  \"gates\": [\n");
+    for (i, g) in gates.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ratio\": {:.4}, \"target\": {:.4}, \"pass\": {}}}{}\n",
+            g.name,
+            g.ratio,
+            g.target,
+            g.pass,
+            if i + 1 == gates.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+fn stack_config(cfg: &SlamConfig) -> StackConfig {
+    StackConfig {
+        d: cfg.d,
+        depth: cfg.depth,
+        ctx: cfg.ctx,
+        method: Method::Circulant { backend: Backend::RdFft, p: cfg.p },
+        seed: cfg.seed,
+        ..Default::default()
+    }
+}
+
+fn build_stack(cfg: &SlamConfig, threads: usize) -> SpectralStack {
+    let exec = if threads == 0 {
+        crate::runtime::pool::ExecCtx::global()
+    } else {
+        crate::runtime::pool::ExecCtx::with_threads(threads)
+    };
+    SpectralStack::with_exec(stack_config(cfg), exec)
+}
+
+/// The deterministic request set: sliding `ctx`-byte windows over a
+/// seeded corpus, one per request id.
+fn gen_requests(cfg: &SlamConfig) -> Vec<Vec<u8>> {
+    let text = crate::data::CorpusGen::new(cfg.seed).text(cfg.requests + cfg.ctx);
+    let bytes = text.as_bytes();
+    (0..cfg.requests).map(|i| bytes[i..i + cfg.ctx].to_vec()).collect()
+}
+
+/// Client submission order within its id slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SubmitOrder {
+    Forward,
+    Reverse,
+}
+
+/// Outcome of one async run over the full request set.
+struct RunOutcome {
+    /// Responses sorted by id (exactly `requests` of them).
+    responses: Vec<ServeResponse>,
+    /// Per-request submit→serve latencies (ns), unordered.
+    latencies_ns: Vec<u64>,
+    wall: Duration,
+    stats: ServeStats,
+}
+
+/// Open-loop run: `clients` threads submit strided id slices (client j
+/// owns ids j, j+C, ...), the main thread flushes the final partial
+/// window once every submission landed, then reaps all tickets.
+fn run_open_loop(
+    cfg: &SlamConfig,
+    window: usize,
+    threads: usize,
+    order: SubmitOrder,
+    reqs: &Arc<Vec<Vec<u8>>>,
+) -> Result<RunOutcome> {
+    let scfg = cfg.clone();
+    let (handle, session) = spawn_session(move || build_stack(&scfg, threads), window)
+        .context("starting serve session")?;
+    let n = reqs.len();
+    let clients = cfg.clients.max(1);
+    let t0 = Instant::now();
+    let mut submitters = Vec::new();
+    for c in 0..clients {
+        let h = handle.clone();
+        let reqs = Arc::clone(reqs);
+        submitters.push(std::thread::spawn(move || {
+            let mut ids: Vec<usize> = (c..reqs.len()).step_by(clients).collect();
+            if order == SubmitOrder::Reverse {
+                ids.reverse();
+            }
+            ids.into_iter()
+                .map(|id| (id as u64, h.submit(id as u64, reqs[id].clone())))
+                .collect::<Vec<(u64, Ticket)>>()
+        }));
+    }
+    let mut tickets: Vec<(u64, Ticket)> = Vec::with_capacity(n);
+    for s in submitters {
+        tickets.extend(s.join().expect("submitter panicked"));
+    }
+    // All ids are in the queue; close the final partial window.
+    handle.flush();
+    let mut responses = Vec::with_capacity(n);
+    let mut latencies_ns = Vec::with_capacity(n);
+    for (_, t) in tickets {
+        let (resp, lat) = t.wait();
+        responses.push(resp);
+        latencies_ns.push(lat);
+    }
+    let wall = t0.elapsed();
+    let stats = session.shutdown();
+    responses.sort_by_key(|r| r.id);
+    Ok(RunOutcome { responses, latencies_ns, wall, stats })
+}
+
+/// Closed-loop run: every client keeps exactly one request in flight.
+/// Requires `clients >= window` so complete tiles keep forming mid-run.
+///
+/// Ids here are **admission-order** (`submit_next`), not the request
+/// indices: a closed loop interleaves submission with serving, and a
+/// pre-assigned strided id could race the serve cursor when a periodic
+/// flush drains a partial tile. Admission ids are handed out under the
+/// queue lock, so they are always monotonic and any flush timing is
+/// safe. Responses are therefore matched back to requests by *content*
+/// (each worker pairs its own submissions), and the returned responses
+/// carry the request index as `id` so the bit-identity comparison
+/// against the reference still lines up — legitimate, because a
+/// response is a pure function of the request bytes, never of the id.
+fn run_closed_loop(
+    cfg: &SlamConfig,
+    window: usize,
+    threads: usize,
+    reqs: &Arc<Vec<Vec<u8>>>,
+) -> Result<RunOutcome> {
+    ensure!(cfg.clients >= window, "closed loop needs clients >= window");
+    let scfg = cfg.clone();
+    let (handle, session) = spawn_session(move || build_stack(&scfg, threads), window)
+        .context("starting serve session")?;
+    let n = reqs.len();
+    let clients = cfg.clients;
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for c in 0..clients {
+        let h = handle.clone();
+        let reqs = Arc::clone(reqs);
+        workers.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for i in (c..reqs.len()).step_by(clients) {
+                let t = h.submit_next(reqs[i].clone());
+                let (resp, lat) = t.wait();
+                out.push((i, resp, lat));
+            }
+            out
+        }));
+    }
+    // The tail (fewer outstanding requests than a full tile) can only
+    // drain via flush; a periodic flush is harmless earlier — it changes
+    // batching, never results.
+    let flusher_handle = handle.clone();
+    let stop_flusher = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop = Arc::clone(&stop_flusher);
+    let flusher = std::thread::spawn(move || {
+        while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(2));
+            flusher_handle.flush();
+        }
+    });
+    let mut responses = Vec::with_capacity(n);
+    let mut latencies_ns = Vec::with_capacity(n);
+    for w in workers {
+        for (i, resp, lat) in w.join().expect("client panicked") {
+            responses.push(ServeResponse { id: i as u64, ..resp });
+            latencies_ns.push(lat);
+        }
+    }
+    stop_flusher.store(true, std::sync::atomic::Ordering::Relaxed);
+    flusher.join().expect("flusher panicked");
+    let wall = t0.elapsed();
+    let stats = session.shutdown();
+    responses.sort_by_key(|r| r.id);
+    Ok(RunOutcome { responses, latencies_ns, wall, stats })
+}
+
+fn percentile_ms(latencies_ns: &mut [u64], p: f64) -> f64 {
+    assert!(!latencies_ns.is_empty());
+    latencies_ns.sort_unstable();
+    let i = ((latencies_ns.len() as f64 - 1.0) * p) as usize;
+    latencies_ns[i] as f64 / 1e6
+}
+
+fn record_from(mode: &str, cfg: &SlamConfig, window: usize, out: &mut RunOutcome) -> ServeRecord {
+    ServeRecord {
+        mode: mode.to_string(),
+        window,
+        clients: cfg.clients,
+        threads: cfg.threads,
+        requests: out.responses.len(),
+        p50_ms: percentile_ms(&mut out.latencies_ns, 0.5),
+        p99_ms: percentile_ms(&mut out.latencies_ns, 0.99),
+        tokens_per_sec: out.responses.len() as f64 / out.wall.as_secs_f64().max(1e-9),
+        wall_ms: out.wall.as_secs_f64() * 1e3,
+    }
+}
+
+/// Compare a run's responses against the reference; returns the number
+/// of ids whose bits differ (0 = bit-identical).
+fn diff_count(reference: &[ServeResponse], got: &[ServeResponse]) -> usize {
+    if reference.len() != got.len() {
+        return reference.len().max(got.len());
+    }
+    reference.iter().zip(got).filter(|(a, b)| a != b).count()
+}
+
+/// Run the full slam harness. Returns `true` when every hard gate holds
+/// (determinism, completeness, zero steady-state allocation, the
+/// clear-regression throughput floor, and — when configured — the p99
+/// budget); the ≥ 1.2× coalescing target itself is recorded in the JSON
+/// but only advisory, like the engine bench's noisy-box policy.
+pub fn slam(cfg: &SlamConfig) -> Result<bool> {
+    ensure!(cfg.window > 0, "--window must be at least 1");
+    ensure!(cfg.requests > 0, "--requests must be at least 1");
+    ensure!(cfg.d % cfg.p == 0, "--d {} must be a multiple of --p {}", cfg.d, cfg.p);
+    println!(
+        "[slam] d={} depth={} p={} ctx={} window={} clients={} threads={} requests={}",
+        cfg.d, cfg.depth, cfg.p, cfg.ctx, cfg.window, cfg.clients, cfg.threads, cfg.requests
+    );
+    let reqs = Arc::new(gen_requests(cfg));
+
+    // ---- reference: synchronous single-row serving on this thread ----
+    let mut reference = Vec::with_capacity(reqs.len());
+    let mut sync_steady_allocs = 0usize;
+    {
+        let mut server = SpectralServer::new(build_stack(cfg, cfg.threads), 1)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut out = Vec::with_capacity(1);
+        for (i, ctx) in reqs.iter().enumerate() {
+            let req = ServeRequest { id: i as u64, ctx: ctx.clone() };
+            if i == 1 {
+                // Warmup done after request 0; everything from here on
+                // must be allocation-free on the tracked side.
+                let before = memtrack::snapshot().alloc_count;
+                out.clear();
+                server.serve_window(std::slice::from_ref(&req), &mut out);
+                sync_steady_allocs = memtrack::snapshot().alloc_count - before;
+            } else {
+                out.clear();
+                server.serve_window(std::slice::from_ref(&req), &mut out);
+            }
+            reference.push(out[0]);
+        }
+    }
+
+    // ---- determinism: interleavings and thread counts ----
+    let mut mismatches = 0usize;
+    let mut complete = true;
+    let rev = run_open_loop(cfg, cfg.window, cfg.threads, SubmitOrder::Reverse, &reqs)?;
+    mismatches += diff_count(&reference, &rev.responses);
+    complete &= rev.stats.served as usize == reqs.len();
+    let one_lane = run_open_loop(cfg, cfg.window, 1, SubmitOrder::Forward, &reqs)?;
+    mismatches += diff_count(&reference, &one_lane.responses);
+    complete &= one_lane.stats.served as usize == reqs.len();
+    println!(
+        "[slam] determinism: reverse-arrival + 1-lane runs vs reference → {} mismatching \
+         responses ({} requests each)",
+        mismatches,
+        reqs.len()
+    );
+
+    // ---- throughput: coalesced (window=W) vs single (window=1) ----
+    let mut best_by_mode: Vec<(String, usize, RunOutcome)> = Vec::new();
+    for (mode, window) in [("coalesced", cfg.window), ("single", 1usize)] {
+        let mut best: Option<RunOutcome> = None;
+        for _ in 0..cfg.rounds.max(1) {
+            let out = run_open_loop(cfg, window, cfg.threads, SubmitOrder::Forward, &reqs)?;
+            mismatches += diff_count(&reference, &out.responses);
+            complete &= out.stats.served as usize == reqs.len();
+            if best.as_ref().map_or(true, |b| out.wall < b.wall) {
+                best = Some(out);
+            }
+        }
+        best_by_mode.push((mode.to_string(), window, best.expect("rounds >= 1")));
+    }
+
+    let mut records = Vec::new();
+    let mut async_steady_allocs = 0usize;
+    for (mode, window, out) in best_by_mode.iter_mut() {
+        async_steady_allocs += out.stats.steady_state_allocs;
+        let rec = record_from(mode, cfg, *window, out);
+        println!(
+            "[slam] {:<10} window={:<3} p50 {:.3} ms  p99 {:.3} ms  {:.0} tok/s  \
+             (wall {:.1} ms, arena {} B)",
+            rec.mode, rec.window, rec.p50_ms, rec.p99_ms, rec.tokens_per_sec, rec.wall_ms,
+            out.stats.serve_bytes,
+        );
+        records.push(rec);
+    }
+
+    // ---- closed loop (only when every window can fill: clients >= W) ----
+    if cfg.clients >= cfg.window {
+        let mut out = run_closed_loop(cfg, cfg.window, cfg.threads, &reqs)?;
+        mismatches += diff_count(&reference, &out.responses);
+        complete &= out.stats.served as usize == reqs.len();
+        async_steady_allocs += out.stats.steady_state_allocs;
+        let rec = record_from("closed_loop", cfg, cfg.window, &mut out);
+        println!(
+            "[slam] {:<10} window={:<3} p50 {:.3} ms  p99 {:.3} ms  {:.0} tok/s",
+            rec.mode, rec.window, rec.p50_ms, rec.p99_ms, rec.tokens_per_sec
+        );
+        records.push(rec);
+    } else {
+        println!(
+            "[slam] closed loop skipped: clients {} < window {} cannot fill a tile",
+            cfg.clients, cfg.window
+        );
+    }
+
+    // ---- gates ----
+    let tps = |mode: &str| {
+        records
+            .iter()
+            .find(|r| r.mode == mode)
+            .map(|r| r.tokens_per_sec)
+            .unwrap_or(0.0)
+    };
+    let ratio = tps("coalesced") / tps("single").max(1e-9);
+    let steady = sync_steady_allocs + async_steady_allocs;
+    let coalesced_p99 = records.iter().find(|r| r.mode == "coalesced").map(|r| r.p99_ms);
+    let mut gates = vec![
+        ServeGate {
+            name: "coalesce_vs_single".into(),
+            ratio,
+            target: 1.2,
+            pass: ratio >= 1.2,
+        },
+        ServeGate {
+            name: "responses_complete".into(),
+            ratio: if complete { 1.0 } else { 0.0 },
+            target: 1.0,
+            pass: complete,
+        },
+        ServeGate {
+            name: "determinism_bit_identical".into(),
+            ratio: mismatches as f64,
+            target: 0.0,
+            pass: mismatches == 0,
+        },
+        ServeGate {
+            name: "zero_steady_state_alloc".into(),
+            ratio: steady as f64,
+            target: 0.0,
+            pass: steady == 0,
+        },
+    ];
+    if let (Some(budget), Some(p99)) = (cfg.max_p99_ms, coalesced_p99) {
+        gates.push(ServeGate {
+            name: "p99_under_budget".into(),
+            ratio: p99,
+            target: budget,
+            pass: p99 <= budget,
+        });
+    }
+    for g in &gates {
+        println!(
+            "[slam] gate {:<26} measured {:>10.4} target {:>8.4}  {}",
+            g.name,
+            g.ratio,
+            g.target,
+            if g.pass { "PASS" } else { "MISS" }
+        );
+    }
+
+    if let Some(path) = &cfg.bench_json {
+        write_serve_json(path, &records, &gates)
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("[slam] wrote {}", path.display());
+    }
+
+    // Hard verdict: correctness gates always; the throughput target only
+    // below the clear-regression floor (coalescing must never be *slower*
+    // than single-row by more than noise).
+    let hard_floor = 0.9;
+    let hard_pass = complete
+        && mismatches == 0
+        && steady == 0
+        && ratio >= hard_floor
+        && cfg
+            .max_p99_ms
+            .map_or(true, |b| coalesced_p99.map_or(false, |p| p <= b));
+    if ratio < hard_floor {
+        println!("[slam] HARD FAIL: coalescing ratio {ratio:.3} below floor {hard_floor}");
+    }
+    Ok(hard_pass)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_json_roundtrips_through_parser() {
+        let rec = ServeRecord {
+            mode: "coalesced".into(),
+            window: 8,
+            clients: 4,
+            threads: 2,
+            requests: 512,
+            p50_ms: 0.42,
+            p99_ms: 1.75,
+            tokens_per_sec: 12345.6,
+            wall_ms: 41.5,
+        };
+        let gate = ServeGate {
+            name: "coalesce_vs_single".into(),
+            ratio: 1.44,
+            target: 1.2,
+            pass: true,
+        };
+        let dir = std::env::temp_dir().join(format!("rdfft_servejson_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        write_serve_json(&path, &[rec.clone(), rec], &[gate]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::runtime::json::parse(&text).expect("valid json");
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_serve/v1"));
+        let recs = v.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("coalesced"));
+        assert_eq!(recs[0].get("window").unwrap().as_usize(), Some(8));
+        assert_eq!(recs[0].get("requests").unwrap().as_usize(), Some(512));
+        assert!((recs[0].get("p99_ms").unwrap().as_f64().unwrap() - 1.75).abs() < 1e-9);
+        let gates = v.get("gates").unwrap().as_arr().unwrap();
+        assert_eq!(gates[0].get("name").unwrap().as_str(), Some("coalesce_vs_single"));
+        assert_eq!(gates[0].get("pass").unwrap().as_bool(), Some(true));
+        assert!((gates[0].get("ratio").unwrap().as_f64().unwrap() - 1.44).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn request_generation_is_deterministic_and_sized() {
+        let cfg = SlamConfig { requests: 32, ctx: 8, ..Default::default() };
+        let a = gen_requests(&cfg);
+        let b = gen_requests(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32);
+        assert!(a.iter().all(|r| r.len() == 8));
+        // Sliding windows: consecutive requests overlap by ctx-1 bytes.
+        assert_eq!(a[0][1..], a[1][..7]);
+    }
+}

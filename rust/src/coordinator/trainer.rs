@@ -96,7 +96,7 @@ impl Trainer {
         let mut tokens_seen = 0usize;
 
         for step in 1..=self.cfg.steps {
-            let (toks, tgts) = batcher.next_batch();
+            let (toks, tgts) = batcher.next_batch()?;
             let loss = self.runtime.train_step(&toks, &tgts)?;
             tokens_seen += batch * seq;
             first_loss.get_or_insert(loss);
@@ -107,7 +107,7 @@ impl Trainer {
             if do_eval {
                 let mut acc = 0.0f32;
                 for i in 0..self.cfg.eval_batches {
-                    let (et, eg) = eval_batcher.eval_batch(i);
+                    let (et, eg) = eval_batcher.eval_batch(i)?;
                     acc += self.runtime.eval_step(&et, &eg)?;
                 }
                 let e = acc / self.cfg.eval_batches as f32;

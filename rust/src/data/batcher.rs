@@ -102,7 +102,17 @@ impl Batcher {
 
     /// Sample a batch of random windows; targets are inputs shifted by
     /// one (the last position predicts the next byte after the window).
-    pub fn next_batch(&mut self) -> (Vec<i32>, Vec<i32>) {
+    /// Returns a typed [`BatchError`] — never panics — when the corpus
+    /// cannot fit a single `(seq_len, shifted-target)` window. (The
+    /// constructor enforces the same bound, but a direct guard keeps this
+    /// sampler panic-free on its own terms: the old unguarded
+    /// `tokens.len() - seq_len - 1` underflowed usize on ≤ `seq_len + 1`
+    /// tokens.)
+    pub fn next_batch(&mut self) -> Result<(Vec<i32>, Vec<i32>), BatchError> {
+        let needed = self.seq_len + 2;
+        if self.tokens.len() < needed {
+            return Err(BatchError::CorpusTooSmall { tokens: self.tokens.len(), needed });
+        }
         let mut toks = Vec::with_capacity(self.batch * self.seq_len);
         let mut tgts = Vec::with_capacity(self.batch * self.seq_len);
         for _ in 0..self.batch {
@@ -110,7 +120,7 @@ impl Batcher {
             toks.extend_from_slice(&self.tokens[start..start + self.seq_len]);
             tgts.extend_from_slice(&self.tokens[start + 1..start + self.seq_len + 1]);
         }
-        (toks, tgts)
+        Ok((toks, tgts))
     }
 
     /// Sample a batch of `(context, next-byte)` pairs for the native
@@ -154,17 +164,17 @@ impl Batcher {
                 window: stride,
             });
         }
-        // A split of exactly `stride` tokens holds one window: every row
-        // reads it from start 0 (guards the `% max_start` below).
+        // Valid starts are the inclusive range 0..=max_start (a start of
+        // exactly `max_start` reads the final window, ending on the last
+        // token), so the wrap modulus is `max_start + 1`. The old
+        // `% max_start` silently skipped that final window forever — and
+        // `max_start + 1 >= 1` also subsumes the one-window split case
+        // that previously needed an explicit `max_start == 0` guard.
         let max_start = self.tokens.len() - stride;
         let mut contexts = Vec::with_capacity(self.batch * ctx);
         let mut labels = Vec::with_capacity(self.batch);
         for b in 0..self.batch {
-            let start = if max_start == 0 {
-                0
-            } else {
-                ((index * self.batch + b) * stride) % max_start
-            };
+            let start = ((index * self.batch + b) * stride) % (max_start + 1);
             contexts.extend(self.tokens[start..start + ctx].iter().map(|&t| t as u8));
             labels.push(self.tokens[start + ctx] as usize);
         }
@@ -172,18 +182,32 @@ impl Batcher {
     }
 
     /// Deterministic sequential batches for evaluation (no overlap
-    /// randomness; wraps around).
-    pub fn eval_batch(&self, index: usize) -> (Vec<i32>, Vec<i32>) {
+    /// randomness; wraps around). Returns a typed [`BatchError`] when the
+    /// split cannot fit one `(seq_len + 1)`-token window — this sibling of
+    /// [`Self::eval_context_batch`] kept the exact modulo-by-zero panic
+    /// (`% max_start` on a split of exactly `stride` tokens) and usize
+    /// underflow that were fixed there, so it now gets the same guard.
+    pub fn eval_batch(&self, index: usize) -> Result<(Vec<i32>, Vec<i32>), BatchError> {
+        // A row reads `seq_len` inputs plus the shifted targets — exactly
+        // `stride` consecutive tokens.
+        let stride = self.seq_len + 1;
+        if self.tokens.len() < stride {
+            return Err(BatchError::EmptyEvalSplit {
+                tokens: self.tokens.len(),
+                window: stride,
+            });
+        }
         let mut toks = Vec::with_capacity(self.batch * self.seq_len);
         let mut tgts = Vec::with_capacity(self.batch * self.seq_len);
-        let stride = self.seq_len + 1;
+        // Inclusive start range 0..=max_start, modulus `max_start + 1`
+        // (never zero): same final-window fix as `eval_context_batch`.
         let max_start = self.tokens.len() - stride;
         for b in 0..self.batch {
-            let start = ((index * self.batch + b) * stride) % max_start;
+            let start = ((index * self.batch + b) * stride) % (max_start + 1);
             toks.extend_from_slice(&self.tokens[start..start + self.seq_len]);
             tgts.extend_from_slice(&self.tokens[start + 1..start + self.seq_len + 1]);
         }
-        (toks, tgts)
+        Ok((toks, tgts))
     }
 }
 
@@ -200,7 +224,7 @@ mod tests {
     #[test]
     fn batch_geometry_is_exact() {
         let mut b = make();
-        let (t, g) = b.next_batch();
+        let (t, g) = b.next_batch().unwrap();
         assert_eq!(t.len(), 4 * 32);
         assert_eq!(g.len(), 4 * 32);
     }
@@ -208,7 +232,7 @@ mod tests {
     #[test]
     fn targets_are_shifted_inputs() {
         let mut b = make();
-        let (t, g) = b.next_batch();
+        let (t, g) = b.next_batch().unwrap();
         // within each row, target[i] should equal token[i+1]
         for row in 0..4 {
             for i in 0..31 {
@@ -220,8 +244,47 @@ mod tests {
     #[test]
     fn eval_batches_are_deterministic() {
         let b = make();
-        assert_eq!(b.eval_batch(3), b.eval_batch(3));
-        assert_ne!(b.eval_batch(0).0, b.eval_batch(1).0);
+        assert_eq!(b.eval_batch(3).unwrap(), b.eval_batch(3).unwrap());
+        assert_ne!(b.eval_batch(0).unwrap().0, b.eval_batch(1).unwrap().0);
+    }
+
+    #[test]
+    fn eval_windows_cover_the_final_start() {
+        // 10 bytes, ctx = 4 → stride 5, max_start = 5. The old
+        // `% max_start` wrap drew starts from 0..5 and — because every
+        // candidate start is a multiple of stride=5 — actually pinned every
+        // row to start 0, so the label 'j' at the end of the corpus was
+        // unreachable no matter how many eval batches ran. The fixed
+        // `% (max_start + 1)` wrap draws from 0..=5 and 5·k mod 6 walks the
+        // whole range, so the final window (ctx "fghi", label 'j') is
+        // evaluated.
+        let b = Batcher::new("abcdefghij", 1, 4, 1);
+        let mut labels = Vec::new();
+        for index in 0..6 {
+            let (ctx, lab) = b.eval_context_batch(index, 4).unwrap();
+            if lab[0] == b'j' as usize {
+                assert_eq!(ctx, b"fghi".to_vec(), "final window context");
+            }
+            labels.push(lab[0]);
+        }
+        assert!(labels.contains(&(b'j' as usize)), "final window never evaluated: {labels:?}");
+        // The old formula provably could not produce it: (k*5) % 5 == 0
+        // for every k, so every batch was the start-0 window (label 'e').
+        assert!(labels.iter().any(|&l| l != b'e' as usize));
+
+        // Same inclusive-range fix for the seq_len flavour: seq_len = 4
+        // (stride 5) on the same corpus now reaches start 5, whose
+        // shifted-target row ends on the final token.
+        let mut seen_last = false;
+        for index in 0..6 {
+            let (toks, tgts) = b.eval_batch(index).unwrap();
+            assert_eq!(toks.len(), 4);
+            if tgts[3] == b'j' as i32 {
+                assert_eq!(toks, vec![b'f' as i32, b'g' as i32, b'h' as i32, b'i' as i32]);
+                seen_last = true;
+            }
+        }
+        assert!(seen_last, "eval_batch never reached the final window");
     }
 
     #[test]

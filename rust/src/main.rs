@@ -22,12 +22,14 @@ use std::sync::Arc;
 
 use rdfft::autograd::layers::Backend;
 use rdfft::autograd::optim::OptimKind;
-use rdfft::autograd::stack::StackConfig;
+use rdfft::autograd::stack::{SpectralStack, StackConfig};
 use rdfft::autograd::train::Method;
+use rdfft::coordinator::serve_bench::{slam, SlamConfig};
 use rdfft::coordinator::{
     experiments, NativeReport, NativeTrainer, NativeTrainerConfig, Trainer, TrainerConfig,
 };
-use rdfft::runtime::{checkpoint, FaultPlan};
+use rdfft::runtime::server::{serve_tcp, spawn_session};
+use rdfft::runtime::{checkpoint, ExecCtx, FaultPlan};
 
 struct Args {
     flags: Vec<(String, Option<String>)>,
@@ -116,6 +118,24 @@ fn usage() -> ! {
            engine   batch-engine throughput ablation [--fast]\n\
                     [--force-scalar]  pin the legacy scalar kernels\n\
                     (writes BENCH_rdfft.json incl. simd_vs_scalar gates)\n\
+           serve    inference server: line protocol over TCP (hex ctx in,\n\
+                    next-byte + fingerprint out; blank line flushes the\n\
+                    partial window, 'quit' closes)\n\
+                    [--addr A=127.0.0.1:4915] [--window W=1] [--threads T]\n\
+                    [--d D=64] [--depth K=2] [--p P=16] [--ctx C=8]\n\
+                    [--seed S=0]  (W>1 needs pipelined clients; responses\n\
+                    are bit-identical for any W / T / arrival order)\n\
+           slam     serving load generator + acceptance gates: coalesced\n\
+                    window=W vs single-row throughput, p50/p99 latency,\n\
+                    arrival-order + thread-count determinism, and the\n\
+                    zero steady-state allocation check; writes\n\
+                    BENCH_serve.json and exits non-zero on a hard-gate\n\
+                    failure (coalesce_vs_single target 1.2x is advisory,\n\
+                    floor 0.9x is hard)\n\
+                    [--requests N=512] [--window W=8] [--clients C=4]\n\
+                    [--threads T] [--rounds R=3] [--bench FILE]\n\
+                    [--max-p99-ms MS] [--d D] [--depth K] [--p P]\n\
+                    [--ctx C] [--seed S]\n\
            report   all of the above (fast variants)"
     );
     std::process::exit(2);
@@ -471,6 +491,86 @@ fn cmd_crashtest(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro serve`: run the micro-batching inference server on a TCP
+/// socket. The session (model + arena) lives on a dedicated serve
+/// thread; connection threads only parse lines and park on tickets, so
+/// any number of clients share one deterministic batcher.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let d = args.get_num("d", 64)?;
+    let p = args.get_num("p", 16)?;
+    if d % p != 0 {
+        bail!("--d {d} must be a multiple of --p {p}");
+    }
+    let window = args.get_num("window", 1)?;
+    let threads = args.get_num("threads", 0)?;
+    let cfg = StackConfig {
+        d,
+        depth: args.get_num("depth", 2)?,
+        ctx: args.get_num("ctx", 8)?,
+        method: Method::Circulant { backend: Backend::RdFft, p },
+        seed: args.get_num("seed", 0)? as u64,
+        ..Default::default()
+    };
+    let (handle, session) = spawn_session(
+        move || {
+            let exec = if threads == 0 { ExecCtx::global() } else { ExecCtx::with_threads(threads) };
+            SpectralStack::with_exec(cfg, exec)
+        },
+        window,
+    )
+    .map_err(|e| anyhow::anyhow!("starting serve session: {e}"))?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:4915");
+    let listener = std::net::TcpListener::bind(addr)?;
+    println!(
+        "[serve] listening on {} (ctx {} bytes per hex line, window {window}, d {d})",
+        listener.local_addr()?,
+        handle.ctx(),
+    );
+    serve_tcp(listener, handle)?;
+    // Unreachable in normal operation (the accept loop runs forever), but
+    // keeps shutdown clean if the listener ever errors out.
+    session.shutdown();
+    Ok(())
+}
+
+/// `repro slam`: the serving load generator + acceptance harness
+/// (coordinator::serve_bench). Exits non-zero when a hard gate fails,
+/// mirroring the `engine` bench's policy.
+fn cmd_slam(args: &Args) -> Result<()> {
+    let cfg = SlamConfig {
+        d: args.get_num("d", 64)?,
+        depth: args.get_num("depth", 2)?,
+        p: args.get_num("p", 16)?,
+        ctx: args.get_num("ctx", 8)?,
+        seed: args.get_num("seed", 0)? as u64,
+        requests: args.get_num("requests", 512)?,
+        window: args.get_num("window", 8)?,
+        clients: args.get_num("clients", 4)?,
+        threads: args.get_num("threads", 0)?,
+        rounds: args.get_num("rounds", 3)?,
+        bench_json: Some(PathBuf::from(args.get("bench").unwrap_or("BENCH_serve.json"))),
+        max_p99_ms: match args.get("max-p99-ms") {
+            Some(raw) => match raw.parse::<f64>() {
+                Ok(v) => Some(v),
+                Err(_) => bail!("--max-p99-ms expects a number in ms, got {raw:?}"),
+            },
+            None => {
+                if args.has("max-p99-ms") {
+                    bail!("--max-p99-ms expects a number in ms");
+                }
+                None
+            }
+        },
+    };
+    if !slam(&cfg)? {
+        bail!(
+            "slam gate failed: responses incomplete, non-deterministic, steady-state \
+             allocations detected, p99 over budget, or coalescing below the 0.9x floor"
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else { usage() };
@@ -502,6 +602,8 @@ fn main() -> Result<()> {
                 );
             }
         }
+        "serve" => cmd_serve(&args)?,
+        "slam" => cmd_slam(&args)?,
         "report" => {
             experiments::table1(true);
             experiments::fig2(1024, true);

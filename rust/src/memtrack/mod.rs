@@ -38,10 +38,15 @@ pub enum Category {
     /// with checkpointing off must show zero bytes here, and a run with
     /// it on shows exactly what the snapshot I/O costs.
     Checkpoint,
+    /// Inference-serving session arenas (ping-pong activation tiles and
+    /// logits reused across requests). Kept separate so the serve path's
+    /// zero-steady-state-allocation invariant is checkable on its own:
+    /// bytes here must be constant after warmup, request after request.
+    Serve,
 }
 
 /// Number of categories (array width of every per-category breakdown).
-pub const NUM_CATEGORIES: usize = 6;
+pub const NUM_CATEGORIES: usize = 7;
 
 pub const CATEGORIES: [Category; NUM_CATEGORIES] = [
     Category::Weights,
@@ -50,6 +55,7 @@ pub const CATEGORIES: [Category; NUM_CATEGORIES] = [
     Category::Intermediates,
     Category::Other,
     Category::Checkpoint,
+    Category::Serve,
 ];
 
 impl Category {
@@ -61,6 +67,7 @@ impl Category {
             Category::Intermediates => 3,
             Category::Other => 4,
             Category::Checkpoint => 5,
+            Category::Serve => 6,
         }
     }
     pub fn name(self) -> &'static str {
@@ -71,6 +78,7 @@ impl Category {
             Category::Intermediates => "intermediates",
             Category::Other => "other",
             Category::Checkpoint => "checkpoint",
+            Category::Serve => "serve",
         }
     }
 }
@@ -498,8 +506,8 @@ mod tests {
         let _live = TrackedVec::zeros(512, Category::Weights); // 2 KiB live
         let mut d = WorkerDelta {
             peak_total: 4096,
-            at_peak: [0, 0, 0, 4096, 0, 0],
-            peak_by_cat: [0, 0, 0, 4096, 0, 0],
+            at_peak: [0, 0, 0, 4096, 0, 0, 0],
+            peak_by_cat: [0, 0, 0, 4096, 0, 0, 0],
             alloc_count: 3,
         };
         // two concurrent jobs: absorb doubles the worker-side peak
@@ -524,8 +532,8 @@ mod tests {
         reset();
         let d = |peak: usize, allocs: usize| WorkerDelta {
             peak_total: peak,
-            at_peak: [0, 0, 0, peak, 0, 0],
-            peak_by_cat: [0, 0, 0, peak, 0, 0],
+            at_peak: [0, 0, 0, peak, 0, 0, 0],
+            peak_by_cat: [0, 0, 0, peak, 0, 0, 0],
             alloc_count: allocs,
         };
         // 4 jobs on 2 lanes: only the two largest peaks stack; every

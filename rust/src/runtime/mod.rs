@@ -17,12 +17,14 @@ pub mod faultinject;
 pub mod json;
 pub mod manifest;
 pub mod pool;
+pub mod server;
 pub mod xla_stub;
 
 pub use checkpoint::{CheckpointError, TrainCheckpoint};
 pub use faultinject::{FaultKind, FaultPlan, FaultSpec};
 pub use manifest::{Manifest, ParamSpec};
 pub use pool::{ExecCtx, JobPanic, Scope, WorkerPool};
+pub use server::{ServeError, ServeRequest, ServeResponse, ServeStats, SpectralServer};
 
 use anyhow::{anyhow, Context, Result};
 // The offline build links the typed stub; a real deployment swaps this

@@ -1,0 +1,559 @@
+//! Spectral inference serving: a request queue plus a **deterministic
+//! micro-batcher** that coalesces concurrent single-row requests into
+//! batch-major tiles the rdFFT engine is fastest at (the fused sweeps
+//! amortize one shared `ĉ` spectrum across every row of a tile — the
+//! serving-side twin of the batch-FFT reuse argument).
+//!
+//! Determinism contract
+//! --------------------
+//! Coalescing happens over **fixed windows of request ids**, never over
+//! arrival time: window `k` is the id range `[k·W, (k+1)·W)`, a pure
+//! function of the id a request was submitted with. The serve thread
+//! processes windows strictly in id order (a reorder buffer absorbs
+//! out-of-order arrivals), so which rows share a tile is independent of
+//! thread scheduling, client interleaving, and queue depth. Per-row
+//! compute is itself row-independent ([`SpectralStack::infer_forward`]),
+//! so every response is a pure function of `(parameters, request bytes)`
+//! — bit-identical across arrival-order permutations and pool thread
+//! counts. [`ServerHandle::flush`] (and shutdown) close the current
+//! window early with whatever contiguous prefix has arrived; that changes
+//! *batching*, never *results*.
+//!
+//! Memory contract
+//! ---------------
+//! A serving session owns one [`InferArena`] (ping-pong activation tiles
+//! + logits) tracked under [`Category::Serve`], allocated once and reused
+//! for every request. After the warmup window, serving performs **zero**
+//! tracked allocations per request — [`ServeStats::steady_state_allocs`]
+//! carries the memtrack evidence out of the session. (The invariant
+//! covers tracked tensors, the paper's accounting unit; untracked harness
+//! bookkeeping — queue nodes, response slots — is outside it.)
+//!
+//! Threading note: memtrack's tracker is thread-local, so the session's
+//! model and arena are built, used, and dropped **on the serve thread**
+//! ([`spawn_session`] takes a builder closure for exactly this reason).
+//! Engine calls dispatch through the stack's [`ExecCtx`] onto the shared
+//! [`WorkerPool`](crate::runtime::pool::WorkerPool) as usual.
+
+use crate::autograd::stack::{InferArena, SpectralStack};
+use crate::memtrack::{self, Category};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Typed serving-construction failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// A block lacks the allocation-free inference hook
+    /// (`Layer::infer_forward_residual`), e.g. a LoRA block.
+    UnsupportedStack,
+    /// The coalescing window must hold at least one request.
+    EmptyWindow,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::UnsupportedStack => write!(
+                f,
+                "stack has a block without inference support \
+                 (serving needs supports_infer_exec on every block)"
+            ),
+            ServeError::EmptyWindow => {
+                write!(f, "coalescing window must hold at least one request")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One inference request: a dense, client-assigned sequence id (window
+/// membership is `id / window` — ids must be dense per session) and a
+/// flat context of exactly the model's `ctx` bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub ctx: Vec<u8>,
+}
+
+/// One inference response. Deliberately carries no timing: two responses
+/// compare equal iff the served bits were identical, which is what the
+/// determinism tests and `repro slam` assert across interleavings and
+/// thread counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeResponse {
+    pub id: u64,
+    /// Argmax of the logits row (ties break to the lowest byte).
+    pub next_byte: u8,
+    /// FNV-1a over the full logits row's f32 bit patterns — the
+    /// bit-identity witness.
+    pub fingerprint: u64,
+}
+
+/// Session evidence returned by [`ServerSession::shutdown`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests served.
+    pub served: u64,
+    /// Tiles run (complete windows + flushed partials).
+    pub windows: u64,
+    /// Tracked allocations performed *after* the warmup window — the
+    /// zero-steady-state-allocation invariant says this is exactly 0.
+    pub steady_state_allocs: usize,
+    /// Tracked bytes resident in the session arena ([`Category::Serve`]).
+    pub serve_bytes: usize,
+    /// Peak tracked [`Category::Serve`] bytes over the session.
+    pub peak_serve_bytes: usize,
+}
+
+/// FNV-1a (64-bit) over the little-endian bit patterns of an f32 slice.
+pub fn fingerprint_f32(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The synchronous deterministic core: one model + one reusable arena,
+/// serving id-sorted request slices one fixed tile at a time. The async
+/// session ([`spawn_session`]) and the tests drive this same type, so
+/// the queue layer can't diverge from what the tests pin down.
+pub struct SpectralServer {
+    stack: SpectralStack,
+    arena: InferArena,
+    /// Reused `window*ctx` byte staging tile (padding rows stay zero).
+    staging: Vec<u8>,
+    window: usize,
+}
+
+impl SpectralServer {
+    /// Wrap a stack for serving: transforms parameters for immutable
+    /// reads ([`SpectralStack::begin_serve`]) and allocates the session
+    /// arena under [`Category::Serve`].
+    pub fn new(mut stack: SpectralStack, window: usize) -> Result<SpectralServer, ServeError> {
+        if window == 0 {
+            return Err(ServeError::EmptyWindow);
+        }
+        if !stack.supports_infer_exec() {
+            return Err(ServeError::UnsupportedStack);
+        }
+        stack.begin_serve();
+        let arena = InferArena::new(&stack, window, Category::Serve);
+        let staging = vec![0u8; window * stack.config().ctx];
+        Ok(SpectralServer { stack, arena, staging, window })
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Context bytes every request must carry.
+    pub fn ctx(&self) -> usize {
+        self.stack.config().ctx
+    }
+
+    pub fn stack(&self) -> &SpectralStack {
+        &self.stack
+    }
+
+    /// Tracked bytes held by the session arena.
+    pub fn arena_tracked_bytes(&self) -> usize {
+        self.arena.tracked_bytes()
+    }
+
+    /// Serve one tile: up to `window` requests packed batch-major (row i
+    /// = request i), short tiles padded with zero contexts whose outputs
+    /// are discarded. Appends one response per request to `out`. Performs
+    /// zero tracked allocations.
+    pub fn serve_window(&mut self, reqs: &[ServeRequest], out: &mut Vec<ServeResponse>) {
+        assert!(
+            !reqs.is_empty() && reqs.len() <= self.window,
+            "a tile holds 1..=window requests"
+        );
+        let ctx = self.ctx();
+        self.staging.fill(0);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.ctx.len(), ctx, "request {} context must be exactly {ctx} bytes", r.id);
+            self.staging[i * ctx..(i + 1) * ctx].copy_from_slice(&r.ctx);
+        }
+        self.stack.infer_forward(&self.staging, &mut self.arena);
+        for (i, r) in reqs.iter().enumerate() {
+            let row = self.arena.logits().row(i);
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (j, &v) in row.iter().enumerate() {
+                if v > best_v {
+                    best_v = v;
+                    best = j;
+                }
+            }
+            out.push(ServeResponse {
+                id: r.id,
+                next_byte: best as u8,
+                fingerprint: fingerprint_f32(row),
+            });
+        }
+    }
+}
+
+/// Filled-response slot a [`Ticket`] blocks on: `(response, latency_ns)`.
+#[derive(Default)]
+struct Slot {
+    resp: Mutex<Option<(ServeResponse, u64)>>,
+    cv: Condvar,
+}
+
+/// A claim on one submitted request's response.
+pub struct Ticket {
+    slot: Arc<Slot>,
+}
+
+impl Ticket {
+    /// Block until the request is served; returns the response plus the
+    /// submit→serve latency in nanoseconds (measured on the serve
+    /// thread, so a late reaper doesn't inflate it).
+    pub fn wait(self) -> (ServeResponse, u64) {
+        let mut g = self.slot.resp.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            g = self.slot.cv.wait(g).unwrap();
+        }
+    }
+}
+
+struct Entry {
+    ctx: Vec<u8>,
+    slot: Arc<Slot>,
+    submitted: Instant,
+}
+
+struct State {
+    /// Reorder buffer: requests keyed by id, consumed in id order.
+    pending: BTreeMap<u64, Entry>,
+    /// Next id the serve thread will admit into a tile.
+    next_id: u64,
+    /// Drain whatever has arrived (partial windows allowed) until the
+    /// buffer empties, then resume fixed windowing.
+    flush: bool,
+    /// Drain, then exit the serve loop.
+    stop: bool,
+}
+
+struct Shared {
+    mu: Mutex<State>,
+    cv: Condvar,
+}
+
+/// Cloneable submission side of a serving session.
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    ctx: usize,
+    auto_id: Arc<AtomicU64>,
+}
+
+impl ServerHandle {
+    /// Context bytes every request must carry.
+    pub fn ctx(&self) -> usize {
+        self.ctx
+    }
+
+    /// Submit with an explicit id (the deterministic-harness path: the
+    /// caller owns the dense 0..n id assignment, making every window's
+    /// membership a pure function of the request set). Panics on a
+    /// duplicate or already-served id — both are harness bugs.
+    pub fn submit(&self, id: u64, ctx: Vec<u8>) -> Ticket {
+        assert_eq!(ctx.len(), self.ctx, "request context must be exactly {} bytes", self.ctx);
+        let slot = Arc::new(Slot::default());
+        let entry = Entry { ctx, slot: Arc::clone(&slot), submitted: Instant::now() };
+        let mut st = self.shared.mu.lock().unwrap();
+        assert!(id >= st.next_id, "request id {id} is already behind the serve cursor");
+        let prev = st.pending.insert(id, entry);
+        assert!(prev.is_none(), "duplicate request id {id}");
+        drop(st);
+        self.shared.cv.notify_all();
+        Ticket { slot }
+    }
+
+    /// Submit with the next server-assigned id (the socket path, where
+    /// ids follow admission order). Don't mix with [`Self::submit`].
+    pub fn submit_next(&self, ctx: Vec<u8>) -> Ticket {
+        let id = self.auto_id.fetch_add(1, Ordering::Relaxed);
+        self.submit(id, ctx)
+    }
+
+    /// Close the current window early: serve everything already queued
+    /// (partial tiles allowed), then resume fixed windowing. Changes
+    /// batching only — responses are batching-invariant.
+    pub fn flush(&self) {
+        let mut st = self.shared.mu.lock().unwrap();
+        st.flush = true;
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+/// Join side of a serving session.
+pub struct ServerSession {
+    join: std::thread::JoinHandle<ServeStats>,
+    shared: Arc<Shared>,
+}
+
+impl ServerSession {
+    /// Drain every queued request (all outstanding tickets get served),
+    /// stop the serve thread, and return the session's memtrack evidence.
+    pub fn shutdown(self) -> ServeStats {
+        {
+            let mut st = self.shared.mu.lock().unwrap();
+            st.stop = true;
+        }
+        self.shared.cv.notify_all();
+        self.join.join().expect("serve thread panicked")
+    }
+}
+
+/// Start a serving session. The `build` closure runs **on the serve
+/// thread** so every tracked tensor (model + arena) is allocated and
+/// freed on the thread-local tracker that also observes the serving loop
+/// — the thread's memtrack numbers are the whole session's story.
+pub fn spawn_session<F>(
+    build: F,
+    window: usize,
+) -> Result<(ServerHandle, ServerSession), ServeError>
+where
+    F: FnOnce() -> SpectralStack + Send + 'static,
+{
+    let shared = Arc::new(Shared {
+        mu: Mutex::new(State {
+            pending: BTreeMap::new(),
+            next_id: 0,
+            flush: false,
+            stop: false,
+        }),
+        cv: Condvar::new(),
+    });
+    let loop_shared = Arc::clone(&shared);
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, ServeError>>();
+    let join = std::thread::spawn(move || {
+        let stack = build();
+        match SpectralServer::new(stack, window) {
+            Ok(server) => {
+                let _ = ready_tx.send(Ok(server.ctx()));
+                serve_loop(server, &loop_shared)
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                ServeStats::default()
+            }
+        }
+    });
+    match ready_rx.recv().expect("serve thread died before reporting readiness") {
+        Ok(ctx) => {
+            let handle =
+                ServerHandle { shared, ctx, auto_id: Arc::new(AtomicU64::new(0)) };
+            Ok((handle, ServerSession { join, shared: Arc::clone(&handle.shared) }))
+        }
+        Err(e) => {
+            let _ = join.join();
+            Err(e)
+        }
+    }
+}
+
+/// The serve thread: admit windows strictly in id order, serve each as
+/// one tile, fill the waiters' slots. Exits when stopped and drained.
+fn serve_loop(mut server: SpectralServer, shared: &Shared) -> ServeStats {
+    let w = server.window();
+    let mut served = 0u64;
+    let mut windows = 0u64;
+    // alloc_count after the warmup window; everything past it is
+    // steady-state and must allocate nothing tracked.
+    let mut baseline: Option<usize> = None;
+    let mut reqs: Vec<ServeRequest> = Vec::with_capacity(w);
+    let mut slots: Vec<(Arc<Slot>, Instant)> = Vec::with_capacity(w);
+    let mut out: Vec<ServeResponse> = Vec::with_capacity(w);
+    loop {
+        reqs.clear();
+        slots.clear();
+        out.clear();
+        {
+            let mut st = shared.mu.lock().unwrap();
+            loop {
+                if !st.pending.is_empty() {
+                    let base = st.next_id;
+                    let complete =
+                        (base..base + w as u64).all(|id| st.pending.contains_key(&id));
+                    if complete || st.flush || st.stop {
+                        // Complete windows are exactly ids base..base+w;
+                        // flush/stop admit the smallest ≤ w pending ids
+                        // (a contiguous prefix whenever ids are dense).
+                        let ids: Vec<u64> = st.pending.keys().take(w).copied().collect();
+                        for id in ids {
+                            let e = st.pending.remove(&id).expect("id just listed");
+                            reqs.push(ServeRequest { id, ctx: e.ctx });
+                            slots.push((e.slot, e.submitted));
+                            st.next_id = st.next_id.max(id + 1);
+                        }
+                        break;
+                    }
+                } else {
+                    st.flush = false;
+                    if st.stop {
+                        drop(st);
+                        let snap = memtrack::snapshot();
+                        return ServeStats {
+                            served,
+                            windows,
+                            steady_state_allocs: baseline
+                                .map(|b| snap.alloc_count - b)
+                                .unwrap_or(0),
+                            serve_bytes: server.arena_tracked_bytes(),
+                            peak_serve_bytes: snap.peak_by_cat[Category::Serve.index()],
+                        };
+                    }
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        }
+        server.serve_window(&reqs, &mut out);
+        windows += 1;
+        served += reqs.len() as u64;
+        if windows == 1 {
+            baseline = Some(memtrack::snapshot().alloc_count);
+        }
+        for (resp, (slot, t0)) in out.iter().zip(slots.iter()) {
+            let latency_ns = t0.elapsed().as_nanos() as u64;
+            let mut g = slot.resp.lock().unwrap();
+            *g = Some((*resp, latency_ns));
+            drop(g);
+            slot.cv.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Local socket leg: a line protocol over TCP for `repro serve`.
+//
+//   client → server   one request per line: 2·ctx hex chars of context
+//   client → server   empty line: flush + answer everything sent so far
+//   client → server   "quit": close the connection
+//   server → client   "OK <next_byte> <fingerprint:016x> <latency_ns>"
+//                     (one per request, in submission order), or
+//                     "ERR <reason>" immediately for a malformed line.
+//
+// Pipelining several request lines before the blank line is what lets a
+// *single* client fill a coalescing window; concurrent connections
+// coalesce into shared tiles automatically. Socket ids follow admission
+// order (`submit_next`), so batching composition depends on arrival —
+// responses still don't, per the module determinism contract.
+// ---------------------------------------------------------------------
+
+/// Parse a request line: exactly `2*ctx` hex characters.
+fn parse_hex_ctx(s: &str, ctx: usize) -> Result<Vec<u8>, String> {
+    if s.len() != 2 * ctx {
+        return Err(format!("expected {} hex chars (ctx={ctx}), got {}", 2 * ctx, s.len()));
+    }
+    let bytes = s.as_bytes();
+    let nib = |c: u8| -> Result<u8, String> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(format!("invalid hex char {:?}", c as char)),
+        }
+    };
+    let mut out = Vec::with_capacity(ctx);
+    for pair in bytes.chunks_exact(2) {
+        out.push(nib(pair[0])? << 4 | nib(pair[1])?);
+    }
+    Ok(out)
+}
+
+/// Serve one client connection (one thread per connection).
+pub fn handle_connection(stream: TcpStream, handle: ServerHandle) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let ctx = handle.ctx();
+    let mut tickets: Vec<Ticket> = Vec::new();
+    let mut quit = false;
+    for line in reader.lines() {
+        let line = line?;
+        let t = line.trim();
+        if t == "quit" {
+            quit = true;
+            break;
+        }
+        if t.is_empty() {
+            handle.flush();
+            for tk in tickets.drain(..) {
+                let (r, latency_ns) = tk.wait();
+                writeln!(writer, "OK {} {:016x} {latency_ns}", r.next_byte, r.fingerprint)?;
+            }
+            writer.flush()?;
+            continue;
+        }
+        match parse_hex_ctx(t, ctx) {
+            Ok(bytes) => tickets.push(handle.submit_next(bytes)),
+            Err(msg) => {
+                writeln!(writer, "ERR {msg}")?;
+                writer.flush()?;
+            }
+        }
+    }
+    if !quit && !tickets.is_empty() {
+        // EOF with unanswered pipelined requests: answer them anyway.
+        handle.flush();
+        for tk in tickets.drain(..) {
+            let (r, latency_ns) = tk.wait();
+            writeln!(writer, "OK {} {:016x} {latency_ns}", r.next_byte, r.fingerprint)?;
+        }
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Accept loop for `repro serve`: one handler thread per connection, all
+/// feeding the same session (concurrent connections coalesce). Runs until
+/// the listener errors (i.e. effectively forever under the CLI).
+pub fn serve_tcp(listener: TcpListener, handle: ServerHandle) -> std::io::Result<()> {
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let h = handle.clone();
+        std::thread::spawn(move || {
+            let _ = handle_connection(stream, h);
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_distinguishes_bit_patterns() {
+        // -0.0 and 0.0 compare equal as floats but are different bits —
+        // the fingerprint is a *bit* identity witness, so it must differ.
+        assert_ne!(fingerprint_f32(&[0.0]), fingerprint_f32(&[-0.0]));
+        assert_eq!(fingerprint_f32(&[1.5, -2.25]), fingerprint_f32(&[1.5, -2.25]));
+        assert_ne!(fingerprint_f32(&[1.5, -2.25]), fingerprint_f32(&[-2.25, 1.5]));
+    }
+
+    #[test]
+    fn hex_parsing_round_trips_and_rejects_junk() {
+        assert_eq!(parse_hex_ctx("00ff10Ab", 4).unwrap(), vec![0x00, 0xff, 0x10, 0xab]);
+        assert!(parse_hex_ctx("00ff", 4).is_err(), "wrong length");
+        assert!(parse_hex_ctx("00fg10ab", 4).is_err(), "bad nibble");
+    }
+}

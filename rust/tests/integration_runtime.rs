@@ -33,7 +33,7 @@ macro_rules! require_artifacts {
 fn batch_for(rt: &Runtime, seed: u64) -> (Vec<i32>, Vec<i32>) {
     let text = CorpusGen::new(seed).text(64 * 1024);
     let mut b = Batcher::new(&text, rt.manifest.batch, rt.manifest.seq_len, seed);
-    b.next_batch()
+    b.next_batch().expect("64 KiB corpus fits a window")
 }
 
 #[test]

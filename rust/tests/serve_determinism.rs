@@ -1,0 +1,183 @@
+//! Serving determinism + memory invariants, end to end.
+//!
+//! The server's contract (`runtime::server` module docs): every response
+//! is a pure function of `(parameters, request bytes)` — bit-identical
+//! across arrival-order permutations, coalescing-window composition, and
+//! engine thread counts — and steady-state serving performs zero tracked
+//! allocations. These tests drive the real stack (circulant rdFFT
+//! blocks) through the sync core, the async session, and the TCP line
+//! protocol, and compare fingerprints of the full logits rows.
+
+use rdfft::autograd::layers::Backend;
+use rdfft::autograd::stack::{SpectralStack, StackConfig};
+use rdfft::autograd::train::Method;
+use rdfft::memtrack::{self, Category};
+use rdfft::runtime::pool::ExecCtx;
+use rdfft::runtime::server::{
+    serve_tcp, spawn_session, ServeRequest, ServeResponse, SpectralServer,
+};
+
+const D: usize = 32;
+const CTX: usize = 6;
+const N: usize = 22;
+
+fn mk_stack(threads: usize) -> SpectralStack {
+    let cfg = StackConfig {
+        d: D,
+        depth: 2,
+        ctx: CTX,
+        method: Method::Circulant { backend: Backend::RdFft, p: 8 },
+        seed: 5,
+        ..Default::default()
+    };
+    let exec = if threads == 0 { ExecCtx::global() } else { ExecCtx::with_threads(threads) };
+    SpectralStack::with_exec(cfg, exec)
+}
+
+/// Deterministic request set: request i's context is a fixed byte pattern.
+fn requests() -> Vec<ServeRequest> {
+    (0..N)
+        .map(|i| ServeRequest {
+            id: i as u64,
+            ctx: (0..CTX).map(|j| ((i * 7 + j * 13) % 251) as u8).collect(),
+        })
+        .collect()
+}
+
+/// Ground truth: the synchronous core at window=1 (no coalescing at all).
+fn reference() -> Vec<ServeResponse> {
+    let mut server = SpectralServer::new(mk_stack(0), 1).expect("all-circulant stack serves");
+    let mut out = Vec::new();
+    for r in &requests() {
+        server.serve_window(std::slice::from_ref(r), &mut out);
+    }
+    out
+}
+
+/// Run the async session at `window`, submitting ids in `order`, and
+/// return the responses sorted by id.
+fn run_session(window: usize, threads: usize, order: &[usize]) -> Vec<ServeResponse> {
+    let (handle, session) =
+        spawn_session(move || mk_stack(threads), window).expect("session starts");
+    let reqs = requests();
+    let mut tickets = Vec::new();
+    for &i in order {
+        tickets.push(handle.submit(reqs[i].id, reqs[i].ctx.clone()));
+    }
+    // Close the final partial window; everything else already coalesced
+    // into fixed id windows regardless of the submission order above.
+    handle.flush();
+    let mut got: Vec<ServeResponse> = tickets.into_iter().map(|t| t.wait().0).collect();
+    let stats = session.shutdown();
+    assert_eq!(stats.served as usize, N, "every request answered exactly once");
+    assert_eq!(stats.steady_state_allocs, 0, "steady-state serving must not allocate");
+    got.sort_by_key(|r| r.id);
+    got
+}
+
+#[test]
+fn responses_are_bit_identical_across_arrival_orders() {
+    let reference = reference();
+    let forward: Vec<usize> = (0..N).collect();
+    let reverse: Vec<usize> = (0..N).rev().collect();
+    // A stride walk (5 is coprime with 22) — maximally out-of-order
+    // without being random, so the test itself stays deterministic.
+    let strided: Vec<usize> = (0..N).map(|i| (i * 5) % N).collect();
+    for (name, order) in [("forward", forward), ("reverse", reverse), ("strided", strided)] {
+        let got = run_session(4, 0, &order);
+        assert_eq!(
+            got, reference,
+            "{name} arrival order changed served bits (window 4 vs window 1 reference)"
+        );
+    }
+}
+
+#[test]
+fn responses_are_bit_identical_across_thread_counts_and_windows() {
+    let reference = reference();
+    let order: Vec<usize> = (0..N).collect();
+    for (threads, window) in [(1usize, 4usize), (3, 4), (1, 7), (3, 1)] {
+        let got = run_session(window, threads, &order);
+        assert_eq!(
+            got, reference,
+            "threads={threads} window={window} changed served bits"
+        );
+    }
+}
+
+#[test]
+fn sync_serving_is_allocation_free_after_warmup() {
+    let mut server = SpectralServer::new(mk_stack(0), 4).expect("serves");
+    let reqs = requests();
+    let mut out = Vec::with_capacity(N);
+    // Warmup tile (first pool dispatch may lazily allocate worker state).
+    server.serve_window(&reqs[0..4], &mut out);
+    let base = memtrack::snapshot();
+    for _ in 0..10 {
+        out.clear();
+        server.serve_window(&reqs[0..4], &mut out);
+        server.serve_window(&reqs[4..8], &mut out);
+        server.serve_window(&reqs[8..11], &mut out); // partial tile too
+        assert_eq!(out.len(), 11);
+    }
+    let snap = memtrack::snapshot();
+    assert_eq!(
+        snap.alloc_count, base.alloc_count,
+        "steady-state serve_window performed tracked allocations"
+    );
+    // The Serve category holds exactly the session arena, constant across
+    // requests (the ping-pong tiles + logits are reused, never reallocated).
+    assert_eq!(snap.current[Category::Serve.index()], base.current[Category::Serve.index()]);
+    assert_eq!(snap.current[Category::Serve.index()], server.arena_tracked_bytes());
+    assert!(server.arena_tracked_bytes() > 0, "arena must be tracked under Serve");
+}
+
+#[test]
+fn tcp_round_trip_matches_in_process_serving() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let reference = reference();
+    let (handle, session) = spawn_session(move || mk_stack(0), 2).expect("session starts");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap();
+    {
+        let h = handle.clone();
+        std::thread::spawn(move || {
+            let _ = serve_tcp(listener, h);
+        });
+    }
+
+    let take = 5usize;
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    // Pipeline `take` hex requests, then a blank line to flush + answer.
+    let mut payload = String::new();
+    for r in requests().iter().take(take) {
+        for b in &r.ctx {
+            payload.push_str(&format!("{b:02x}"));
+        }
+        payload.push('\n');
+    }
+    payload.push('\n');
+    stream.write_all(payload.as_bytes()).unwrap();
+    stream.flush().unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for i in 0..take {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        assert_eq!(fields.first().copied(), Some("OK"), "line {i}: {line:?}");
+        let next_byte: u8 = fields[1].parse().expect("next_byte");
+        let fp = u64::from_str_radix(fields[2], 16).expect("fingerprint");
+        // Socket ids follow admission order, which equals submission order
+        // on a single pipelined connection — so line i answers request i.
+        assert_eq!(next_byte, reference[i].next_byte, "request {i} next byte");
+        assert_eq!(fp, reference[i].fingerprint, "request {i} served different bits over TCP");
+    }
+    stream.write_all(b"quit\n").unwrap();
+
+    let stats = session.shutdown();
+    assert_eq!(stats.served as usize, take);
+    assert_eq!(stats.steady_state_allocs, 0);
+    assert!(stats.serve_bytes > 0);
+}

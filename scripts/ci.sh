@@ -64,6 +64,28 @@ if grep -q '"records": \[\]' BENCH_rdfft.json; then
   exit 1
 fi
 
+# Serving smoke: the slam harness drives the micro-batching server with
+# concurrent clients and enforces its hard gates in-process — every
+# request answered, responses bit-identical across arrival orders and
+# thread counts, zero steady-state tracked allocations, the coalescing
+# ratio above the clear-regression floor, and (here) a generous p99
+# sanity budget. Writes BENCH_serve.json (p50/p99 + tokens/sec rows and
+# the coalesce_vs_single gate), uploaded next to BENCH_rdfft.json.
+"$REPRO" slam \
+  --requests 192 --window 8 --clients 3 --threads 2 --rounds 2 \
+  --bench BENCH_serve.json --max-p99-ms 500
+if [[ ! -s BENCH_serve.json ]]; then
+  echo "ci.sh: ERROR: repro slam did not produce BENCH_serve.json" >&2
+  exit 1
+fi
+# Same placeholder-detection pattern as BENCH_rdfft.json: the committed
+# file has an empty records array; a measured run must have replaced it.
+if grep -q '"records": \[\]' BENCH_serve.json; then
+  echo "ci.sh: ERROR: BENCH_serve.json still matches the committed placeholder" >&2
+  echo "       (empty records array) — repro slam recorded no measurements." >&2
+  exit 1
+fi
+
 # Format check is advisory: the tree is hand-formatted and the tier-1
 # gate is build+test+smoke; a rustfmt drift warning must not mask a
 # green functional run.
