@@ -253,9 +253,10 @@ fn run_open_loop(
 /// Ids here are **admission-order** (`submit_next`), not the request
 /// indices: a closed loop interleaves submission with serving, and a
 /// pre-assigned strided id could race the serve cursor when a periodic
-/// flush drains a partial tile. Admission ids are handed out under the
-/// queue lock, so they are always monotonic and any flush timing is
-/// safe. Responses are therefore matched back to requests by *content*
+/// flush drains a partial tile. `submit_next` assigns the id and
+/// enqueues the entry in a single queue-lock critical section, so the
+/// cursor can never pass an assigned-but-unqueued id and any flush
+/// timing is safe. Responses are therefore matched back to requests by *content*
 /// (each worker pairs its own submissions), and the returned responses
 /// carry the request index as `id` so the bit-identity comparison
 /// against the reference still lines up — legitimate, because a

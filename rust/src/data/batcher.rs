@@ -74,10 +74,10 @@ impl Batcher {
         seed: u64,
     ) -> Result<Self, BatchError> {
         let tokens = ByteTokenizer.encode(text);
-        if tokens.len() < seq_len + 2 {
+        if tokens.len() < seq_len + 1 {
             return Err(BatchError::CorpusTooSmall {
                 tokens: tokens.len(),
-                needed: seq_len + 2,
+                needed: seq_len + 1,
             });
         }
         Ok(Batcher { tokens, batch, seq_len, rng: Rng::new(seed) })
@@ -106,17 +106,23 @@ impl Batcher {
     /// cannot fit a single `(seq_len, shifted-target)` window. (The
     /// constructor enforces the same bound, but a direct guard keeps this
     /// sampler panic-free on its own terms: the old unguarded
-    /// `tokens.len() - seq_len - 1` underflowed usize on ≤ `seq_len + 1`
+    /// `tokens.len() - seq_len - 1` underflowed usize on ≤ `seq_len`
     /// tokens.)
     pub fn next_batch(&mut self) -> Result<(Vec<i32>, Vec<i32>), BatchError> {
-        let needed = self.seq_len + 2;
+        // A window reads seq_len inputs + 1 shifted label, so the valid
+        // starts are the inclusive range 0..=len-seq_len-1 — a draw
+        // modulus of len - seq_len (>= 1 once the guard holds). The old
+        // `below(len - seq_len - 1)` excluded the final window, so the
+        // row whose target ends on the corpus's last token was never
+        // sampled.
+        let needed = self.seq_len + 1;
         if self.tokens.len() < needed {
             return Err(BatchError::CorpusTooSmall { tokens: self.tokens.len(), needed });
         }
         let mut toks = Vec::with_capacity(self.batch * self.seq_len);
         let mut tgts = Vec::with_capacity(self.batch * self.seq_len);
         for _ in 0..self.batch {
-            let start = self.rng.below(self.tokens.len() - self.seq_len - 1);
+            let start = self.rng.below(self.tokens.len() - self.seq_len);
             toks.extend_from_slice(&self.tokens[start..start + self.seq_len]);
             tgts.extend_from_slice(&self.tokens[start + 1..start + self.seq_len + 1]);
         }
@@ -132,16 +138,20 @@ impl Batcher {
         &mut self,
         ctx: usize,
     ) -> Result<(Vec<u8>, Vec<usize>), BatchError> {
-        // One window needs ctx context bytes + 1 label byte, and the
-        // sampler draws starts from 0..len-ctx-1, so len >= ctx + 2.
-        let needed = ctx + 2;
+        // One window needs ctx context bytes + 1 label byte: valid
+        // starts are the inclusive range 0..=len-ctx-1, a draw modulus
+        // of len - ctx (>= 1 once len >= ctx + 1). The old
+        // `below(len - ctx - 1)` excluded the final window (its label is
+        // the corpus's last byte) — same off-by-one fixed in the eval
+        // samplers' wrap.
+        let needed = ctx + 1;
         if self.tokens.len() < needed {
             return Err(BatchError::CorpusTooSmall { tokens: self.tokens.len(), needed });
         }
         let mut contexts = Vec::with_capacity(self.batch * ctx);
         let mut labels = Vec::with_capacity(self.batch);
         for _ in 0..self.batch {
-            let start = self.rng.below(self.tokens.len() - ctx - 1);
+            let start = self.rng.below(self.tokens.len() - ctx);
             contexts.extend(self.tokens[start..start + ctx].iter().map(|&t| t as u8));
             labels.push(self.tokens[start + ctx] as usize);
         }
@@ -330,16 +340,16 @@ mod tests {
         // typed errors (this used to panic / index out of bounds).
         let mut b = Batcher::new("a tiny corpus.", 8, 2, 1);
         let err = b.next_context_batch(64).unwrap_err();
-        assert!(matches!(err, BatchError::CorpusTooSmall { needed: 66, .. }), "{err:?}");
+        assert!(matches!(err, BatchError::CorpusTooSmall { needed: 65, .. }), "{err:?}");
         let err = b.eval_context_batch(0, 64).unwrap_err();
         assert!(matches!(err, BatchError::EmptyEvalSplit { window: 65, .. }), "{err:?}");
         // Error text is actionable (mentions both sizes).
         let msg = format!("{}", b.next_context_batch(64).unwrap_err());
-        assert!(msg.contains("66") && msg.contains("14"), "{msg}");
+        assert!(msg.contains("65") && msg.contains("14"), "{msg}");
         // Construction itself has a non-panicking path too (the native
         // trainer uses it so a tiny corpus is a clean CLI error).
         let err = Batcher::try_new("ab", 1, 32, 0).unwrap_err();
-        assert!(matches!(err, BatchError::CorpusTooSmall { needed: 34, .. }), "{err:?}");
+        assert!(matches!(err, BatchError::CorpusTooSmall { needed: 33, .. }), "{err:?}");
     }
 
     #[test]
@@ -358,7 +368,7 @@ mod tests {
 
     #[test]
     fn boundary_corpus_exactly_one_window_works() {
-        // len == ctx + 2 is the smallest corpus that can serve windows.
+        // len == ctx + 1 is the smallest corpus that can serve windows.
         let mut b = Batcher::new("abcdefgh", 4, 2, 1); // 8 tokens
         let (ctxs, labels) = b.next_context_batch(6).unwrap();
         assert_eq!(ctxs.len(), 4 * 6);
@@ -367,12 +377,54 @@ mod tests {
         assert_eq!(ectx.len(), 4 * 6);
         assert_eq!(elab.len(), 4);
 
-        // A split of exactly ctx+1 tokens holds one window: every row
-        // serves it from start 0 instead of erroring (or hitting the old
-        // `% 0` panic).
-        let one = Batcher::new("abcdefg", 2, 2, 1); // 7 tokens, stride 7
+        // A corpus of exactly ctx+1 tokens holds one window: every row
+        // samples it from start 0 instead of erroring (the old random
+        // bound `below(len - ctx - 1)` was `below(0)` here — a `% 0`
+        // panic), and the eval wrap serves it deterministically.
+        let mut one = Batcher::new("abcdefg", 2, 2, 1); // 7 tokens, stride 7
+        let (rc, rl) = one.next_context_batch(6).unwrap();
+        assert_eq!(rc, b"abcdefabcdef".to_vec());
+        assert_eq!(rl, vec![b'g' as usize, b'g' as usize]);
         let (c1, l1) = one.eval_context_batch(5, 6).unwrap();
         assert_eq!(c1, b"abcdefabcdef".to_vec());
         assert_eq!(l1, vec![b'g' as usize, b'g' as usize]);
+
+        // Same for the seq_len flavour: len == seq_len + 1 holds exactly
+        // one (inputs, shifted-targets) window, served from start 0 (the
+        // old bound underflowed or drew `below(0)` here too).
+        let mut seq = Batcher::new("abcdefghi", 1, 8, 1); // 9 tokens
+        let (t, g) = seq.next_batch().unwrap();
+        let expect_t: Vec<i32> = "abcdefgh".bytes().map(|c| c as i32).collect();
+        let expect_g: Vec<i32> = "bcdefghi".bytes().map(|c| c as i32).collect();
+        assert_eq!(t, expect_t);
+        assert_eq!(g, expect_g);
+    }
+
+    #[test]
+    fn random_samplers_reach_the_final_window() {
+        // 12 tokens, seq_len 8 → valid starts 0..=3. The old draw bound
+        // `below(len - seq_len - 1)` covered only 0..=2, so the window
+        // whose shifted target ends on the corpus's last token was never
+        // sampled — the last byte of every corpus was untrainable.
+        let mut b = Batcher::new("abcdefghijkl", 1, 8, 5);
+        let mut saw_last = false;
+        for _ in 0..64 {
+            let (_, tgts) = b.next_batch().unwrap();
+            if *tgts.last().unwrap() == b'l' as i32 {
+                saw_last = true;
+            }
+        }
+        assert!(saw_last, "next_batch never sampled the final window");
+
+        // Context flavour: valid starts 0..=len-ctx-1; the final label
+        // (the corpus's last byte) must be drawable.
+        let mut saw_last_label = false;
+        for _ in 0..64 {
+            let (_, labels) = b.next_context_batch(8).unwrap();
+            if labels[0] == b'l' as usize {
+                saw_last_label = true;
+            }
+        }
+        assert!(saw_last_label, "next_context_batch never sampled the final label");
     }
 }

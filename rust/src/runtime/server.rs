@@ -41,7 +41,6 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -243,9 +242,14 @@ struct State {
     pending: BTreeMap<u64, Entry>,
     /// Next id the serve thread will admit into a tile.
     next_id: u64,
-    /// Drain whatever has arrived (partial windows allowed) until the
-    /// buffer empties, then resume fixed windowing.
-    flush: bool,
+    /// Next auto-assigned id for [`ServerHandle::submit_next`]. Lives
+    /// under this lock — assigning and inserting in one critical section
+    /// is what keeps auto ids ahead of the serve cursor under concurrent
+    /// flushes.
+    auto_next: u64,
+    /// A flush drains every id below this bound (partial tiles allowed);
+    /// once the cursor passes it, fixed windowing resumes.
+    flush_until: Option<u64>,
     /// Drain, then exit the serve loop.
     stop: bool,
 }
@@ -260,7 +264,6 @@ struct Shared {
 pub struct ServerHandle {
     shared: Arc<Shared>,
     ctx: usize,
-    auto_id: Arc<AtomicU64>,
 }
 
 impl ServerHandle {
@@ -286,21 +289,42 @@ impl ServerHandle {
         Ticket { slot }
     }
 
-    /// Submit with the next server-assigned id (the socket path, where
-    /// ids follow admission order). Don't mix with [`Self::submit`].
+    /// Submit with the next server-assigned id (the socket and
+    /// closed-loop paths, where ids follow admission order). The id is
+    /// assigned and the entry inserted in one queue-lock critical
+    /// section, so a concurrent [`Self::flush`] can never advance the
+    /// serve cursor past an assigned-but-not-yet-queued id. Don't mix
+    /// with [`Self::submit`].
     pub fn submit_next(&self, ctx: Vec<u8>) -> Ticket {
-        let id = self.auto_id.fetch_add(1, Ordering::Relaxed);
-        self.submit(id, ctx)
-    }
-
-    /// Close the current window early: serve everything already queued
-    /// (partial tiles allowed), then resume fixed windowing. Changes
-    /// batching only — responses are batching-invariant.
-    pub fn flush(&self) {
+        assert_eq!(ctx.len(), self.ctx, "request context must be exactly {} bytes", self.ctx);
+        let slot = Arc::new(Slot::default());
+        let entry = Entry { ctx, slot: Arc::clone(&slot), submitted: Instant::now() };
         let mut st = self.shared.mu.lock().unwrap();
-        st.flush = true;
+        let id = st.auto_next;
+        st.auto_next += 1;
+        // The cursor only ever advances past inserted ids, and auto ids
+        // are dense from 0, so `id >= st.next_id` holds by construction.
+        let prev = st.pending.insert(id, entry);
+        debug_assert!(prev.is_none(), "auto ids are unique by construction");
         drop(st);
         self.shared.cv.notify_all();
+        Ticket { slot }
+    }
+
+    /// Close the current window early: serve everything queued *at the
+    /// moment of the call* (partial tiles allowed), then resume fixed
+    /// windowing — later arrivals coalesce normally instead of degrading
+    /// to partial tiles under sustained load. Changes batching only —
+    /// responses are batching-invariant.
+    pub fn flush(&self) {
+        let mut st = self.shared.mu.lock().unwrap();
+        let last = st.pending.keys().next_back().copied();
+        if let Some(last) = last {
+            let until = last + 1;
+            st.flush_until = Some(st.flush_until.map_or(until, |u| u.max(until)));
+            drop(st);
+            self.shared.cv.notify_all();
+        }
     }
 }
 
@@ -338,7 +362,8 @@ where
         mu: Mutex::new(State {
             pending: BTreeMap::new(),
             next_id: 0,
-            flush: false,
+            auto_next: 0,
+            flush_until: None,
             stop: false,
         }),
         cv: Condvar::new(),
@@ -360,8 +385,7 @@ where
     });
     match ready_rx.recv().expect("serve thread died before reporting readiness") {
         Ok(ctx) => {
-            let handle =
-                ServerHandle { shared, ctx, auto_id: Arc::new(AtomicU64::new(0)) };
+            let handle = ServerHandle { shared, ctx };
             Ok((handle, ServerSession { join, shared: Arc::clone(&handle.shared) }))
         }
         Err(e) => {
@@ -391,10 +415,19 @@ fn serve_loop(mut server: SpectralServer, shared: &Shared) -> ServeStats {
             let mut st = shared.mu.lock().unwrap();
             loop {
                 if !st.pending.is_empty() {
+                    // A flush covers only the ids pending when it was
+                    // requested; once the cursor passes them, resume
+                    // fixed windowing instead of serving partial tiles
+                    // indefinitely under sustained load.
+                    if let Some(until) = st.flush_until {
+                        if st.next_id >= until {
+                            st.flush_until = None;
+                        }
+                    }
                     let base = st.next_id;
                     let complete =
                         (base..base + w as u64).all(|id| st.pending.contains_key(&id));
-                    if complete || st.flush || st.stop {
+                    if complete || st.flush_until.is_some() || st.stop {
                         // Complete windows are exactly ids base..base+w;
                         // flush/stop admit the smallest ≤ w pending ids
                         // (a contiguous prefix whenever ids are dense).
@@ -408,7 +441,7 @@ fn serve_loop(mut server: SpectralServer, shared: &Shared) -> ServeStats {
                         break;
                     }
                 } else {
-                    st.flush = false;
+                    st.flush_until = None;
                     if st.stop {
                         drop(st);
                         let snap = memtrack::snapshot();

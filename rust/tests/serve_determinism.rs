@@ -106,6 +106,67 @@ fn responses_are_bit_identical_across_thread_counts_and_windows() {
 }
 
 #[test]
+fn concurrent_submit_next_and_flush_do_not_race() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    // Regression: auto ids used to be assigned with an atomic *outside*
+    // the queue lock, so a flush landing between assignment and insertion
+    // advanced the serve cursor past the assigned id; the late insert
+    // then panicked under the shared mutex, poisoning it and hanging
+    // every outstanding ticket. Hammer that exact interleaving —
+    // closed-loop clients on `submit_next` against a fast periodic
+    // flusher — and check the served bits still match the reference.
+    let reference = reference();
+    let (handle, session) = spawn_session(move || mk_stack(0), 3).expect("session starts");
+    let reqs = Arc::new(requests());
+    let stop = Arc::new(AtomicBool::new(false));
+    let flusher = {
+        let h = handle.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                h.flush();
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        })
+    };
+    const CLIENTS: usize = 4;
+    const ROUNDS: usize = 8;
+    let mut workers = Vec::new();
+    for c in 0..CLIENTS {
+        let h = handle.clone();
+        let reqs = Arc::clone(&reqs);
+        workers.push(std::thread::spawn(move || {
+            let mut got = Vec::new();
+            for _ in 0..ROUNDS {
+                for i in (c..reqs.len()).step_by(CLIENTS) {
+                    let (resp, _) = h.submit_next(reqs[i].ctx.clone()).wait();
+                    got.push((i, resp));
+                }
+            }
+            got
+        }));
+    }
+    let mut total = 0usize;
+    for w in workers {
+        for (i, resp) in w.join().expect("client panicked (queue mutex poisoned?)") {
+            // Admission ids depend on timing, but responses are a pure
+            // function of the request bytes — match by content index.
+            assert_eq!(resp.next_byte, reference[i].next_byte, "request {i} next byte");
+            assert_eq!(resp.fingerprint, reference[i].fingerprint, "request {i} served bits");
+            total += 1;
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    flusher.join().expect("flusher panicked");
+    assert_eq!(total, N * ROUNDS);
+    let stats = session.shutdown();
+    assert_eq!(stats.served as usize, N * ROUNDS, "every request answered exactly once");
+    assert_eq!(stats.steady_state_allocs, 0, "steady-state serving must not allocate");
+}
+
+#[test]
 fn sync_serving_is_allocation_free_after_warmup() {
     let mut server = SpectralServer::new(mk_stack(0), 4).expect("serves");
     let reqs = requests();

@@ -69,10 +69,12 @@ fi
 # request answered, responses bit-identical across arrival orders and
 # thread counts, zero steady-state tracked allocations, the coalescing
 # ratio above the clear-regression floor, and (here) a generous p99
-# sanity budget. Writes BENCH_serve.json (p50/p99 + tokens/sec rows and
-# the coalesce_vs_single gate), uploaded next to BENCH_rdfft.json.
+# sanity budget. clients >= window so the closed-loop leg (periodic
+# flusher racing submit_next) runs in CI too. Writes BENCH_serve.json
+# (p50/p99 + tokens/sec rows and the coalesce_vs_single gate), uploaded
+# next to BENCH_rdfft.json.
 "$REPRO" slam \
-  --requests 192 --window 8 --clients 3 --threads 2 --rounds 2 \
+  --requests 192 --window 8 --clients 8 --threads 2 --rounds 2 \
   --bench BENCH_serve.json --max-p99-ms 500
 if [[ ! -s BENCH_serve.json ]]; then
   echo "ci.sh: ERROR: repro slam did not produce BENCH_serve.json" >&2
