@@ -1,0 +1,347 @@
+//! A small comment/string-aware Rust token scanner — just enough lexer
+//! for the repo's static invariant checker ([`crate::analysis::lints`]).
+//!
+//! This is deliberately **not** a full Rust lexer: it only has to
+//! classify source text into identifiers, punctuation, literals, and
+//! comments with correct line numbers, so the lint pass never mistakes
+//! the word `unwrap` inside a string or a doc comment for a call. The
+//! constructs that matter for that distinction are all handled:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments,
+//! * string / byte-string literals with escapes (`"a \" b"`, `b"…"`),
+//! * raw strings with arbitrary hash fences (`r"…"`, `r#"…"#`, `br#…`),
+//! * char literals vs lifetimes (`'x'` / `'\n'` vs `'a` in `&'a T`),
+//! * numeric literals loose enough for `0xcbf2_9ce4`, `1.5e-3`, `4.max`.
+//!
+//! Everything the lints don't need (float suffix grammar, shebangs,
+//! frontmatter) is out of scope; unknown bytes degrade to punctuation
+//! tokens rather than failing, so the pass always produces *a* stream.
+
+/// Token kind. Literal payloads are discarded (the lints only care that
+/// a region *is* a literal); comment text is kept verbatim because the
+/// `audit:` directive grammar and `SAFETY:` detection read it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`unsafe`, `fn`, `thread`, `HashMap`, …).
+    Ident(String),
+    /// Single punctuation character (`::` arrives as two `:` tokens).
+    Punct(char),
+    /// String / raw-string / byte-string / char / numeric literal.
+    Literal,
+    /// `//…` or `/*…*/` text, **without** the comment markers trimmed —
+    /// the full text between the opener and the end of line / closer.
+    Comment(String),
+}
+
+/// One token plus its position: `line` is the 1-based line the token
+/// starts on, `end_line` the line it ends on (equal except for
+/// multi-line block comments and multi-line string literals).
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Tok,
+    pub line: usize,
+    pub end_line: usize,
+}
+
+impl Token {
+    /// True for tokens that are *code* (everything but comments).
+    pub fn is_code(&self) -> bool {
+        !matches!(self.kind, Tok::Comment(_))
+    }
+
+    /// The identifier text, if this is an identifier token.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// True if this token is the given punctuation character.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Tok::Punct(c)
+    }
+}
+
+/// Tokenize `src`. Infallible: malformed input (unterminated strings or
+/// comments) simply ends the current token at EOF.
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: usize,
+    out: Vec<Token>,
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self, off: usize) -> u8 {
+        *self.b.get(self.i + off).unwrap_or(&0)
+    }
+
+    /// Advance one byte, tracking line numbers.
+    fn bump(&mut self) -> u8 {
+        let c = self.b[self.i];
+        self.i += 1;
+        if c == b'\n' {
+            self.line += 1;
+        }
+        c
+    }
+
+    fn push(&mut self, kind: Tok, start_line: usize) {
+        self.out.push(Token { kind, line: start_line, end_line: self.line });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while self.i < self.b.len() {
+            let c = self.peek(0);
+            let start = self.line;
+            match c {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek(1) == b'/' => self.line_comment(start),
+                b'/' if self.peek(1) == b'*' => self.block_comment(start),
+                b'"' => self.string(start),
+                b'\'' => self.char_or_lifetime(start),
+                b'0'..=b'9' => self.number(start),
+                b'a'..=b'z' | b'A'..=b'Z' | b'_' => self.ident(start),
+                _ => {
+                    self.bump();
+                    self.push(Tok::Punct(c as char), start);
+                }
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self, start: usize) {
+        self.bump();
+        self.bump();
+        let from = self.i;
+        while self.i < self.b.len() && self.peek(0) != b'\n' {
+            self.bump();
+        }
+        let text = String::from_utf8_lossy(&self.b[from..self.i]).into_owned();
+        self.push(Tok::Comment(text), start);
+    }
+
+    fn block_comment(&mut self, start: usize) {
+        self.bump();
+        self.bump();
+        let from = self.i;
+        let mut depth = 1usize;
+        let mut to = self.i;
+        while self.i < self.b.len() {
+            if self.peek(0) == b'/' && self.peek(1) == b'*' {
+                self.bump();
+                self.bump();
+                depth += 1;
+            } else if self.peek(0) == b'*' && self.peek(1) == b'/' {
+                to = self.i;
+                self.bump();
+                self.bump();
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                to = self.i + 1;
+                self.bump();
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[from..to.min(self.b.len())]).into_owned();
+        self.push(Tok::Comment(text), start);
+    }
+
+    /// Cooked string with `\` escapes; consumes the closing quote.
+    fn string(&mut self, start: usize) {
+        self.bump();
+        while self.i < self.b.len() {
+            match self.bump() {
+                b'\\' => {
+                    if self.i < self.b.len() {
+                        self.bump();
+                    }
+                }
+                b'"' => break,
+                _ => {}
+            }
+        }
+        self.push(Tok::Literal, start);
+    }
+
+    /// Raw string body: `###"` fence already consumed up to and including
+    /// the opening quote; scans to `"` followed by `hashes` `#`s.
+    fn raw_string_body(&mut self, hashes: usize, start: usize) {
+        while self.i < self.b.len() {
+            if self.bump() == b'"' {
+                let mut k = 0;
+                while k < hashes && self.peek(0) == b'#' {
+                    self.bump();
+                    k += 1;
+                }
+                if k == hashes {
+                    break;
+                }
+            }
+        }
+        self.push(Tok::Literal, start);
+    }
+
+    /// `'x'`, `'\n'` → char literal; `'a` (no closing quote) → lifetime,
+    /// emitted as nothing the lints care about (skipped entirely).
+    fn char_or_lifetime(&mut self, start: usize) {
+        self.bump(); // the opening quote
+        if self.peek(0) == b'\\' {
+            // escaped char literal: '\n', '\'', '\\', '\u{..}'
+            self.bump();
+            while self.i < self.b.len() && self.peek(0) != b'\'' {
+                self.bump();
+            }
+            if self.i < self.b.len() {
+                self.bump();
+            }
+            self.push(Tok::Literal, start);
+            return;
+        }
+        let is_name = self.peek(0).is_ascii_alphanumeric() || self.peek(0) == b'_';
+        if is_name && self.peek(1) != b'\'' {
+            // lifetime: consume the name, emit nothing
+            while self.peek(0).is_ascii_alphanumeric() || self.peek(0) == b'_' {
+                self.bump();
+            }
+            return;
+        }
+        // plain char literal 'x' (or the degenerate '' — consume what's there)
+        if self.i < self.b.len() {
+            self.bump();
+        }
+        if self.peek(0) == b'\'' {
+            self.bump();
+        }
+        self.push(Tok::Literal, start);
+    }
+
+    /// Loose numeric literal: digits, letters, `_`, and `.` only when
+    /// followed by a digit (so `4.max(x)` and `1..n` don't get eaten).
+    fn number(&mut self, start: usize) {
+        while self.i < self.b.len() {
+            let c = self.peek(0);
+            let take = c.is_ascii_alphanumeric()
+                || c == b'_'
+                || (c == b'.' && self.peek(1).is_ascii_digit());
+            if !take {
+                break;
+            }
+            self.bump();
+        }
+        self.push(Tok::Literal, start);
+    }
+
+    fn ident(&mut self, start: usize) {
+        let from = self.i;
+        while self.i < self.b.len() {
+            let c = self.peek(0);
+            if c.is_ascii_alphanumeric() || c == b'_' {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        let name = String::from_utf8_lossy(&self.b[from..self.i]).into_owned();
+        // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#, rb…
+        match name.as_str() {
+            "r" | "br" | "rb" if self.peek(0) == b'"' || self.peek(0) == b'#' => {
+                let mut hashes = 0;
+                while self.peek(0) == b'#' {
+                    self.bump();
+                    hashes += 1;
+                }
+                if self.peek(0) == b'"' {
+                    self.bump();
+                    self.raw_string_body(hashes, start);
+                } else {
+                    // `r#ident` raw identifier: the hashes were consumed;
+                    // fall through by emitting the prefix as an ident
+                    // (the raw-ident name will lex as its own ident next).
+                    self.push(Tok::Ident(name), start);
+                }
+            }
+            "b" if self.peek(0) == b'"' => {
+                // `string` consumes the opening quote itself.
+                self.string(start);
+            }
+            "b" if self.peek(0) == b'\'' => {
+                self.char_or_lifetime(start);
+            }
+            _ => self.push(Tok::Ident(name), start),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_identifiers() {
+        let src = r##"
+            let a = "unsafe lock unwrap"; // unsafe in a comment
+            /* thread::spawn in a block
+               comment */
+            let b = r#"HashMap::new() in a raw string"#;
+            let c = 'x';
+            fn f<'a>(p: &'a str) {}
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|s| s == "unsafe"));
+        assert!(!ids.iter().any(|s| s == "thread"));
+        assert!(!ids.iter().any(|s| s == "HashMap"));
+        assert!(ids.iter().any(|s| s == "fn"));
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_tokens() {
+        let src = "a\n/* x\ny */\nb";
+        let toks = lex(src);
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[1].end_line, 3);
+        assert_eq!(toks[2].line, 4);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let toks = lex("/* outer /* inner */ still comment */ code");
+        assert!(matches!(toks[0].kind, Tok::Comment(_)));
+        assert_eq!(toks[1].ident(), Some("code"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_method_calls_or_ranges() {
+        let ids = idents("let x = 4.max(1); for i in 0..n {}");
+        assert!(ids.iter().any(|s| s == "max"));
+        assert!(ids.iter().any(|s| s == "n"));
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_the_string() {
+        let toks = lex(r#"let s = "a \" unsafe"; done"#);
+        assert!(toks.iter().any(|t| t.ident() == Some("done")));
+        assert!(!toks.iter().any(|t| t.ident() == Some("unsafe")));
+    }
+}

@@ -1,0 +1,481 @@
+//! The repo's static invariant checker: five repo-specific lints over
+//! the token stream of [`crate::analysis::lexer`], plus the suppression
+//! / marker grammar. Everything here is pure (`&str` in, findings out)
+//! so the fixture tests can feed inline snippets through the exact code
+//! path `repro audit` runs on the real tree.
+//!
+//! Lints
+//! -----
+//! * `unsafe-needs-safety-comment` — every `unsafe` occurrence (block,
+//!   fn, impl, trait) must carry a `SAFETY:` comment or a `# Safety`
+//!   doc section on the same line or in the contiguous comment /
+//!   attribute block directly above it.
+//! * `no-raw-threads` — `std::thread::{spawn, scope, Builder}` is
+//!   forbidden outside `runtime/pool.rs` (the pool owns all compute
+//!   threads) and `runtime/server.rs::spawn_session` (the one dedicated
+//!   serve thread). Bypassing [`ExecCtx`](crate::runtime::pool::ExecCtx)
+//!   breaks memtrack worker accounting and the bit-identity contracts.
+//! * `lock-poison-policy` — `.lock()/.read()/.write()` immediately
+//!   chained with `.unwrap()/.expect()` is forbidden; recover from
+//!   poison with `unwrap_or_else(|p| p.into_inner())` (the PR 3
+//!   plan-cache policy) so a panicking holder can't wedge waiters.
+//! * `no-alloc-in-hot-path` — a fn whose signature is preceded by the
+//!   `no_alloc` marker (see below) must contain no allocation
+//!   constructs: `Vec::new`, `vec![…]`, `with_capacity`, `to_vec`,
+//!   `.collect`, `Box::new`, `format!`, `.clone()`. This is the static
+//!   complement of the memtrack `steady_state_allocs == 0` runtime gate.
+//! * `determinism-lint` — `HashMap`/`HashSet` (iteration order),
+//!   `Instant`/`SystemTime` (timing), and entropy-seeded RNG constructs
+//!   are forbidden in the result-affecting modules: `rdfft/`,
+//!   `autograd/`, and `runtime/server.rs`.
+//!
+//! Directive grammar (comments whose trimmed text starts with the word
+//! "audit" followed by a colon):
+//!
+//! ```text
+//! // audit: no_alloc                      marker: next fn is a hot path
+//! // audit: allow(<lint-name>) <reason>   suppress <lint-name> findings
+//! //                                      on this line (trailing) or on
+//! //                                      the next code line (standalone)
+//! ```
+//!
+//! A reason-less `allow` — or one naming an unknown lint — is itself a
+//! violation (`allow-needs-reason`), and cannot be suppressed.
+
+use crate::analysis::lexer::{lex, Tok, Token};
+
+/// Canonical lint names, as they appear in `allow(...)` and AUDIT.json.
+pub const LINT_UNSAFE: &str = "unsafe-needs-safety-comment";
+pub const LINT_THREADS: &str = "no-raw-threads";
+pub const LINT_LOCK: &str = "lock-poison-policy";
+pub const LINT_ALLOC: &str = "no-alloc-in-hot-path";
+pub const LINT_DETERMINISM: &str = "determinism-lint";
+/// Meta-lint: malformed suppression (missing reason / unknown lint).
+pub const LINT_BAD_ALLOW: &str = "allow-needs-reason";
+
+/// Every suppressible lint (what `allow(...)` may name).
+pub const SUPPRESSIBLE: [&str; 5] =
+    [LINT_UNSAFE, LINT_THREADS, LINT_LOCK, LINT_ALLOC, LINT_DETERMINISM];
+
+/// One unsuppressed violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub message: String,
+}
+
+/// One violation silenced by a well-formed `allow` — kept in the report
+/// so AUDIT.json records every waiver together with its reason.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Suppression {
+    pub file: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub reason: String,
+}
+
+/// Per-file analysis result.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppression>,
+}
+
+/// A parsed `allow` directive: which lint it silences, the code line it
+/// targets, and the mandatory reason.
+struct Allow {
+    lint: &'static str,
+    target: Option<usize>,
+    reason: String,
+}
+
+/// Analyze one source text. `path_label` is the (repo-relative or
+/// absolute) path used for reporting *and* for the path-scoped rules:
+/// the `no-raw-threads` allowlist and the `determinism-lint` module
+/// scope both match on it, so fixture tests pick their scope by label.
+pub fn analyze_source(path_label: &str, src: &str) -> FileReport {
+    let norm = path_label.replace('\\', "/");
+    let tokens = lex(src);
+    let lines = Lines::build(src, &tokens);
+
+    let mut report = FileReport::default();
+    let mut allows: Vec<Allow> = Vec::new();
+
+    for t in &tokens {
+        let Tok::Comment(text) = &t.kind else { continue };
+        match parse_directive(text) {
+            Directive::None => {}
+            // Markers are re-discovered by lookback inside `scan`; no
+            // side table needed here.
+            Directive::NoAlloc => {}
+            Directive::Allow { lint, reason } => allows.push(Allow {
+                lint,
+                target: lines.directive_target(t.line, t.end_line),
+                reason,
+            }),
+            Directive::Malformed(why) => report.findings.push(Finding {
+                file: path_label.to_string(),
+                line: t.line,
+                lint: LINT_BAD_ALLOW,
+                message: why,
+            }),
+        }
+    }
+
+    let raw = scan(&norm, &tokens, &lines);
+
+    // Split raw findings into suppressed vs live: a well-formed allow
+    // silences same-lint findings on its target line.
+    for f in raw {
+        let hit = allows.iter().find(|a| a.lint == f.lint && a.target == Some(f.line));
+        match hit {
+            Some(a) => report.suppressed.push(Suppression {
+                file: path_label.to_string(),
+                line: f.line,
+                lint: f.lint,
+                reason: a.reason.clone(),
+            }),
+            None => report.findings.push(Finding {
+                file: path_label.to_string(),
+                line: f.line,
+                lint: f.lint,
+                message: f.message,
+            }),
+        }
+    }
+    report.findings.sort_by_key(|f| f.line);
+    report.suppressed.sort_by_key(|s| s.line);
+    report
+}
+
+/// A raw (not yet file-labelled) finding from the token scan.
+struct RawFinding {
+    line: usize,
+    lint: &'static str,
+    message: String,
+}
+
+enum Directive {
+    None,
+    NoAlloc,
+    Allow { lint: &'static str, reason: String },
+    Malformed(String),
+}
+
+/// Parse a comment body for an audit directive. Only comments whose
+/// trimmed text *starts* with the directive keyword participate, so
+/// prose that merely mentions the grammar (like this module's docs)
+/// never becomes a directive by accident.
+fn parse_directive(text: &str) -> Directive {
+    // Doc comments arrive as "/ …" / "! …" (the third slash / bang is
+    // part of the captured text); strip those before matching.
+    let t = text.trim_start_matches(['/', '!']).trim();
+    let Some(rest) = t.strip_prefix("audit:") else {
+        return Directive::None;
+    };
+    let rest = rest.trim();
+    if rest == "no_alloc" || rest.starts_with("no_alloc ") {
+        return Directive::NoAlloc;
+    }
+    if let Some(after) = rest.strip_prefix("allow(") {
+        let Some(close) = after.find(')') else {
+            return Directive::Malformed("audit: allow(...) is missing its `)`".to_string());
+        };
+        let name = after[..close].trim();
+        let reason = after[close + 1..].trim();
+        let Some(lint) = SUPPRESSIBLE.iter().find(|l| **l == name) else {
+            return Directive::Malformed(format!(
+                "audit: allow names unknown lint {name:?} (known: {})",
+                SUPPRESSIBLE.join(", ")
+            ));
+        };
+        if reason.is_empty() {
+            return Directive::Malformed(format!(
+                "audit: allow({lint}) needs a reason — a bare waiver is itself a violation"
+            ));
+        }
+        return Directive::Allow { lint, reason: reason.to_string() };
+    }
+    Directive::Malformed(format!(
+        "unrecognized audit directive {rest:?} (expected `no_alloc` or `allow(<lint>) <reason>`)"
+    ))
+}
+
+/// Per-line classification tables used by directive targeting and the
+/// SAFETY / marker lookback.
+struct Lines {
+    n: usize,
+    /// Line has at least one non-comment token.
+    code: Vec<bool>,
+    /// Line's first code token is `#` (an attribute line).
+    attr: Vec<bool>,
+    /// Comment indices (into the token list) overlapping each line.
+    comments: Vec<Vec<usize>>,
+    /// Token-list indices of comments, to read their text back.
+    texts: Vec<String>,
+}
+
+impl Lines {
+    fn build(src: &str, tokens: &[Token]) -> Lines {
+        let n = src.lines().count().max(tokens.iter().map(|t| t.end_line).max().unwrap_or(0));
+        let mut code = vec![false; n + 2];
+        let mut attr = vec![false; n + 2];
+        let mut seen_code = vec![false; n + 2];
+        let mut comments = vec![Vec::new(); n + 2];
+        let mut texts = Vec::new();
+        for t in tokens {
+            match &t.kind {
+                Tok::Comment(text) => {
+                    let idx = texts.len();
+                    texts.push(text.clone());
+                    for l in t.line..=t.end_line.min(n + 1) {
+                        comments[l].push(idx);
+                    }
+                }
+                kind => {
+                    for l in t.line..=t.end_line.min(n + 1) {
+                        if !seen_code[l] {
+                            seen_code[l] = true;
+                            attr[l] = matches!(kind, Tok::Punct('#'));
+                        }
+                        code[l] = true;
+                    }
+                }
+            }
+        }
+        Lines { n, code, attr, comments, texts }
+    }
+
+    /// The code line a standalone directive comment governs: the
+    /// comment's own line if it trails code, else the next code line
+    /// (skipping blanks, further comments, and attribute lines).
+    fn directive_target(&self, start: usize, end: usize) -> Option<usize> {
+        if self.code.get(start).copied().unwrap_or(false) {
+            return Some(start);
+        }
+        let mut l = end + 1;
+        while l <= self.n {
+            if self.code[l] && !self.attr[l] {
+                return Some(l);
+            }
+            if self.code[l] && self.attr[l] {
+                l += 1;
+                continue;
+            }
+            l += 1; // blank or comment-only
+        }
+        None
+    }
+
+    /// True if `pred` matches any comment on `line` itself or in the
+    /// contiguous run of blank / comment-only / attribute lines directly
+    /// above it. This is how `SAFETY:` comments, `# Safety` doc
+    /// sections, and `no_alloc` markers attach to the code below them —
+    /// attributes like `#[inline(always)]` between a doc block and its
+    /// fn are skipped, matching rustdoc's attachment rules.
+    fn lookback(&self, line: usize, pred: impl Fn(&str) -> bool) -> bool {
+        let check = |l: usize| -> bool {
+            self.comments.get(l).map_or(false, |ids| ids.iter().any(|&i| pred(&self.texts[i])))
+        };
+        if check(line) {
+            return true;
+        }
+        let mut l = line;
+        while l > 1 {
+            l -= 1;
+            if check(l) {
+                return true;
+            }
+            let blank = !self.code[l] && self.comments[l].is_empty();
+            let comment_only = !self.code[l] && !self.comments[l].is_empty();
+            let attr_only = self.code[l] && self.attr[l];
+            if !(blank || comment_only || attr_only) {
+                return false; // hit real code: the contiguous block ended
+            }
+        }
+        false
+    }
+}
+
+fn has_safety_text(c: &str) -> bool {
+    c.contains("SAFETY") || c.contains("# Safety")
+}
+
+/// Is `path` inside the determinism-scoped modules?
+fn determinism_scope(norm: &str) -> bool {
+    (norm.contains("rdfft/") || norm.contains("autograd/") || norm.ends_with("runtime/server.rs"))
+        && !norm.contains("tests/")
+}
+
+/// The token-stream scan: all five lints in one pass, tracking brace
+/// depth and the enclosing-fn stack (for the `spawn_session` carve-out
+/// and the `no_alloc` fn bodies).
+fn scan(norm: &str, tokens: &[Token], lines: &Lines) -> Vec<RawFinding> {
+    let ct: Vec<&Token> = tokens.iter().filter(|t| t.is_code()).collect();
+    // A marker governs the fn whose signature starts at `line` when it
+    // sits on that line or in the contiguous block above it.
+    let marker_at =
+        |line: usize| lines.lookback(line, |c| matches!(parse_directive(c), Directive::NoAlloc));
+    let in_det_scope = determinism_scope(norm);
+    let pool_file = norm.ends_with("runtime/pool.rs");
+    let server_file = norm.ends_with("runtime/server.rs");
+
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    // (name, body depth, is_no_alloc) for each entered fn body.
+    let mut fn_stack: Vec<(String, usize, bool)> = Vec::new();
+    let mut pending_fn: Option<(String, bool)> = None;
+
+    let ident = |i: usize| -> &str { ct.get(i).and_then(|t| t.ident()).unwrap_or("") };
+    let punct = |i: usize, c: char| -> bool { ct.get(i).map_or(false, |t| t.is_punct(c)) };
+
+    for i in 0..ct.len() {
+        let t = ct[i];
+        match &t.kind {
+            Tok::Punct('{') => {
+                depth += 1;
+                if let Some((name, no_alloc)) = pending_fn.take() {
+                    fn_stack.push((name, depth, no_alloc));
+                }
+            }
+            Tok::Punct('}') => {
+                if fn_stack.last().map_or(false, |(_, d, _)| *d == depth) {
+                    fn_stack.pop();
+                }
+                depth = depth.saturating_sub(1);
+            }
+            Tok::Punct(';') => {
+                pending_fn = None; // trait method declaration without body
+            }
+            Tok::Punct('.') => {
+                // lock-poison-policy: `.lock().unwrap()` and friends.
+                let m = ident(i + 1);
+                if matches!(m, "lock" | "read" | "write")
+                    && punct(i + 2, '(')
+                    && punct(i + 3, ')')
+                    && punct(i + 4, '.')
+                    && matches!(ident(i + 5), "unwrap" | "expect")
+                {
+                    out.push(RawFinding {
+                        line: ct[i + 1].line,
+                        lint: LINT_LOCK,
+                        message: format!(
+                            ".{m}().{}() can wedge waiters if the holder panicked — \
+                             recover with unwrap_or_else(|p| p.into_inner())",
+                            ident(i + 5)
+                        ),
+                    });
+                }
+                if let Some((name, _, true)) = fn_stack.last() {
+                    // no-alloc-in-hot-path: `.collect` / `.clone()`.
+                    if ident(i + 1) == "collect" {
+                        out.push(alloc_finding(ct[i + 1].line, ".collect", name));
+                    }
+                    if ident(i + 1) == "clone" && punct(i + 2, '(') && punct(i + 3, ')') {
+                        out.push(alloc_finding(ct[i + 1].line, ".clone()", name));
+                    }
+                }
+            }
+            Tok::Ident(w) => match w.as_str() {
+                "fn" => {
+                    if let Some(name) = ct.get(i + 1).and_then(|t| t.ident()) {
+                        pending_fn = Some((name.to_string(), marker_at(t.line)));
+                    }
+                }
+                "unsafe" => {
+                    if !lines.lookback(t.line, has_safety_text) {
+                        out.push(RawFinding {
+                            line: t.line,
+                            lint: LINT_UNSAFE,
+                            message: "unsafe without a SAFETY: comment or `# Safety` doc \
+                                      section in the contiguous comment/attribute block above"
+                                .to_string(),
+                        });
+                    }
+                }
+                "thread" => {
+                    if punct(i + 1, ':')
+                        && punct(i + 2, ':')
+                        && matches!(ident(i + 3), "spawn" | "scope" | "Builder")
+                    {
+                        let in_spawn_session = server_file
+                            && fn_stack.iter().any(|(n, _, _)| n == "spawn_session");
+                        if !pool_file && !in_spawn_session {
+                            out.push(RawFinding {
+                                line: t.line,
+                                lint: LINT_THREADS,
+                                message: format!(
+                                    "raw std::thread::{} outside runtime/pool.rs / \
+                                     spawn_session — route compute through ExecCtx so \
+                                     memtrack accounting and bit-identity hold",
+                                    ident(i + 3)
+                                ),
+                            });
+                        }
+                    }
+                }
+                "Vec" | "Box" => {
+                    if let Some((name, _, true)) = fn_stack.last() {
+                        if punct(i + 1, ':') && punct(i + 2, ':') && ident(i + 3) == "new" {
+                            out.push(alloc_finding(t.line, &format!("{w}::new"), name));
+                        }
+                    }
+                }
+                "with_capacity" | "to_vec" => {
+                    if let Some((name, _, true)) = fn_stack.last() {
+                        out.push(alloc_finding(t.line, w, name));
+                    }
+                }
+                "vec" | "format" => {
+                    if let Some((name, _, true)) = fn_stack.last() {
+                        if punct(i + 1, '!') {
+                            out.push(alloc_finding(t.line, &format!("{w}!"), name));
+                        }
+                    }
+                }
+                "HashMap" | "HashSet" => {
+                    if in_det_scope {
+                        out.push(det_finding(t.line, w, "iteration order is nondeterministic"));
+                    }
+                }
+                "Instant" | "SystemTime" => {
+                    if in_det_scope {
+                        out.push(det_finding(t.line, w, "wall-clock time must not reach results"));
+                    }
+                }
+                "thread_rng" | "ThreadRng" | "OsRng" | "from_entropy" | "getrandom" => {
+                    if in_det_scope {
+                        out.push(det_finding(t.line, w, "entropy-seeded RNG breaks replay"));
+                    }
+                }
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+    out
+}
+
+fn alloc_finding(line: usize, construct: &str, fn_name: &str) -> RawFinding {
+    RawFinding {
+        line,
+        lint: LINT_ALLOC,
+        message: format!(
+            "allocation construct `{construct}` inside no_alloc fn `{fn_name}` — hot paths \
+             must reuse caller-owned buffers (memtrack steady_state_allocs == 0)"
+        ),
+    }
+}
+
+fn det_finding(line: usize, what: &str, why: &str) -> RawFinding {
+    RawFinding {
+        line,
+        lint: LINT_DETERMINISM,
+        message: format!(
+            "`{what}` in a determinism-scoped module ({why}); results must be a pure \
+             function of (parameters, inputs)"
+        ),
+    }
+}

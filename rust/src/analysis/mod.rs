@@ -1,0 +1,216 @@
+//! Dependency-free static analysis over the repo's own sources —
+//! `repro audit`.
+//!
+//! The paper's core claims (fully in-place transforms, zero-allocation
+//! hot paths, bit-identical results at any thread count) are enforced
+//! dynamically by memtrack gates and the differential suites — but only
+//! *when the code runs*. This module makes the load-bearing invariants
+//! checkable without running anything: a comment/string-aware token
+//! scanner ([`lexer`]) feeds a lint engine ([`lints`]) with five
+//! repo-specific rules (unsafe hygiene, thread discipline, lock-poison
+//! recovery, hot-path allocation bans, determinism scoping), and this
+//! module walks `rust/src` + `rust/tests`, aggregates per-file reports,
+//! and renders them human-readable plus machine-readable (`AUDIT.json`).
+//! `scripts/ci.sh` runs it as a hard gate before the test suite.
+
+pub mod lexer;
+pub mod lints;
+
+pub use lints::{analyze_source, FileReport, Finding, Suppression};
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Aggregated result of auditing a set of root directories.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    /// The roots that were walked (as given).
+    pub roots: Vec<PathBuf>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Unsuppressed violations — any entry here fails the gate.
+    pub findings: Vec<Finding>,
+    /// Violations waived by a well-formed `audit: allow(..) <reason>`.
+    pub suppressed: Vec<Suppression>,
+}
+
+impl AuditReport {
+    /// True when the tree passes: zero unsuppressed violations (a
+    /// reason-less allow counts as a violation, so it fails too).
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable rendering: one line per violation, then a summary
+    /// (suppression count included so waivers stay visible).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            let _ = writeln!(s, "{}:{}: [{}] {}", f.file, f.line, f.lint, f.message);
+        }
+        let _ = writeln!(
+            s,
+            "[audit] {} file(s), {} violation(s), {} suppression(s){}",
+            self.files,
+            self.findings.len(),
+            self.suppressed.len(),
+            if self.clean() { " — clean" } else { "" },
+        );
+        s
+    }
+
+    /// Machine-readable rendering (`AUDIT.json`, schema `audit/v1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"audit/v1\",\n  \"roots\": [");
+        for (i, r) in self.roots.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let _ = write!(s, "{}", json_str(&r.to_string_lossy()));
+        }
+        let _ = write!(
+            s,
+            "],\n  \"files_scanned\": {},\n  \"violations\": {},\n  \"suppressions\": {},\n",
+            self.files,
+            self.findings.len(),
+            self.suppressed.len()
+        );
+        s.push_str("  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            s.push_str(if i > 0 { ",\n    " } else { "\n    " });
+            let _ = write!(
+                s,
+                "{{\"file\": {}, \"line\": {}, \"lint\": {}, \"message\": {}}}",
+                json_str(&f.file),
+                f.line,
+                json_str(f.lint),
+                json_str(&f.message)
+            );
+        }
+        s.push_str(if self.findings.is_empty() { "],\n" } else { "\n  ],\n" });
+        s.push_str("  \"suppressed\": [");
+        for (i, p) in self.suppressed.iter().enumerate() {
+            s.push_str(if i > 0 { ",\n    " } else { "\n    " });
+            let _ = write!(
+                s,
+                "{{\"file\": {}, \"line\": {}, \"lint\": {}, \"reason\": {}}}",
+                json_str(&p.file),
+                p.line,
+                json_str(p.lint),
+                json_str(&p.reason)
+            );
+        }
+        s.push_str(if self.suppressed.is_empty() { "]\n}\n" } else { "\n  ]\n}\n" });
+        s
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Audit every `.rs` file under the given roots. Missing roots are
+/// skipped silently (e.g. a crate without a `tests/` directory); at
+/// least one root must exist or this errors.
+pub fn audit_paths(roots: &[PathBuf]) -> io::Result<AuditReport> {
+    let mut report = AuditReport { roots: roots.to_vec(), ..Default::default() };
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut any_root = false;
+    for root in roots {
+        if root.is_dir() {
+            any_root = true;
+            collect_rs_files(root, &mut files)?;
+        }
+    }
+    if !any_root {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("no audit roots exist among {roots:?}"),
+        ));
+    }
+    files.sort();
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let label = path.to_string_lossy();
+        let fr = analyze_source(&label, &src);
+        report.files += 1;
+        report.findings.extend(fr.findings);
+        report.suppressed.extend(fr.suppressed);
+    }
+    Ok(report)
+}
+
+/// Recursively collect `.rs` files. The caller sorts the combined list,
+/// so report order is deterministic regardless of directory iteration
+/// order.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map_or(false, |e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Resolve the default audit roots relative to `base`: the repo layout
+/// (`rust/src` + `rust/tests`) when invoked from the repo root, or the
+/// crate layout (`src` + `tests`) when invoked from inside `rust/`.
+pub fn default_roots(base: &Path) -> io::Result<Vec<PathBuf>> {
+    let repo = [base.join("rust/src"), base.join("rust/tests")];
+    if repo[0].is_dir() {
+        return Ok(repo.to_vec());
+    }
+    let krate = [base.join("src"), base.join("tests")];
+    if krate[0].is_dir() {
+        return Ok(krate.to_vec());
+    }
+    Err(io::Error::new(
+        io::ErrorKind::NotFound,
+        format!(
+            "no sources to audit under {} (expected rust/src or src; pass --root DIR)",
+            base.display()
+        ),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_quotes_and_controls() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn report_json_is_well_formed_when_empty() {
+        let r = AuditReport::default();
+        let j = r.to_json();
+        assert!(j.contains("\"schema\": \"audit/v1\""));
+        assert!(j.contains("\"findings\": []"));
+        assert!(j.contains("\"suppressed\": []"));
+    }
+}

@@ -597,6 +597,7 @@ impl SpectralStack {
     /// are bit-identical no matter which other requests share the tile,
     /// in which order requests arrived, or how many pool threads ran the
     /// engine — the serve determinism contract.
+    // audit: no_alloc
     pub fn infer_forward(&self, ctx_bytes: &[u8], arena: &mut InferArena) {
         assert_eq!(
             ctx_bytes.len(),

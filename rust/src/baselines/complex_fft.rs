@@ -91,7 +91,11 @@ fn twiddle_table(n: usize, inverse: bool) -> std::sync::Arc<Vec<Complex>> {
     use std::sync::{Arc, Mutex, OnceLock};
     static CACHE: OnceLock<Mutex<HashMap<(usize, bool), Arc<Vec<Complex>>>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut map = cache.lock().unwrap();
+    // Poison recovery per the plan-cache policy: entries are inserted
+    // whole (`or_insert_with` of a finished Arc), so the map is valid
+    // even if a racing thread panicked — don't fail every later baseline
+    // transform over it.
+    let mut map = cache.lock().unwrap_or_else(|p| p.into_inner());
     map.entry((n, inverse))
         .or_insert_with(|| {
             let sign = if inverse { 1.0f64 } else { -1.0f64 };

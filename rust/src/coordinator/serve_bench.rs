@@ -218,6 +218,7 @@ fn run_open_loop(
     for c in 0..clients {
         let h = handle.clone();
         let reqs = Arc::clone(reqs);
+        // audit: allow(no-raw-threads) load-generator clients must be real concurrent submitters outside the pool they measure
         submitters.push(std::thread::spawn(move || {
             let mut ids: Vec<usize> = (c..reqs.len()).step_by(clients).collect();
             if order == SubmitOrder::Reverse {
@@ -278,6 +279,7 @@ fn run_closed_loop(
     for c in 0..clients {
         let h = handle.clone();
         let reqs = Arc::clone(reqs);
+        // audit: allow(no-raw-threads) closed-loop clients must be real concurrent submitters outside the pool they measure
         workers.push(std::thread::spawn(move || {
             let mut out = Vec::new();
             for i in (c..reqs.len()).step_by(clients) {
@@ -294,6 +296,7 @@ fn run_closed_loop(
     let flusher_handle = handle.clone();
     let stop_flusher = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let stop = Arc::clone(&stop_flusher);
+    // audit: allow(no-raw-threads) the periodic flusher is harness plumbing racing the batcher on purpose; it never computes
     let flusher = std::thread::spawn(move || {
         while !stop.load(std::sync::atomic::Ordering::Relaxed) {
             std::thread::sleep(Duration::from_millis(2));

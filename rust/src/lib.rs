@@ -33,10 +33,15 @@
 //! * [`coordinator`] — the L3 training orchestrator: training loop, metrics,
 //!   evaluation, and the experiment drivers that regenerate every table and
 //!   figure of the paper.
+//! * [`analysis`] — the repo's own static invariant checker (`repro audit`):
+//!   a dependency-free Rust token scanner + lint engine enforcing unsafe
+//!   hygiene, thread/lock discipline, zero-alloc hot-path markers, and
+//!   determinism scoping across `rust/src` + `rust/tests`.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! measured-vs-paper results.
 
+pub mod analysis;
 pub mod autograd;
 pub mod baselines;
 pub mod coordinator;

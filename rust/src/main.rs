@@ -9,7 +9,8 @@
 //! repro table3                  operator runtime + accuracy
 //! repro table4  [--fast]        throughput + task-accuracy parity
 //! repro fig2    [--d D] [--fast] memory breakdown at peak
-//! repro audit                   zero-allocation audit
+//! repro audit   [--json AUDIT.json] static invariant checker
+//! repro alloc-audit             zero-allocation audit (dynamic)
 //! repro report                  run everything (fast variants)
 //! ```
 //!
@@ -113,7 +114,13 @@ fn usage() -> ! {
            table3   operator runtime + accuracy\n\
            table4   throughput + accuracy parity    [--fast]\n\
            fig2     memory breakdown at peak        [--d D=1024] [--fast]\n\
-           audit    zero-allocation audit\n\
+           audit    static invariant checker over rust/src + rust/tests\n\
+                    (unsafe hygiene, no raw threads, lock-poison policy,\n\
+                    no_alloc hot-path markers, determinism lints); exits\n\
+                    non-zero on any unsuppressed violation\n\
+                    [--json FILE]  machine-readable AUDIT.json report\n\
+                    [--root DIR]   audit DIR instead of auto-detecting\n\
+           alloc-audit  zero-allocation audit (dynamic memtrack probe)\n\
            optim    optimizer-state memory ablation\n\
            engine   batch-engine throughput ablation [--fast]\n\
                     [--force-scalar]  pin the legacy scalar kernels\n\
@@ -491,6 +498,35 @@ fn cmd_crashtest(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro audit`: the static invariant checker (`rdfft::analysis`) over
+/// the repo's own sources. Prints one line per unsuppressed violation,
+/// optionally writes the machine-readable AUDIT.json, and exits
+/// non-zero unless the tree is clean — `scripts/ci.sh` runs this as a
+/// hard gate before the test suite.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let roots = match args.get("root") {
+        Some(dir) => vec![PathBuf::from(dir)],
+        None => {
+            if args.has("root") {
+                bail!("--root expects a directory");
+            }
+            rdfft::analysis::default_roots(Path::new("."))?
+        }
+    };
+    let report = rdfft::analysis::audit_paths(&roots)?;
+    print!("{}", report.render());
+    if let Some(json) = args.get("json") {
+        std::fs::write(json, report.to_json())?;
+        println!("[audit] wrote {json}");
+    } else if args.has("json") {
+        bail!("--json expects a file path");
+    }
+    if !report.clean() {
+        bail!("audit found {} unsuppressed violation(s)", report.findings.len());
+    }
+    Ok(())
+}
+
 /// `repro serve`: run the micro-batching inference server on a TCP
 /// socket. The session (model + arena) lives on a dedicated serve
 /// thread; connection threads only parse lines and park on tickets, so
@@ -592,7 +628,8 @@ fn main() -> Result<()> {
         "table3" => experiments::table3(),
         "table4" => experiments::table4(args.has("fast")),
         "fig2" => experiments::fig2(args.get_num("d", 1024)?, args.has("fast")),
-        "audit" => experiments::alloc_audit(),
+        "audit" => cmd_audit(&args)?,
+        "alloc-audit" => experiments::alloc_audit(),
         "optim" => experiments::optim_ablation(),
         "engine" => {
             if !experiments::bench_rdfft_engine(args.has("fast")) {

@@ -604,6 +604,7 @@ fn dispatch_rows<J>(
             chunk_out,
             job,
         ),
+        // audit: allow(no-raw-threads) the scoped arm is the differential oracle the pool path is verified against; it must stay on std scoped threads
         Dispatch::Scoped => std::thread::scope(|s| {
             let (ri, ro) = split_chunks(input, out, chunk_in, chunk_out, |ci, co| {
                 s.spawn(move || job(ci, co));
@@ -693,6 +694,7 @@ pub fn forward_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
 
 /// [`forward_rows`] on an explicit kernel arm (what `run_batch` resolves
 /// from [`EngineConfig::force_scalar`]).
+// audit: no_alloc
 pub fn forward_rows_with(plan: &Plan, buf: &mut [f32], tile_rows: usize, kern: Kernels) {
     let n = plan.n();
     // Pass 1 (per row): fused bit-reversal + stages m = 1, 2. Trivial
@@ -717,6 +719,7 @@ pub fn inverse_rows(plan: &Plan, buf: &mut [f32], tile_rows: usize) {
 }
 
 /// [`inverse_rows`] on an explicit kernel arm.
+// audit: no_alloc
 pub fn inverse_rows_with(plan: &Plan, buf: &mut [f32], tile_rows: usize, kern: Kernels) {
     let n = plan.n();
     if n > 4 {
@@ -744,6 +747,7 @@ pub fn inverse_rows_with(plan: &Plan, buf: &mut [f32], tile_rows: usize, kern: K
 /// the block again (a swap touches `i'` and `rev(i') > i'` only). The two
 /// trivial-twiddle stages can therefore run on the block immediately,
 /// while its values are hot.
+// audit: no_alloc
 pub fn fused_bitrev_stage12(plan: &Plan, row: &mut [f32]) {
     let n = plan.n();
     debug_assert_eq!(row.len(), n);
@@ -779,6 +783,7 @@ pub fn fused_bitrev_stage12(plan: &Plan, row: &mut [f32]) {
 /// One pass over `row`: undo stage m = 2 then m = 1 (the exact inverse of
 /// the butterfly half of [`fused_bitrev_stage12`]; the caller applies the
 /// bit-reversal afterwards).
+// audit: no_alloc
 pub fn fused_inverse_stage21(row: &mut [f32], n: usize) {
     debug_assert_eq!(row.len(), n);
     if n == 2 {
@@ -814,6 +819,7 @@ pub fn fused_inverse_stage21(row: &mut [f32], n: usize) {
 /// the quad split never reorders any per-element op — the portable lane
 /// arm stays bit-identical to the scalar one; only FMA contraction on
 /// the AVX arm can differ (within the documented tolerance).
+// audit: no_alloc
 fn forward_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
     let n = plan.n();
     let rows = tile.len() / n;
@@ -887,6 +893,7 @@ fn forward_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
 
 /// Inverse stages m = n/2 .. 4 over a tile of rows, batch-major (same
 /// two-arm structure as [`forward_stages_tile`]).
+// audit: no_alloc
 fn inverse_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
     let n = plan.n();
     let rows = tile.len() / n;
@@ -951,6 +958,7 @@ fn inverse_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
 ///
 /// # Safety
 /// `blk` must have length `two_m` and `1 <= k < m/2` with `two_m = 2*m`.
+// audit: no_alloc
 #[inline(always)]
 unsafe fn bf4_forward(blk: &mut [f32], m: usize, two_m: usize, k: usize, wr: f32, wi: f32) {
     debug_assert!(k >= 1 && k < m / 2 && blk.len() == two_m);
@@ -971,6 +979,7 @@ unsafe fn bf4_forward(blk: &mut [f32], m: usize, two_m: usize, k: usize, wr: f32
 ///
 /// # Safety
 /// `blk` must have length `two_m` and `1 <= k < m/2` with `two_m = 2*m`.
+// audit: no_alloc
 #[inline(always)]
 unsafe fn bf4_inverse(blk: &mut [f32], m: usize, two_m: usize, k: usize, hr: f32, hi: f32) {
     debug_assert!(k >= 1 && k < m / 2 && blk.len() == two_m);
@@ -1414,6 +1423,7 @@ mod tests {
         // A thread that panics after touching the plan cache and the
         // engine must not poison anything for later transforms
         // (regression for the plan-cache RwLock poisoning bug).
+        // audit: allow(no-raw-threads) the test needs a raw thread precisely so its panic cannot touch the pool
         let joined = std::thread::spawn(|| {
             let plan = cached(64);
             let mut buf = vec![0.25f32; 64 * 4];

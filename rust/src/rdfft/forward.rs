@@ -21,6 +21,7 @@ use super::plan::Plan;
 
 /// Transform `buf` (length `plan.n()`) from a real signal to the packed
 /// spectrum, in place.
+// audit: no_alloc
 pub fn rdfft_inplace(plan: &Plan, buf: &mut [f32]) {
     assert_eq!(buf.len(), plan.n(), "buffer length must equal plan size");
     plan.bit_reverse(buf);
@@ -53,6 +54,7 @@ pub fn rdfft_batch_scalar(plan: &Plan, buf: &mut [f32]) {
 
 /// All butterfly stages (input already bit-reversed). Exposed for the
 /// ablation bench that separates permutation cost from butterfly cost.
+// audit: no_alloc
 #[inline]
 pub fn forward_stages(plan: &Plan, buf: &mut [f32]) {
     let n = plan.n();

@@ -16,6 +16,7 @@ use super::plan::Plan;
 /// Transform `buf` (length `plan.n()`) from the packed spectrum back to the
 /// real signal, in place. Exact inverse of [`super::rdfft_inplace`]
 /// (including normalization).
+// audit: no_alloc
 pub fn irdfft_inplace(plan: &Plan, buf: &mut [f32]) {
     assert_eq!(buf.len(), plan.n(), "buffer length must equal plan size");
     inverse_stages(plan, buf);
@@ -43,6 +44,7 @@ pub fn irdfft_batch_scalar(plan: &Plan, buf: &mut [f32]) {
 
 /// All inverse butterfly stages (output still bit-reversed). Exposed for
 /// the ablation bench.
+// audit: no_alloc
 #[inline]
 pub fn inverse_stages(plan: &Plan, buf: &mut [f32]) {
     let n = plan.n();

@@ -6,7 +6,11 @@
 //! so the transform itself stays allocation-free — the property Table 1
 //! measures.
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: the cache lives in a determinism-scoped module
+// and ordered iteration keeps anything that ever walks it (debug dumps,
+// future eviction) reproducible. Lookup keys are a handful of
+// power-of-two sizes, so the O(log k) vs O(1) difference is noise.
+use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
 /// Precomputed data for an `n`-point rdFFT (`n` a power of two ≥ 2).
@@ -257,8 +261,8 @@ pub fn cached(n: usize) -> Arc<Plan> {
         super::is_supported_size(n),
         "rdFFT size must be a power of two >= 2, got {n}"
     );
-    static CACHE: OnceLock<RwLock<HashMap<usize, Arc<Plan>>>> = OnceLock::new();
-    let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
+    static CACHE: OnceLock<RwLock<BTreeMap<usize, Arc<Plan>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| RwLock::new(BTreeMap::new()));
     if let Some(plan) = cache.read().unwrap_or_else(|e| e.into_inner()).get(&n) {
         return plan.clone();
     }
@@ -354,6 +358,7 @@ mod tests {
         // The panic must fire in the caller (argument validation), never
         // while a cache guard is held — see the poisoning regression
         // below.
+        // audit: allow(no-raw-threads) test needs a raw thread to catch a cross-thread panic; no compute dispatch involved
         let joined = std::thread::spawn(|| cached(24)).join();
         assert!(joined.is_err(), "non-power-of-two must panic");
     }
@@ -363,6 +368,7 @@ mod tests {
         // Regression: one panicking thread (here via the size validation,
         // historically via any panic while a guard was held) must not
         // poison the cache for every later transform.
+        // audit: allow(no-raw-threads) test needs a raw thread to catch a cross-thread panic; no compute dispatch involved
         let joined = std::thread::spawn(|| {
             let _ = cached(96); // 96 is not a power of two -> panic
         })
@@ -376,6 +382,7 @@ mod tests {
     #[test]
     fn cache_is_safe_under_concurrent_lookup() {
         let handles: Vec<_> = (0..8)
+            // audit: allow(no-raw-threads) test exercises the cache's cross-thread contract itself, not pooled compute
             .map(|t| std::thread::spawn(move || cached(64 << (t % 3)).n()))
             .collect();
         for h in handles {

@@ -157,21 +157,46 @@ pub fn force_scalar_global() {
 /// by [`select`] before any lane kernel runs.
 pub trait Lanes4: Copy {
     type V: Copy;
+    /// # Safety
+    /// No memory access; unsafe only for the arm-wide feature contract.
     unsafe fn splat(v: f32) -> Self::V;
     /// Lanes `[p[0], p[1], p[2], p[3]]`.
+    ///
+    /// # Safety
+    /// `p..p+4` must be readable f32s.
     unsafe fn load(p: *const f32) -> Self::V;
     /// Lanes `[p[3], p[2], p[1], p[0]]` — the descending-stream load.
+    ///
+    /// # Safety
+    /// `p..p+4` must be readable f32s.
     unsafe fn load_rev(p: *const f32) -> Self::V;
+    /// # Safety
+    /// `p..p+4` must be writable f32s.
     unsafe fn store(p: *mut f32, v: Self::V);
     /// Store lane `i` to `p[3 - i]` (inverse of [`Lanes4::load_rev`]).
+    ///
+    /// # Safety
+    /// `p..p+4` must be writable f32s.
     unsafe fn store_rev(p: *mut f32, v: Self::V);
+    /// # Safety
+    /// Lane math only (feature contract).
     unsafe fn add(a: Self::V, b: Self::V) -> Self::V;
+    /// # Safety
+    /// Lane math only (feature contract).
     unsafe fn sub(a: Self::V, b: Self::V) -> Self::V;
+    /// # Safety
+    /// Lane math only (feature contract).
     unsafe fn mul(a: Self::V, b: Self::V) -> Self::V;
     /// `a·b + c` — fused on the FMA arm, two-rounding on the portable arm
     /// (matching the scalar oracle exactly).
+    ///
+    /// # Safety
+    /// Lane math only (feature contract).
     unsafe fn mla(a: Self::V, b: Self::V, c: Self::V) -> Self::V;
     /// `a·b − c` — fused on the FMA arm.
+    ///
+    /// # Safety
+    /// Lane math only (feature contract).
     unsafe fn mls(a: Self::V, b: Self::V, c: Self::V) -> Self::V;
 }
 
@@ -183,21 +208,25 @@ pub struct ScalarQuad;
 impl Lanes4 for ScalarQuad {
     type V = [f32; 4];
 
+    // SAFETY: no memory access — plain lane arithmetic.
     #[inline(always)]
     unsafe fn splat(v: f32) -> [f32; 4] {
         [v; 4]
     }
 
+    // SAFETY: caller guarantees p..p+4 readable (trait contract).
     #[inline(always)]
     unsafe fn load(p: *const f32) -> [f32; 4] {
         [*p, *p.add(1), *p.add(2), *p.add(3)]
     }
 
+    // SAFETY: caller guarantees p..p+4 readable (trait contract).
     #[inline(always)]
     unsafe fn load_rev(p: *const f32) -> [f32; 4] {
         [*p.add(3), *p.add(2), *p.add(1), *p]
     }
 
+    // SAFETY: caller guarantees p..p+4 writable (trait contract).
     #[inline(always)]
     unsafe fn store(p: *mut f32, v: [f32; 4]) {
         *p = v[0];
@@ -206,6 +235,7 @@ impl Lanes4 for ScalarQuad {
         *p.add(3) = v[3];
     }
 
+    // SAFETY: caller guarantees p..p+4 writable (trait contract).
     #[inline(always)]
     unsafe fn store_rev(p: *mut f32, v: [f32; 4]) {
         *p.add(3) = v[0];
@@ -214,21 +244,25 @@ impl Lanes4 for ScalarQuad {
         *p = v[3];
     }
 
+    // SAFETY: no memory access — plain lane arithmetic.
     #[inline(always)]
     unsafe fn add(a: [f32; 4], b: [f32; 4]) -> [f32; 4] {
         [a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]]
     }
 
+    // SAFETY: no memory access — plain lane arithmetic.
     #[inline(always)]
     unsafe fn sub(a: [f32; 4], b: [f32; 4]) -> [f32; 4] {
         [a[0] - b[0], a[1] - b[1], a[2] - b[2], a[3] - b[3]]
     }
 
+    // SAFETY: no memory access — plain lane arithmetic.
     #[inline(always)]
     unsafe fn mul(a: [f32; 4], b: [f32; 4]) -> [f32; 4] {
         [a[0] * b[0], a[1] * b[1], a[2] * b[2], a[3] * b[3]]
     }
 
+    // SAFETY: no memory access — plain lane arithmetic.
     #[inline(always)]
     unsafe fn mla(a: [f32; 4], b: [f32; 4], c: [f32; 4]) -> [f32; 4] {
         // Deliberately NOT f32::mul_add: the portable arm must round the
@@ -241,6 +275,7 @@ impl Lanes4 for ScalarQuad {
         ]
     }
 
+    // SAFETY: no memory access — plain lane arithmetic.
     #[inline(always)]
     unsafe fn mls(a: [f32; 4], b: [f32; 4], c: [f32; 4]) -> [f32; 4] {
         [
@@ -268,52 +303,62 @@ mod x86 {
     impl Lanes4 for AvxFma {
         type V = __m128;
 
+        // SAFETY: SSE set1, no memory access; features per arm contract.
         #[inline(always)]
         unsafe fn splat(v: f32) -> __m128 {
             _mm_set1_ps(v)
         }
 
+        // SAFETY: unaligned load; caller guarantees p..p+4 readable.
         #[inline(always)]
         unsafe fn load(p: *const f32) -> __m128 {
             _mm_loadu_ps(p)
         }
 
+        // SAFETY: unaligned load; caller guarantees p..p+4 readable.
         #[inline(always)]
         unsafe fn load_rev(p: *const f32) -> __m128 {
             let v = _mm_loadu_ps(p);
             _mm_shuffle_ps(v, v, 0x1B) // lanes [3,2,1,0]
         }
 
+        // SAFETY: unaligned store; caller guarantees p..p+4 writable.
         #[inline(always)]
         unsafe fn store(p: *mut f32, v: __m128) {
             _mm_storeu_ps(p, v)
         }
 
+        // SAFETY: unaligned store; caller guarantees p..p+4 writable.
         #[inline(always)]
         unsafe fn store_rev(p: *mut f32, v: __m128) {
             _mm_storeu_ps(p, _mm_shuffle_ps(v, v, 0x1B))
         }
 
+        // SAFETY: register math only; features per arm contract.
         #[inline(always)]
         unsafe fn add(a: __m128, b: __m128) -> __m128 {
             _mm_add_ps(a, b)
         }
 
+        // SAFETY: register math only; features per arm contract.
         #[inline(always)]
         unsafe fn sub(a: __m128, b: __m128) -> __m128 {
             _mm_sub_ps(a, b)
         }
 
+        // SAFETY: register math only; features per arm contract.
         #[inline(always)]
         unsafe fn mul(a: __m128, b: __m128) -> __m128 {
             _mm_mul_ps(a, b)
         }
 
+        // SAFETY: FMA register math; features per arm contract.
         #[inline(always)]
         unsafe fn mla(a: __m128, b: __m128, c: __m128) -> __m128 {
             _mm_fmadd_ps(a, b, c)
         }
 
+        // SAFETY: FMA register math; features per arm contract.
         #[inline(always)]
         unsafe fn mls(a: __m128, b: __m128, c: __m128) -> __m128 {
             _mm_fmsub_ps(a, b, c)
@@ -483,20 +528,24 @@ unsafe fn inv_groups<L: Lanes4>(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32
 // inline *into* the target_feature wrapper, which is what lets the
 // intrinsics fuse into straight-line AVX2+FMA code.
 
+// SAFETY: same contract as fwd_groups; ScalarQuad needs no CPU features.
 unsafe fn fwd_groups_portable(blk: &mut [f32], m: usize, wr: &[f32], wi: &[f32]) {
     fwd_groups::<ScalarQuad>(blk, m, wr, wi)
 }
 
+// SAFETY: same contract as inv_groups; ScalarQuad needs no CPU features.
 unsafe fn inv_groups_portable(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
     inv_groups::<ScalarQuad>(blk, m, hr, hi)
 }
 
+// SAFETY: same contract as fwd_groups, plus AVX2+FMA present at runtime.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn fwd_groups_avx(blk: &mut [f32], m: usize, wr: &[f32], wi: &[f32]) {
     fwd_groups::<x86::AvxFma>(blk, m, wr, wi)
 }
 
+// SAFETY: same contract as inv_groups, plus AVX2+FMA present at runtime.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn inv_groups_avx(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
@@ -697,24 +746,28 @@ unsafe fn conj_mul_acc_row<L: Lanes4>(acc: &mut [f32], a: &[f32], b: &[f32]) {
     }
 }
 
+// SAFETY: same contract as mul_row, plus AVX2+FMA present at runtime.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn mul_row_avx(a: &mut [f32], b: &[f32]) {
     mul_row::<x86::AvxFma>(a, b)
 }
 
+// SAFETY: same contract as mul_conjb_row, plus AVX2+FMA at runtime.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn mul_conjb_row_avx(a: &mut [f32], b: &[f32]) {
     mul_conjb_row::<x86::AvxFma>(a, b)
 }
 
+// SAFETY: same contract as mul_acc_row, plus AVX2+FMA at runtime.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn mul_acc_row_avx(acc: &mut [f32], a: &[f32], b: &[f32]) {
     mul_acc_row::<x86::AvxFma>(acc, a, b)
 }
 
+// SAFETY: same contract as conj_mul_acc_row, plus AVX2+FMA at runtime.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn conj_mul_acc_row_avx(acc: &mut [f32], a: &[f32], b: &[f32]) {
@@ -727,7 +780,11 @@ unsafe fn conj_mul_acc_row_avx(acc: &mut [f32], a: &[f32], b: &[f32]) {
 pub fn mul_inplace_with(kern: Kernels, a: &mut [f32], b: &[f32]) {
     match sanitize(kern) {
         Kernels::LegacyScalar => crate::rdfft::spectral::mul_inplace(a, b),
+        // SAFETY: packed rows share one even length >= 2 (spectral layout
+        // invariant, debug-asserted in mul_row); no CPU features needed.
         Kernels::Portable => unsafe { mul_row::<ScalarQuad>(a, b) },
+        // SAFETY: same row contract; the AvxFma arm is only ever produced
+        // by select() after runtime AVX2+FMA detection.
         Kernels::AvxFma => unsafe {
             #[cfg(target_arch = "x86_64")]
             mul_row_avx(a, b);
@@ -741,7 +798,11 @@ pub fn mul_inplace_with(kern: Kernels, a: &mut [f32], b: &[f32]) {
 pub fn mul_conjb_inplace_with(kern: Kernels, a: &mut [f32], b: &[f32]) {
     match sanitize(kern) {
         Kernels::LegacyScalar => crate::rdfft::spectral::mul_conjb_inplace(a, b),
+        // SAFETY: packed rows share one even length >= 2 (debug-asserted
+        // in mul_conjb_row); no CPU features needed on this arm.
         Kernels::Portable => unsafe { mul_conjb_row::<ScalarQuad>(a, b) },
+        // SAFETY: same row contract; AvxFma only comes from select()
+        // after runtime AVX2+FMA detection.
         Kernels::AvxFma => unsafe {
             #[cfg(target_arch = "x86_64")]
             mul_conjb_row_avx(a, b);
@@ -755,7 +816,11 @@ pub fn mul_conjb_inplace_with(kern: Kernels, a: &mut [f32], b: &[f32]) {
 pub fn mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
     match sanitize(kern) {
         Kernels::LegacyScalar => crate::rdfft::spectral::mul_acc(acc, a, b),
+        // SAFETY: all three rows share one even length >= 2 (debug-
+        // asserted in mul_acc_row); no CPU features needed on this arm.
         Kernels::Portable => unsafe { mul_acc_row::<ScalarQuad>(acc, a, b) },
+        // SAFETY: same row contract; AvxFma only comes from select()
+        // after runtime AVX2+FMA detection.
         Kernels::AvxFma => unsafe {
             #[cfg(target_arch = "x86_64")]
             mul_acc_row_avx(acc, a, b);
@@ -769,7 +834,11 @@ pub fn mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
 pub fn conj_mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
     match sanitize(kern) {
         Kernels::LegacyScalar => crate::rdfft::spectral::conj_mul_acc(acc, a, b),
+        // SAFETY: all three rows share one even length >= 2 (debug-
+        // asserted in conj_mul_acc_row); no CPU features needed here.
         Kernels::Portable => unsafe { conj_mul_acc_row::<ScalarQuad>(acc, a, b) },
+        // SAFETY: same row contract; AvxFma only comes from select()
+        // after runtime AVX2+FMA detection.
         Kernels::AvxFma => unsafe {
             #[cfg(target_arch = "x86_64")]
             conj_mul_acc_row_avx(acc, a, b);
@@ -796,6 +865,8 @@ pub fn fwd_quad_arrays(
     wr: [f32; 4],
     wi: [f32; 4],
 ) -> ([f32; 4], [f32; 4], [f32; 4], [f32; 4]) {
+    // SAFETY: all loads/stores hit the local fixed-size [f32; 4] arrays;
+    // unsafe only carries the lane arms' feature contract.
     #[inline(always)]
     unsafe fn go<L: Lanes4>(
         er: [f32; 4],
@@ -817,6 +888,7 @@ pub fn fwd_quad_arrays(
         L::store(out.3.as_mut_ptr(), L::sub(ti, eiv));
         out
     }
+    // SAFETY: same as go, plus AVX2+FMA present at runtime.
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2,fma")]
     unsafe fn go_avx(
@@ -830,12 +902,15 @@ pub fn fwd_quad_arrays(
         go::<x86::AvxFma>(er, ei, or_, oi, wr, wi)
     }
     match sanitize(kern) {
+        // SAFETY: local arrays only; AvxFma arm only comes from select()
+        // after runtime AVX2+FMA detection.
         Kernels::AvxFma => unsafe {
             #[cfg(target_arch = "x86_64")]
             return go_avx(er, ei, or_, oi, wr, wi);
             #[cfg(not(target_arch = "x86_64"))]
             return go::<ScalarQuad>(er, ei, or_, oi, wr, wi);
         },
+        // SAFETY: local arrays only; ScalarQuad needs no CPU features.
         _ => unsafe { go::<ScalarQuad>(er, ei, or_, oi, wr, wi) },
     }
 }
@@ -853,6 +928,8 @@ pub fn inv_quad_arrays(
     wr: [f32; 4],
     wi: [f32; 4],
 ) -> ([f32; 4], [f32; 4], [f32; 4], [f32; 4]) {
+    // SAFETY: all loads/stores hit the local fixed-size [f32; 4] arrays;
+    // unsafe only carries the lane arms' feature contract.
     #[inline(always)]
     unsafe fn go<L: Lanes4>(
         a: [f32; 4],
@@ -879,6 +956,7 @@ pub fn inv_quad_arrays(
         L::store(out.3.as_mut_ptr(), oi);
         out
     }
+    // SAFETY: same as go, plus AVX2+FMA present at runtime.
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2,fma")]
     unsafe fn go_avx(
@@ -892,12 +970,15 @@ pub fn inv_quad_arrays(
         go::<x86::AvxFma>(a, b, c, d, wr, wi)
     }
     match sanitize(kern) {
+        // SAFETY: local arrays only; AvxFma arm only comes from select()
+        // after runtime AVX2+FMA detection.
         Kernels::AvxFma => unsafe {
             #[cfg(target_arch = "x86_64")]
             return go_avx(a, b, c, d, wr, wi);
             #[cfg(not(target_arch = "x86_64"))]
             return go::<ScalarQuad>(a, b, c, d, wr, wi);
         },
+        // SAFETY: local arrays only; ScalarQuad needs no CPU features.
         _ => unsafe { go::<ScalarQuad>(a, b, c, d, wr, wi) },
     }
 }
@@ -929,6 +1010,7 @@ mod tests {
     #[test]
     fn scalar_quad_load_store_roundtrip_and_reversal() {
         let src = [1.0f32, 2.0, 3.0, 4.0];
+        // SAFETY: src/out are 4-element locals — exactly one quad.
         unsafe {
             let v = ScalarQuad::load(src.as_ptr());
             let r = ScalarQuad::load_rev(src.as_ptr());
@@ -954,6 +1036,7 @@ mod tests {
             let base = rand_vec(two_m, 13 * m as u64);
             let mut scalar = base.clone();
             let mut quad = base.clone();
+            // SAFETY: blocks are exactly 2m long with m/2 - 1 twiddles.
             unsafe {
                 fwd_groups_dispatch(Kernels::LegacyScalar, &mut scalar, m, &wr, &wi);
                 fwd_groups_dispatch(Kernels::Portable, &mut quad, m, &wr, &wi);
@@ -971,6 +1054,7 @@ mod tests {
             let base = rand_vec(two_m, 17 * m as u64);
             let mut scalar = base.clone();
             let mut quad = base.clone();
+            // SAFETY: blocks are exactly 2m long with m/2 - 1 twiddles.
             unsafe {
                 inv_groups_dispatch(Kernels::LegacyScalar, &mut scalar, m, &hr, &hi);
                 inv_groups_dispatch(Kernels::Portable, &mut quad, m, &hr, &hi);
@@ -992,6 +1076,8 @@ mod tests {
         for kern in [Kernels::LegacyScalar, Kernels::Portable, active()] {
             let base = rand_vec(2 * m, 29);
             let mut buf = base.clone();
+            // SAFETY: buf is exactly 2m long with m/2 - 1 twiddles; kern
+            // came from active()/the fixed safe arms.
             unsafe {
                 fwd_groups_dispatch(kern, &mut buf, m, &wr, &wi);
                 inv_groups_dispatch(kern, &mut buf, m, &hr, &hi);

@@ -9,6 +9,7 @@
 
 /// `a ⊙= b` — elementwise complex product of two packed spectra, written
 /// into `a`. Zero allocation.
+// audit: no_alloc
 #[inline]
 pub fn mul_inplace(a: &mut [f32], b: &[f32]) {
     let n = a.len();
@@ -25,6 +26,7 @@ pub fn mul_inplace(a: &mut [f32], b: &[f32]) {
 
 /// `a = conj(a) ⊙ b` — the backward-pass product of Eq. 5, fused so the
 /// conjugation costs nothing (no separate negation pass, no allocation).
+// audit: no_alloc
 #[inline]
 pub fn conj_mul_inplace(a: &mut [f32], b: &[f32]) {
     let n = a.len();
@@ -43,6 +45,7 @@ pub fn conj_mul_inplace(a: &mut [f32], b: &[f32]) {
 /// `a ⊙= conj(b)` — elementwise product with the conjugate of `b`
 /// (equivalently `conj(b) ⊙ a`): the Eq. 5 product when the conjugated
 /// factor is the *other* operand. Zero allocation.
+// audit: no_alloc
 #[inline]
 pub fn mul_conjb_inplace(a: &mut [f32], b: &[f32]) {
     let n = a.len();
@@ -61,6 +64,7 @@ pub fn mul_conjb_inplace(a: &mut [f32], b: &[f32]) {
 /// `acc += a ⊙ b` — multiply-accumulate of packed spectra, used by the
 /// block-circulant layer to sum block products in the frequency domain
 /// before a single inverse transform. Zero allocation.
+// audit: no_alloc
 #[inline]
 pub fn mul_acc(acc: &mut [f32], a: &[f32], b: &[f32]) {
     let n = acc.len();
@@ -78,6 +82,7 @@ pub fn mul_acc(acc: &mut [f32], a: &[f32], b: &[f32]) {
 
 /// `acc += conj(a) ⊙ b` — multiply-accumulate with conjugation (backward
 /// pass of the block-circulant layer). Zero allocation.
+// audit: no_alloc
 #[inline]
 pub fn conj_mul_acc(acc: &mut [f32], a: &[f32], b: &[f32]) {
     let n = acc.len();
@@ -94,6 +99,7 @@ pub fn conj_mul_acc(acc: &mut [f32], a: &[f32], b: &[f32]) {
 }
 
 /// Scale a packed spectrum (or any real buffer) in place.
+// audit: no_alloc
 #[inline]
 pub fn scale_inplace(a: &mut [f32], s: f32) {
     for v in a {
@@ -134,6 +140,7 @@ pub fn mul_conjb_rows_inplace(tile: &mut [f32], spec: &[f32]) {
 
 /// [`mul_rows_inplace`] on an explicit kernel arm (the engine resolves
 /// the arm once per batch call from `EngineConfig::force_scalar`).
+// audit: no_alloc
 #[inline]
 pub fn mul_rows_with(kern: Kernels, tile: &mut [f32], spec: &[f32]) {
     let n = spec.len();
@@ -144,6 +151,7 @@ pub fn mul_rows_with(kern: Kernels, tile: &mut [f32], spec: &[f32]) {
 }
 
 /// [`mul_conjb_rows_inplace`] on an explicit kernel arm.
+// audit: no_alloc
 #[inline]
 pub fn mul_conjb_rows_with(kern: Kernels, tile: &mut [f32], spec: &[f32]) {
     let n = spec.len();
@@ -155,12 +163,14 @@ pub fn mul_conjb_rows_with(kern: Kernels, tile: &mut [f32], spec: &[f32]) {
 
 /// [`mul_acc`] on an explicit kernel arm (the block sweeps' product
 /// stage; `Kernels::LegacyScalar` is exactly [`mul_acc`]).
+// audit: no_alloc
 #[inline]
 pub fn mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
     simd::mul_acc_with(kern, acc, a, b);
 }
 
 /// [`conj_mul_acc`] on an explicit kernel arm.
+// audit: no_alloc
 #[inline]
 pub fn conj_mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
     simd::conj_mul_acc_with(kern, acc, a, b);

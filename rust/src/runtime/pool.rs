@@ -399,8 +399,7 @@ impl<'scope> Scope<'scope> {
         // `finish_scope` waits for `pending == 0` on every path
         // (including a panicking `op`). `Scope` is invariant in `'scope`,
         // so callers cannot shrink the lifetime after submission.
-        let job: Box<dyn FnOnce() + Send + 'static> =
-            unsafe { std::mem::transmute(job) };
+        let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
         self.pool.shared.push(Job { run: job, latch: Arc::clone(&self.latch) });
     }
 }
@@ -648,7 +647,7 @@ mod tests {
         pool.scope(|sc| {
             for i in 0..5 {
                 let o = &order;
-                sc.submit(move || o.lock().unwrap().push(i));
+                sc.submit(move || o.lock().unwrap_or_else(|p| p.into_inner()).push(i));
             }
         })
         .unwrap();

@@ -1,0 +1,413 @@
+//! Fixture tests for the static invariant checker (`repro audit`).
+//!
+//! Every lint gets at least one inline fixture that fires and one that
+//! passes; the suppression grammar is exercised both ways (a reasoned
+//! `allow` silences, a reason-less one is itself a violation); and a
+//! self-audit asserts the committed tree is clean — the same check
+//! `scripts/ci.sh` runs as a hard gate.
+//!
+//! Fixtures are raw strings, which the analyzer's lexer treats as opaque
+//! literals — so auditing *this* file never trips over its own fixtures.
+
+use rdfft::analysis::lints::{
+    LINT_ALLOC, LINT_BAD_ALLOW, LINT_DETERMINISM, LINT_LOCK, LINT_THREADS, LINT_UNSAFE,
+};
+use rdfft::analysis::{analyze_source, audit_paths, FileReport};
+
+/// Lint names of the unsuppressed findings, in line order.
+fn lints(r: &FileReport) -> Vec<&'static str> {
+    r.findings.iter().map(|f| f.lint).collect()
+}
+
+// ---------------------------------------------------------------------
+// unsafe-needs-safety-comment
+// ---------------------------------------------------------------------
+
+#[test]
+fn unsafe_without_safety_comment_fires() {
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+pub fn f(p: *mut f32) {
+    unsafe { *p = 0.0; }
+}
+"#,
+    );
+    assert_eq!(lints(&r), vec![LINT_UNSAFE]);
+    assert_eq!(r.findings[0].line, 3);
+}
+
+#[test]
+fn safety_comment_above_or_trailing_passes() {
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+pub fn f(p: *mut f32) {
+    // SAFETY: caller guarantees p is valid.
+    unsafe { *p = 0.0; }
+    unsafe { *p = 1.0; } // SAFETY: same pointer, still valid.
+}
+
+/// Docs.
+///
+/// # Safety
+/// `p` must be valid — the doc section reaches through the attribute.
+#[inline]
+pub unsafe fn g(p: *mut f32) {
+    *p = 2.0;
+}
+"#,
+    );
+    assert_eq!(lints(&r), Vec::<&str>::new());
+}
+
+#[test]
+fn safety_text_in_strings_or_trailing_code_does_not_attach() {
+    // A SAFETY comment separated from the unsafe by a code line must NOT
+    // count (the contiguous block above is broken).
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+pub fn f(p: *mut f32) {
+    // SAFETY: this comment governs the let, not the unsafe below.
+    let q = p;
+    unsafe { *q = 0.0; }
+}
+"#,
+    );
+    assert_eq!(lints(&r), vec![LINT_UNSAFE]);
+}
+
+// ---------------------------------------------------------------------
+// no-raw-threads
+// ---------------------------------------------------------------------
+
+#[test]
+fn raw_thread_spawn_fires_outside_pool() {
+    let r = analyze_source(
+        "rust/src/coordinator/fixture.rs",
+        r#"
+pub fn f() {
+    std::thread::spawn(|| {});
+    std::thread::scope(|_s| {});
+    let b = std::thread::Builder::new();
+    std::thread::sleep(std::time::Duration::from_millis(1)); // not banned
+}
+"#,
+    );
+    assert_eq!(lints(&r), vec![LINT_THREADS, LINT_THREADS, LINT_THREADS]);
+}
+
+#[test]
+fn pool_file_is_allowlisted_wholesale() {
+    let r = analyze_source(
+        "rust/src/runtime/pool.rs",
+        r#"
+pub fn f() {
+    std::thread::spawn(|| {});
+}
+"#,
+    );
+    assert_eq!(lints(&r), Vec::<&str>::new());
+}
+
+#[test]
+fn server_spawn_session_is_carved_out_but_other_fns_are_not() {
+    let src = r#"
+pub fn spawn_session() {
+    std::thread::spawn(|| {});
+}
+pub fn other() {
+    std::thread::spawn(|| {});
+}
+"#;
+    let r = analyze_source("rust/src/runtime/server.rs", src);
+    assert_eq!(lints(&r), vec![LINT_THREADS]);
+    assert_eq!(r.findings[0].line, 6);
+    // The same source outside server.rs fires twice.
+    let r = analyze_source("rust/src/runtime/fixture.rs", src);
+    assert_eq!(lints(&r), vec![LINT_THREADS, LINT_THREADS]);
+}
+
+// ---------------------------------------------------------------------
+// lock-poison-policy
+// ---------------------------------------------------------------------
+
+#[test]
+fn lock_chained_with_unwrap_or_expect_fires() {
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+pub fn f(m: &std::sync::Mutex<u32>, rw: &std::sync::RwLock<u32>) {
+    let _a = m.lock().unwrap();
+    let _b = rw.read().expect("poisoned");
+    let _c = rw.write().unwrap();
+}
+"#,
+    );
+    assert_eq!(lints(&r), vec![LINT_LOCK, LINT_LOCK, LINT_LOCK]);
+}
+
+#[test]
+fn poison_recovery_and_io_read_write_pass() {
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+use std::io::Read;
+pub fn f(m: &std::sync::Mutex<u32>, mut s: std::net::TcpStream, buf: &mut [u8]) {
+    let _a = m.lock().unwrap_or_else(|p| p.into_inner());
+    // io::Read::read takes an argument, so the empty-parens pattern
+    // cannot confuse it with RwLock::read.
+    let _n = s.read(buf).unwrap();
+}
+"#,
+    );
+    assert_eq!(lints(&r), Vec::<&str>::new());
+}
+
+// ---------------------------------------------------------------------
+// no-alloc-in-hot-path
+// ---------------------------------------------------------------------
+
+#[test]
+fn marked_fn_with_allocations_fires_per_construct() {
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+// audit: no_alloc
+pub fn hot(xs: &[f32]) -> f32 {
+    let v: Vec<f32> = Vec::new();
+    let w = vec![0.0f32; 4];
+    let mut c = Vec::with_capacity(8);
+    c.push(0.0);
+    let d = xs.to_vec();
+    let e: Vec<f32> = xs.iter().copied().collect();
+    let b = Box::new(1.0f32);
+    let s = format!("x");
+    let f = d.clone();
+    v.len() as f32 + w[0] + e[0] + *b + s.len() as f32 + f[0]
+}
+"#,
+    );
+    let got = lints(&r);
+    assert_eq!(got.len(), 8, "one finding per construct: {:?}", r.findings);
+    assert!(got.iter().all(|l| *l == LINT_ALLOC));
+}
+
+#[test]
+fn unmarked_fn_may_allocate_and_marker_reaches_through_attrs() {
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+pub fn cold() -> Vec<f32> {
+    vec![0.0; 16]
+}
+
+/// Doc block.
+// audit: no_alloc
+#[inline]
+#[allow(dead_code)]
+pub fn hot(buf: &mut [f32]) {
+    for v in buf.iter_mut() {
+        *v *= 2.0;
+    }
+}
+"#,
+    );
+    assert_eq!(lints(&r), Vec::<&str>::new());
+}
+
+#[test]
+fn marker_governs_only_the_next_fn() {
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+// audit: no_alloc
+pub fn hot(buf: &mut [f32]) {
+    buf[0] = 1.0;
+}
+
+pub fn after() -> Vec<f32> {
+    Vec::new()
+}
+"#,
+    );
+    assert_eq!(lints(&r), Vec::<&str>::new());
+}
+
+// ---------------------------------------------------------------------
+// determinism-lint
+// ---------------------------------------------------------------------
+
+#[test]
+fn banned_idents_fire_inside_determinism_scope() {
+    let src = r#"
+use std::collections::HashMap;
+pub fn f() {
+    let _m: HashMap<u32, u32> = HashMap::new();
+    let _t = std::time::Instant::now();
+}
+"#;
+    let r = analyze_source("rust/src/rdfft/fixture.rs", src);
+    // HashMap appears three times (use, annotation, constructor) plus
+    // one Instant.
+    assert_eq!(lints(&r), vec![LINT_DETERMINISM; 4]);
+    let r = analyze_source("rust/src/autograd/fixture.rs", src);
+    assert_eq!(lints(&r), vec![LINT_DETERMINISM; 4]);
+    let r = analyze_source("rust/src/runtime/server.rs", src);
+    assert_eq!(lints(&r), vec![LINT_DETERMINISM; 4]);
+}
+
+#[test]
+fn determinism_lint_is_silent_outside_scope() {
+    let src = r#"
+use std::collections::HashMap;
+pub fn f() {
+    let _m: HashMap<u32, u32> = HashMap::new();
+    let _t = std::time::Instant::now();
+}
+"#;
+    // baselines/ may use HashMap (out of scope); test files are excluded
+    // even under rdfft-looking paths.
+    let r = analyze_source("rust/src/baselines/fixture.rs", src);
+    assert_eq!(lints(&r), Vec::<&str>::new());
+    let r = analyze_source("rust/tests/fixture.rs", src);
+    assert_eq!(lints(&r), Vec::<&str>::new());
+}
+
+// ---------------------------------------------------------------------
+// Suppression grammar
+// ---------------------------------------------------------------------
+
+#[test]
+fn allow_with_reason_suppresses_and_records_the_waiver() {
+    let r = analyze_source(
+        "rust/src/coordinator/fixture.rs",
+        r#"
+pub fn f() {
+    // audit: allow(no-raw-threads) bench harness thread, joined below
+    std::thread::spawn(|| {});
+}
+"#,
+    );
+    assert_eq!(lints(&r), Vec::<&str>::new());
+    assert_eq!(r.suppressed.len(), 1);
+    assert_eq!(r.suppressed[0].lint, LINT_THREADS);
+    assert_eq!(r.suppressed[0].reason, "bench harness thread, joined below");
+}
+
+#[test]
+fn trailing_allow_targets_its_own_line() {
+    let r = analyze_source(
+        "rust/src/coordinator/fixture.rs",
+        r#"
+pub fn f() {
+    std::thread::spawn(|| {}); // audit: allow(no-raw-threads) joined by caller
+}
+"#,
+    );
+    assert_eq!(lints(&r), Vec::<&str>::new());
+    assert_eq!(r.suppressed.len(), 1);
+}
+
+#[test]
+fn reasonless_allow_is_itself_a_violation_and_does_not_suppress() {
+    let r = analyze_source(
+        "rust/src/coordinator/fixture.rs",
+        r#"
+pub fn f() {
+    // audit: allow(no-raw-threads)
+    std::thread::spawn(|| {});
+}
+"#,
+    );
+    // Both the bare waiver and the un-suppressed thread finding surface.
+    assert_eq!(lints(&r), vec![LINT_BAD_ALLOW, LINT_THREADS]);
+    assert!(r.suppressed.is_empty());
+}
+
+#[test]
+fn unknown_lint_in_allow_is_a_violation() {
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+// audit: allow(made-up-lint) because reasons
+pub fn f() {}
+"#,
+    );
+    assert_eq!(lints(&r), vec![LINT_BAD_ALLOW]);
+}
+
+#[test]
+fn allow_must_name_the_matching_lint_and_line() {
+    let r = analyze_source(
+        "rust/src/coordinator/fixture.rs",
+        r#"
+pub fn f(m: &std::sync::Mutex<u32>) {
+    // audit: allow(lock-poison-policy) wrong lint for the line below
+    std::thread::spawn(|| {});
+    let _g = m.lock().unwrap();
+}
+"#,
+    );
+    // The allow names lock-poison-policy but targets the spawn line, so
+    // neither finding is silenced.
+    assert_eq!(lints(&r), vec![LINT_THREADS, LINT_LOCK]);
+}
+
+#[test]
+fn directive_prose_in_docs_is_not_a_directive() {
+    // Doc text *mentioning* the grammar (indented or fenced) must not
+    // parse as a directive — only comments that start with "audit:".
+    let r = analyze_source(
+        "rust/src/model/fixture.rs",
+        r#"
+//! The marker grammar is `// audit: no_alloc` above a fn.
+//! And waivers look like `// audit: allow(<lint>) <reason>`.
+pub fn f() {}
+"#,
+    );
+    assert_eq!(lints(&r), Vec::<&str>::new());
+}
+
+// ---------------------------------------------------------------------
+// Lexer integration: comments and strings never produce findings
+// ---------------------------------------------------------------------
+
+#[test]
+fn code_in_comments_and_strings_is_invisible() {
+    let r = analyze_source(
+        "rust/src/rdfft/fixture.rs",
+        r##"
+// std::thread::spawn(|| {}); HashMap::new(); m.lock().unwrap();
+pub fn f() -> &'static str {
+    let s = "std::thread::spawn HashMap Instant unsafe";
+    let t = r#"m.lock().unwrap()"#;
+    if s.len() > t.len() { s } else { "x" }
+}
+"##,
+    );
+    assert_eq!(lints(&r), Vec::<&str>::new());
+}
+
+// ---------------------------------------------------------------------
+// Self-audit: the committed tree passes its own gate
+// ---------------------------------------------------------------------
+
+#[test]
+fn the_repo_tree_is_audit_clean() {
+    let base = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let roots = [base.join("src"), base.join("tests")];
+    let report = audit_paths(&roots).expect("audit roots exist");
+    assert!(report.files > 40, "walked the real tree, got {} files", report.files);
+    assert!(
+        report.clean(),
+        "committed tree must audit clean; violations:\n{}",
+        report.render()
+    );
+    // Waivers stay visible: every suppression carries a non-empty reason.
+    assert!(!report.suppressed.is_empty(), "the tree documents its waivers");
+    for s in &report.suppressed {
+        assert!(!s.reason.is_empty(), "{}:{} has a bare waiver", s.file, s.line);
+    }
+}

@@ -124,6 +124,7 @@ fn concurrent_submit_next_and_flush_do_not_race() {
     let flusher = {
         let h = handle.clone();
         let stop = Arc::clone(&stop);
+        // audit: allow(no-raw-threads) test flusher races the batcher on purpose; it never runs compute
         std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
                 h.flush();
@@ -137,6 +138,7 @@ fn concurrent_submit_next_and_flush_do_not_race() {
     for c in 0..CLIENTS {
         let h = handle.clone();
         let reqs = Arc::clone(&reqs);
+        // audit: allow(no-raw-threads) test clients must be real concurrent submitters to reproduce the race
         workers.push(std::thread::spawn(move || {
             let mut got = Vec::new();
             for _ in 0..ROUNDS {
@@ -203,6 +205,7 @@ fn tcp_round_trip_matches_in_process_serving() {
     let addr = listener.local_addr().unwrap();
     {
         let h = handle.clone();
+        // audit: allow(no-raw-threads) the accept loop blocks forever by design; the test leaks it rather than polluting the pool
         std::thread::spawn(move || {
             let _ = serve_tcp(listener, h);
         });

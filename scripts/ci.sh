@@ -8,11 +8,6 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release --all-targets
-# Tests stay on the dev profile deliberately: the engine/layer guards are
-# debug_assert-based and a --release test run would compile them away
-# (the dev build is the only extra profile — the smoke and bench runs
-# below reuse the release artifacts already built, no third build).
-cargo test -q
 
 REPRO=./target/release/repro
 if [[ ! -x "$REPRO" ]]; then
@@ -21,6 +16,23 @@ if [[ ! -x "$REPRO" ]]; then
   echo "       was renamed, update this script and .github/workflows/ci.yml." >&2
   exit 1
 fi
+
+# Static invariant audit: hard gate, and it runs BEFORE the test suite —
+# an unsafe block without a SAFETY comment or a raw `.lock().unwrap()`
+# must fail the build even when every test is green. Writes AUDIT.json
+# (schema audit/v1: findings + every allow-waiver with its reason) for
+# the workflow to upload. EXPERIMENTS.md §Audit documents the lints.
+"$REPRO" audit --json AUDIT.json
+if [[ ! -s AUDIT.json ]]; then
+  echo "ci.sh: ERROR: repro audit did not produce AUDIT.json" >&2
+  exit 1
+fi
+
+# Tests stay on the dev profile deliberately: the engine/layer guards are
+# debug_assert-based and a --release test run would compile them away
+# (the dev build is the only extra profile — the smoke and bench runs
+# below reuse the release artifacts already built, no third build).
+cargo test -q
 
 # Native-trainer smoke: 20 steps on a depth-2 circulant stack must reduce
 # the loss AND keep the memtrack peak under a fixed budget (the binary
