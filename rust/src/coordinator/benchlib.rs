@@ -67,6 +67,29 @@ pub fn bench<F: FnMut()>(budget_ms: u64, mut f: F) -> Stats {
     stats_from(samples)
 }
 
+/// [`bench`] for closures whose single call is itself expensive (the
+/// large-n four-step throughput cells: one 262 Ki-point batch roundtrip
+/// is milliseconds, not microseconds): one untimed probe call warms
+/// plans, pool threads and page tables, then single-call samples are
+/// taken until the wall-clock budget expires — no batch calibration, no
+/// warmup window proportional to the budget. Always records at least one
+/// sample, so a closure slower than the whole budget still yields a
+/// (single-sample) measurement instead of hanging.
+pub fn bench_budgeted<F: FnMut()>(budget_ms: u64, mut f: F) -> Stats {
+    f(); // untimed warm probe
+    let until = Instant::now() + std::time::Duration::from_millis(budget_ms);
+    let mut samples = Vec::new();
+    loop {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if Instant::now() >= until {
+            break;
+        }
+    }
+    stats_from(samples)
+}
+
 fn stats_from(mut samples: Vec<f64>) -> Stats {
     assert!(!samples.is_empty());
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -120,15 +143,19 @@ pub struct BenchGate {
 }
 
 /// Write engine benchmark records + gates as JSON, schema
-/// `bench_rdfft/v2` (hand-rolled: serde is unavailable offline; the
-/// reader side is `runtime::json`).
+/// `bench_rdfft/v3` (hand-rolled: serde is unavailable offline; the
+/// reader side is `runtime::json`). v3 over v2: the large-n
+/// `batch_fourstep` / `batch_direct` rows, the width-8 `batch_simd8` /
+/// `batch_simd4` rows, and the `fourstep_vs_direct` / `simd8_vs_simd4`
+/// gates (EXPERIMENTS.md §Perf iteration 7); record/gate field layout is
+/// unchanged.
 pub fn write_bench_json(
     path: &std::path::Path,
     records: &[BenchRecord],
     gates: &[BenchGate],
 ) -> std::io::Result<()> {
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"bench_rdfft/v2\",\n  \"records\": [\n");
+    s.push_str("{\n  \"schema\": \"bench_rdfft/v3\",\n  \"records\": [\n");
     for (i, r) in records.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"mode\": \"{}\", \"n\": {}, \"batch\": {}, \"threads\": {}, \
@@ -224,6 +251,27 @@ mod tests {
     }
 
     #[test]
+    fn bench_budgeted_respects_wall_clock_and_samples_at_least_once() {
+        // A closure slower than the whole budget must still produce one
+        // sample and stop right after it.
+        let t0 = std::time::Instant::now();
+        let s = bench_budgeted(5, || {
+            std::thread::sleep(std::time::Duration::from_millis(8));
+        });
+        assert_eq!(s.iters, 1, "one over-budget sample, then stop");
+        assert!(t0.elapsed().as_millis() < 80, "warm probe + one sample only");
+
+        // A fast closure takes many single-call samples within budget.
+        let mut x = 0u64;
+        let s = bench_budgeted(10, || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(s.iters > 10);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+    }
+
+    #[test]
     fn bench_json_roundtrips_through_parser() {
         let rec = BenchRecord {
             mode: "batch_pool".into(),
@@ -250,7 +298,7 @@ mod tests {
         write_bench_json(&path, &[rec.clone(), rec], &[gate]).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let v = crate::runtime::json::parse(&text).expect("valid json");
-        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_rdfft/v2"));
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_rdfft/v3"));
         let recs = v.get("records").unwrap().as_arr().unwrap();
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].get("n").unwrap().as_usize(), Some(256));

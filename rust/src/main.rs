@@ -124,7 +124,10 @@ fn usage() -> ! {
            optim    optimizer-state memory ablation\n\
            engine   batch-engine throughput ablation [--fast]\n\
                     [--force-scalar]  pin the legacy scalar kernels\n\
-                    (writes BENCH_rdfft.json incl. simd_vs_scalar gates)\n\
+                    [--fourstep-smoke]  skip timing: four-step large-n\n\
+                    tier vs direct sweep correctness check only\n\
+                    (writes BENCH_rdfft.json incl. simd_vs_scalar,\n\
+                    simd8_vs_simd4 and fourstep_vs_direct gates)\n\
            serve    inference server: line protocol over TCP (hex ctx in,\n\
                     next-byte + fingerprint out; blank line flushes the\n\
                     partial window, 'quit' closes)\n\
@@ -632,10 +635,15 @@ fn main() -> Result<()> {
         "alloc-audit" => experiments::alloc_audit(),
         "optim" => experiments::optim_ablation(),
         "engine" => {
-            if !experiments::bench_rdfft_engine(args.has("fast")) {
+            if args.has("fourstep-smoke") {
+                if !experiments::fourstep_smoke() {
+                    bail!("fourstep smoke failed: large-n tier disagrees with the direct sweep");
+                }
+            } else if !experiments::bench_rdfft_engine(args.has("fast")) {
                 bail!(
                     "engine gate failed: batch=1 latency regressed vs scalar, \
-                     or the fused circulant pipeline regressed vs unfused"
+                     the fused circulant pipeline regressed vs unfused, or a \
+                     large-n/width-8 hard floor was crossed"
                 );
             }
         }

@@ -78,6 +78,19 @@ pub struct EngineConfig {
     /// `RDFFT_FORCE_SCALAR=1`) force the same arm for calls that never see
     /// a config.
     pub force_scalar: bool,
+    /// Transform sizes `n ≥` this run the four-step (Bailey) large-n path
+    /// ([`super::fourstep`]) instead of the direct stage sweep — provided
+    /// the plan carries factorization tables
+    /// ([`crate::rdfft::plan::FOURSTEP_MIN_N`]). Default 16 Ki: below it
+    /// the direct tile sweep is cache-resident and faster; above it the
+    /// per-stage full-buffer streams go memory-bandwidth bound. Tests pin
+    /// `1` (always four-step) or `usize::MAX` (always direct).
+    pub fourstep_threshold: usize,
+    /// Cap on the SIMD lane width this call may dispatch (0 = no cap):
+    /// `4` demotes the 256-bit width-8 arm to the 128-bit quad arm,
+    /// `1..=3` forces the legacy scalar loops. The `simd8_vs_simd4` bench
+    /// rows pin widths with this; `force_scalar` still wins.
+    pub max_simd_width: usize,
 }
 
 impl EngineConfig {
@@ -92,6 +105,8 @@ impl EngineConfig {
             par_chunk_elems: 1 << 14,
             max_threads: 0,
             force_scalar: false,
+            fourstep_threshold: 1 << 14,
+            max_simd_width: 0,
         }
     }
 
@@ -106,6 +121,8 @@ impl EngineConfig {
             par_chunk_elems: 1 << 14,
             max_threads: 0,
             force_scalar: false,
+            fourstep_threshold: 1 << 14,
+            max_simd_width: 0,
         }
     }
 
@@ -120,6 +137,8 @@ impl EngineConfig {
             par_chunk_elems: 1 << 14,
             max_threads: 0,
             force_scalar: true,
+            fourstep_threshold: 1 << 14,
+            max_simd_width: 0,
         }
     }
 
@@ -132,6 +151,8 @@ impl EngineConfig {
             par_chunk_elems: 1 << 14,
             max_threads: 0,
             force_scalar: true,
+            fourstep_threshold: 1 << 14,
+            max_simd_width: 0,
         }
     }
 }
@@ -163,23 +184,23 @@ pub fn inverse_batch(plan: &Plan, buf: &mut [f32]) {
 
 /// [`forward_batch`] with explicit tuning (dispatched on the global pool).
 pub fn forward_batch_with(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, Dispatch::global(), forward_rows_with);
+    run_transform(plan, buf, cfg, Dispatch::global(), true);
 }
 
 /// [`inverse_batch`] with explicit tuning (dispatched on the global pool).
 pub fn inverse_batch_with(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, Dispatch::global(), inverse_rows_with);
+    run_transform(plan, buf, cfg, Dispatch::global(), false);
 }
 
 /// [`forward_batch`] under an explicit [`ExecCtx`]: that context's pool
 /// and engine tuning decide the dispatch.
 pub fn forward_batch_ctx(plan: &Plan, buf: &mut [f32], ctx: &ExecCtx) {
-    run_batch(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), forward_rows_with);
+    run_transform(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), true);
 }
 
 /// [`inverse_batch`] under an explicit [`ExecCtx`].
 pub fn inverse_batch_ctx(plan: &Plan, buf: &mut [f32], ctx: &ExecCtx) {
-    run_batch(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), inverse_rows_with);
+    run_transform(plan, buf, ctx.engine_config(), Dispatch::from_ctx(ctx), false);
 }
 
 /// [`forward_batch_with`] on per-call scoped threads — the pre-pool
@@ -188,12 +209,32 @@ pub fn inverse_batch_ctx(plan: &Plan, buf: &mut [f32], ctx: &ExecCtx) {
 /// the pooled path (same chunking, same kernels; only *where* a chunk
 /// runs differs).
 pub fn forward_batch_scoped(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, Dispatch::Scoped, forward_rows_with);
+    run_transform(plan, buf, cfg, Dispatch::Scoped, true);
 }
 
 /// [`inverse_batch_with`] on per-call scoped threads (fallback oracle).
 pub fn inverse_batch_scoped(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
-    run_batch(plan, buf, cfg, Dispatch::Scoped, inverse_rows_with);
+    run_transform(plan, buf, cfg, Dispatch::Scoped, false);
+}
+
+/// Size-dispatched transform behind every plain batch entry point: the
+/// four-step (Bailey) tier when `n ≥ cfg.fourstep_threshold` and the
+/// plan carries factorization tables, the direct tile sweep otherwise.
+/// The fused circulant/block sweeps stay on the direct kernels — they
+/// operate *on* the packed spectra both tiers produce, so the large-n
+/// tier composes with them unchanged.
+fn run_transform(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig, disp: Dispatch<'_>, forward: bool) {
+    if plan.n() >= cfg.fourstep_threshold {
+        if let Some(fs) = plan.fourstep() {
+            super::fourstep::run_fourstep(plan, fs, buf, cfg, disp, forward);
+            return;
+        }
+    }
+    if forward {
+        run_batch(plan, buf, cfg, disp, forward_rows_with);
+    } else {
+        run_batch(plan, buf, cfg, disp, inverse_rows_with);
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -455,7 +496,7 @@ fn block_apply(
     // (in + out blocks per sample), capped by the sample count since
     // samples are the split unit. The kernel arm is resolved once here
     // and shared by every chunk, so all workers run identical float ops.
-    let kern = simd::select(cfg.force_scalar);
+    let kern = simd::select_width(cfg.force_scalar, cfg.max_simd_width);
     let workers =
         planned_workers(samples * (in_blocks + out_blocks), n, cfg).min(samples);
     let sweep = move |xs: &mut [f32], os: Option<&mut [f32]>| {
@@ -518,7 +559,7 @@ fn block_apply_sample(
 /// production path; per-call scoped threads are the pre-pool fallback
 /// oracle, kept for differential benches/tests.
 #[derive(Clone, Copy)]
-enum Dispatch<'a> {
+pub(crate) enum Dispatch<'a> {
     /// Jobs on the process-wide pool, **resolved only at fan-out time**:
     /// serial calls (below the work thresholds) never spawn it.
     Global,
@@ -530,12 +571,12 @@ enum Dispatch<'a> {
 
 impl<'a> Dispatch<'a> {
     /// The process-wide default pool (lazy).
-    fn global() -> Dispatch<'static> {
+    pub(crate) fn global() -> Dispatch<'static> {
         Dispatch::Global
     }
 
     /// A context's dispatch: its dedicated pool, or the lazy global one.
-    fn from_ctx(ctx: &'a ExecCtx) -> Dispatch<'a> {
+    pub(crate) fn from_ctx(ctx: &'a ExecCtx) -> Dispatch<'a> {
         match ctx.dedicated_pool() {
             Some(p) => Dispatch::Pool(p),
             None => Dispatch::Global,
@@ -558,7 +599,7 @@ where
     if rows == 0 {
         return;
     }
-    let kern = simd::select(cfg.force_scalar);
+    let kern = simd::select_width(cfg.force_scalar, cfg.max_simd_width);
     let workers = planned_workers(rows, n, cfg);
     let tile_rows = cfg.tile_rows;
     if workers <= 1 {
@@ -582,7 +623,7 @@ where
 /// selected backend, and the final chunk on the calling thread (one
 /// fewer dispatch; on the pool path the calling thread additionally
 /// helps drain its own queued chunks while waiting).
-fn dispatch_rows<J>(
+pub(crate) fn dispatch_rows<J>(
     disp: Dispatch<'_>,
     input: &mut [f32],
     out: Option<&mut [f32]>,
@@ -654,6 +695,50 @@ fn split_chunks<'a>(
     (rest_in, rest_out)
 }
 
+/// Indexed sibling of [`dispatch_rows`] for callers whose parallel units
+/// are not contiguous buffer chunks (the four-step panel sweep: a worker
+/// owns a strided set of `(row, panel)` units sharing one buffer through
+/// disjoint columns). Runs `job(w)` for every `w` in `0..workers` on the
+/// selected backend — the last index on the calling thread, the rest as
+/// pool jobs / scoped spawns. `workers` is expected to be small (it is a
+/// thread count, not a unit count).
+pub(crate) fn dispatch_span<J>(disp: Dispatch<'_>, workers: usize, job: J)
+where
+    J: Fn(usize) + Copy + Send + Sync,
+{
+    if workers <= 1 {
+        if workers == 1 {
+            job(0);
+        }
+        return;
+    }
+    match disp {
+        Dispatch::Global => {
+            dispatch_span(Dispatch::Pool(WorkerPool::global().as_ref()), workers, job)
+        }
+        // audit: allow(no-raw-threads) the scoped arm is the differential oracle the pool path is verified against; it must stay on std scoped threads
+        Dispatch::Scoped => std::thread::scope(|s| {
+            for w in 0..workers - 1 {
+                s.spawn(move || job(w));
+            }
+            job(workers - 1);
+        }),
+        Dispatch::Pool(pool) => {
+            let done = pool.scope(|sc| {
+                for w in 0..workers - 1 {
+                    sc.submit(move || job(w));
+                }
+                job(workers - 1);
+            });
+            if let Err(p) = done {
+                // Mirror thread::scope: a panicking unit panics the
+                // submitting call (the pool itself stays healthy).
+                p.resume();
+            }
+        }
+    }
+}
+
 /// True when a batch of `rows` length-`n` rows would split across worker
 /// threads under default tuning. Fused per-sample callers that cannot
 /// parallelize internally (shared accumulators/workspaces) use this to
@@ -664,7 +749,7 @@ pub fn default_would_thread(rows: usize, n: usize) -> bool {
 }
 
 /// How many workers (including the calling thread) the batch should use.
-fn planned_workers(rows: usize, n: usize, cfg: &EngineConfig) -> usize {
+pub(crate) fn planned_workers(rows: usize, n: usize, cfg: &EngineConfig) -> usize {
     let total = rows * n;
     if rows < cfg.par_min_rows || total < cfg.par_min_elems {
         return 1;
@@ -820,7 +905,7 @@ pub fn fused_inverse_stage21(row: &mut [f32], n: usize) {
 /// arm stays bit-identical to the scalar one; only FMA contraction on
 /// the AVX arm can differ (within the documented tolerance).
 // audit: no_alloc
-fn forward_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
+pub(crate) fn forward_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
     let n = plan.n();
     let rows = tile.len() / n;
     debug_assert_eq!(tile.len(), rows * n);
@@ -894,7 +979,7 @@ fn forward_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
 /// Inverse stages m = n/2 .. 4 over a tile of rows, batch-major (same
 /// two-arm structure as [`forward_stages_tile`]).
 // audit: no_alloc
-fn inverse_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
+pub(crate) fn inverse_stages_tile(plan: &Plan, tile: &mut [f32], kern: Kernels) {
     let n = plan.n();
     let rows = tile.len() / n;
     debug_assert_eq!(tile.len(), rows * n);
@@ -1067,7 +1152,7 @@ mod tests {
             assert_eq!(forced, scalar, "n={n} b={b}");
             let mut auto = x.clone();
             forward_batch(&plan, &mut auto);
-            if simd::active() != Kernels::AvxFma {
+            if !simd::active().uses_fma() {
                 assert_eq!(auto, scalar, "non-FMA arm must be bitwise n={n} b={b}");
             }
             for i in 0..n * b {
@@ -1091,7 +1176,7 @@ mod tests {
             assert_eq!(forced, scalar, "n={n} b={b}");
             let mut auto = x.clone();
             inverse_batch(&plan, &mut auto);
-            if simd::active() != Kernels::AvxFma {
+            if !simd::active().uses_fma() {
                 assert_eq!(auto, scalar, "non-FMA arm must be bitwise n={n} b={b}");
             }
             for i in 0..n * b {

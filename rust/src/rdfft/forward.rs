@@ -35,7 +35,10 @@ pub fn rdfft_inplace(plan: &Plan, buf: &mut [f32]) {
 /// runtime-dispatched SIMD lane kernels of [`super::simd`]). Output is
 /// bit-identical to the per-row scalar path on the forced-scalar and
 /// portable arms; the AVX2+FMA arm agrees within the n-scaled tolerance
-/// (EXPERIMENTS.md §Perf iteration 6).
+/// (EXPERIMENTS.md §Perf iteration 6). Sizes at or above
+/// `EngineConfig::fourstep_threshold` take the four-step (Bailey) large-n
+/// tier ([`super::fourstep`]) — same packed layout, ~1 ulp twiddle delta
+/// (EXPERIMENTS.md §Perf iteration 7).
 pub fn rdfft_batch(plan: &Plan, buf: &mut [f32]) {
     super::engine::forward_batch(plan, buf);
 }

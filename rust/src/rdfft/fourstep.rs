@@ -1,0 +1,718 @@
+//! Four-step (Bailey) large-n execution tier.
+//!
+//! The direct engine ([`super::engine`]) sweeps the whole buffer once per
+//! butterfly stage — `log2 n` full passes. Below ~16 Ki points the row
+//! tile is cache-resident and those passes are free; above it every late
+//! stage streams the full transform from DRAM and the engine goes
+//! memory-bandwidth bound. This tier restructures a length-`n = n1 × n2`
+//! transform (`n2 ≥ n1`, both powers of two — tables in
+//! [`FourStep`](super::plan::FourStep)) into three phases with a *bounded*
+//! number of full-buffer sweeps, strictly in place and preserving the
+//! packed conjugate-symmetric layout bit-for-bit in meaning (DC at 0,
+//! `Re(y_k)` at `k`, `Im(y_k)` at `n − k`), so `circulant_apply_batch`
+//! and the fused block sweeps consume its spectra unchanged:
+//!
+//! 1. **Rows** — the fused full-`n` bit-reversal + trivial stages
+//!    `m = 1, 2` per row (one pass, identical code to the direct path).
+//! 2. **Sub-transforms** — stages `m = 4 .. n2/2` only ever combine
+//!    elements inside one contiguous `n2`-chunk, so each of the `n1`
+//!    chunks per row is an independent cache-resident `n2`-point
+//!    continuation: one tiled sweep with the shared cached `n2` plan,
+//!    bit-identical arithmetic to the direct path's early stages.
+//! 3. **Column panels** — the `log2 n1` *late* stages `m = n2·2^t` only
+//!    ever combine slots whose column index (`slot mod n2`) lies in the
+//!    closed pair `{r, n2 − r}` (or the special pair `{0, n2/2}`). Each
+//!    pair is gathered once into a cache-resident transpose tile (the
+//!    shared [`super::tiling`] helpers `twod` also uses), **all** late
+//!    stages run inside the tile with the twiddle correction fused in
+//!    (the factorized `A_t[q]·B_t[r]` product — see
+//!    [`super::plan::FourStep`]), and the pair scatters back: one
+//!    strided pass total instead of `log2 n1` streaming passes.
+//!
+//! Numerics: phases 1–2 are bit-identical to the direct engine; phase 3
+//! rounds each twiddle product once more (~1 ulp) — the only delta, and
+//! it is applied identically regardless of worker count, so results stay
+//! bitwise deterministic across thread counts, pool-vs-scoped dispatch,
+//! and repeats (asserted in tests here and in `tests/golden.rs`).
+//!
+//! Parallelism reuses the engine's dispatch: phases 1–2 split contiguous
+//! row chunks via [`engine::dispatch_rows`]; phase 3's units are
+//! `(row, panel)` pairs sharing the buffer through disjoint column sets,
+//! strided over workers via [`engine::dispatch_span`]. Each worker owns a
+//! thread-local `2·n1`-float tile ([`tile_floats`]), grown on first use
+//! and reused forever after — after warm-up the whole tier allocates
+//! nothing (asserted in `tests/memory_invariants.rs`).
+
+use std::cell::RefCell;
+
+use super::engine::{self, Dispatch, EngineConfig};
+use super::plan::{FourStep, Plan};
+use super::simd::{self, Kernels};
+use super::tiling;
+
+/// Column pairs processed per phase-3 dispatch unit. Purely a dispatch
+/// granularity knob (the tile still holds one pair at a time): larger
+/// panels amortize unit bookkeeping, smaller panels balance better.
+const PANEL_PAIRS: usize = 4;
+
+/// Thread-local scratch floats one phase-3 worker needs for a plan with
+/// `n1` rows in its `n1 × n2` view: one gathered column pair. Exposed so
+/// `Plan::heap_bytes` docs can account for it.
+pub const fn tile_floats(n1: usize) -> usize {
+    2 * n1
+}
+
+thread_local! {
+    /// Per-thread transpose tile for the phase-3 column kernels. Grows to
+    /// the largest `tile_floats(n1)` the thread has seen, then persists —
+    /// pool workers park with their tile warm, so steady-state transforms
+    /// allocate nothing.
+    static TILE: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` on this thread's tile, grown to at least `len` floats.
+fn with_tile<F: FnOnce(&mut [f32])>(len: usize, f: F) {
+    TILE.with(|t| {
+        let mut v = t.borrow_mut();
+        if v.len() < len {
+            v.resize(len, 0.0);
+        }
+        f(&mut v[..len]);
+    });
+}
+
+/// Raw buffer base shared by phase-3 workers. Units partition the buffer
+/// by `(row, column-panel)`: every unit touches only its own row's slots
+/// whose column index falls in the unit's panel, and panels are disjoint
+/// column sets, so no two units ever alias an element.
+#[derive(Clone, Copy)]
+struct BufPtr(*mut f32);
+// SAFETY: the pointer is only dereferenced inside phase-3 unit kernels,
+// which access disjoint `(row, column-panel)` element sets (see BufPtr
+// doc); the dispatch scope joins all workers before the buffer borrow
+// ends.
+unsafe impl Send for BufPtr {}
+// SAFETY: same disjoint-partition argument as Send.
+unsafe impl Sync for BufPtr {}
+
+/// Four-step batched transform: every contiguous length-`plan.n()` row of
+/// `buf`, in place. Forward runs phases rows → sub-transforms → column
+/// panels; inverse runs the exact mirror (panels → sub → rows). Called by
+/// the engine's size dispatch ([`super::engine::forward_batch_with`] and
+/// friends) when `n ≥ cfg.fourstep_threshold` and the plan carries
+/// factorization tables.
+pub(crate) fn run_fourstep(
+    plan: &Plan,
+    fs: &FourStep,
+    buf: &mut [f32],
+    cfg: &EngineConfig,
+    disp: Dispatch<'_>,
+    forward: bool,
+) {
+    let n = plan.n();
+    assert!(buf.len() % n == 0, "buffer length must be a multiple of plan size");
+    debug_assert_eq!(fs.n1() * fs.n2(), n);
+    if buf.is_empty() {
+        return;
+    }
+    // One arm for the whole call, same precedence as the direct engine
+    // (`force_scalar` > width cap > env > detection): every chunk of
+    // every phase runs identical float ops.
+    let kern = simd::select_width(cfg.force_scalar, cfg.max_simd_width);
+    if forward {
+        phase_rows(plan, buf, cfg, disp, true);
+        phase_sub(fs, buf, cfg, disp, kern, true);
+        phase_panels(fs, buf, cfg, disp, true);
+    } else {
+        phase_panels(fs, buf, cfg, disp, false);
+        phase_sub(fs, buf, cfg, disp, kern, false);
+        phase_rows(plan, buf, cfg, disp, false);
+    }
+}
+
+/// Phase 1 (forward) / phase 3 (inverse): the per-full-row passes shared
+/// verbatim with the direct engine — fused bit-reversal + stages
+/// `m = 1, 2` forward; fused stage `2, 1` undo + bit-reversal inverse.
+fn phase_rows(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig, disp: Dispatch<'_>, forward: bool) {
+    let n = plan.n();
+    let rows = buf.len() / n;
+    let job = move |chunk: &mut [f32], _out: Option<&mut [f32]>| {
+        for row in chunk.chunks_exact_mut(n) {
+            if forward {
+                engine::fused_bitrev_stage12(plan, row);
+            } else {
+                engine::fused_inverse_stage21(row, n);
+                plan.bit_reverse(row);
+            }
+        }
+    };
+    let workers = engine::planned_workers(rows, n, cfg);
+    if workers <= 1 {
+        job(buf, None);
+        return;
+    }
+    let chunk_rows = (rows + workers - 1) / workers;
+    engine::dispatch_rows(disp, buf, None, chunk_rows * n, 0, job);
+}
+
+/// Phase 2 (both directions): stages `m = 4 .. n2/2`, chunk-local — the
+/// whole batch viewed as `rows·n1` contiguous sub-rows of length `n2`,
+/// swept with the shared cached `n2` plan's tiled stage kernels. Chunk
+/// and tile boundaries never change per-row float ops (rows are
+/// independent transforms), so this phase is bitwise thread-count
+/// invariant exactly like the direct engine's stage sweep.
+fn phase_sub(
+    fs: &FourStep,
+    buf: &mut [f32],
+    cfg: &EngineConfig,
+    disp: Dispatch<'_>,
+    kern: Kernels,
+    forward: bool,
+) {
+    let sub = fs.sub();
+    let n2 = fs.n2();
+    let sub_rows = buf.len() / n2;
+    let tile_rows = cfg.tile_rows.max(1);
+    let job = move |chunk: &mut [f32], _out: Option<&mut [f32]>| {
+        for tile in chunk.chunks_mut(tile_rows * n2) {
+            if forward {
+                engine::forward_stages_tile(sub, tile, kern);
+            } else {
+                engine::inverse_stages_tile(sub, tile, kern);
+            }
+        }
+    };
+    let workers = engine::planned_workers(sub_rows, n2, cfg);
+    if workers <= 1 {
+        job(buf, None);
+        return;
+    }
+    let chunk_rows = (sub_rows + workers - 1) / workers;
+    engine::dispatch_rows(disp, buf, None, chunk_rows * n2, 0, job);
+}
+
+/// Phase 3 (forward) / phase 1 (inverse): the `log2 n1` late stages
+/// `m = n2·2^t`, run per `(row, panel)` unit through the thread-local
+/// transpose tile. Panel 0 is the self-conjugate column pair
+/// `{0, n2/2}`; panel `p ≥ 1` covers [`PANEL_PAIRS`] conjugate column
+/// pairs `{r, n2 − r}`.
+fn phase_panels(fs: &FourStep, buf: &mut [f32], cfg: &EngineConfig, disp: Dispatch<'_>, forward: bool) {
+    let (n1, n2) = (fs.n1(), fs.n2());
+    let n = n1 * n2;
+    let rows = buf.len() / n;
+    let pairs = n2 / 2 - 1;
+    let npanels = 1 + (pairs + PANEL_PAIRS - 1) / PANEL_PAIRS;
+    let units = rows * npanels;
+    let workers = engine::planned_workers(units, n / npanels, cfg).max(1);
+    let base = BufPtr(buf.as_mut_ptr());
+    engine::dispatch_span(disp, workers, move |w| {
+        let mut u = w;
+        while u < units {
+            let row = u / npanels;
+            let panel = u % npanels;
+            // SAFETY: `row < rows`, so the offset stays inside `buf`;
+            // the unit only dereferences slots of this row whose column
+            // lies in its own panel's disjoint set (see BufPtr).
+            let row_ptr = unsafe { base.0.add(row * n) };
+            with_tile(tile_floats(n1), |tile| {
+                if panel == 0 {
+                    // SAFETY: exclusive access to columns {0, n2/2} of
+                    // this row for the duration of the unit.
+                    unsafe { run_special(row_ptr, fs, tile, forward) };
+                } else {
+                    let r0 = (panel - 1) * PANEL_PAIRS + 1;
+                    let r1 = (r0 + PANEL_PAIRS).min(n2 / 2);
+                    // SAFETY: exclusive access to columns {r, n2 − r}
+                    // for r in r0..r1 of this row.
+                    unsafe { run_pairs(row_ptr, fs, tile, r0, r1, forward) };
+                }
+            });
+            u += workers;
+        }
+    });
+}
+
+/// Gather–transform–scatter for the conjugate column pairs `r0..r1` of
+/// one row's `n1 × n2` view: column `r` in `tile[..n1]`, column `n2 − r`
+/// in `tile[n1..]`, all late stages in-tile, then scatter back.
+///
+/// # Safety
+/// `row` must point at one full length-`n1·n2` transform row, with
+/// exclusive access to columns `{r, n2 − r}` for every `r` in `r0..r1`
+/// for the duration of the call; `tile.len() ≥ tile_floats(fs.n1())` and
+/// `1 ≤ r0 ≤ r1 ≤ n2/2`.
+unsafe fn run_pairs(
+    row: *mut f32,
+    fs: &FourStep,
+    tile: &mut [f32],
+    r0: usize,
+    r1: usize,
+    forward: bool,
+) {
+    let (n1, n2) = (fs.n1(), fs.n2());
+    for r in r0..r1 {
+        // SAFETY: caller grants exclusive access to columns r and n2 - r
+        // of this row; tile holds 2·n1 floats.
+        unsafe {
+            tiling::gather_col_ptr(tile.as_mut_ptr(), row, n1, n2, r);
+            tiling::gather_col_ptr(tile.as_mut_ptr().add(n1), row, n1, n2, n2 - r);
+        }
+        {
+            let (a, b) = tile.split_at_mut(n1);
+            if forward {
+                fwd_pair(fs, a, b, r);
+            } else {
+                inv_pair(fs, a, b, r);
+            }
+        }
+        // SAFETY: same exclusive-access grant as the gather above.
+        unsafe {
+            tiling::scatter_col_ptr(tile.as_ptr(), row, n1, n2, r);
+            tiling::scatter_col_ptr(tile.as_ptr().add(n1), row, n1, n2, n2 - r);
+        }
+    }
+}
+
+/// Gather–transform–scatter for the self-conjugate special columns
+/// `{0, n2/2}` of one row's view (the panel holding the DC/Nyquist-like
+/// lanes of every late stage).
+///
+/// # Safety
+/// Same contract as [`run_pairs`] with the column set `{0, n2/2}`.
+unsafe fn run_special(row: *mut f32, fs: &FourStep, tile: &mut [f32], forward: bool) {
+    let (n1, n2) = (fs.n1(), fs.n2());
+    // SAFETY: caller grants exclusive access to columns 0 and n2/2 of
+    // this row; tile holds 2·n1 floats.
+    unsafe {
+        tiling::gather_col_ptr(tile.as_mut_ptr(), row, n1, n2, 0);
+        tiling::gather_col_ptr(tile.as_mut_ptr().add(n1), row, n1, n2, n2 / 2);
+    }
+    {
+        let (c0, c1) = tile.split_at_mut(n1);
+        if forward {
+            fwd_special(fs, c0, c1);
+        } else {
+            inv_special(fs, c0, c1);
+        }
+    }
+    // SAFETY: same exclusive-access grant as the gather above.
+    unsafe {
+        tiling::scatter_col_ptr(tile.as_ptr(), row, n1, n2, 0);
+        tiling::scatter_col_ptr(tile.as_ptr().add(n1), row, n1, n2, n2 / 2);
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-tile late-stage kernels
+//
+// Coordinates: late stage t has half-block m_abs = M·n2 with M = 2^t.
+// In chunk units (one chunk = one of the n1 rows of the n1 × n2 view, a
+// gathered column's index), blocks start at s = b·2M. For a butterfly
+// lane k = q·n2 + r of block s the four packed slots land at:
+//
+//   k       -> col r        chunk s + q
+//   m  - k  -> col n2 - r   chunk s + M  - q - 1     (r ≥ 1)
+//   m  + k  -> col r        chunk s + M  + q
+//   2m - k  -> col n2 - r   chunk s + 2M - q - 1     (r ≥ 1)
+//
+// so a {r, n2 − r} pair is closed under every late stage. The mirror
+// family (lanes k ≡ n2 − r mod n2) swaps the roles of the two columns;
+// for r = 0 the −1 chunk offsets vanish and everything stays in column
+// 0; for r = n2/2 both columns coincide. Within a stage all families
+// and the trivial lanes touch disjoint slots, so their order is free;
+// across stages order is ascending (forward) / descending (inverse).
+// Twiddles: W_{2m}^{q·n2+r} = A_t[q]·B_t[r] (factorized tables, see
+// `plan::FourStep`); the inverse uses the pre-halved inner table so the
+// product is directly the half-twiddle the inverse butterfly needs.
+// ---------------------------------------------------------------------
+
+/// Forward late stages for one conjugate column pair (`a` = column `r`,
+/// `b` = column `n2 − r`, both `n1` chunks long, `1 ≤ r < n2/2`).
+// audit: no_alloc
+fn fwd_pair(fs: &FourStep, a: &mut [f32], b: &mut [f32], r: usize) {
+    let n1 = fs.n1();
+    let n2 = fs.n2();
+    for t in 0..fs.stages() {
+        let m = 1usize << t;
+        let outer = fs.stage_outer(t);
+        let inner = fs.stage_inner(t);
+        let (bra, bia) = inner[r];
+        let (brb, bib) = inner[n2 - r];
+        let mut s = 0;
+        while s < n1 {
+            // Lane family k = q·n2 + r: even Re/odd Re in `a`, the
+            // conjugate-mirror Im slots in `b`.
+            for q in 0..(m / 2).max(1) {
+                let (ar, ai) = outer[q];
+                let wr = ar * bra - ai * bia;
+                let wi = ar * bia + ai * bra;
+                let er = a[s + q];
+                let ei = b[s + m - q - 1];
+                let or_ = a[s + m + q];
+                let oi = b[s + 2 * m - q - 1];
+                let tr = wr * or_ - wi * oi;
+                let ti = wr * oi + wi * or_;
+                a[s + q] = er + tr;
+                b[s + 2 * m - q - 1] = ei + ti;
+                b[s + m - q - 1] = er - tr;
+                a[s + m + q] = ti - ei;
+            }
+            // Mirror family k = (q+1)·n2 − r: roles of a/b swap; the
+            // full-range inner table keeps this branch-free.
+            for q in 0..m / 2 {
+                let (ar, ai) = outer[q];
+                let wr = ar * brb - ai * bib;
+                let wi = ar * bib + ai * brb;
+                let er = b[s + q];
+                let ei = a[s + m - q - 1];
+                let or_ = b[s + m + q];
+                let oi = a[s + 2 * m - q - 1];
+                let tr = wr * or_ - wi * oi;
+                let ti = wr * oi + wi * or_;
+                b[s + q] = er + tr;
+                a[s + 2 * m - q - 1] = ei + ti;
+                a[s + m - q - 1] = er - tr;
+                b[s + m + q] = ti - ei;
+            }
+            s += 2 * m;
+        }
+    }
+}
+
+/// Exact inverse of [`fwd_pair`]: stages descend, each butterfly is the
+/// algebraic inverse with the halving folded into the pre-halved inner
+/// twiddle table (and explicit `0.5` on the twiddle-free terms).
+// audit: no_alloc
+fn inv_pair(fs: &FourStep, a: &mut [f32], b: &mut [f32], r: usize) {
+    let n1 = fs.n1();
+    let n2 = fs.n2();
+    for t in (0..fs.stages()).rev() {
+        let m = 1usize << t;
+        let outer = fs.stage_outer(t);
+        let inner_inv = fs.stage_inner_inv(t);
+        let (ira, iia) = inner_inv[r];
+        let (irb, iib) = inner_inv[n2 - r];
+        let mut s = 0;
+        while s < n1 {
+            for q in 0..(m / 2).max(1) {
+                let (ar, ai) = outer[q];
+                let hr = ar * ira - ai * iia;
+                let hi = ar * iia + ai * ira;
+                let va = a[s + q];
+                let vb = b[s + m - q - 1];
+                let vc = b[s + 2 * m - q - 1];
+                let vd = a[s + m + q];
+                a[s + q] = 0.5 * (va + vb);
+                b[s + m - q - 1] = 0.5 * (vc - vd);
+                a[s + m + q] = (va - vb) * hr + (vc + vd) * hi;
+                b[s + 2 * m - q - 1] = (vc + vd) * hr - (va - vb) * hi;
+            }
+            for q in 0..m / 2 {
+                let (ar, ai) = outer[q];
+                let hr = ar * irb - ai * iib;
+                let hi = ar * iib + ai * irb;
+                let va = b[s + q];
+                let vb = a[s + m - q - 1];
+                let vc = a[s + 2 * m - q - 1];
+                let vd = b[s + m + q];
+                b[s + q] = 0.5 * (va + vb);
+                a[s + m - q - 1] = 0.5 * (vc - vd);
+                b[s + m + q] = (va - vb) * hr + (vc + vd) * hi;
+                a[s + 2 * m - q - 1] = (vc + vd) * hr - (va - vb) * hi;
+            }
+            s += 2 * m;
+        }
+    }
+}
+
+/// Forward late stages for the self-conjugate columns (`c0` = column 0,
+/// `c1` = column `n2/2`): the per-stage trivial k = 0 lane and
+/// sign-flip lane live here, plus the purely-real column-0 family and
+/// the self-mirror column-`n2/2` family.
+// audit: no_alloc
+fn fwd_special(fs: &FourStep, c0: &mut [f32], c1: &mut [f32]) {
+    let n1 = fs.n1();
+    let n2 = fs.n2();
+    for t in 0..fs.stages() {
+        let m = 1usize << t;
+        let outer = fs.stage_outer(t);
+        let inner = fs.stage_inner(t);
+        // inner[0] = (1, -0): the product below reduces exactly to the
+        // outer factor, so column 0 needs no special-cased twiddle path.
+        let (br0, bi0) = inner[0];
+        let (brh, bih) = inner[n2 / 2];
+        let mut s = 0;
+        while s < n1 {
+            // k = 0 lane: both packed DCs, trivial twiddle +1.
+            let x = c0[s];
+            let y = c0[s + m];
+            c0[s] = x + y;
+            c0[s + m] = x - y;
+            // k = m/2 lane (twiddle −i): Re slot unchanged, Im slot is
+            // the odd half's Nyquist, sign-flipped. Slot m + m/2 sits in
+            // column n2/2 when M = 1, column 0 otherwise.
+            if m == 1 {
+                c1[s + 1] = -c1[s + 1];
+            } else {
+                c0[s + m + m / 2] = -c0[s + m + m / 2];
+            }
+            // Column-0 family k = q·n2, q ≥ 1: r = 0 kills the −1 chunk
+            // offsets — all four slots in c0.
+            for q in 1..m / 2 {
+                let (ar, ai) = outer[q];
+                let wr = ar * br0 - ai * bi0;
+                let wi = ar * bi0 + ai * br0;
+                let er = c0[s + q];
+                let ei = c0[s + m - q];
+                let or_ = c0[s + m + q];
+                let oi = c0[s + 2 * m - q];
+                let tr = wr * or_ - wi * oi;
+                let ti = wr * oi + wi * or_;
+                c0[s + q] = er + tr;
+                c0[s + 2 * m - q] = ei + ti;
+                c0[s + m - q] = er - tr;
+                c0[s + m + q] = ti - ei;
+            }
+            // Column-n2/2 family k = q·n2 + n2/2: self-mirror — all
+            // four slots in c1, with the pair family's −1 offsets.
+            for q in 0..m / 2 {
+                let (ar, ai) = outer[q];
+                let wr = ar * brh - ai * bih;
+                let wi = ar * bih + ai * brh;
+                let er = c1[s + q];
+                let ei = c1[s + m - q - 1];
+                let or_ = c1[s + m + q];
+                let oi = c1[s + 2 * m - q - 1];
+                let tr = wr * or_ - wi * oi;
+                let ti = wr * oi + wi * or_;
+                c1[s + q] = er + tr;
+                c1[s + 2 * m - q - 1] = ei + ti;
+                c1[s + m - q - 1] = er - tr;
+                c1[s + m + q] = ti - ei;
+            }
+            s += 2 * m;
+        }
+    }
+}
+
+/// Exact inverse of [`fwd_special`].
+// audit: no_alloc
+fn inv_special(fs: &FourStep, c0: &mut [f32], c1: &mut [f32]) {
+    let n1 = fs.n1();
+    let n2 = fs.n2();
+    for t in (0..fs.stages()).rev() {
+        let m = 1usize << t;
+        let outer = fs.stage_outer(t);
+        let inner_inv = fs.stage_inner_inv(t);
+        let (ir0, ii0) = inner_inv[0];
+        let (irh, iih) = inner_inv[n2 / 2];
+        let mut s = 0;
+        while s < n1 {
+            let x = c0[s];
+            let y = c0[s + m];
+            c0[s] = 0.5 * (x + y);
+            c0[s + m] = 0.5 * (x - y);
+            // The sign flip is self-inverse (the forward −i lane moved
+            // no magnitude between slots).
+            if m == 1 {
+                c1[s + 1] = -c1[s + 1];
+            } else {
+                c0[s + m + m / 2] = -c0[s + m + m / 2];
+            }
+            for q in 1..m / 2 {
+                let (ar, ai) = outer[q];
+                let hr = ar * ir0 - ai * ii0;
+                let hi = ar * ii0 + ai * ir0;
+                let va = c0[s + q];
+                let vb = c0[s + m - q];
+                let vc = c0[s + 2 * m - q];
+                let vd = c0[s + m + q];
+                c0[s + q] = 0.5 * (va + vb);
+                c0[s + m - q] = 0.5 * (vc - vd);
+                c0[s + m + q] = (va - vb) * hr + (vc + vd) * hi;
+                c0[s + 2 * m - q] = (vc + vd) * hr - (va - vb) * hi;
+            }
+            for q in 0..m / 2 {
+                let (ar, ai) = outer[q];
+                let hr = ar * irh - ai * iih;
+                let hi = ar * iih + ai * irh;
+                let va = c1[s + q];
+                let vb = c1[s + m - q - 1];
+                let vc = c1[s + 2 * m - q - 1];
+                let vd = c1[s + m + q];
+                c1[s + q] = 0.5 * (va + vb);
+                c1[s + m - q - 1] = 0.5 * (vc - vd);
+                c1[s + m + q] = (va - vb) * hr + (vc + vd) * hi;
+                c1[s + 2 * m - q - 1] = (vc + vd) * hr - (va - vb) * hi;
+            }
+            s += 2 * m;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::{self, EngineConfig};
+    use super::super::plan::cached;
+    use super::*;
+
+    fn rand_rows(n: usize, rows: usize, seed: u64) -> Vec<f32> {
+        let mut state = seed | 1;
+        (0..n * rows)
+            .map(|_| {
+                state = state
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((state >> 33) as f64 / (1u64 << 31) as f64 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    /// Always take the four-step tier (every plan ≥ FOURSTEP_MIN_N has
+    /// tables, so threshold 1 forces the tier for those sizes).
+    fn four_cfg() -> EngineConfig {
+        let mut c = EngineConfig::new();
+        c.fourstep_threshold = 1;
+        c
+    }
+
+    /// Never take the four-step tier.
+    fn direct_cfg() -> EngineConfig {
+        let mut c = EngineConfig::new();
+        c.fourstep_threshold = usize::MAX;
+        c
+    }
+
+    #[test]
+    fn fourstep_matches_direct_spectrum_within_tolerance() {
+        // Covers the square split (1024 = 32×32) and the rectangular
+        // one (2048 = 32×64). Only the fused twiddle product may differ
+        // from the direct path (~1 ulp per late stage).
+        for n in [1024usize, 2048] {
+            let plan = cached(n);
+            assert!(plan.fourstep().is_some());
+            let x = rand_rows(n, 3, 0xF0F0 + n as u64);
+            let mut four = x.clone();
+            engine::forward_batch_with(&plan, &mut four, &four_cfg());
+            let mut direct = x.clone();
+            engine::forward_batch_with(&plan, &mut direct, &direct_cfg());
+            assert_ne!(four, x, "four-step must transform the buffer");
+            for i in 0..four.len() {
+                let tol = 1e-4 * (1.0 + direct[i].abs());
+                assert!(
+                    (four[i] - direct[i]).abs() <= tol,
+                    "n={n} i={i}: four-step {} vs direct {}",
+                    four[i],
+                    direct[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fourstep_roundtrip_recovers_input() {
+        for n in [1024usize, 2048] {
+            let plan = cached(n);
+            let x = rand_rows(n, 2, 42 + n as u64);
+            let mut buf = x.clone();
+            engine::forward_batch_with(&plan, &mut buf, &four_cfg());
+            engine::inverse_batch_with(&plan, &mut buf, &four_cfg());
+            for i in 0..buf.len() {
+                assert!((buf[i] - x[i]).abs() < 1e-3, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_tier_roundtrip_recovers_input() {
+        // Forward on the four-step tier, inverse on the direct tier (and
+        // vice versa): both tiers must realize the *same* transform, not
+        // merely be self-consistent.
+        let n = 2048usize;
+        let plan = cached(n);
+        let x = rand_rows(n, 2, 7);
+        let mut buf = x.clone();
+        engine::forward_batch_with(&plan, &mut buf, &four_cfg());
+        engine::inverse_batch_with(&plan, &mut buf, &direct_cfg());
+        for i in 0..buf.len() {
+            assert!((buf[i] - x[i]).abs() < 1e-3, "four->direct i={i}");
+        }
+        let mut buf = x.clone();
+        engine::forward_batch_with(&plan, &mut buf, &direct_cfg());
+        engine::inverse_batch_with(&plan, &mut buf, &four_cfg());
+        for i in 0..buf.len() {
+            assert!((buf[i] - x[i]).abs() < 1e-3, "direct->four i={i}");
+        }
+    }
+
+    #[test]
+    fn dc_term_is_row_sum() {
+        let n = 1024usize;
+        let plan = cached(n);
+        let x = rand_rows(n, 2, 99);
+        let mut buf = x.clone();
+        engine::forward_batch_with(&plan, &mut buf, &four_cfg());
+        for row in 0..2 {
+            let sum: f32 = x[row * n..(row + 1) * n].iter().sum();
+            assert!(
+                (buf[row * n] - sum).abs() < 1e-2 * (1.0 + sum.abs()),
+                "row={row}: {} vs {}",
+                buf[row * n],
+                sum
+            );
+        }
+    }
+
+    #[test]
+    fn forced_scalar_fourstep_is_bitwise_deterministic_across_thread_counts() {
+        // Thresholds lowered so every phase actually fans out; scoped
+        // dispatch keeps the comparison off the global pool. The panel
+        // phase's unit striding and the row/sub chunking must never
+        // change per-element float ops.
+        let n = 2048usize;
+        let plan = cached(n);
+        let x = rand_rows(n, 8, 11);
+        let run = |threads: usize, forward: bool, buf: &mut [f32]| {
+            let mut c = EngineConfig::forced_scalar();
+            c.fourstep_threshold = 1;
+            c.par_min_rows = 1;
+            c.par_min_elems = 1;
+            c.par_chunk_elems = 1;
+            c.max_threads = threads;
+            if forward {
+                engine::forward_batch_scoped(&plan, buf, &c);
+            } else {
+                engine::inverse_batch_scoped(&plan, buf, &c);
+            }
+        };
+        let mut one = x.clone();
+        run(1, true, &mut one);
+        let mut four = x.clone();
+        run(4, true, &mut four);
+        assert_eq!(one, four, "forward must not depend on thread count");
+        run(1, false, &mut one);
+        run(4, false, &mut four);
+        assert_eq!(one, four, "inverse must not depend on thread count");
+        for i in 0..one.len() {
+            assert!((one[i] - x[i]).abs() < 1e-3, "threaded roundtrip i={i}");
+        }
+    }
+
+    #[test]
+    fn width_cap_matches_forced_scalar_bitwise() {
+        // max_simd_width 1..=3 must select the legacy scalar loops —
+        // bit-identical to force_scalar on every phase of the tier.
+        let n = 1024usize;
+        let plan = cached(n);
+        let x = rand_rows(n, 2, 23);
+        let mut capped = x.clone();
+        let mut c = four_cfg();
+        c.max_simd_width = 2;
+        engine::forward_batch_with(&plan, &mut capped, &c);
+        let mut scalar = x.clone();
+        let mut cs = four_cfg();
+        cs.force_scalar = true;
+        engine::forward_batch_with(&plan, &mut scalar, &cs);
+        assert_eq!(capped, scalar);
+    }
+}

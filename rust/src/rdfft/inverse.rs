@@ -27,7 +27,8 @@ pub fn irdfft_inplace(plan: &Plan, buf: &mut [f32]) {
 /// through the batch-major [`super::engine`] and its runtime-dispatched
 /// SIMD lane kernels; bit-identical to the per-row scalar path on the
 /// forced-scalar and portable arms, within the n-scaled tolerance on the
-/// AVX2+FMA arm.
+/// AVX2+FMA arm. Sizes at or above `EngineConfig::fourstep_threshold`
+/// take the four-step (Bailey) large-n tier ([`super::fourstep`]).
 pub fn irdfft_batch(plan: &Plan, buf: &mut [f32]) {
     super::engine::inverse_batch(plan, buf);
 }

@@ -26,6 +26,12 @@
 //!   ([`engine::circulant_apply_batch`] and the block-circulant sweeps):
 //!   forward stages → packed spectral product → inverse stages in one
 //!   cache-resident sweep per tile instead of three full passes
+//! * [`fourstep`]  — four-step (Bailey) large-n tier behind the same
+//!   batch entry points (`n ≥ EngineConfig::fourstep_threshold`):
+//!   chunk-local sub-transforms plus column-pair late stages through a
+//!   transpose tile, O(1) full-buffer sweeps instead of O(log n)
+//! * [`tiling`]    — shared transpose-tile gather/scatter helpers
+//!   (the 2-D column pass and the four-step panels both use them)
 //! * [`spectral`]  — packed-domain elementwise complex ops (⊙, conj-⊙)
 //! * [`simd`]      — width-4 lane micro-kernels (butterfly 4-groups,
 //!   packed products) with runtime dispatch: AVX2+FMA on x86_64, a
@@ -40,11 +46,13 @@ pub mod circulant_bf16;
 pub mod conv;
 pub mod engine;
 pub mod forward;
+pub mod fourstep;
 pub mod inverse;
 pub mod layout;
 pub mod plan;
 pub mod simd;
 pub mod spectral;
+pub mod tiling;
 pub mod twod;
 
 pub use circulant::{BlockCirculant, Circulant};

@@ -13,6 +13,134 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
+/// Smallest `n` for which a plan also carries four-step (Bailey)
+/// factorization tables. Deliberately far below the engine's default
+/// dispatch threshold (`EngineConfig::fourstep_threshold`, ~16k) so
+/// tests can exercise the four-step path at cheap sizes by lowering the
+/// config knob; the tables for a 1k plan cost ~n·8 bytes — noise next to
+/// the plan's existing O(n) arrays.
+pub const FOURSTEP_MIN_N: usize = 1024;
+
+/// Four-step (Bailey) factorization tables for an `n = n1 × n2` plan
+/// (`n2 ≥ n1`, both powers of two).
+///
+/// The direct engine runs stages `m = 1 .. n/2` over the whole row; the
+/// four-step split runs stages `m ≤ n2/2` chunk-locally as `n1`
+/// independent `n2`-point sub-transforms (sharing one cached `n2` plan,
+/// bit-for-bit the same arithmetic), then the `log2(n1)` *late* stages
+/// `m = n2·2^t` through gathered column tiles. A late-stage twiddle
+/// factorizes exactly over the `(q, r)` digit split of `k = q·n2 + r`:
+///
+/// `W_{2m}^{q·n2+r} = A_t[q] · B_t[r]`,
+/// `A_t[q] = (cos πq/M, −sin πq/M)`, `B_t[r] = (cos πr/(M·n2), −sin …)`,
+/// `M = 2^t` — so the per-stage table is O(M/2 + n2) instead of O(m/2),
+/// and the whole late-stage table set is O(n1 + n2·log2 n1) instead of
+/// the O(n) a direct plan would need. The one numeric delta vs the
+/// direct path: the complex product rounds once more (~1 ulp), applied
+/// identically regardless of thread count.
+#[derive(Debug, Clone)]
+pub struct FourStep {
+    n1: usize,
+    n2: usize,
+    /// Shared `n2`-point sub-plan for the chunk-local early stages.
+    sub: Arc<Plan>,
+    /// Outer factors `A_t[q]`, stage-major; stage `t` holds
+    /// `q = 0 .. (M/2).max(1)` at `outer_off[t]`.
+    outer: Vec<(f32, f32)>,
+    outer_off: Vec<usize>,
+    /// Inner factors `B_t[r]`, `r = 0 .. n2`, stage `t` at offset `t·n2`.
+    /// The full `r` range (not just `r < n2/2`) keeps the mirror column
+    /// family (`k = q·n2 + (n2 − r)`) table-driven with no conjugation
+    /// special case in the kernel.
+    inner: Vec<(f32, f32)>,
+    /// Pre-halved inner factors `(cos/2, −sin/2)` (computed in f64, then
+    /// rounded once) for the inverse butterfly: `(A·B)/2 = A·(B/2)`, so
+    /// halving the inner factor alone yields the pre-halved product the
+    /// inverse kernels need — same trick as `inv_twiddles`.
+    inner_inv: Vec<(f32, f32)>,
+}
+
+impl FourStep {
+    fn new(n: usize, log2n: u32) -> Self {
+        let shift = ((log2n + 1) / 2) as usize;
+        let n2 = 1usize << shift;
+        let n1 = n >> shift;
+        debug_assert!(n1 >= 2 && n2 >= n1 && n1 * n2 == n);
+        let stages = n1.trailing_zeros() as usize;
+        let mut outer = Vec::new();
+        let mut outer_off = Vec::with_capacity(stages);
+        let mut inner = Vec::with_capacity(stages * n2);
+        let mut inner_inv = Vec::with_capacity(stages * n2);
+        for t in 0..stages {
+            let m_cap = 1usize << t; // M = 2^t
+            outer_off.push(outer.len());
+            for q in 0..(m_cap / 2).max(1) {
+                let theta = std::f64::consts::PI * q as f64 / m_cap as f64;
+                outer.push((theta.cos() as f32, (-theta.sin()) as f32));
+            }
+            for r in 0..n2 {
+                let theta = std::f64::consts::PI * r as f64 / (m_cap * n2) as f64;
+                inner.push((theta.cos() as f32, (-theta.sin()) as f32));
+                inner_inv.push(((0.5 * theta.cos()) as f32, (-0.5 * theta.sin()) as f32));
+            }
+        }
+        FourStep { n1, n2, sub: cached(n2), outer, outer_off, inner, inner_inv }
+    }
+
+    /// Number of rows in the `n1 × n2` view (= column length).
+    #[inline]
+    pub fn n1(&self) -> usize {
+        self.n1
+    }
+
+    /// Number of columns (= chunk length of the early sub-transforms).
+    #[inline]
+    pub fn n2(&self) -> usize {
+        self.n2
+    }
+
+    /// The shared `n2`-point plan the chunk-local early stages run on.
+    #[inline]
+    pub fn sub(&self) -> &Plan {
+        &self.sub
+    }
+
+    /// Number of late stages (= `log2 n1`).
+    #[inline]
+    pub fn stages(&self) -> usize {
+        self.outer_off.len()
+    }
+
+    /// Outer factors `A_t[q]` for late stage `t` (`q = 0 .. (M/2).max(1)`).
+    #[inline]
+    pub fn stage_outer(&self, t: usize) -> &[(f32, f32)] {
+        let start = self.outer_off[t];
+        let end = self.outer_off.get(t + 1).copied().unwrap_or(self.outer.len());
+        &self.outer[start..end]
+    }
+
+    /// Inner factors `B_t[r]` for late stage `t` (`r = 0 .. n2`).
+    #[inline]
+    pub fn stage_inner(&self, t: usize) -> &[(f32, f32)] {
+        &self.inner[t * self.n2..(t + 1) * self.n2]
+    }
+
+    /// Pre-halved inner factors for the inverse late stage `t`.
+    #[inline]
+    pub fn stage_inner_inv(&self, t: usize) -> &[(f32, f32)] {
+        &self.inner_inv[t * self.n2..(t + 1) * self.n2]
+    }
+
+    /// Heap bytes of the factorization tables, including the shared
+    /// `n2` sub-plan (an `Arc` — plans for the same `n2` share one copy
+    /// process-wide, so summing over many large plans over-counts it).
+    pub fn heap_bytes(&self) -> usize {
+        (self.outer.len() + self.inner.len() + self.inner_inv.len()) * 8
+            + self.outer_off.len() * 8
+            + self.sub.heap_bytes()
+    }
+}
+
 /// Precomputed data for an `n`-point rdFFT (`n` a power of two ≥ 2).
 #[derive(Debug, Clone)]
 pub struct Plan {
@@ -53,6 +181,10 @@ pub struct Plan {
     /// Per-stage base offsets into the `lane_*` arrays (stage `s` has
     /// half-block `m = 2^s`); every entry is a multiple of the lane width.
     lane_off: Vec<usize>,
+    /// Four-step factorization tables, built for `n ≥ FOURSTEP_MIN_N`
+    /// (whether the engine *uses* them is the `EngineConfig` threshold's
+    /// call at dispatch time).
+    fourstep: Option<FourStep>,
 }
 
 impl Plan {
@@ -107,6 +239,8 @@ impl Plan {
             }
         }
 
+        let fourstep = (n >= FOURSTEP_MIN_N).then(|| FourStep::new(n, log2n));
+
         Plan {
             n,
             log2n,
@@ -120,7 +254,14 @@ impl Plan {
             lane_inv_wr,
             lane_inv_wi,
             lane_off,
+            fourstep,
         }
+    }
+
+    /// Four-step factorization tables — `Some` for `n ≥ FOURSTEP_MIN_N`.
+    #[inline]
+    pub fn fourstep(&self) -> Option<&FourStep> {
+        self.fourstep.as_ref()
     }
 
     /// Transform size.
@@ -225,6 +366,12 @@ impl Plan {
 
     /// Heap bytes consumed by this plan (reported in DESIGN.md's VMEM /
     /// constant-memory estimates; not counted against transform memory).
+    /// Includes the four-step factorization tables and their shared `n2`
+    /// sub-plan when present. The four-step *transpose tiles* are not
+    /// here — they are per-worker thread-local scratch
+    /// (`fourstep::tile_floats(n1)` f32s per pool thread, grown once on
+    /// first large-n use and reused ever after), accounted by the
+    /// memtrack zero-alloc invariant test instead.
     pub fn heap_bytes(&self) -> usize {
         self.swaps.len() * 8
             + self.twiddles.len() * 8
@@ -237,6 +384,7 @@ impl Plan {
                 + self.lane_inv_wi.len())
                 * 4
             + self.lane_off.len() * 8
+            + self.fourstep.as_ref().map_or(0, FourStep::heap_bytes)
     }
 }
 
@@ -450,6 +598,68 @@ mod tests {
             + lane_tw * 4 * 4                     // lane-padded SoA quads
             + 4 * 8; // lane_off
         assert_eq!(plan.heap_bytes(), expected);
+    }
+
+    #[test]
+    fn fourstep_tables_built_exactly_from_min_n() {
+        assert!(Plan::new(512).fourstep().is_none());
+        let plan = Plan::new(FOURSTEP_MIN_N);
+        let fs = plan.fourstep().expect("1024 carries fourstep tables");
+        assert_eq!(fs.n1() * fs.n2(), 1024);
+        assert!(fs.n2() >= fs.n1());
+        assert_eq!(fs.sub().n(), fs.n2());
+        assert_eq!(fs.stages(), fs.n1().trailing_zeros() as usize);
+        assert!(plan.heap_bytes() > Plan::new(512).heap_bytes());
+    }
+
+    #[test]
+    fn fourstep_factorized_twiddles_match_direct_angles() {
+        // A_t[q]·B_t[r] must reproduce W_{2m}^{q·n2+r} for m = n2·2^t to
+        // within the one extra f32 product rounding.
+        let plan = Plan::new(2048);
+        let fs = plan.fourstep().unwrap();
+        let (n1, n2) = (fs.n1(), fs.n2());
+        assert_eq!((n1, n2), (32, 64));
+        for t in 0..fs.stages() {
+            let m_cap = 1usize << t;
+            let m = n2 * m_cap;
+            let outer = fs.stage_outer(t);
+            let inner = fs.stage_inner(t);
+            assert_eq!(outer.len(), (m_cap / 2).max(1));
+            assert_eq!(inner.len(), n2);
+            for q in 0..outer.len() {
+                for r in 0..n2 {
+                    let (ar, ai) = outer[q];
+                    let (br, bi) = inner[r];
+                    let wr = ar * br - ai * bi;
+                    let wi = ar * bi + ai * br;
+                    let theta =
+                        std::f64::consts::TAU * (q * n2 + r) as f64 / (2 * m) as f64;
+                    assert!(
+                        (wr as f64 - theta.cos()).abs() < 3e-7
+                            && (wi as f64 + theta.sin()).abs() < 3e-7,
+                        "t={t} q={q} r={r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fourstep_inner_inv_is_prehalved_inner() {
+        let plan = Plan::new(FOURSTEP_MIN_N);
+        let fs = plan.fourstep().unwrap();
+        for t in 0..fs.stages() {
+            let inner = fs.stage_inner(t);
+            let inv = fs.stage_inner_inv(t);
+            for r in 0..inner.len() {
+                assert!(
+                    (inv[r].0 - 0.5 * inner[r].0).abs() <= 1e-7
+                        && (inv[r].1 - 0.5 * inner[r].1).abs() <= 1e-7,
+                    "t={t} r={r}"
+                );
+            }
+        }
     }
 
     #[test]

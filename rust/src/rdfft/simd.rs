@@ -26,6 +26,26 @@
 //!   differential suite bounds the drift with the n-scaled tolerance
 //!   (EXPERIMENTS.md §Perf iteration 6, "tolerance policy").
 //!
+//! On top of the width-4 tier sits a **width-8 tier** ([`Lanes8`],
+//! EXPERIMENTS.md §Perf iteration 7): the same kernels instantiated with
+//! an 8-lane main loop that falls through to the width-4 loop and then
+//! the scalar tail for the remainder. Its two arms mirror the quad tier:
+//!
+//! * [`ScalarOct`] — portable scalar octs. Each 8-lane op is exactly two
+//!   [`ScalarQuad`] ops laid side by side (same per-element expressions,
+//!   no FMA), and the groups/products at different `k` touch disjoint
+//!   slots, so this arm is **bit-for-bit equal** to the quad arm — and
+//!   therefore to the legacy scalar loops (asserted in tests).
+//! * `AvxFma256` (x86_64) — full-width 256-bit `__m256` lanes with
+//!   AVX2+FMA, preferred by auto-detection over the 128-bit arm. FMA
+//!   contraction remains the **only** numeric delta vs the scalar
+//!   oracle, identical in kind to the 128-bit arm (same tolerance
+//!   policy; lane *width* never changes which ops run per element).
+//!
+//! [`crate::rdfft::engine::EngineConfig::max_simd_width`] clamps the
+//! resolved arm back down ([`clamp_width`]) so benches can measure the
+//! width-8-vs-width-4 delta on one machine.
+//!
 //! Dispatch is resolved **once per engine call** ([`select`]) from three
 //! inputs, in priority order: the process-wide override (the CLI's
 //! `--force-scalar`, [`force_scalar_global`]), the `RDFFT_FORCE_SCALAR`
@@ -40,8 +60,11 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
-/// Lane width of every kernel in this module.
+/// Lane width of the width-4 kernel tier.
 pub const LANES: usize = 4;
+
+/// Lane width of the width-8 kernel tier ([`Lanes8`]).
+pub const LANES8: usize = 8;
 
 /// Which kernel arm a call executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -51,9 +74,25 @@ pub enum Kernels {
     /// Portable width-4 scalar quads (no FMA); bitwise identical to
     /// [`Kernels::LegacyScalar`], structured as straight-line lane code.
     Portable,
-    /// x86_64 lanes compiled with AVX2+FMA (runtime-detected). Never
-    /// selected on other architectures.
+    /// x86_64 128-bit lanes compiled with AVX2+FMA (runtime-detected).
+    /// Never selected on other architectures.
     AvxFma,
+    /// x86_64 256-bit `__m256` lanes with AVX2+FMA — the full register
+    /// width, preferred by auto-detection over [`Kernels::AvxFma`]
+    /// (which survives as the explicit width-4 FMA arm behind
+    /// [`clamp_width`]). Never selected on other architectures.
+    AvxFma256,
+}
+
+impl Kernels {
+    /// True for the arms whose butterflies/products contract `a·b ± c·d`
+    /// with FMA — the only arms allowed to drift (within tolerance) from
+    /// the scalar oracle. Tests gate their bitwise assertions on this
+    /// instead of comparing against one specific FMA arm.
+    #[inline]
+    pub fn uses_fma(self) -> bool {
+        matches!(self, Kernels::AvxFma | Kernels::AvxFma256)
+    }
 }
 
 // Cached dispatch decision: 0 = unresolved, then Kernels + 1.
@@ -61,12 +100,14 @@ const K_UNRESOLVED: u8 = 0;
 const K_SCALAR: u8 = 1;
 const K_PORTABLE: u8 = 2;
 const K_AVXFMA: u8 = 3;
+const K_AVXFMA256: u8 = 4;
 static ACTIVE: AtomicU8 = AtomicU8::new(K_UNRESOLVED);
 
 fn decode(v: u8) -> Kernels {
     match v {
         K_SCALAR => Kernels::LegacyScalar,
         K_AVXFMA => Kernels::AvxFma,
+        K_AVXFMA256 => Kernels::AvxFma256,
         _ => Kernels::Portable,
     }
 }
@@ -93,7 +134,7 @@ fn avx_fma_available() -> bool {
 /// variant.
 #[inline]
 fn sanitize(kern: Kernels) -> Kernels {
-    if kern == Kernels::AvxFma && !avx_fma_available() {
+    if kern.uses_fma() && !avx_fma_available() {
         Kernels::Portable
     } else {
         kern
@@ -108,7 +149,9 @@ fn resolve() -> u8 {
         return K_SCALAR;
     }
     if avx_fma_available() {
-        return K_AVXFMA;
+        // Full register width by default; `clamp_width` steps back down
+        // to the 128-bit arm for the width-ablation benches.
+        return K_AVXFMA256;
     }
     K_PORTABLE
 }
@@ -134,6 +177,28 @@ pub fn select(force_scalar: bool) -> Kernels {
     } else {
         active()
     }
+}
+
+/// Clamp a resolved arm to a maximum lane width (the
+/// [`crate::rdfft::engine::EngineConfig::max_simd_width`] knob):
+/// `0` or `>= 8` leaves the arm alone, `4..=7` steps the 256-bit arm
+/// down to the 128-bit one (same FMA numerics, half the width), and
+/// `< 4` falls all the way back to the legacy scalar loops. Widths
+/// never *widen* an arm.
+pub fn clamp_width(kern: Kernels, max_width: usize) -> Kernels {
+    match max_width {
+        0 => kern,
+        1..=3 => Kernels::LegacyScalar,
+        4..=7 if kern == Kernels::AvxFma256 => Kernels::AvxFma,
+        _ => kern,
+    }
+}
+
+/// [`select`] followed by [`clamp_width`] — the one-stop per-call
+/// resolution the engine uses (force > env/global override > detection,
+/// then the config's width cap).
+pub fn select_width(force_scalar: bool, max_width: usize) -> Kernels {
+    clamp_width(select(force_scalar), max_width)
 }
 
 /// Process-wide kill switch (the CLI's `--force-scalar`): every later
@@ -287,9 +352,137 @@ impl Lanes4 for ScalarQuad {
     }
 }
 
+/// Eight f32 lanes — the width-8 tier's analogue of [`Lanes4`], with the
+/// same method contracts lifted to 8-element spans. Implementations must
+/// keep the per-lane expressions of their width-4 sibling so widening
+/// never changes which float ops run on an element (portable: bitwise
+/// identical; AVX: FMA contraction only).
+pub trait Lanes8: Copy {
+    type V: Copy;
+    /// # Safety
+    /// No memory access; unsafe only for the arm-wide feature contract.
+    unsafe fn splat(v: f32) -> Self::V;
+    /// Lanes `[p[0], .., p[7]]`.
+    ///
+    /// # Safety
+    /// `p..p+8` must be readable f32s.
+    unsafe fn load(p: *const f32) -> Self::V;
+    /// Lanes `[p[7], .., p[0]]` — the descending-stream load.
+    ///
+    /// # Safety
+    /// `p..p+8` must be readable f32s.
+    unsafe fn load_rev(p: *const f32) -> Self::V;
+    /// # Safety
+    /// `p..p+8` must be writable f32s.
+    unsafe fn store(p: *mut f32, v: Self::V);
+    /// Store lane `i` to `p[7 - i]` (inverse of [`Lanes8::load_rev`]).
+    ///
+    /// # Safety
+    /// `p..p+8` must be writable f32s.
+    unsafe fn store_rev(p: *mut f32, v: Self::V);
+    /// # Safety
+    /// Lane math only (feature contract).
+    unsafe fn add(a: Self::V, b: Self::V) -> Self::V;
+    /// # Safety
+    /// Lane math only (feature contract).
+    unsafe fn sub(a: Self::V, b: Self::V) -> Self::V;
+    /// # Safety
+    /// Lane math only (feature contract).
+    unsafe fn mul(a: Self::V, b: Self::V) -> Self::V;
+    /// `a·b + c` — fused on the FMA arm, two-rounding portably.
+    ///
+    /// # Safety
+    /// Lane math only (feature contract).
+    unsafe fn mla(a: Self::V, b: Self::V, c: Self::V) -> Self::V;
+    /// `a·b − c` — fused on the FMA arm.
+    ///
+    /// # Safety
+    /// Lane math only (feature contract).
+    unsafe fn mls(a: Self::V, b: Self::V, c: Self::V) -> Self::V;
+}
+
+/// Portable oct arm: plain f32 scalar ops on `[f32; 8]`. Every method is
+/// exactly two [`ScalarQuad`] calls on the low/high halves, so this arm
+/// is bitwise identical to the quad arm lane-for-lane (and therefore to
+/// the legacy scalar loops).
+#[derive(Clone, Copy)]
+pub struct ScalarOct;
+
+impl Lanes8 for ScalarOct {
+    type V = [[f32; 4]; 2];
+
+    // SAFETY: no memory access — delegates to the quad lane arithmetic.
+    #[inline(always)]
+    unsafe fn splat(v: f32) -> Self::V {
+        [ScalarQuad::splat(v), ScalarQuad::splat(v)]
+    }
+
+    // SAFETY: caller guarantees p..p+8 readable (trait contract), which
+    // covers both quad halves at p and p+4.
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> Self::V {
+        [ScalarQuad::load(p), ScalarQuad::load(p.add(4))]
+    }
+
+    // SAFETY: caller guarantees p..p+8 readable (trait contract); the
+    // halves swap so lane i reads p[7 - i].
+    #[inline(always)]
+    unsafe fn load_rev(p: *const f32) -> Self::V {
+        // Lane 0 must read p[7]: the reversed high half comes first.
+        [ScalarQuad::load_rev(p.add(4)), ScalarQuad::load_rev(p)]
+    }
+
+    // SAFETY: caller guarantees p..p+8 writable (trait contract), which
+    // covers both quad halves at p and p+4.
+    #[inline(always)]
+    unsafe fn store(p: *mut f32, v: Self::V) {
+        ScalarQuad::store(p, v[0]);
+        ScalarQuad::store(p.add(4), v[1]);
+    }
+
+    // SAFETY: caller guarantees p..p+8 writable (trait contract); the
+    // halves swap so lane i lands at p[7 - i].
+    #[inline(always)]
+    unsafe fn store_rev(p: *mut f32, v: Self::V) {
+        // Lane 0 lands at p[7] (inverse of load_rev).
+        ScalarQuad::store_rev(p.add(4), v[0]);
+        ScalarQuad::store_rev(p, v[1]);
+    }
+
+    // SAFETY: no memory access — delegates to the quad lane arithmetic.
+    #[inline(always)]
+    unsafe fn add(a: Self::V, b: Self::V) -> Self::V {
+        [ScalarQuad::add(a[0], b[0]), ScalarQuad::add(a[1], b[1])]
+    }
+
+    // SAFETY: no memory access — delegates to the quad lane arithmetic.
+    #[inline(always)]
+    unsafe fn sub(a: Self::V, b: Self::V) -> Self::V {
+        [ScalarQuad::sub(a[0], b[0]), ScalarQuad::sub(a[1], b[1])]
+    }
+
+    // SAFETY: no memory access — delegates to the quad lane arithmetic.
+    #[inline(always)]
+    unsafe fn mul(a: Self::V, b: Self::V) -> Self::V {
+        [ScalarQuad::mul(a[0], b[0]), ScalarQuad::mul(a[1], b[1])]
+    }
+
+    // SAFETY: no memory access — delegates to the quad lane arithmetic.
+    #[inline(always)]
+    unsafe fn mla(a: Self::V, b: Self::V, c: Self::V) -> Self::V {
+        [ScalarQuad::mla(a[0], b[0], c[0]), ScalarQuad::mla(a[1], b[1], c[1])]
+    }
+
+    // SAFETY: no memory access — delegates to the quad lane arithmetic.
+    #[inline(always)]
+    unsafe fn mls(a: Self::V, b: Self::V, c: Self::V) -> Self::V {
+        [ScalarQuad::mls(a[0], b[0], c[0]), ScalarQuad::mls(a[1], b[1], c[1])]
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
-    use super::Lanes4;
+    use super::{Lanes4, Lanes8};
     #[cfg(target_arch = "x86_64")]
     use std::arch::x86_64::*;
 
@@ -364,6 +557,82 @@ mod x86 {
             _mm_fmsub_ps(a, b, c)
         }
     }
+
+    /// 256-bit f32x8 lanes with FMA — the full register width of the
+    /// AVX2 hardware the 128-bit arm only half-uses. Same wrapper
+    /// discipline: instantiating functions carry
+    /// `#[target_feature(enable = "avx2,fma")]`.
+    #[derive(Clone, Copy)]
+    pub struct AvxFma256;
+
+    impl Lanes8 for AvxFma256 {
+        type V = __m256;
+
+        // SAFETY: AVX set1, no memory access; features per arm contract.
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> __m256 {
+            _mm256_set1_ps(v)
+        }
+
+        // SAFETY: unaligned load; caller guarantees p..p+8 readable.
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> __m256 {
+            _mm256_loadu_ps(p)
+        }
+
+        // SAFETY: unaligned load; caller guarantees p..p+8 readable.
+        #[inline(always)]
+        unsafe fn load_rev(p: *const f32) -> __m256 {
+            // Reverse within each 128-bit half, then swap the halves:
+            // [0..7] -> [3,2,1,0,7,6,5,4] -> [7,6,5,4,3,2,1,0].
+            let v = _mm256_loadu_ps(p);
+            let r = _mm256_shuffle_ps(v, v, 0x1B);
+            _mm256_permute2f128_ps(r, r, 0x01)
+        }
+
+        // SAFETY: unaligned store; caller guarantees p..p+8 writable.
+        #[inline(always)]
+        unsafe fn store(p: *mut f32, v: __m256) {
+            _mm256_storeu_ps(p, v)
+        }
+
+        // SAFETY: unaligned store; caller guarantees p..p+8 writable.
+        #[inline(always)]
+        unsafe fn store_rev(p: *mut f32, v: __m256) {
+            let r = _mm256_shuffle_ps(v, v, 0x1B);
+            _mm256_storeu_ps(p, _mm256_permute2f128_ps(r, r, 0x01))
+        }
+
+        // SAFETY: register math only; features per arm contract.
+        #[inline(always)]
+        unsafe fn add(a: __m256, b: __m256) -> __m256 {
+            _mm256_add_ps(a, b)
+        }
+
+        // SAFETY: register math only; features per arm contract.
+        #[inline(always)]
+        unsafe fn sub(a: __m256, b: __m256) -> __m256 {
+            _mm256_sub_ps(a, b)
+        }
+
+        // SAFETY: register math only; features per arm contract.
+        #[inline(always)]
+        unsafe fn mul(a: __m256, b: __m256) -> __m256 {
+            _mm256_mul_ps(a, b)
+        }
+
+        // SAFETY: FMA register math; features per arm contract.
+        #[inline(always)]
+        unsafe fn mla(a: __m256, b: __m256, c: __m256) -> __m256 {
+            _mm256_fmadd_ps(a, b, c)
+        }
+
+        // SAFETY: FMA register math; features per arm contract.
+        #[inline(always)]
+        unsafe fn mls(a: __m256, b: __m256, c: __m256) -> __m256 {
+            _mm256_fmsub_ps(a, b, c)
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -435,6 +704,72 @@ unsafe fn inv_quad<L: Lanes4>(
     L::store_rev(blk.add(m - k0 - 3), ei);
     L::store(blk.add(m + k0), or_);
     L::store_rev(blk.add(two_m - k0 - 3), oi);
+}
+
+/// One oct of forward symmetric 4-groups (`k = k0 .. k0+7`) — the
+/// width-8 twin of [`fwd_quad`], same per-lane expressions.
+///
+/// # Safety
+/// `blk` points at a block of `two_m = 2m` f32s; `1 ≤ k0` and
+/// `k0 + 7 < m/2`; `wr`/`wi` hold the stage twiddles indexed `k − 1` with
+/// at least `k0 + 6` entries readable from `k0 − 1`.
+#[inline(always)]
+unsafe fn fwd_oct<L: Lanes8>(
+    blk: *mut f32,
+    m: usize,
+    two_m: usize,
+    k0: usize,
+    wr: *const f32,
+    wi: *const f32,
+) {
+    let er = L::load(blk.add(k0)); //                E.re, ascending
+    let ei = L::load_rev(blk.add(m - k0 - 7)); //    E.im, descending
+    let or_ = L::load(blk.add(m + k0)); //           O.re, ascending
+    let oi = L::load_rev(blk.add(two_m - k0 - 7)); //O.im, descending
+    let w_r = L::load(wr.add(k0 - 1));
+    let w_i = L::load(wi.add(k0 - 1));
+    // T = W·O
+    let tr = L::mls(w_r, or_, L::mul(w_i, oi)); // wr*or − wi*oi
+    let ti = L::mla(w_r, oi, L::mul(w_i, or_)); // wr*oi + wi*or
+    L::store(blk.add(k0), L::add(er, tr)); //              Re y_k
+    L::store_rev(blk.add(two_m - k0 - 7), L::add(ei, ti)); // Im y_k
+    L::store_rev(blk.add(m - k0 - 7), L::sub(er, tr)); //  Re y_{m−k}
+    L::store(blk.add(m + k0), L::sub(ti, ei)); //          Im y_{m−k}
+}
+
+/// One oct of inverse symmetric 4-groups (pre-halved twiddles; the
+/// width-8 twin of [`inv_quad`]).
+///
+/// # Safety
+/// Same contract as [`fwd_oct`].
+#[inline(always)]
+unsafe fn inv_oct<L: Lanes8>(
+    blk: *mut f32,
+    m: usize,
+    two_m: usize,
+    k0: usize,
+    hr: *const f32,
+    hi: *const f32,
+) {
+    let a = L::load(blk.add(k0)); //                 er + tr
+    let b = L::load_rev(blk.add(m - k0 - 7)); //     er − tr
+    let c = L::load_rev(blk.add(two_m - k0 - 7)); // ei + ti
+    let d = L::load(blk.add(m + k0)); //             ti − ei
+    let h_r = L::load(hr.add(k0 - 1));
+    let h_i = L::load(hi.add(k0 - 1));
+    let half = L::splat(0.5);
+    let apb = L::add(a, b);
+    let amb = L::sub(a, b);
+    let cpd = L::add(c, d);
+    let cmd = L::sub(c, d);
+    let er = L::mul(half, apb); //               0.5·(a+b)
+    let ei = L::mul(half, cmd); //               0.5·(c−d)
+    let or_ = L::mla(amb, h_r, L::mul(cpd, h_i)); // (a−b)·hr + (c+d)·hi
+    let oi = L::mls(cpd, h_r, L::mul(amb, h_i)); //  (c+d)·hr − (a−b)·hi
+    L::store(blk.add(k0), er);
+    L::store_rev(blk.add(m - k0 - 7), ei);
+    L::store(blk.add(m + k0), or_);
+    L::store_rev(blk.add(two_m - k0 - 7), oi);
 }
 
 /// The scalar forward 4-group (identical float ops to the legacy kernel;
@@ -524,6 +859,64 @@ unsafe fn inv_groups<L: Lanes4>(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32
     }
 }
 
+/// All forward 4-groups of one `2m`-block on the width-8 tier: oct main
+/// loop, width-4 step, scalar tail. Grouping never reorders any
+/// per-element op (slot-disjoint groups), so `<ScalarOct, ScalarQuad>`
+/// is bitwise identical to [`fwd_groups`]`::<ScalarQuad>`.
+///
+/// # Safety
+/// Same contract as [`fwd_groups`].
+#[inline(always)]
+unsafe fn fwd_groups8<L8: Lanes8, L4: Lanes4>(blk: &mut [f32], m: usize, wr: &[f32], wi: &[f32]) {
+    let two_m = 2 * m;
+    debug_assert_eq!(blk.len(), two_m);
+    let half = m / 2;
+    debug_assert!(half == 0 || wr.len() >= half - 1);
+    let p = blk.as_mut_ptr();
+    let (wrp, wip) = (wr.as_ptr(), wi.as_ptr());
+    let mut k = 1usize;
+    while k + LANES8 <= half {
+        fwd_oct::<L8>(p, m, two_m, k, wrp, wip);
+        k += LANES8;
+    }
+    while k + LANES <= half {
+        fwd_quad::<L4>(p, m, two_m, k, wrp, wip);
+        k += LANES;
+    }
+    while k < half {
+        fwd_group_scalar(p, m, two_m, k, *wrp.add(k - 1), *wip.add(k - 1));
+        k += 1;
+    }
+}
+
+/// All inverse 4-groups of one `2m`-block on the width-8 tier (oct main
+/// loop, quad step, scalar tail).
+///
+/// # Safety
+/// Same contract as [`fwd_groups`] with pre-halved twiddles.
+#[inline(always)]
+unsafe fn inv_groups8<L8: Lanes8, L4: Lanes4>(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
+    let two_m = 2 * m;
+    debug_assert_eq!(blk.len(), two_m);
+    let half = m / 2;
+    debug_assert!(half == 0 || hr.len() >= half - 1);
+    let p = blk.as_mut_ptr();
+    let (hrp, hip) = (hr.as_ptr(), hi.as_ptr());
+    let mut k = 1usize;
+    while k + LANES8 <= half {
+        inv_oct::<L8>(p, m, two_m, k, hrp, hip);
+        k += LANES8;
+    }
+    while k + LANES <= half {
+        inv_quad::<L4>(p, m, two_m, k, hrp, hip);
+        k += LANES;
+    }
+    while k < half {
+        inv_group_scalar(p, m, two_m, k, *hrp.add(k - 1), *hip.add(k - 1));
+        k += 1;
+    }
+}
+
 // Monomorphic feature-gated instantiations: `#[inline(always)]` generics
 // inline *into* the target_feature wrapper, which is what lets the
 // intrinsics fuse into straight-line AVX2+FMA code.
@@ -552,6 +945,31 @@ unsafe fn inv_groups_avx(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
     inv_groups::<x86::AvxFma>(blk, m, hr, hi)
 }
 
+// SAFETY: same contract as fwd_groups8; the portable oct arm needs no
+// CPU features.
+unsafe fn fwd_groups8_portable(blk: &mut [f32], m: usize, wr: &[f32], wi: &[f32]) {
+    fwd_groups8::<ScalarOct, ScalarQuad>(blk, m, wr, wi)
+}
+
+// SAFETY: same contract as inv_groups8; no CPU features needed.
+unsafe fn inv_groups8_portable(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
+    inv_groups8::<ScalarOct, ScalarQuad>(blk, m, hr, hi)
+}
+
+// SAFETY: same contract as fwd_groups8, plus AVX2+FMA present at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn fwd_groups8_avx(blk: &mut [f32], m: usize, wr: &[f32], wi: &[f32]) {
+    fwd_groups8::<x86::AvxFma256, x86::AvxFma>(blk, m, wr, wi)
+}
+
+// SAFETY: same contract as inv_groups8, plus AVX2+FMA present at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn inv_groups8_avx(blk: &mut [f32], m: usize, hr: &[f32], hi: &[f32]) {
+    inv_groups8::<x86::AvxFma256, x86::AvxFma>(blk, m, hr, hi)
+}
+
 /// Dispatch the forward 4-group sweep of one block onto `kern`.
 ///
 /// # Safety
@@ -574,6 +992,12 @@ pub unsafe fn fwd_groups_dispatch(kern: Kernels, blk: &mut [f32], m: usize, wr: 
             fwd_groups_avx(blk, m, wr, wi);
             #[cfg(not(target_arch = "x86_64"))]
             fwd_groups_portable(blk, m, wr, wi);
+        }
+        Kernels::AvxFma256 => {
+            #[cfg(target_arch = "x86_64")]
+            fwd_groups8_avx(blk, m, wr, wi);
+            #[cfg(not(target_arch = "x86_64"))]
+            fwd_groups8_portable(blk, m, wr, wi);
         }
     }
 }
@@ -598,6 +1022,12 @@ pub unsafe fn inv_groups_dispatch(kern: Kernels, blk: &mut [f32], m: usize, hr: 
             inv_groups_avx(blk, m, hr, hi);
             #[cfg(not(target_arch = "x86_64"))]
             inv_groups_portable(blk, m, hr, hi);
+        }
+        Kernels::AvxFma256 => {
+            #[cfg(target_arch = "x86_64")]
+            inv_groups8_avx(blk, m, hr, hi);
+            #[cfg(not(target_arch = "x86_64"))]
+            inv_groups8_portable(blk, m, hr, hi);
         }
     }
 }
@@ -746,6 +1176,194 @@ unsafe fn conj_mul_acc_row<L: Lanes4>(acc: &mut [f32], a: &[f32], b: &[f32]) {
     }
 }
 
+/// `a ⊙= b` over one packed row on the width-8 tier (octs, then quads,
+/// then the scalar tail; DC/Nyquist scalar). Same per-element
+/// expressions as [`mul_row`].
+///
+/// # Safety
+/// `a.len() == b.len()`, even, ≥ 2.
+#[inline(always)]
+unsafe fn mul_row8<L8: Lanes8, L4: Lanes4>(a: &mut [f32], b: &[f32]) {
+    let n = a.len();
+    debug_assert!(n >= 2 && n % 2 == 0 && b.len() == n);
+    let half = n / 2;
+    let ap = a.as_mut_ptr();
+    let bp = b.as_ptr();
+    *ap *= *bp;
+    *ap.add(half) *= *bp.add(half);
+    let mut k = 1usize;
+    while k + LANES8 <= half {
+        let ar = L8::load(ap.add(k));
+        let ai = L8::load_rev(ap.add(n - k - 7));
+        let br = L8::load(bp.add(k));
+        let bi = L8::load_rev(bp.add(n - k - 7));
+        let re = L8::mls(ar, br, L8::mul(ai, bi)); // ar·br − ai·bi
+        let im = L8::mla(ar, bi, L8::mul(ai, br)); // ar·bi + ai·br
+        L8::store(ap.add(k), re);
+        L8::store_rev(ap.add(n - k - 7), im);
+        k += LANES8;
+    }
+    while k + LANES <= half {
+        let ar = L4::load(ap.add(k));
+        let ai = L4::load_rev(ap.add(n - k - 3));
+        let br = L4::load(bp.add(k));
+        let bi = L4::load_rev(bp.add(n - k - 3));
+        let re = L4::mls(ar, br, L4::mul(ai, bi));
+        let im = L4::mla(ar, bi, L4::mul(ai, br));
+        L4::store(ap.add(k), re);
+        L4::store_rev(ap.add(n - k - 3), im);
+        k += LANES;
+    }
+    while k < half {
+        let (ar, ai) = (*ap.add(k), *ap.add(n - k));
+        let (br, bi) = (*bp.add(k), *bp.add(n - k));
+        *ap.add(k) = ar * br - ai * bi;
+        *ap.add(n - k) = ar * bi + ai * br;
+        k += 1;
+    }
+}
+
+/// `a ⊙= conj(b)` over one packed row on the width-8 tier.
+///
+/// # Safety
+/// `a.len() == b.len()`, even, ≥ 2.
+#[inline(always)]
+unsafe fn mul_conjb_row8<L8: Lanes8, L4: Lanes4>(a: &mut [f32], b: &[f32]) {
+    let n = a.len();
+    debug_assert!(n >= 2 && n % 2 == 0 && b.len() == n);
+    let half = n / 2;
+    let ap = a.as_mut_ptr();
+    let bp = b.as_ptr();
+    *ap *= *bp;
+    *ap.add(half) *= *bp.add(half);
+    let mut k = 1usize;
+    while k + LANES8 <= half {
+        let ar = L8::load(ap.add(k));
+        let ai = L8::load_rev(ap.add(n - k - 7));
+        let br = L8::load(bp.add(k));
+        let bi = L8::load_rev(bp.add(n - k - 7));
+        let re = L8::mla(ar, br, L8::mul(ai, bi)); // ar·br + ai·bi
+        let im = L8::mls(ai, br, L8::mul(ar, bi)); // ai·br − ar·bi
+        L8::store(ap.add(k), re);
+        L8::store_rev(ap.add(n - k - 7), im);
+        k += LANES8;
+    }
+    while k + LANES <= half {
+        let ar = L4::load(ap.add(k));
+        let ai = L4::load_rev(ap.add(n - k - 3));
+        let br = L4::load(bp.add(k));
+        let bi = L4::load_rev(bp.add(n - k - 3));
+        let re = L4::mla(ar, br, L4::mul(ai, bi));
+        let im = L4::mls(ai, br, L4::mul(ar, bi));
+        L4::store(ap.add(k), re);
+        L4::store_rev(ap.add(n - k - 3), im);
+        k += LANES;
+    }
+    while k < half {
+        let (ar, ai) = (*ap.add(k), *ap.add(n - k));
+        let (br, bi) = (*bp.add(k), *bp.add(n - k));
+        *ap.add(k) = ar * br + ai * bi;
+        *ap.add(n - k) = ai * br - ar * bi;
+        k += 1;
+    }
+}
+
+/// `acc += a ⊙ b` over one packed row on the width-8 tier.
+///
+/// # Safety
+/// All three slices share one even length ≥ 2.
+#[inline(always)]
+unsafe fn mul_acc_row8<L8: Lanes8, L4: Lanes4>(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = acc.len();
+    debug_assert!(n >= 2 && n % 2 == 0 && a.len() == n && b.len() == n);
+    let half = n / 2;
+    let cp = acc.as_mut_ptr();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    *cp += *ap * *bp;
+    *cp.add(half) += *ap.add(half) * *bp.add(half);
+    let mut k = 1usize;
+    while k + LANES8 <= half {
+        let ar = L8::load(ap.add(k));
+        let ai = L8::load_rev(ap.add(n - k - 7));
+        let br = L8::load(bp.add(k));
+        let bi = L8::load_rev(bp.add(n - k - 7));
+        let re = L8::mls(ar, br, L8::mul(ai, bi));
+        let im = L8::mla(ar, bi, L8::mul(ai, br));
+        L8::store(cp.add(k), L8::add(L8::load(cp.add(k)), re));
+        let ci = L8::load_rev(cp.add(n - k - 7));
+        L8::store_rev(cp.add(n - k - 7), L8::add(ci, im));
+        k += LANES8;
+    }
+    while k + LANES <= half {
+        let ar = L4::load(ap.add(k));
+        let ai = L4::load_rev(ap.add(n - k - 3));
+        let br = L4::load(bp.add(k));
+        let bi = L4::load_rev(bp.add(n - k - 3));
+        let re = L4::mls(ar, br, L4::mul(ai, bi));
+        let im = L4::mla(ar, bi, L4::mul(ai, br));
+        L4::store(cp.add(k), L4::add(L4::load(cp.add(k)), re));
+        let ci = L4::load_rev(cp.add(n - k - 3));
+        L4::store_rev(cp.add(n - k - 3), L4::add(ci, im));
+        k += LANES;
+    }
+    while k < half {
+        let (ar, ai) = (*ap.add(k), *ap.add(n - k));
+        let (br, bi) = (*bp.add(k), *bp.add(n - k));
+        *cp.add(k) += ar * br - ai * bi;
+        *cp.add(n - k) += ar * bi + ai * br;
+        k += 1;
+    }
+}
+
+/// `acc += conj(a) ⊙ b` over one packed row on the width-8 tier.
+///
+/// # Safety
+/// All three slices share one even length ≥ 2.
+#[inline(always)]
+unsafe fn conj_mul_acc_row8<L8: Lanes8, L4: Lanes4>(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = acc.len();
+    debug_assert!(n >= 2 && n % 2 == 0 && a.len() == n && b.len() == n);
+    let half = n / 2;
+    let cp = acc.as_mut_ptr();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    *cp += *ap * *bp;
+    *cp.add(half) += *ap.add(half) * *bp.add(half);
+    let mut k = 1usize;
+    while k + LANES8 <= half {
+        let ar = L8::load(ap.add(k));
+        let ai = L8::load_rev(ap.add(n - k - 7));
+        let br = L8::load(bp.add(k));
+        let bi = L8::load_rev(bp.add(n - k - 7));
+        let re = L8::mla(ar, br, L8::mul(ai, bi)); // ar·br + ai·bi
+        let im = L8::mls(ar, bi, L8::mul(ai, br)); // ar·bi − ai·br
+        L8::store(cp.add(k), L8::add(L8::load(cp.add(k)), re));
+        let ci = L8::load_rev(cp.add(n - k - 7));
+        L8::store_rev(cp.add(n - k - 7), L8::add(ci, im));
+        k += LANES8;
+    }
+    while k + LANES <= half {
+        let ar = L4::load(ap.add(k));
+        let ai = L4::load_rev(ap.add(n - k - 3));
+        let br = L4::load(bp.add(k));
+        let bi = L4::load_rev(bp.add(n - k - 3));
+        let re = L4::mla(ar, br, L4::mul(ai, bi));
+        let im = L4::mls(ar, bi, L4::mul(ai, br));
+        L4::store(cp.add(k), L4::add(L4::load(cp.add(k)), re));
+        let ci = L4::load_rev(cp.add(n - k - 3));
+        L4::store_rev(cp.add(n - k - 3), L4::add(ci, im));
+        k += LANES;
+    }
+    while k < half {
+        let (ar, ai) = (*ap.add(k), *ap.add(n - k));
+        let (br, bi) = (*bp.add(k), *bp.add(n - k));
+        *cp.add(k) += ar * br + ai * bi;
+        *cp.add(n - k) += ar * bi - ai * br;
+        k += 1;
+    }
+}
+
 // SAFETY: same contract as mul_row, plus AVX2+FMA present at runtime.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
@@ -774,6 +1392,34 @@ unsafe fn conj_mul_acc_row_avx(acc: &mut [f32], a: &[f32], b: &[f32]) {
     conj_mul_acc_row::<x86::AvxFma>(acc, a, b)
 }
 
+// SAFETY: same contract as mul_row8, plus AVX2+FMA present at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mul_row8_avx(a: &mut [f32], b: &[f32]) {
+    mul_row8::<x86::AvxFma256, x86::AvxFma>(a, b)
+}
+
+// SAFETY: same contract as mul_conjb_row8, plus AVX2+FMA at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mul_conjb_row8_avx(a: &mut [f32], b: &[f32]) {
+    mul_conjb_row8::<x86::AvxFma256, x86::AvxFma>(a, b)
+}
+
+// SAFETY: same contract as mul_acc_row8, plus AVX2+FMA at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mul_acc_row8_avx(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    mul_acc_row8::<x86::AvxFma256, x86::AvxFma>(acc, a, b)
+}
+
+// SAFETY: same contract as conj_mul_acc_row8, plus AVX2+FMA at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn conj_mul_acc_row8_avx(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    conj_mul_acc_row8::<x86::AvxFma256, x86::AvxFma>(acc, a, b)
+}
+
 /// `a ⊙= b` (packed) on the selected arm. Legacy arm is
 /// [`crate::rdfft::spectral::mul_inplace`] bit-for-bit; the portable arm
 /// matches it too; AVX2+FMA agrees within the n-scaled tolerance.
@@ -790,6 +1436,14 @@ pub fn mul_inplace_with(kern: Kernels, a: &mut [f32], b: &[f32]) {
             mul_row_avx(a, b);
             #[cfg(not(target_arch = "x86_64"))]
             mul_row::<ScalarQuad>(a, b);
+        },
+        // SAFETY: same row contract; AvxFma256 only comes from resolve()
+        // after runtime AVX2+FMA detection (256-bit regs included).
+        Kernels::AvxFma256 => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            mul_row8_avx(a, b);
+            #[cfg(not(target_arch = "x86_64"))]
+            mul_row8::<ScalarOct, ScalarQuad>(a, b);
         },
     }
 }
@@ -809,6 +1463,14 @@ pub fn mul_conjb_inplace_with(kern: Kernels, a: &mut [f32], b: &[f32]) {
             #[cfg(not(target_arch = "x86_64"))]
             mul_conjb_row::<ScalarQuad>(a, b);
         },
+        // SAFETY: same row contract; AvxFma256 only comes from resolve()
+        // after runtime AVX2+FMA detection (256-bit regs included).
+        Kernels::AvxFma256 => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            mul_conjb_row8_avx(a, b);
+            #[cfg(not(target_arch = "x86_64"))]
+            mul_conjb_row8::<ScalarOct, ScalarQuad>(a, b);
+        },
     }
 }
 
@@ -827,6 +1489,14 @@ pub fn mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
             #[cfg(not(target_arch = "x86_64"))]
             mul_acc_row::<ScalarQuad>(acc, a, b);
         },
+        // SAFETY: same row contract; AvxFma256 only comes from resolve()
+        // after runtime AVX2+FMA detection (256-bit regs included).
+        Kernels::AvxFma256 => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            mul_acc_row8_avx(acc, a, b);
+            #[cfg(not(target_arch = "x86_64"))]
+            mul_acc_row8::<ScalarOct, ScalarQuad>(acc, a, b);
+        },
     }
 }
 
@@ -844,6 +1514,14 @@ pub fn conj_mul_acc_with(kern: Kernels, acc: &mut [f32], a: &[f32], b: &[f32]) {
             conj_mul_acc_row_avx(acc, a, b);
             #[cfg(not(target_arch = "x86_64"))]
             conj_mul_acc_row::<ScalarQuad>(acc, a, b);
+        },
+        // SAFETY: same row contract; AvxFma256 only comes from resolve()
+        // after runtime AVX2+FMA detection (256-bit regs included).
+        Kernels::AvxFma256 => unsafe {
+            #[cfg(target_arch = "x86_64")]
+            conj_mul_acc_row8_avx(acc, a, b);
+            #[cfg(not(target_arch = "x86_64"))]
+            conj_mul_acc_row8::<ScalarOct, ScalarQuad>(acc, a, b);
         },
     }
 }
@@ -904,7 +1582,10 @@ pub fn fwd_quad_arrays(
     match sanitize(kern) {
         // SAFETY: local arrays only; AvxFma arm only comes from select()
         // after runtime AVX2+FMA detection.
-        Kernels::AvxFma => unsafe {
+        // (the bf16 twin's quads stay 128-bit even on the width-8 arm —
+        // the gather is [f32; 4]-shaped, so AvxFma256 reuses the AvxFma
+        // lane math, which has the identical FMA contraction behavior)
+        Kernels::AvxFma | Kernels::AvxFma256 => unsafe {
             #[cfg(target_arch = "x86_64")]
             return go_avx(er, ei, or_, oi, wr, wi);
             #[cfg(not(target_arch = "x86_64"))]
@@ -972,7 +1653,9 @@ pub fn inv_quad_arrays(
     match sanitize(kern) {
         // SAFETY: local arrays only; AvxFma arm only comes from select()
         // after runtime AVX2+FMA detection.
-        Kernels::AvxFma => unsafe {
+        // (see fwd_quad_arrays: [f32; 4]-shaped gathers reuse the 128-bit
+        // FMA lane math on the width-8 arm)
+        Kernels::AvxFma | Kernels::AvxFma256 => unsafe {
             #[cfg(target_arch = "x86_64")]
             return go_avx(a, b, c, d, wr, wi);
             #[cfg(not(target_arch = "x86_64"))]
@@ -1137,6 +1820,110 @@ mod tests {
             mul_inplace_with(kern, &mut q, &b);
             for i in 0..n {
                 assert!((s[i] - q[i]).abs() <= 1e-5 * (1.0 + s[i].abs()), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_width_enforces_max_simd_width() {
+        assert_eq!(clamp_width(Kernels::AvxFma256, 0), Kernels::AvxFma256);
+        assert_eq!(clamp_width(Kernels::AvxFma256, 8), Kernels::AvxFma256);
+        assert_eq!(clamp_width(Kernels::AvxFma256, 4), Kernels::AvxFma);
+        assert_eq!(clamp_width(Kernels::AvxFma, 4), Kernels::AvxFma);
+        assert_eq!(clamp_width(Kernels::Portable, 4), Kernels::Portable);
+        assert_eq!(clamp_width(Kernels::AvxFma256, 1), Kernels::LegacyScalar);
+        assert_eq!(clamp_width(Kernels::Portable, 2), Kernels::LegacyScalar);
+        assert_eq!(select_width(true, 0), Kernels::LegacyScalar);
+    }
+
+    #[test]
+    fn scalar_oct_is_bitwise_two_scalar_quads() {
+        // The width-8 portable group sweep must be bit-identical to the
+        // width-4 portable sweep (ScalarOct is two ScalarQuad halves and
+        // the groups are lane-disjoint, so coverage order cannot matter).
+        for m in [16usize, 32, 64, 128, 256] {
+            let two_m = 2 * m;
+            let wr = rand_vec(m / 2 - 1, 19 * m as u64);
+            let wi = rand_vec(m / 2 - 1, 23 * m as u64);
+            let base = rand_vec(two_m, 31 * m as u64);
+            let mut quad = base.clone();
+            let mut oct = base.clone();
+            // SAFETY: blocks are exactly 2m long with m/2 - 1 twiddles.
+            unsafe {
+                fwd_groups_dispatch(Kernels::Portable, &mut quad, m, &wr, &wi);
+                fwd_groups8_portable(&mut oct, m, &wr, &wi);
+            }
+            assert_eq!(quad, oct, "fwd m={m}");
+
+            let mut quad = base.clone();
+            let mut oct = base.clone();
+            // SAFETY: same block contract as above.
+            unsafe {
+                inv_groups_dispatch(Kernels::Portable, &mut quad, m, &wr, &wi);
+                inv_groups8_portable(&mut oct, m, &wr, &wi);
+            }
+            assert_eq!(quad, oct, "inv m={m}");
+        }
+    }
+
+    #[test]
+    fn portable_oct_products_match_legacy_scalar_bitwise() {
+        for n in [4usize, 8, 16, 64, 256, 1024] {
+            let a0 = rand_vec(n, 41 + n as u64);
+            let b = rand_vec(n, 43 + n as u64);
+            let acc0 = rand_vec(n, 47 + n as u64);
+
+            let mut s = a0.clone();
+            crate::rdfft::spectral::mul_inplace(&mut s, &b);
+            let mut o = a0.clone();
+            // SAFETY: packed rows share one even length >= 2.
+            unsafe { mul_row8::<ScalarOct, ScalarQuad>(&mut o, &b) };
+            assert_eq!(s, o, "mul n={n}");
+
+            let mut s = a0.clone();
+            crate::rdfft::spectral::mul_conjb_inplace(&mut s, &b);
+            let mut o = a0.clone();
+            // SAFETY: packed rows share one even length >= 2.
+            unsafe { mul_conjb_row8::<ScalarOct, ScalarQuad>(&mut o, &b) };
+            assert_eq!(s, o, "conjb n={n}");
+
+            let mut s = acc0.clone();
+            crate::rdfft::spectral::mul_acc(&mut s, &a0, &b);
+            let mut o = acc0.clone();
+            // SAFETY: all three packed rows share one even length >= 2.
+            unsafe { mul_acc_row8::<ScalarOct, ScalarQuad>(&mut o, &a0, &b) };
+            assert_eq!(s, o, "mul_acc n={n}");
+
+            let mut s = acc0.clone();
+            crate::rdfft::spectral::conj_mul_acc(&mut s, &a0, &b);
+            let mut o = acc0.clone();
+            // SAFETY: all three packed rows share one even length >= 2.
+            unsafe { conj_mul_acc_row8::<ScalarOct, ScalarQuad>(&mut o, &a0, &b) };
+            assert_eq!(s, o, "conj_mul_acc n={n}");
+        }
+    }
+
+    #[test]
+    fn active_width8_arm_groups_agree_with_scalar_within_tolerance() {
+        // Exercises the real AvxFma256 arm when the host has it (and is a
+        // portable no-op check otherwise): only FMA contraction may move
+        // lanes relative to the scalar oracle.
+        let kern = active();
+        for m in [64usize, 256] {
+            let two_m = 2 * m;
+            let wr = rand_vec(m / 2 - 1, 53 * m as u64);
+            let wi = rand_vec(m / 2 - 1, 59 * m as u64);
+            let base = rand_vec(two_m, 61 * m as u64);
+            let mut s = base.clone();
+            let mut v = base.clone();
+            // SAFETY: blocks are exactly 2m long with m/2 - 1 twiddles;
+            // kern came from active() (runtime-detected).
+            unsafe {
+                fwd_groups_dispatch(Kernels::LegacyScalar, &mut s, m, &wr, &wi);
+                fwd_groups_dispatch(kern, &mut v, m, &wr, &wi);
+            }
+            for i in 0..two_m {
+                assert!((s[i] - v[i]).abs() <= 1e-5 * (1.0 + s[i].abs()), "m={m} i={i}");
             }
         }
     }

@@ -1,0 +1,130 @@
+//! Shared transpose-tile gather/scatter helpers.
+//!
+//! Strided column access is the common denominator of the 2-D column
+//! pass ([`super::twod::Plan2`]) and the four-step large-n engine
+//! ([`super::fourstep`]): both view a flat buffer as a row-major
+//! `rows × row_stride` matrix and need whole columns contiguous in a
+//! small cache-resident tile — the software analogue of a shared-memory
+//! transpose tile. The helpers here own that access pattern once, so
+//! both callers stay strictly in-place (the tile is persistent scratch
+//! allocated by the caller's plan, never per call).
+//!
+//! The safe pair works on slices and is what `twod` uses. The `_ptr`
+//! pair is the raw-element variant the four-step panel kernels use:
+//! panels of one row are processed by different closure invocations that
+//! share the row through a raw base pointer (columns are disjoint, so
+//! there is no aliasing — see `fourstep.rs`), which rules out `&mut`
+//! slice reborrows.
+
+/// Gather `tc` contiguous columns `[c0, c0 + tc)` of the row-major
+/// `rows × row_stride` matrix in `buf` into `tile`, column-major:
+/// column `c0 + t` lands contiguously at `tile[t·rows .. (t+1)·rows]`.
+// audit: no_alloc
+#[inline]
+pub fn gather_cols(tile: &mut [f32], buf: &[f32], rows: usize, row_stride: usize, c0: usize, tc: usize) {
+    debug_assert!(c0 + tc <= row_stride);
+    debug_assert!(tile.len() >= tc * rows && buf.len() >= rows * row_stride);
+    for t in 0..tc {
+        for i in 0..rows {
+            tile[t * rows + i] = buf[i * row_stride + c0 + t];
+        }
+    }
+}
+
+/// Exact inverse of [`gather_cols`]: scatter the tile's columns back
+/// into the row-major matrix.
+// audit: no_alloc
+#[inline]
+pub fn scatter_cols(tile: &[f32], buf: &mut [f32], rows: usize, row_stride: usize, c0: usize, tc: usize) {
+    debug_assert!(c0 + tc <= row_stride);
+    debug_assert!(tile.len() >= tc * rows && buf.len() >= rows * row_stride);
+    for t in 0..tc {
+        for i in 0..rows {
+            buf[i * row_stride + c0 + t] = tile[t * rows + i];
+        }
+    }
+}
+
+/// Gather one column `col` of the row-major `rows × row_stride` matrix
+/// at `buf` into the contiguous `dst` (length ≥ `rows`).
+///
+/// # Safety
+/// `buf` must be valid for reads of `rows · row_stride` elements,
+/// `col < row_stride`, `dst` valid for writes of `rows` elements, and
+/// the caller must hold exclusive access to the column's elements for
+/// the duration of the call (no other thread may touch
+/// `buf[i·row_stride + col]` concurrently).
+// audit: no_alloc
+#[inline]
+pub unsafe fn gather_col_ptr(dst: *mut f32, buf: *const f32, rows: usize, row_stride: usize, col: usize) {
+    debug_assert!(col < row_stride);
+    for i in 0..rows {
+        *dst.add(i) = *buf.add(i * row_stride + col);
+    }
+}
+
+/// Exact inverse of [`gather_col_ptr`].
+///
+/// # Safety
+/// Same contract as [`gather_col_ptr`] with `src` valid for reads of
+/// `rows` elements and `buf` valid for writes.
+// audit: no_alloc
+#[inline]
+pub unsafe fn scatter_col_ptr(src: *const f32, buf: *mut f32, rows: usize, row_stride: usize, col: usize) {
+    debug_assert!(col < row_stride);
+    for i in 0..rows {
+        *buf.add(i * row_stride + col) = *src.add(i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iota(n: usize) -> Vec<f32> {
+        (0..n).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_and_layout() {
+        let (rows, cols) = (5usize, 7usize);
+        let buf = iota(rows * cols);
+        let mut tile = vec![0.0f32; rows * 3];
+        gather_cols(&mut tile, &buf, rows, cols, 2, 3);
+        for t in 0..3 {
+            for i in 0..rows {
+                assert_eq!(tile[t * rows + i], buf[i * cols + 2 + t], "t={t} i={i}");
+            }
+        }
+        let mut back = vec![-1.0f32; rows * cols];
+        scatter_cols(&tile, &mut back, rows, cols, 2, 3);
+        for i in 0..rows {
+            for j in 0..cols {
+                let want = if (2..5).contains(&j) { buf[i * cols + j] } else { -1.0 };
+                assert_eq!(back[i * cols + j], want, "i={i} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn ptr_variants_match_slice_variants() {
+        let (rows, cols) = (6usize, 4usize);
+        let buf = iota(rows * cols);
+        for col in 0..cols {
+            let mut a = vec![0.0f32; rows];
+            let mut b = vec![0.0f32; rows];
+            gather_cols(&mut a, &buf, rows, cols, col, 1);
+            // SAFETY: buf holds rows·cols elements, col < cols, b holds
+            // rows elements, and this thread has exclusive access.
+            unsafe { gather_col_ptr(b.as_mut_ptr(), buf.as_ptr(), rows, cols, col) };
+            assert_eq!(a, b, "col={col}");
+
+            let mut back_a = vec![0.0f32; rows * cols];
+            let mut back_b = vec![0.0f32; rows * cols];
+            scatter_cols(&a, &mut back_a, rows, cols, col, 1);
+            // SAFETY: same bounds as above, exclusive access to back_b.
+            unsafe { scatter_col_ptr(b.as_ptr(), back_b.as_mut_ptr(), rows, cols, col) };
+            assert_eq!(back_a, back_b, "col={col}");
+        }
+    }
+}

@@ -16,8 +16,9 @@
 //! pass is one engine call over all `rows` contiguous rows, and the
 //! column pass gathers columns into a fixed transpose tile (the
 //! strided-access analogue of the CUDA kernel's shared-memory tile,
-//! allocated once in [`Plan2::new`]) so columns also transform as
-//! contiguous engine batches. The inverse runs the passes in the opposite
+//! allocated once in [`Plan2::new`], moved through the shared
+//! [`super::tiling`] gather/scatter helpers the four-step large-n engine
+//! also uses) so columns also transform as contiguous engine batches. The inverse runs the passes in the opposite
 //! order, so `irdfft2(rdfft2(x)) == x` holds to float precision with zero
 //! allocation beyond the plan's persistent tile.
 //!
@@ -28,6 +29,7 @@
 
 use super::engine;
 use super::plan::{cached, Plan};
+use super::tiling;
 use crate::runtime::pool::ExecCtx;
 use std::sync::Arc;
 
@@ -107,11 +109,7 @@ impl Plan2 {
         let mut c0 = 0usize;
         while c0 < c {
             let tc = tile_cols.min(c - c0);
-            for t in 0..tc {
-                for i in 0..r {
-                    self.tile[t * r + i] = buf[i * c + c0 + t];
-                }
-            }
+            tiling::gather_cols(&mut self.tile, buf, r, c, c0, tc);
             let seg = &mut self.tile[..tc * r];
             match (forward, ctx) {
                 (true, None) => engine::forward_batch(&self.col_plan, seg),
@@ -119,11 +117,7 @@ impl Plan2 {
                 (true, Some(cx)) => engine::forward_batch_ctx(&self.col_plan, seg, cx),
                 (false, Some(cx)) => engine::inverse_batch_ctx(&self.col_plan, seg, cx),
             }
-            for t in 0..tc {
-                for i in 0..r {
-                    buf[i * c + c0 + t] = self.tile[t * r + i];
-                }
-            }
+            tiling::scatter_cols(&self.tile, buf, r, c, c0, tc);
             c0 += tc;
         }
     }

@@ -378,8 +378,8 @@ fn forced_fused_apply_is_bitwise_identical_to_scalar_three_pass() {
 fn simd_auto_dispatch_matches_forced_scalar_within_tolerance() {
     // Auto-dispatch may run FMA lanes; agreement with the forced-scalar
     // oracle is bounded by the n-scaled tolerance (and is bitwise
-    // whenever the resolved arm is not AvxFma — asserted, so the
-    // portable quad arm can never silently drift).
+    // whenever the resolved arm is not an FMA tier — asserted, so the
+    // portable quad/oct arms can never silently drift).
     let forced = EngineConfig::forced_scalar();
     for &n in &SIMD_SIZES {
         for &b in &[1usize, 3, 7, 13] {
@@ -389,7 +389,7 @@ fn simd_auto_dispatch_matches_forced_scalar_within_tolerance() {
             engine::forward_batch(&cached(n), &mut auto);
             let mut scal = x.clone();
             engine::forward_batch_with(&cached(n), &mut scal, &forced);
-            if simd::active() != Kernels::AvxFma {
+            if !simd::active().uses_fma() {
                 assert_eq!(auto, scal, "non-FMA arm must be bitwise n={n} b={b}");
             }
             let tol = n_tol(n, 1e-5);

@@ -109,9 +109,29 @@ fn pool_cfg() -> EngineConfig {
     }
 }
 
+/// Sizes at or above the default `fourstep_threshold` route to the
+/// four-step tier on every default-config entry point; the per-arm loops
+/// below assert the *direct*-tier contracts (scalar-rows bitwise
+/// equality), so they skip large-n cases — those get their own
+/// tier-explicit tests at the bottom of this file.
+const FOURSTEP_N: usize = 1 << 14;
+
+/// Default tuning pinned to the direct stage sweep at any n.
+fn direct_cfg() -> EngineConfig {
+    EngineConfig { fourstep_threshold: usize::MAX, ..EngineConfig::new() }
+}
+
+/// Default tuning pinned to the four-step tier (any n with tables).
+fn four_cfg() -> EngineConfig {
+    EngineConfig { fourstep_threshold: 1, ..EngineConfig::new() }
+}
+
 #[test]
 fn forward_spectra_match_golden_on_every_arm() {
     for g in load_cases() {
+        if g.n >= FOURSTEP_N {
+            continue; // four-step tier: dedicated large-n tests below
+        }
         let plan = cached(g.n);
 
         // Legacy per-row scalar rows — the seed-era kernels.
@@ -145,6 +165,9 @@ fn forward_spectra_match_golden_on_every_arm() {
 #[test]
 fn roundtrips_match_golden_on_every_arm() {
     for g in load_cases() {
+        if g.n >= FOURSTEP_N {
+            continue; // four-step tier: dedicated large-n tests below
+        }
         let plan = cached(g.n);
 
         let mut scalar = g.input.clone();
@@ -179,6 +202,135 @@ fn fused_delta_apply_reproduces_golden_roundtrip() {
             engine::circulant_apply_batch_with(&plan, &mut fused, &delta, SpectralOp::Mul, &cfg);
             assert_matches_roundtrip(&fused, &g, "fused delta");
         }
+    }
+}
+
+#[test]
+fn default_threshold_keeps_small_n_on_the_direct_tier() {
+    // Below the default 16 Ki threshold the default config must be
+    // bitwise-identical to an explicitly direct-pinned config: the tier
+    // dispatch may not reroute (or perturb) small transforms.
+    for g in load_cases() {
+        if g.n >= FOURSTEP_N {
+            continue;
+        }
+        let plan = cached(g.n);
+        let mut def = g.input.clone();
+        engine::forward_batch_with(&plan, &mut def, &EngineConfig::new());
+        let mut direct = g.input.clone();
+        engine::forward_batch_with(&plan, &mut direct, &direct_cfg());
+        assert_eq!(def, direct, "n={} must stay on the direct tier", g.n);
+    }
+}
+
+#[test]
+fn large_n_fourstep_and_direct_tiers_match_golden() {
+    // The committed f64-oracle vectors at n = 16 Ki / 64 Ki, checked on
+    // BOTH tiers — the default config routes these sizes to the
+    // four-step path, the pinned config keeps the direct sweep; each
+    // must independently reproduce the oracle, and they must agree with
+    // each other much tighter than the oracle tolerance (their only
+    // delta is the fused late-stage twiddle product, ~1 ulp per stage).
+    let mut saw = 0;
+    for g in load_cases() {
+        if g.n < FOURSTEP_N {
+            continue;
+        }
+        saw += 1;
+        let plan = cached(g.n);
+        assert!(plan.fourstep().is_some(), "n={} must carry tables", g.n);
+
+        let mut four = g.input.clone();
+        engine::forward_batch_with(&plan, &mut four, &EngineConfig::new());
+        assert_matches_packed(&four, &g, "fourstep");
+        let mut direct = g.input.clone();
+        engine::forward_batch_with(&plan, &mut direct, &direct_cfg());
+        assert_matches_packed(&direct, &g, "direct large-n");
+        // The twiddle-product rounding is absolute in the intermediate
+        // magnitudes (~ √n · ‖x‖), not relative to each output bin, so
+        // the bound carries the same √n factor as the golden tolerance —
+        // just 10× tighter.
+        let tier_tol = 1e-5 * (g.n as f32).sqrt();
+        for k in 0..g.n {
+            let d = (four[k] - direct[k]).abs();
+            assert!(
+                d <= tier_tol * (1.0 + direct[k].abs()),
+                "n={} k={k}: tiers drifted apart: {} vs {}",
+                g.n,
+                four[k],
+                direct[k]
+            );
+        }
+
+        // Default-config roundtrip (four-step both ways) lands on the
+        // committed f64 inverse.
+        engine::inverse_batch_with(&plan, &mut four, &EngineConfig::new());
+        assert_matches_roundtrip(&four, &g, "fourstep roundtrip");
+    }
+    assert!(saw >= 2, "fixture must carry the large-n cases");
+}
+
+#[test]
+fn large_n_simd_width_tiers_agree() {
+    // Width-8 vs width-4 lanes on the four-step tier: on non-FMA
+    // hardware both resolve to bit-identical portable arms; on AVX2+FMA
+    // the only delta is FMA contraction in the product/butterfly lanes,
+    // bounded well inside the golden tolerance.
+    for g in load_cases() {
+        if g.n < FOURSTEP_N {
+            continue;
+        }
+        let plan = cached(g.n);
+        let w8 = EngineConfig { fourstep_threshold: 1, ..EngineConfig::new() };
+        let w4 = EngineConfig { fourstep_threshold: 1, max_simd_width: 4, ..EngineConfig::new() };
+        let mut a = g.input.clone();
+        engine::forward_batch_with(&plan, &mut a, &w8);
+        let mut b = g.input.clone();
+        engine::forward_batch_with(&plan, &mut b, &w4);
+        for k in 0..g.n {
+            assert!(
+                (a[k] - b[k]).abs() <= 1e-5 * (1.0 + b[k].abs()) * (g.n as f32).sqrt().max(1.0),
+                "n={} k={k}: width tiers disagree: {} vs {}",
+                g.n,
+                a[k],
+                b[k]
+            );
+        }
+        assert_matches_packed(&a, &g, "width-8 fourstep");
+        assert_matches_packed(&b, &g, "width-4 fourstep");
+    }
+}
+
+#[test]
+fn large_n_forced_scalar_fourstep_bitwise_across_thread_counts() {
+    // The bitwise-determinism contract on the large-n tier: forced
+    // scalar, pool fan-out at 1 vs 4 workers (with thresholds lowered so
+    // every phase actually splits) — identical bits, and still golden.
+    let Some(g) = load_cases().into_iter().find(|g| g.n == FOURSTEP_N) else {
+        panic!("fixture must carry the n = 16 Ki case");
+    };
+    let plan = cached(g.n);
+    let b = 3;
+    let seed_rows: Vec<f32> = g.input.iter().copied().cycle().take(g.n * b).collect();
+    let run = |threads: usize| -> Vec<f32> {
+        let cfg = EngineConfig {
+            force_scalar: true,
+            par_min_rows: 1,
+            par_min_elems: 1,
+            par_chunk_elems: 1,
+            max_threads: threads,
+            ..four_cfg()
+        };
+        let ctx = ExecCtx::with_threads(threads).with_engine_config(cfg);
+        let mut buf = seed_rows.clone();
+        engine::forward_batch_ctx(&plan, &mut buf, &ctx);
+        buf
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(one, four, "four-step must be bitwise across pool sizes");
+    for r in 0..b {
+        assert_matches_packed(&one[r * g.n..(r + 1) * g.n], &g, "forced-scalar fourstep");
     }
 }
 

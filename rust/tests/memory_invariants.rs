@@ -135,6 +135,38 @@ fn batch_engine_is_allocation_free_outside_thread_spawn() {
 }
 
 #[test]
+fn fourstep_tier_is_allocation_free_after_warmup() {
+    // The four-step large-n tier's only allocation is each worker's
+    // thread-local transpose tile, which is grown once and reused. After
+    // a warm-up call on the same thread(s), a steady-state
+    // forward+inverse must register zero tracked allocations — the
+    // in-place discipline the plan's `heap_bytes` accounting relies on.
+    let n = 2048usize;
+    let rows = 4usize;
+    let plan = cached(n);
+    assert!(plan.fourstep().is_some());
+    let cfg = EngineConfig { fourstep_threshold: 1, ..EngineConfig::serial() };
+    let base: Vec<f32> = (0..n * rows).map(|i| ((i * 29 + 11) % 89) as f32 / 44.0 - 1.0).collect();
+    let mut buf = base.clone();
+    // Warm-up: grows the calling thread's tile (serial config => all
+    // phases run inline on this thread).
+    engine::forward_batch_with(&plan, &mut buf, &cfg);
+    engine::inverse_batch_with(&plan, &mut buf, &cfg);
+    rdfft::memtrack::reset();
+    let before = rdfft::memtrack::snapshot().alloc_count;
+    engine::forward_batch_with(&plan, &mut buf, &cfg);
+    engine::inverse_batch_with(&plan, &mut buf, &cfg);
+    assert_eq!(
+        rdfft::memtrack::snapshot().alloc_count,
+        before,
+        "four-step steady state performed tracked allocations"
+    );
+    for i in 0..n * rows {
+        assert!((buf[i] - base[i]).abs() < 1e-3, "fourstep double roundtrip i={i}");
+    }
+}
+
+#[test]
 fn lora_sits_between_full_finetune_and_ours_at_small_batch() {
     let d = 512;
     let ff = measure_single_layer_with_state(Method::FullFinetune, d, 1, 1).peak_bytes;

@@ -57,10 +57,20 @@ cargo test -q
 # (pipefail is set above, so the tee does not mask a failure).
 "$REPRO" crashtest 2>&1 | tee crashtest.log
 
-# Engine grid: writes BENCH_rdfft.json (fused/unfused circulant rows,
-# the pool thread grid, and the batch_simd / circulant_fused_simd rows
-# with the simd_vs_scalar gate) and exits non-zero if a hard gate
-# regresses. The workflow uploads the JSON next to the loss-curve CSV.
+# Four-step smoke: correctness-only sweep of the large-n (Bailey) tier
+# against the direct stage sweep plus a roundtrip check, no timing. The
+# workflow matrix runs this script on both dispatch legs, so the smoke
+# covers the SIMD arms here and the forced-scalar tier under
+# RDFFT_FORCE_SCALAR=1 on the other leg.
+"$REPRO" engine --fourstep-smoke
+
+# Engine grid: writes BENCH_rdfft.json (schema bench_rdfft/v3 —
+# fused/unfused circulant rows, the pool thread grid, the batch_simd /
+# circulant_fused_simd rows with the simd_vs_scalar gate, the
+# batch_simd8-vs-batch_simd4 width-tier pair, and the
+# batch_fourstep-vs-batch_direct large-n grid with the fourstep_vs_direct
+# gate) and exits non-zero if a hard gate regresses. The workflow uploads
+# the JSON next to the loss-curve CSV.
 "$REPRO" engine --fast
 if [[ ! -s BENCH_rdfft.json ]]; then
   echo "ci.sh: ERROR: repro engine did not produce BENCH_rdfft.json" >&2

@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Append large-n known-answer cases to rust/tests/fixtures/golden_rdfft.json.
+
+The original fixture (n in {4 .. 1024}) is preserved byte-for-byte; this
+script only splices new cases (n in {16384, 65536} by default) before the
+closing of the "cases" array, so re-running it is idempotent and the
+small-n vectors never churn.
+
+Oracle (independent of the Rust implementation, same contract as the
+original cases): a pure-f64 naive DFT by direct O(n^2) summation with
+*exact* angle reduction — the phase of term (k, t) is looked up as
+w[(k*t) mod n] with the product/mod computed in int64, so no angle ever
+loses precision to a large float argument. No FFT library is involved.
+
+Inputs for the appended cases: MMIX LCG (state = state*6364136223846793005
++ 1442695040888963407 mod 2^64), per-case state seeded as
+GOLDEN_SEED ^ n, sample = (((state >> 33) % 256) - 128) / 64 — exact
+multiples of 1/64 in [-2, 2), so the decimal literals parse losslessly
+into f32.
+
+packed[] is the rdFFT packed layout (Re y_k at k, Im y_k at n-k,
+DC/Nyquist at 0 and n/2); roundtrip[] is the f64 inverse DFT of packed
+(equals input to f64 precision). Values are written with %.8g — 8
+significant digits, ~2x what an f32 comparison can resolve, keeping the
+large-n fixture a few MB instead of tens.
+"""
+
+import sys
+
+import numpy as np
+
+GOLDEN_SEED = 20260731
+NEW_SIZES = (16384, 65536)
+FIXTURE = "rust/tests/fixtures/golden_rdfft.json"
+LCG_MUL = 6364136223846793005
+LCG_ADD = 1442695040888963407
+MASK64 = (1 << 64) - 1
+
+
+def lcg_input(n: int) -> np.ndarray:
+    state = (GOLDEN_SEED ^ n) & MASK64
+    out = np.empty(n, dtype=np.float64)
+    for i in range(n):
+        state = (state * LCG_MUL + LCG_ADD) & MASK64
+        out[i] = (((state >> 33) % 256) - 128) / 64.0
+    return out
+
+
+def naive_dft(x: np.ndarray, inverse: bool = False, chunk: int = 64) -> np.ndarray:
+    """Direct-summation DFT with exact int64 (k*t) mod n phase indexing."""
+    n = len(x)
+    sign = 2j if inverse else -2j
+    w = np.exp(sign * np.pi * np.arange(n) / n)  # w[j] = e^(sign*pi*j/n*... )
+    t = np.arange(n, dtype=np.int64)
+    y = np.empty(n, dtype=np.complex128)
+    for k0 in range(0, n, chunk):
+        k = np.arange(k0, min(k0 + chunk, n), dtype=np.int64)
+        idx = (k[:, None] * t[None, :]) % n
+        y[k0 : k0 + len(k)] = w[idx] @ x
+    return y
+
+
+def pack(y: np.ndarray) -> np.ndarray:
+    n = len(y)
+    p = np.empty(n, dtype=np.float64)
+    p[0] = y[0].real
+    p[n // 2] = y[n // 2].real
+    for k in range(1, n // 2):
+        p[k] = y[k].real
+        p[n - k] = y[k].imag
+    return p
+
+
+def unpack(p: np.ndarray) -> np.ndarray:
+    n = len(p)
+    y = np.empty(n, dtype=np.complex128)
+    y[0] = p[0]
+    y[n // 2] = p[n // 2]
+    for k in range(1, n // 2):
+        y[k] = p[k] + 1j * p[n - k]
+        y[n - k] = p[k] - 1j * p[n - k]
+    return y
+
+
+def fmt(v: float) -> str:
+    return "%.8g" % v
+
+
+def case_text(n: int) -> str:
+    print(f"generating n={n} ...", flush=True)
+    x = lcg_input(n)
+    y = naive_dft(x)
+    packed = pack(y)
+    rt = naive_dft(unpack(packed), inverse=True).real / n
+    err = np.max(np.abs(rt - x))
+    assert err < 1e-9, f"oracle roundtrip drifted: {err}"
+    lines = ["  {", f'   "n": {n},']
+    for name, vals in (("input", x), ("packed", packed), ("roundtrip", rt)):
+        lines.append(f'   "{name}": [')
+        body = ",\n".join(f"    {fmt(v)}" for v in vals)
+        lines.append(body)
+        lines.append("   ]," if name != "roundtrip" else "   ]")
+    lines.append("  }")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    with open(FIXTURE, "r", encoding="ascii") as f:
+        text = f.read()
+    tail = "\n ]\n}\n"
+    if not text.endswith(tail):
+        print("fixture tail not in expected format; refusing to splice", file=sys.stderr)
+        return 1
+    added = []
+    for n in NEW_SIZES:
+        if f'"n": {n},' in text:
+            print(f"n={n} already present; skipping")
+            continue
+        block = case_text(n)
+        text = text[: -len(tail)] + ",\n" + block + tail
+        added.append(n)
+    with open(FIXTURE, "w", encoding="ascii") as f:
+        f.write(text)
+    print(f"appended {added or 'nothing'} -> {FIXTURE}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
