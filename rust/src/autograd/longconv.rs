@@ -1,0 +1,829 @@
+//! Long-convolution (fftconv-style) sequence-mixing layer.
+//!
+//! [`LongConvLayer`] treats the feature axis of a `[b, d]` activation as a
+//! causal sequence and mixes it with one trainable length-`k` filter:
+//!
+//! ```text
+//! u[t] = Σ_{τ=0..min(t,k-1)} h[τ] · x[t-τ]        (causal, t < d)
+//! y    = x + gelu(u)                              (residual form)
+//! ```
+//!
+//! The O(d·k) convolution runs as an O(n log n) circular convolution at
+//! `n = next_pow2(d + k - 1)` — zero-padding removes wraparound, so the
+//! first `d` outputs are exactly the causal linear convolution. The hot
+//! path is the paper's machinery end to end:
+//!
+//! * forward: rows zero-pad into one `[b, n]` scratch, then a **single**
+//!   fused sweep ([`engine::circulant_apply_batch_ctx`] with
+//!   [`SpectralOp::Mul`]) does forward stages → packed product with the
+//!   cached filter spectrum → inverse stages per cache-resident tile;
+//!   GELU and the residual skip are applied during the copy-back out of
+//!   the inverse pass (no extra activation tensor);
+//! * backward stays in the frequency domain: `dĥ += conj(x̂) ⊙ ĝ` via the
+//!   packed [`spectral::conj_mul_acc_with`] kernels (one accumulator row,
+//!   one inverse per step), and `dx̂ = ĝ ⊙ conj(ĥ)` via the `MulConjB`
+//!   product family, overwriting grad-output in place with `dx`.
+//!
+//! The trainable parameter is the canonical **time-domain** kernel,
+//! stored at padded length `n` with taps `k..n` structurally zero (their
+//! gradients are zeroed after every inverse), so the checkpoint contract
+//! ([`Layer::for_each_param`]) and the shard-arena shape contract both
+//! see one stable `[1, n]` tensor.
+
+use super::layers::{Layer, ShardSaved};
+use super::tensor::Tensor;
+use crate::memtrack::Category;
+use crate::rdfft::plan::cached;
+use crate::rdfft::{engine, simd, spectral, Kernels, Plan, SpectralOp};
+use crate::runtime::pool::ExecCtx;
+use std::cell::RefCell;
+use std::sync::Arc;
+
+/// GELU, tanh approximation (the long-convolution literature's standard
+/// gate): `0.5·u·(1 + tanh(√(2/π)·(u + 0.044715·u³)))`.
+#[inline]
+pub fn gelu(u: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // √(2/π)
+    const A: f32 = 0.044_715;
+    let t = (C * (u + A * u * u * u)).tanh();
+    0.5 * u * (1.0 + t)
+}
+
+/// Exact derivative of [`gelu`] (the tanh form, differentiated — not a
+/// further approximation), used by the fused backward gate.
+#[inline]
+pub fn gelu_prime(u: f32) -> f32 {
+    const C: f32 = 0.797_884_56;
+    const A: f32 = 0.044_715;
+    let inner = C * (u + A * u * u * u);
+    let t = inner.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * u * sech2 * C * (1.0 + 3.0 * A * u * u)
+}
+
+thread_local! {
+    /// Per-thread zero-pad scratch for the allocation-free serve path.
+    /// Grown to the largest `b·n` this thread has seen, then reused —
+    /// steady-state inference allocates nothing (the fourstep transpose
+    /// tile uses the same discipline).
+    static PAD: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` on this thread's pad scratch, grown to at least `len` floats.
+fn with_pad<F: FnOnce(&mut [f32])>(len: usize, f: F) {
+    PAD.with(|t| {
+        let mut v = t.borrow_mut();
+        if v.len() < len {
+            v.resize(len, 0.0);
+        }
+        f(&mut v[..len]);
+    });
+}
+
+/// One batch of the fused forward, shared **verbatim** by the serial
+/// path, the replica-free shard hook, and the serve path, so the three
+/// are bit-identical per row: zero-pad rows, one fused
+/// forward→product→inverse sweep against the shared filter spectrum,
+/// then the GELU (+ optional skip) copy-back. `u_save`, when present,
+/// receives the `[b, d]` pre-activations backward needs.
+// audit: no_alloc
+#[allow(clippy::too_many_arguments)]
+fn longconv_forward_rows(
+    plan: &Plan,
+    d: usize,
+    h_spec: &[f32],
+    x: &Tensor,
+    pad: &mut [f32],
+    mut u_save: Option<&mut [f32]>,
+    out: &mut Tensor,
+    residual: bool,
+    exec: &ExecCtx,
+) {
+    let n = plan.n();
+    let b = x.rows;
+    debug_assert_eq!(pad.len(), b * n);
+    debug_assert_eq!((out.rows, out.cols), (b, d));
+    for r in 0..b {
+        let row = &mut pad[r * n..(r + 1) * n];
+        row[..d].copy_from_slice(x.row(r));
+        row[d..].fill(0.0);
+    }
+    // û ← x̂ ⊙ ĥ, staged and inverted inside one cache-resident sweep.
+    engine::circulant_apply_batch_ctx(plan, pad, h_spec, SpectralOp::Mul, exec);
+    for r in 0..b {
+        let u_row = &pad[r * n..r * n + d];
+        if let Some(us) = u_save.as_deref_mut() {
+            us[r * d..(r + 1) * d].copy_from_slice(u_row);
+        }
+        let x_row = x.row(r);
+        let o_row = out.row_mut(r);
+        for j in 0..d {
+            let a = gelu(u_row[j]);
+            o_row[j] = if residual { x_row[j] + a } else { a };
+        }
+    }
+}
+
+/// One batch of the frequency-domain backward, shared verbatim by the
+/// serial path (accumulating into the layer's own spectral row) and the
+/// shard hook (accumulating into the shard arena): gate the incoming
+/// gradient through `gelu'(u)`, transform gate and saved input,
+/// `dĥ += conj(x̂) ⊙ ĝ` per row, `dx̂ = ĝ ⊙ conj(ĥ)`, inverse, and
+/// overwrite `g` in place with `dx` (+ optional skip). `dh_spec` is left
+/// as accumulated **spectra** — the caller applies the one shared
+/// inverse (serial: per step; sharded: after the tree reduction).
+// audit: no_alloc
+#[allow(clippy::too_many_arguments)]
+fn longconv_backward_rows(
+    plan: &Plan,
+    d: usize,
+    h_spec: &[f32],
+    x: &Tensor,
+    u: &[f32],
+    g: &mut Tensor,
+    xpad: &mut [f32],
+    gpad: &mut [f32],
+    dh_spec: &mut [f32],
+    residual: bool,
+    kern: Kernels,
+    exec: &ExecCtx,
+) {
+    let n = plan.n();
+    let b = g.rows;
+    debug_assert_eq!(xpad.len(), b * n);
+    debug_assert_eq!(gpad.len(), b * n);
+    debug_assert_eq!(u.len(), b * d);
+    for r in 0..b {
+        let g_row = g.row(r);
+        let u_row = &u[r * d..(r + 1) * d];
+        let gp = &mut gpad[r * n..(r + 1) * n];
+        for j in 0..d {
+            gp[j] = g_row[j] * gelu_prime(u_row[j]);
+        }
+        gp[d..].fill(0.0);
+        let xp = &mut xpad[r * n..(r + 1) * n];
+        xp[..d].copy_from_slice(x.row(r));
+        xp[d..].fill(0.0);
+    }
+    engine::forward_batch_ctx(plan, gpad, exec);
+    engine::forward_batch_ctx(plan, xpad, exec);
+    // dĥ += conj(x̂) ⊙ ĝ, row by row, straight into the accumulator.
+    for r in 0..b {
+        spectral::conj_mul_acc_with(
+            kern,
+            dh_spec,
+            &xpad[r * n..(r + 1) * n],
+            &gpad[r * n..(r + 1) * n],
+        );
+    }
+    // dx̂ = ĝ ⊙ conj(ĥ), then one inverse pass; the first d lanes of each
+    // row are dx (gradient w.r.t. the zero padding is discarded).
+    spectral::mul_conjb_rows_with(kern, gpad, h_spec);
+    engine::inverse_batch_ctx(plan, gpad, exec);
+    for r in 0..b {
+        let dx_row = &gpad[r * n..r * n + d];
+        let g_row = g.row_mut(r);
+        for j in 0..d {
+            g_row[j] = if residual { g_row[j] + dx_row[j] } else { dx_row[j] };
+        }
+    }
+}
+
+/// Trainable causal long-convolution block over the feature axis — see
+/// the module docs for the math and the memory discipline.
+pub struct LongConvLayer {
+    d: usize,
+    k: usize,
+    n: usize,
+    /// Canonical time-domain kernel at padded length `n`; taps `k..n` are
+    /// structurally zero (kept zero by tail-zeroed gradients).
+    h: Tensor,
+    dh: Tensor,
+    /// Cached packed spectrum of `h`, refreshed lazily after any
+    /// parameter mutation ([`LongConvLayer::ensure_spec`]).
+    h_spec: Tensor,
+    spec_fresh: bool,
+    /// Persistent `[b, n]` zero-pad workspaces for the serial paths
+    /// (forward; backward needs a second for x̂ alongside ĝ), grown to
+    /// the largest batch seen — steady-state serial steps reuse them.
+    pad: Tensor,
+    pad2: Tensor,
+    /// One spectral row accumulating `dĥ` within a serial backward.
+    ws_spec: Tensor,
+    plan: Arc<Plan>,
+    exec: ExecCtx,
+    saved_x: Option<Tensor>,
+    saved_u: Option<Tensor>,
+}
+
+impl LongConvLayer {
+    pub fn new(d: usize, k: usize, seed: u64) -> Self {
+        assert!(k >= 1, "long-conv filter needs at least one tap");
+        assert!(k <= d, "filter taps ({k}) must not exceed the width ({d})");
+        let n = (d + k - 1).next_power_of_two().max(2);
+        let mut h = Tensor::rand(1, n, 0.5 / (k as f32).sqrt(), seed, Category::Trainable);
+        h.as_mut_slice()[k..].fill(0.0);
+        LongConvLayer {
+            d,
+            k,
+            n,
+            h,
+            dh: Tensor::zeros_cat(1, n, Category::Gradients),
+            h_spec: Tensor::zeros_cat(1, n, Category::Other),
+            spec_fresh: false,
+            pad: Tensor::zeros_cat(0, 0, Category::Other),
+            pad2: Tensor::zeros_cat(0, 0, Category::Other),
+            ws_spec: Tensor::zeros_cat(1, n, Category::Other),
+            plan: cached(n),
+            exec: ExecCtx::global(),
+            saved_x: None,
+            saved_u: None,
+        }
+    }
+
+    /// Install the execution context all engine calls dispatch on.
+    pub fn set_exec(&mut self, exec: ExecCtx) {
+        self.exec = exec;
+    }
+    /// Filter length (trainable taps).
+    pub fn taps(&self) -> usize {
+        self.k
+    }
+    /// FFT size: `next_pow2(d + k - 1)` — large enough that the circular
+    /// convolution is exactly the causal linear one.
+    pub fn fft_size(&self) -> usize {
+        self.n
+    }
+
+    /// Refresh the cached filter spectrum from the time-domain kernel if
+    /// a parameter mutation staled it. The kernel tensor itself **never**
+    /// leaves the time domain (unlike the circulant layer's in-place
+    /// roundtrip) — `h_spec` is a separate cached view.
+    fn ensure_spec(&mut self) {
+        if !self.spec_fresh {
+            self.h_spec.as_mut_slice().copy_from_slice(self.h.as_slice());
+            engine::forward_batch_ctx(&self.plan, self.h_spec.as_mut_slice(), &self.exec);
+            self.spec_fresh = true;
+        }
+    }
+
+    /// Grow a persistent workspace to at least `rows` rows of `n`.
+    fn grow_ws(ws: &mut Tensor, rows: usize, n: usize) {
+        if ws.rows < rows {
+            *ws = Tensor::zeros_cat(rows, n, Category::Other);
+        }
+    }
+
+    fn forward_impl(&mut self, x: Tensor, residual: bool) -> Tensor {
+        assert_eq!(x.cols, self.d, "input width must match the layer");
+        self.ensure_spec();
+        let b = x.rows;
+        Self::grow_ws(&mut self.pad, b, self.n);
+        let mut out = Tensor::zeros_cat(b, self.d, Category::Intermediates);
+        let mut u = Tensor::zeros_cat(b, self.d, Category::Intermediates);
+        longconv_forward_rows(
+            &self.plan,
+            self.d,
+            self.h_spec.as_slice(),
+            &x,
+            &mut self.pad.as_mut_slice()[..b * self.n],
+            Some(u.as_mut_slice()),
+            &mut out,
+            residual,
+            &self.exec,
+        );
+        self.saved_x = Some(x);
+        self.saved_u = Some(u);
+        out
+    }
+
+    fn backward_impl(&mut self, mut g: Tensor, residual: bool) -> Tensor {
+        assert_eq!(g.cols, self.d, "gradient width must match the layer");
+        debug_assert!(self.spec_fresh, "backward without a preceding forward");
+        let x = self.saved_x.take().expect("forward before backward");
+        let u = self.saved_u.take().expect("forward before backward");
+        let b = g.rows;
+        Self::grow_ws(&mut self.pad, b, self.n);
+        Self::grow_ws(&mut self.pad2, b, self.n);
+        self.ws_spec.fill(0.0);
+        let kern = simd::select(self.exec.engine_config().force_scalar);
+        longconv_backward_rows(
+            &self.plan,
+            self.d,
+            self.h_spec.as_slice(),
+            &x,
+            u.as_slice(),
+            &mut g,
+            &mut self.pad2.as_mut_slice()[..b * self.n],
+            &mut self.pad.as_mut_slice()[..b * self.n],
+            self.ws_spec.as_mut_slice(),
+            residual,
+            kern,
+            &self.exec,
+        );
+        // One inverse over the whole step's accumulated dĥ spectra, tail
+        // zeroed (taps k..n are structural zeros of the parameter), then
+        // fold into the across-step accumulator.
+        engine::inverse_batch_ctx(&self.plan, self.ws_spec.as_mut_slice(), &self.exec);
+        self.ws_spec.as_mut_slice()[self.k..].fill(0.0);
+        self.dh.axpy(&self.ws_spec, 1.0);
+        g
+    }
+
+    /// Unfused differential oracle (and bench baseline): the same math as
+    /// three whole-buffer passes — forward batch, packed product sweep,
+    /// inverse batch — plus a separate GELU/skip pass, with fresh buffers
+    /// per call. No fused sweep, no workspace reuse; numerically
+    /// tile-for-tile comparable to [`Layer::forward_residual`].
+    pub fn forward_residual_unfused(&mut self, x: &Tensor) -> Tensor {
+        assert_eq!(x.cols, self.d);
+        self.ensure_spec();
+        let b = x.rows;
+        let mut pad = Tensor::zeros_cat(b, self.n, Category::Intermediates);
+        for r in 0..b {
+            pad.row_mut(r)[..self.d].copy_from_slice(x.row(r));
+        }
+        engine::forward_batch_ctx(&self.plan, pad.as_mut_slice(), &self.exec);
+        let kern = simd::select(self.exec.engine_config().force_scalar);
+        spectral::mul_rows_with(kern, pad.as_mut_slice(), self.h_spec.as_slice());
+        engine::inverse_batch_ctx(&self.plan, pad.as_mut_slice(), &self.exec);
+        let mut out = Tensor::zeros_cat(b, self.d, Category::Intermediates);
+        for r in 0..b {
+            let u_row = &pad.row(r)[..self.d];
+            let x_row = x.row(r);
+            let o_row = out.row_mut(r);
+            for j in 0..self.d {
+                o_row[j] = x_row[j] + gelu(u_row[j]);
+            }
+        }
+        out
+    }
+}
+
+impl Layer for LongConvLayer {
+    fn forward(&mut self, x: Tensor) -> Tensor {
+        self.forward_impl(x, false)
+    }
+
+    fn backward(&mut self, grad_out: Tensor) -> Tensor {
+        self.backward_impl(grad_out, false)
+    }
+
+    fn forward_residual(&mut self, x: Tensor) -> Tensor {
+        self.forward_impl(x, true)
+    }
+
+    fn backward_residual(&mut self, grad_out: Tensor) -> Tensor {
+        self.backward_impl(grad_out, true)
+    }
+
+    fn sgd_step(&mut self, lr: f32) {
+        // dh's tail is kept zero, so the kernel's structural zero padding
+        // survives every update.
+        self.h.axpy(&self.dh, -lr);
+        self.dh.fill(0.0);
+        self.spec_fresh = false;
+    }
+
+    fn num_trainable(&self) -> usize {
+        self.h.len()
+    }
+
+    fn clear_saved(&mut self) {
+        self.saved_x = None;
+        self.saved_u = None;
+    }
+
+    fn for_each_param(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+        // The kernel is always canonical time-domain; hand it out
+        // directly, then assume the visitor mutated it (optimizer step or
+        // checkpoint restore) and stale the cached spectrum.
+        f(self.h.as_mut_slice(), self.dh.as_mut_slice());
+        self.spec_fresh = false;
+    }
+
+    fn supports_shard_exec(&self) -> bool {
+        true
+    }
+
+    fn grad_shapes(&self) -> Vec<(usize, usize)> {
+        vec![(1, self.n)]
+    }
+
+    /// Refresh the shared filter spectrum once on the submitting thread;
+    /// shard jobs then read it immutably.
+    fn begin_shard_step(&mut self) {
+        self.ensure_spec();
+    }
+
+    fn shard_forward_residual(&self, x: Tensor) -> (Tensor, ShardSaved) {
+        debug_assert!(self.spec_fresh, "begin_shard_step must run before shard jobs");
+        let b = x.rows;
+        let mut out = Tensor::zeros_cat(b, self.d, Category::Intermediates);
+        let mut u = Tensor::zeros_cat(b, self.d, Category::Intermediates);
+        let mut pad = Tensor::zeros_cat(b, self.n, Category::Intermediates);
+        longconv_forward_rows(
+            &self.plan,
+            self.d,
+            self.h_spec.as_slice(),
+            &x,
+            pad.as_mut_slice(),
+            Some(u.as_mut_slice()),
+            &mut out,
+            true,
+            &self.exec,
+        );
+        (out, Box::new((x, u)))
+    }
+
+    /// The serial residual backward with every mutable piece
+    /// externalized: dĥ accumulates into the shard's `grads[0]` buffer
+    /// (as **spectra** — [`Layer::finish_shard_grads`] applies the one
+    /// shared inverse after the tree reduction, exactly where the serial
+    /// path inverts its whole-step accumulation), pads are shard-local.
+    fn shard_backward_residual(
+        &self,
+        mut grad_out: Tensor,
+        saved: ShardSaved,
+        grads: &mut [Tensor],
+    ) -> Tensor {
+        let (x, u) = *saved
+            .downcast::<(Tensor, Tensor)>()
+            .expect("long-conv shard state is (x, u)");
+        let b = grad_out.rows;
+        let mut xpad = Tensor::zeros_cat(b, self.n, Category::Intermediates);
+        let mut gpad = Tensor::zeros_cat(b, self.n, Category::Intermediates);
+        let kern = simd::select(self.exec.engine_config().force_scalar);
+        longconv_backward_rows(
+            &self.plan,
+            self.d,
+            self.h_spec.as_slice(),
+            &x,
+            u.as_slice(),
+            &mut grad_out,
+            xpad.as_mut_slice(),
+            gpad.as_mut_slice(),
+            grads[0].as_mut_slice(),
+            true,
+            kern,
+            &self.exec,
+        );
+        grad_out
+    }
+
+    /// One inverse over the *reduced* dĥ spectra (linearity lets shard
+    /// spectra sum before the single IFFT), then the structural tail
+    /// zeroing the serial path applies.
+    fn finish_shard_grads(&mut self, grads: &mut [Tensor]) {
+        engine::inverse_batch_ctx(&self.plan, grads[0].as_mut_slice(), &self.exec);
+        grads[0].as_mut_slice()[self.k..].fill(0.0);
+    }
+
+    fn supports_infer_exec(&self) -> bool {
+        true
+    }
+
+    /// Allocation-free twin of [`Layer::shard_forward_residual`]: the
+    /// same fused sweep over the shared `ĥ` spectrum through this
+    /// thread's persistent pad scratch (grown once, then steady-state
+    /// zero-allocation), writing into the serve arena. `x` is read only;
+    /// nothing is saved.
+    // audit: no_alloc
+    fn infer_forward_residual(&self, x: &mut Tensor, out: &mut Tensor) {
+        debug_assert!(self.spec_fresh, "begin_shard_step must run before inference");
+        debug_assert_eq!(x.cols, self.d);
+        debug_assert_eq!(out.cols, self.d);
+        let b = x.rows;
+        with_pad(b * self.n, |pad| {
+            longconv_forward_rows(
+                &self.plan,
+                self.d,
+                self.h_spec.as_slice(),
+                x,
+                pad,
+                None,
+                out,
+                true,
+                &self.exec,
+            );
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memtrack;
+    use crate::rdfft::engine::EngineConfig;
+
+    fn input(b: usize, d: usize, seed: u64) -> Tensor {
+        Tensor::rand(b, d, 1.0, seed, Category::Intermediates)
+    }
+
+    fn grad_ones(b: usize, d: usize) -> Tensor {
+        let mut g = Tensor::zeros_cat(b, d, Category::Intermediates);
+        g.fill(1.0);
+        g
+    }
+
+    /// n-scaled tolerance: one transform's worth of f32 rounding.
+    fn n_tol(n: usize, base: f32) -> f32 {
+        base * (n as f32).sqrt() * ((n as f32).log2() + 1.0)
+    }
+
+    /// O(d·k) causal reference: u[t] = Σ_τ h[τ]·x[t−τ].
+    fn naive_causal(x: &[f32], h: &[f32], k: usize) -> Vec<f32> {
+        let d = x.len();
+        (0..d)
+            .map(|t| (0..k.min(t + 1)).map(|tau| h[tau] * x[t - tau]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn forward_matches_naive_causal_convolution() {
+        let (b, d, k) = (3usize, 48usize, 12usize);
+        let mut l = LongConvLayer::new(d, k, 7);
+        assert_eq!(l.fft_size(), (d + k - 1).next_power_of_two());
+        let taps = l.h.as_slice()[..k].to_vec();
+        let x = input(b, d, 9);
+        let y = l.forward_impl(x.clone_as(Category::Other), false);
+        for r in 0..b {
+            let want = naive_causal(x.row(r), &taps, k);
+            for t in 0..d {
+                let expect = gelu(want[t]);
+                assert!(
+                    (y.row(r)[t] - expect).abs() < n_tol(l.fft_size(), 1e-6) * (1.0 + expect.abs()),
+                    "r={r} t={t}: {} vs {expect}",
+                    y.row(r)[t]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_padding_is_structurally_zero_through_training() {
+        let (b, d, k) = (4usize, 32usize, 8usize);
+        let mut l = LongConvLayer::new(d, k, 3);
+        let n = l.fft_size();
+        assert!(l.h.as_slice()[k..].iter().all(|&v| v == 0.0));
+        for step in 0..3 {
+            let y = l.forward_residual(input(b, d, 50 + step));
+            drop(y);
+            let _ = l.backward_residual(grad_ones(b, d));
+            // the gradient tail is zeroed before accumulation...
+            assert!(
+                l.dh.as_slice()[k..].iter().all(|&v| v == 0.0),
+                "step {step}: grad tail must stay zero"
+            );
+            l.sgd_step(0.05);
+            // ...so the parameter tail never moves.
+            assert!(
+                l.h.as_slice()[k..].iter().all(|&v| v == 0.0),
+                "step {step}: kernel tail must stay zero"
+            );
+        }
+        assert_eq!(l.num_trainable(), n);
+    }
+
+    #[test]
+    fn fused_forward_matches_unfused_oracle() {
+        let (b, d, k) = (4usize, 96usize, 33usize);
+        let mut fused = LongConvLayer::new(d, k, 11);
+        let mut unfused = LongConvLayer::new(d, k, 11);
+        let x = input(b, d, 13);
+        let y_f = fused.forward_residual(x.clone_as(Category::Intermediates));
+        let y_u = unfused.forward_residual_unfused(&x);
+        let tol = n_tol(fused.fft_size(), 1e-6);
+        for i in 0..y_f.len() {
+            assert!(
+                (y_f.as_slice()[i] - y_u.as_slice()[i]).abs()
+                    < tol * (1.0 + y_u.as_slice()[i].abs()),
+                "i={i}: {} vs {}",
+                y_f.as_slice()[i],
+                y_u.as_slice()[i]
+            );
+        }
+    }
+
+    /// Central-difference check of both gradients (filter taps and input)
+    /// through the full residual + GELU path.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let (b, d, k) = (2usize, 16usize, 4usize);
+        let loss_weights: Vec<f32> = (0..b * d).map(|i| ((i * 7 + 3) % 11) as f32 / 11.0 - 0.4).collect();
+        let x0 = input(b, d, 21);
+        let loss_of = |l: &mut LongConvLayer, x: &Tensor| -> f64 {
+            let y = l.forward_impl(x.clone_as(Category::Other), true);
+            l.clear_saved();
+            y.as_slice().iter().zip(&loss_weights).map(|(&y, &w)| (y * w) as f64).sum()
+        };
+
+        // analytic grads
+        let mut l = LongConvLayer::new(d, k, 17);
+        let y = l.forward_residual(x0.clone_as(Category::Other));
+        drop(y);
+        let g = Tensor::from_vec(b, d, loss_weights.clone(), Category::Intermediates);
+        let dx = l.backward_residual(g);
+        let dh = l.dh.as_slice().to_vec();
+
+        let eps = 1e-2f32;
+        // filter taps
+        for tap in 0..k {
+            let mut lp = LongConvLayer::new(d, k, 17);
+            lp.h.as_mut_slice()[tap] += eps;
+            let mut lm = LongConvLayer::new(d, k, 17);
+            lm.h.as_mut_slice()[tap] -= eps;
+            let num = (loss_of(&mut lp, &x0) - loss_of(&mut lm, &x0)) / (2.0 * eps as f64);
+            assert!(
+                (num - dh[tap] as f64).abs() < 2e-2 * (1.0 + num.abs()),
+                "tap {tap}: numeric {num} vs analytic {}",
+                dh[tap]
+            );
+        }
+        // a few input coordinates
+        let mut lfd = LongConvLayer::new(d, k, 17);
+        for &i in &[0usize, 5, d - 1, d + 3, 2 * d - 1] {
+            let mut xp = x0.clone_as(Category::Other);
+            xp.as_mut_slice()[i] += eps;
+            let mut xm = x0.clone_as(Category::Other);
+            xm.as_mut_slice()[i] -= eps;
+            let num = (loss_of(&mut lfd, &xp) - loss_of(&mut lfd, &xm)) / (2.0 * eps as f64);
+            assert!(
+                (num - dx.as_slice()[i] as f64).abs() < 2e-2 * (1.0 + num.abs()),
+                "x[{i}]: numeric {num} vs analytic {}",
+                dx.as_slice()[i]
+            );
+        }
+    }
+
+    /// The replica-free shard hooks must reproduce the serial residual
+    /// paths bit-for-bit (one shard covering the batch), like every other
+    /// shard-capable layer.
+    #[test]
+    fn shard_hooks_match_serial_residual_paths() {
+        let (b, d, k) = (5usize, 32usize, 9usize);
+        let mut reference = LongConvLayer::new(d, k, 23);
+        let mut sharded = LongConvLayer::new(d, k, 23);
+        assert!(reference.supports_shard_exec());
+        let shapes = sharded.grad_shapes();
+        assert_eq!(shapes, vec![(1, reference.fft_size())]);
+
+        let x = input(b, d, 31);
+        let x2 = x.clone_as(Category::Intermediates);
+        let y_ref = reference.forward_residual(x);
+        let dx_ref = reference.backward_residual(grad_ones(b, d));
+        let mut dg_ref = Vec::new();
+        reference.for_each_param(&mut |_, g| dg_ref.push(g.to_vec()));
+
+        let mut grads: Vec<Tensor> =
+            shapes.iter().map(|&(r, c)| Tensor::zeros_cat(r, c, Category::Gradients)).collect();
+        sharded.begin_shard_step();
+        let (y_sh, saved) = sharded.shard_forward_residual(x2);
+        assert_eq!(y_ref.as_slice(), y_sh.as_slice(), "forward must be bit-identical");
+        let dx_sh = sharded.shard_backward_residual(grad_ones(b, d), saved, &mut grads);
+        sharded.finish_shard_grads(&mut grads);
+        assert_eq!(dx_ref.as_slice(), dx_sh.as_slice(), "dx must be bit-identical");
+        assert_eq!(&dg_ref[0][..], grads[0].as_slice(), "param grads must be bit-identical");
+    }
+
+    /// Serve path: bit-identical to the shard forward, and zero tracked
+    /// allocations once this thread's pad scratch is warm.
+    #[test]
+    fn infer_forward_is_bit_identical_and_alloc_free_when_warm() {
+        let (b, d, k) = (4usize, 64usize, 16usize);
+        let mut l = LongConvLayer::new(d, k, 29);
+        l.begin_shard_step();
+        let x = input(b, d, 33);
+        let (y_ref, _saved) = l.shard_forward_residual(x.clone_as(Category::Intermediates));
+
+        let mut xs = x.clone_as(Category::Serve);
+        let mut out = Tensor::zeros_cat(b, d, Category::Serve);
+        l.infer_forward_residual(&mut xs, &mut out); // warm-up (grows pad)
+        assert_eq!(y_ref.as_slice(), out.as_slice(), "serve must match training forward");
+        memtrack::reset_peak();
+        let before = memtrack::snapshot().alloc_count;
+        let mut xs2 = x.clone_as(Category::Serve);
+        let warm_base = memtrack::snapshot().alloc_count;
+        l.infer_forward_residual(&mut xs2, &mut out);
+        assert_eq!(
+            memtrack::snapshot().alloc_count,
+            warm_base,
+            "steady-state serve pass must not allocate"
+        );
+        assert_eq!(warm_base - before, 1, "only the test's own input clone allocates");
+        assert_eq!(y_ref.as_slice(), out.as_slice());
+    }
+
+    /// Checkpoint contract: for_each_param round-trips the canonical
+    /// time-domain kernel, and a restore into a fresh layer reproduces
+    /// the source layer's outputs bit-for-bit.
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let (b, d, k) = (3usize, 32usize, 8usize);
+        let mut src = LongConvLayer::new(d, k, 41);
+        // advance a step so the state isn't the constructor's
+        let _ = src.forward_residual(input(b, d, 1));
+        let _ = src.backward_residual(grad_ones(b, d));
+        src.sgd_step(0.05);
+        let mut flat = Vec::new();
+        src.for_each_param(&mut |p, _| flat.extend_from_slice(p));
+        assert_eq!(flat.len(), src.num_trainable());
+
+        let mut dst = LongConvLayer::new(d, k, 999); // different seed
+        let mut off = 0usize;
+        dst.for_each_param(&mut |p, g| {
+            p.copy_from_slice(&flat[off..off + p.len()]);
+            off += p.len();
+            g.fill(0.0);
+        });
+        let x = input(b, d, 2);
+        let y_src = src.forward_residual(x.clone_as(Category::Other));
+        let y_dst = dst.forward_residual(x);
+        assert_eq!(y_src.as_slice(), y_dst.as_slice(), "restored layer must match bitwise");
+    }
+
+    /// Width crossing `fourstep_threshold`: the same layer computed on
+    /// the four-step tier must agree with the direct tier — the
+    /// tier-crossing contract at layer level, on both dispatch legs.
+    #[test]
+    fn fourstep_and_direct_legs_agree() {
+        let (b, d, k) = (2usize, 1024usize, 512usize);
+        let mut direct = LongConvLayer::new(d, k, 51);
+        let mut four = LongConvLayer::new(d, k, 51);
+        let n = direct.fft_size();
+        assert_eq!(n, 2048, "test geometry must reach the four-step-capable sizes");
+        // direct leg: threshold above n; four-step leg: threshold below n.
+        direct.set_exec(
+            ExecCtx::serial()
+                .with_engine_config(EngineConfig { fourstep_threshold: usize::MAX, ..EngineConfig::serial() }),
+        );
+        four.set_exec(
+            ExecCtx::serial()
+                .with_engine_config(EngineConfig { fourstep_threshold: 1024, ..EngineConfig::serial() }),
+        );
+        let x = input(b, d, 53);
+        let before = engine::tier_counts();
+        let y_d = direct.forward_residual(x.clone_as(Category::Intermediates));
+        let mid = engine::tier_counts().since(before);
+        assert_eq!(mid.fourstep, 0, "direct leg must not dispatch four-step");
+        let y_f = four.forward_residual(x.clone_as(Category::Intermediates));
+        let after = engine::tier_counts().since(before);
+        assert!(after.fourstep >= 1, "four-step leg must engage the large-n tier");
+        assert_eq!(after.fallback, 0, "no silent fallback on either leg");
+        let tol = n_tol(n, 2e-6);
+        for i in 0..y_d.len() {
+            assert!(
+                (y_d.as_slice()[i] - y_f.as_slice()[i]).abs()
+                    < tol * (1.0 + y_d.as_slice()[i].abs()),
+                "y i={i}: {} vs {}",
+                y_d.as_slice()[i],
+                y_f.as_slice()[i]
+            );
+        }
+        let dx_d = direct.backward_residual(grad_ones(b, d));
+        let dx_f = four.backward_residual(grad_ones(b, d));
+        for i in 0..dx_d.len() {
+            assert!(
+                (dx_d.as_slice()[i] - dx_f.as_slice()[i]).abs()
+                    < tol * (1.0 + dx_d.as_slice()[i].abs()),
+                "dx i={i}"
+            );
+        }
+        for i in 0..k {
+            assert!(
+                (direct.dh.as_slice()[i] - four.dh.as_slice()[i]).abs()
+                    < tol * (b as f32) * (1.0 + direct.dh.as_slice()[i].abs()),
+                "dh i={i}: {} vs {}",
+                direct.dh.as_slice()[i],
+                four.dh.as_slice()[i]
+            );
+        }
+    }
+
+    #[test]
+    fn serial_forward_steady_state_allocates_only_output_and_saved_u() {
+        let (b, d, k) = (4usize, 64usize, 16usize);
+        let mut l = LongConvLayer::new(d, k, 61);
+        // warm-up: grows the persistent pads, caches the spectrum
+        let _ = l.forward_residual(input(b, d, 1));
+        let _ = l.backward_residual(grad_ones(b, d));
+        l.clear_saved();
+        let x = input(b, d, 2);
+        let g = grad_ones(b, d);
+        memtrack::reset_peak();
+        let before = memtrack::snapshot().alloc_count;
+        let _y = l.forward_residual(x);
+        assert_eq!(
+            memtrack::snapshot().alloc_count - before,
+            2,
+            "warm forward allocates the output and the saved pre-activation only"
+        );
+        let mid = memtrack::snapshot().alloc_count;
+        let _dx = l.backward_residual(g);
+        assert_eq!(
+            memtrack::snapshot().alloc_count,
+            mid,
+            "warm backward must allocate nothing (dx overwrites grad-output)"
+        );
+    }
+}

@@ -19,12 +19,14 @@
 //! [`train`].
 
 pub mod layers;
+pub mod longconv;
 pub mod optim;
 pub mod stack;
 pub mod tensor;
 pub mod train;
 
 pub use layers::{Backend, CirculantLayer, Dense, FrozenDense, Layer, Lora};
+pub use longconv::LongConvLayer;
 pub use optim::{tree_reduce_with, OptimKind, Optimizer, OptimizerBank};
 pub use stack::{ShardArena, SpectralStack, StackConfig, GRAD_SHARDS};
 pub use tensor::Tensor;

@@ -3,6 +3,7 @@
 //! fine-tuning task (Table 4 accuracy-parity).
 
 use super::layers::{Backend, CirculantLayer, Dense, FrozenDense, Layer, Lora};
+use super::longconv::LongConvLayer;
 use super::tensor::{relu_backward_inplace, relu_inplace, softmax_xent, Rng, Tensor};
 use crate::memtrack::{self, Category, Snapshot};
 
@@ -12,6 +13,9 @@ pub enum Method {
     FullFinetune,
     Lora { rank: usize },
     Circulant { backend: Backend, p: usize },
+    /// Causal long-convolution (fftconv-style) sequence mixing with a
+    /// trainable `k`-tap filter ([`LongConvLayer`]).
+    LongConv { k: usize },
 }
 
 impl Method {
@@ -20,6 +24,7 @@ impl Method {
             Method::FullFinetune => "full-finetune".into(),
             Method::Lora { rank } => format!("lora_r={rank}"),
             Method::Circulant { backend, p } => format!("{}_p={p}", backend.name()),
+            Method::LongConv { k } => format!("longconv_k={k}"),
         }
     }
 
@@ -54,6 +59,11 @@ impl Method {
             Method::Lora { rank } => Box::new(Lora::new(d, d, rank, seed)),
             Method::Circulant { backend, p } => {
                 let mut layer = CirculantLayer::new(backend, d, d, p, seed);
+                layer.set_exec(exec.clone());
+                Box::new(layer)
+            }
+            Method::LongConv { k } => {
+                let mut layer = LongConvLayer::new(d, k, seed);
                 layer.set_exec(exec.clone());
                 Box::new(layer)
             }

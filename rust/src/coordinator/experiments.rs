@@ -796,6 +796,84 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
     }
 
     // ------------------------------------------------------------------
+    // Long-convolution layer — the fused single-sweep pipeline with
+    // persistent workspaces (the serve/steady-state path) vs the unfused
+    // three-pass oracle (forward batch → packed product → inverse batch
+    // → separate GELU/skip pass, fresh buffers per call). The numerics
+    // of the two pipelines are pinned tile-for-tile by the layer's
+    // differential test; this cell pins the performance claim and the
+    // `longconv_fused_vs_unfused` gate records it in BENCH_rdfft.json.
+    // ------------------------------------------------------------------
+    {
+        use crate::autograd::layers::Layer;
+        use crate::autograd::{LongConvLayer, Tensor};
+        let (ld, lk, lb) = (1024usize, 257usize, 32usize);
+        let mut layer = LongConvLayer::new(ld, lk, 5);
+        let ln = layer.fft_size();
+        let mut x = Tensor::rand(lb, ld, 1.0, 6, Category::Other);
+        let mut out = Tensor::zeros_cat(lb, ld, Category::Other);
+        // Materialize the kernel spectrum once — both legs then amortize
+        // one FFT of h over every row they touch (the Mathieu et al.
+        // argument the layer is built on).
+        layer.begin_shard_step();
+        let s_unf = bench(budget, || {
+            let y = layer.forward_residual_unfused(&x);
+            std::hint::black_box(y.as_slice()[0]);
+        });
+        let s_fus = bench(budget, || {
+            layer.infer_forward_residual(&mut x, &mut out);
+            std::hint::black_box(out.as_slice()[0]);
+        });
+        let lx = s_unf.median_ns / s_fus.median_ns.max(1.0);
+        println!(
+            "\n# long-conv layer — fused single-sweep vs unfused three-pass, \
+             d={ld} k={lk} (fft n={ln}) batch={lb}, ns/row"
+        );
+        println!(
+            "unfused {:>10.0} ns/row   fused {:>10.0} ns/row   fused× {:>5.2}",
+            s_unf.median_ns / lb as f64,
+            s_fus.median_ns / lb as f64,
+            lx
+        );
+        let ltps = |s: &crate::coordinator::benchlib::Stats| {
+            lb as f64 / (s.median_ns.max(1.0) / 1e9)
+        };
+        for (mode, stats, speedup) in
+            [("longconv_unfused", s_unf, 1.0), ("longconv_fused", s_fus, lx)]
+        {
+            records.push(BenchRecord {
+                mode: mode.to_string(),
+                n: ln,
+                batch: lb,
+                threads: 0,
+                transforms_per_sec: ltps(&stats),
+                stats,
+                speedup_vs_scalar: speedup,
+            });
+        }
+        // Same shape as the circulant fused gate: the 1.2× target is
+        // recorded; only a clear regression below the unfused pipeline
+        // hard-fails (the fused sweep also skips two whole-buffer
+        // walks, so < 0.9× means the fusion itself broke).
+        if lx < 0.9 {
+            gates_ok = false;
+        }
+        gates.push(BenchGate {
+            name: "longconv_fused_vs_unfused".to_string(),
+            threads: 0,
+            n: ln,
+            batch: lb,
+            ratio: lx,
+            target: 1.2,
+            pass: lx >= 1.2,
+        });
+        println!(
+            "gate longconv_fused_vs_unfused: ratio {lx:.2} (target 1.20) -> {}",
+            if lx >= 1.2 { "pass" } else { "MISS" }
+        );
+    }
+
+    // ------------------------------------------------------------------
     // Four-step (Bailey) large-n tier vs the direct stage sweep —
     // wall-clock-budgeted cells (one call per sample, no batch
     // calibration: a single 262 Ki roundtrip is already milliseconds).
@@ -820,32 +898,64 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
              roundtrip, budgeted single-call samples, ns/row"
         );
         println!(
-            "{:<10}{:>8}{:>16}{:>16}{:>8}",
-            "n", "batch", "direct", "fourstep", "4s×"
+            "{:<10}{:>8}{:>16}{:>16}{:>8}{:>14}",
+            "n", "batch", "direct", "fourstep", "4s×", "tier"
         );
         let mut last_cell: Option<(usize, usize, f64)> = None;
         for &(n, b) in cells {
             let plan = cached(n);
             let mut buf: Vec<f32> =
                 (0..n * b).map(|i| ((i * 43 + 19) % 103) as f32 / 51.0 - 1.0).collect();
+            // Tier telemetry brackets each timed leg: a "fourstep" cell
+            // that silently ran the direct sweep (threshold met but the
+            // plan had no tables — the old silent-fallback bug) would
+            // make the ratio a lie, so a mismeasured cell hard-fails
+            // instead of being written into BENCH_rdfft.json as real.
+            let t0 = engine::tier_counts();
             let s_direct = bench_budgeted(budget, || {
                 engine::forward_batch_with(&plan, &mut buf, &direct_cfg);
                 engine::inverse_batch_with(&plan, &mut buf, &direct_cfg);
                 std::hint::black_box(&buf[0]);
             });
+            let t1 = engine::tier_counts();
             let s_four = bench_budgeted(budget, || {
                 engine::forward_batch_with(&plan, &mut buf, &four_cfg);
                 engine::inverse_batch_with(&plan, &mut buf, &four_cfg);
                 std::hint::black_box(&buf[0]);
             });
+            let t2 = engine::tier_counts();
+            let d_leg = t1.since(t0);
+            let f_leg = t2.since(t1);
+            let tier_ok = d_leg.fourstep == 0
+                && d_leg.fallback == 0
+                && f_leg.fourstep > 0
+                && f_leg.fallback == 0;
+            let tier_label = if tier_ok {
+                "engaged".to_string()
+            } else {
+                gates_ok = false;
+                format!("MISMEASURED(4s={},fb={})", f_leg.fourstep, f_leg.fallback)
+            };
+            gates.push(BenchGate {
+                name: "fourstep_tier_engaged".to_string(),
+                threads: 0,
+                n,
+                batch: b,
+                // engaged fraction of the four-step leg's transforms
+                ratio: f_leg.fourstep as f64
+                    / (f_leg.fourstep + f_leg.direct + f_leg.fallback).max(1) as f64,
+                target: 1.0,
+                pass: tier_ok,
+            });
             let fx = s_direct.median_ns / s_four.median_ns.max(1.0);
             println!(
-                "{:<10}{:>8}{:>16.0}{:>16.0}{:>8.2}",
+                "{:<10}{:>8}{:>16.0}{:>16.0}{:>8.2}{:>14}",
                 n,
                 b,
                 s_direct.median_ns / (2.0 * b as f64),
                 s_four.median_ns / (2.0 * b as f64),
-                fx
+                fx,
+                tier_label
             );
             let ltps = |s: &crate::coordinator::benchlib::Stats| {
                 2.0 * b as f64 / (s.median_ns.max(1.0) / 1e9)
@@ -892,8 +1002,11 @@ pub fn bench_rdfft_engine(fast: bool) -> bool {
          on the grid; pool >= 1.15x per-call scoped threads at threads=4;\n\
          SIMD lane kernels >= 1.5x the forced-scalar oracle at n=4096\n\
          b=32 on AVX2+FMA hardware; width-8 >= 1.25x width-4 when the\n\
-         256-bit arm is active; four-step >= 1.3x direct at n=262144\n\
-         (advisory; < 0.9x there hard-fails) — see EXPERIMENTS.md §Perf)"
+         256-bit arm is active; long-conv fused sweep >= 1.2x the unfused\n\
+         three-pass pipeline (advisory; < 0.9x hard-fails); four-step\n\
+         >= 1.3x direct at n=262144 (advisory; < 0.9x there hard-fails,\n\
+         and any fourstep cell that silently ran the direct sweep\n\
+         hard-fails as mismeasured) — see EXPERIMENTS.md §Perf)"
     );
     let path = std::path::Path::new("BENCH_rdfft.json");
     match write_bench_json(path, &records, &gates) {
@@ -925,10 +1038,29 @@ pub fn fourstep_smoke() -> bool {
     let four_cfg = EngineConfig { fourstep_threshold: 1, ..EngineConfig::new() };
     let direct_cfg = EngineConfig { fourstep_threshold: usize::MAX, ..EngineConfig::new() };
     let mut four = x.clone();
+    let t0 = engine::tier_counts();
     engine::forward_batch_with(&plan, &mut four, &four_cfg);
+    let t1 = engine::tier_counts();
     let mut direct = x.clone();
     engine::forward_batch_with(&plan, &mut direct, &direct_cfg);
     let mut ok = true;
+    // The whole point of this smoke is to compare the two tiers — if the
+    // "four-step" leg silently fell back to the direct sweep (the old
+    // routing bug) it would compare direct against direct and pass
+    // vacuously. Require the tier to have actually engaged.
+    let engaged = t1.since(t0);
+    debug_assert!(
+        engaged.fourstep > 0 && engaged.fallback == 0,
+        "fourstep smoke leg did not engage the four-step tier: {engaged:?}"
+    );
+    if engaged.fourstep == 0 || engaged.fallback > 0 {
+        println!(
+            "fourstep smoke: four-step leg fell back to the direct sweep \
+             (fourstep={}, fallback={}) — tier routing is broken",
+            engaged.fourstep, engaged.fallback
+        );
+        ok = false;
+    }
     let mut worst = 0.0f32;
     // The twiddle-product rounding is absolute in the √n-scaled
     // intermediate magnitudes, so the bound carries the same √n factor
@@ -981,6 +1113,8 @@ pub fn native_method_rows(d: usize, depth: usize, batch: usize, steps: usize, p:
     for bk in BACKENDS {
         methods.push(Method::Circulant { backend: bk, p });
     }
+    // The sequence-mixing workload at the same width: k = d/4 taps.
+    methods.push(Method::LongConv { k: (d / 4).max(1) });
     for m in methods {
         let cfg = StackConfig { d, depth, ctx: 8, method: m, seed: 3, ..Default::default() };
         let r = measure_native_run(cfg, OptimKind::Sgd, 0.2, batch, steps);

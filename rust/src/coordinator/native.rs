@@ -12,6 +12,7 @@
 
 use crate::autograd::optim::{OptimKind, OptimizerBank};
 use crate::autograd::stack::{ShardArena, SpectralStack, StackConfig};
+use crate::autograd::train::Method;
 use crate::data::{Batcher, CorpusGen};
 use crate::memtrack::{self, Category, Snapshot, NUM_CATEGORIES};
 use crate::runtime::checkpoint::{self, TrainCheckpoint};
@@ -59,6 +60,11 @@ pub struct NativeTrainerConfig {
     /// Deterministic fault schedule (empty in normal runs). Shared with
     /// the run's `ExecCtx` so shard jobs consult the same plan instance.
     pub faults: Arc<FaultPlan>,
+    /// Heterogeneous tower: block `k` uses `block_methods[k]` instead of
+    /// `stack.method` (length must equal `stack.depth`). `None` = the
+    /// classic uniform stack. Used by `--layer mixed` (circulant blocks
+    /// with a long-conv top block) and the determinism suites.
+    pub block_methods: Option<Vec<Method>>,
 }
 
 impl Default for NativeTrainerConfig {
@@ -81,6 +87,7 @@ impl Default for NativeTrainerConfig {
             checkpoint_keep: 3,
             resume: false,
             faults: Arc::new(FaultPlan::none()),
+            block_methods: None,
         }
     }
 }
@@ -101,15 +108,34 @@ impl NativeTrainerConfig {
     /// circulant parameters through the frequency domain between steps,
     /// which perturbs the trajectory at the ULP level — two runs only
     /// replay identically when they eval at the same steps.
+    /// True when every block of the configured tower has shard hooks (the
+    /// precondition for the data-parallel step).
+    fn tower_supports_shard_exec(&self) -> bool {
+        match &self.block_methods {
+            Some(ms) => ms.iter().all(|m| m.supports_shard_exec()),
+            None => self.stack.method.supports_shard_exec(),
+        }
+    }
+
     pub fn fingerprint(&self) -> String {
-        let algo = if self.threads > 0 && self.stack.method.supports_shard_exec() {
+        let algo = if self.threads > 0 && self.tower_supports_shard_exec() {
             "sharded"
         } else {
             "classic"
         };
+        // A uniform stack keeps the exact historical fingerprint string;
+        // only heterogeneous towers append their block list, so old
+        // checkpoints stay resumable.
+        let blocks = match &self.block_methods {
+            Some(ms) => format!(
+                ";blocks={}",
+                ms.iter().map(|m| m.label()).collect::<Vec<_>>().join("+")
+            ),
+            None => String::new(),
+        };
         format!(
             "v1;algo={algo};d={};depth={};vocab={};ctx={};method={};mseed={};\
-             optim={:?};lr={:08x};batch={};seed={};corpus={};eval={}x{}",
+             optim={:?};lr={:08x};batch={};seed={};corpus={};eval={}x{}{blocks}",
             self.stack.d,
             self.stack.depth,
             self.stack.vocab,
@@ -218,7 +244,7 @@ impl NativeTrainer {
         // Decide on data-parallel mode BEFORE building anything: a method
         // without shard support (fft/rfft circulant backends) falls back
         // to the classic serial step without ever spawning pool workers.
-        let parallel = cfg.threads > 0 && cfg.stack.method.supports_shard_exec();
+        let parallel = cfg.threads > 0 && cfg.tower_supports_shard_exec();
         let (stack, exec) = if parallel {
             // One ExecCtx governs the whole run: the blocks' engine
             // dispatch and the trainer's shard fan-out share its pool;
@@ -226,9 +252,19 @@ impl NativeTrainer {
             let exec = ExecCtx::with_threads(cfg.threads)
                 .with_category(Category::Gradients)
                 .with_faults(cfg.faults.clone());
-            (SpectralStack::with_exec(cfg.stack.clone(), exec.clone()), Some(exec))
+            let stack = match &cfg.block_methods {
+                Some(ms) => {
+                    SpectralStack::new_mixed_with_exec(cfg.stack.clone(), ms, exec.clone())
+                }
+                None => SpectralStack::with_exec(cfg.stack.clone(), exec.clone()),
+            };
+            (stack, Some(exec))
         } else {
-            (SpectralStack::new(cfg.stack.clone()), None)
+            let stack = match &cfg.block_methods {
+                Some(ms) => SpectralStack::new_mixed(cfg.stack.clone(), ms),
+                None => SpectralStack::new(cfg.stack.clone()),
+            };
+            (stack, None)
         };
         let arena =
             exec.as_ref().map(|e| ShardArena::new(&stack, e.scratch_category()));
@@ -269,7 +305,13 @@ impl NativeTrainer {
     pub fn run(&mut self) -> Result<NativeReport> {
         let cfg = self.cfg.clone();
         let ctx = cfg.stack.ctx;
-        let method = cfg.stack.method.label();
+        let method = match &cfg.block_methods {
+            Some(ms) => format!(
+                "mixed[{}]",
+                ms.iter().map(|m| m.label()).collect::<Vec<_>>().join("+")
+            ),
+            None => cfg.stack.method.label(),
+        };
         let threads = self.exec.as_ref().map(|e| e.threads()).unwrap_or(0);
         if cfg.verbose {
             println!(
@@ -660,6 +702,43 @@ mod tests {
         assert_eq!(r1.threads, 1);
         assert_eq!(r1.losses, r2.losses, "loss curves must be bit-identical");
         assert_eq!(r1.final_loss.to_bits(), r2.final_loss.to_bits());
+    }
+
+    #[test]
+    fn mixed_tower_trains_sharded_and_uniform_fingerprint_is_unchanged() {
+        // Uniform stacks must keep the exact historical fingerprint (no
+        // ";blocks=" suffix), or every old checkpoint stops resuming.
+        let uniform = NativeTrainerConfig {
+            stack: small_stack(Method::Circulant { backend: Backend::RdFft, p: 8 }),
+            ..Default::default()
+        };
+        assert!(!uniform.fingerprint().contains(";blocks="));
+        // The --layer mixed tower: circulant blocks + a long-conv top
+        // block, trained data-parallel (every block has shard hooks).
+        let cfg = NativeTrainerConfig {
+            stack: StackConfig { d: 32, depth: 3, ctx: 4, seed: 1, ..Default::default() },
+            block_methods: Some(vec![
+                Method::Circulant { backend: Backend::RdFft, p: 8 },
+                Method::Circulant { backend: Backend::RdFft, p: 8 },
+                Method::LongConv { k: 9 },
+            ]),
+            steps: 20,
+            batch: 8,
+            eval_every: 0,
+            eval_batches: 0,
+            corpus_bytes: 16 * 1024,
+            verbose: false,
+            threads: 2,
+            ..Default::default()
+        };
+        let fp = cfg.fingerprint();
+        assert!(fp.contains(";blocks=") && fp.contains("longconv_k=9"), "{fp}");
+        assert!(fp.contains("algo=sharded"), "{fp}");
+        let mut t = NativeTrainer::new(cfg);
+        let r = t.run().unwrap();
+        assert_eq!(r.threads, 2, "a long-conv block must not break shard support");
+        assert_eq!(r.losses.len(), 20);
+        assert!(r.loss_decreased(), "mixed tower loss must trend down");
     }
 
     #[test]

@@ -87,7 +87,10 @@ fn usage() -> ! {
                     [--ckpt FILE] [--eval-every N=50] [--seed S=0]\n\
            train-native  pure-Rust training on the in-place engine (no PJRT)\n\
                     [--steps N=150] [--d D=64] [--depth K=2] [--ctx C=8]\n\
-                    [--batch B=16] [--p P=16] [--method circulant|dense|lora]\n\
+                    [--batch B=16] [--p P=16]\n\
+                    [--method circulant|dense|lora|longconv|mixed]  (--layer\n\
+                    is an alias; longconv takes [--k TAPS=16] trainable\n\
+                    filter taps; mixed = circulant blocks + longconv top)\n\
                     [--backend ours|fft|rfft] [--optim sgd|momentum|adam]\n\
                     [--lr F] [--csv FILE] [--seed S=0] [--eval-every N=25]\n\
                     [--threads T]  data-parallel step on a persistent\n\
@@ -133,8 +136,9 @@ fn usage() -> ! {
                     partial window, 'quit' closes)\n\
                     [--addr A=127.0.0.1:4915] [--window W=1] [--threads T]\n\
                     [--d D=64] [--depth K=2] [--p P=16] [--ctx C=8]\n\
-                    [--seed S=0]  (W>1 needs pipelined clients; responses\n\
-                    are bit-identical for any W / T / arrival order)\n\
+                    [--layer circulant|longconv] [--k TAPS=16] [--seed S=0]\n\
+                    (W>1 needs pipelined clients; responses are\n\
+                    bit-identical for any W / T / arrival order)\n\
            slam     serving load generator + acceptance gates: coalesced\n\
                     window=W vs single-row throughput, p50/p99 latency,\n\
                     arrival-order + thread-count determinism, and the\n\
@@ -182,17 +186,43 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     };
     let d = args.get_num("d", 64)?;
     let p = args.get_num("p", 16)?;
-    let method = match args.get("method").unwrap_or("circulant") {
-        "circulant" => Method::Circulant { backend, p },
+    let depth = args.get_num("depth", 2)?;
+    // --layer is an alias for --method (the long-conv docs say "--layer
+    // longconv"; both spellings select the block type).
+    let layer = args.get("layer").or_else(|| args.get("method")).unwrap_or("circulant");
+    let method = match layer {
+        // "mixed" trains a heterogeneous tower (circulant blocks + a
+        // long-conv top block); the base method below only fills
+        // StackConfig.method and is overridden per block.
+        "circulant" | "mixed" => Method::Circulant { backend, p },
         "dense" | "full" => Method::FullFinetune,
         "lora" => Method::Lora { rank: args.get_num("rank", 8)? },
-        other => bail!("unknown method {other:?} (circulant|dense|lora)"),
+        "longconv" => Method::LongConv { k: args.get_num("k", 16)? },
+        other => bail!("unknown method {other:?} (circulant|dense|lora|longconv|mixed)"),
     };
-    if let Method::Circulant { p, .. } = method {
-        if d % p != 0 {
+    match method {
+        Method::Circulant { p, .. } if d % p != 0 => {
             bail!("--d {d} must be a multiple of --p {p}");
         }
+        Method::LongConv { k } if k == 0 || k > d => {
+            bail!("--k {k} must be in 1..=d (d={d})");
+        }
+        _ => {}
     }
+    let block_methods = if layer == "mixed" {
+        if depth == 0 {
+            bail!("--layer mixed needs --depth >= 1");
+        }
+        let k = args.get_num("k", 16)?;
+        if k == 0 || k > d {
+            bail!("--k {k} must be in 1..=d (d={d})");
+        }
+        let mut ms = vec![Method::Circulant { backend, p }; depth - 1];
+        ms.push(Method::LongConv { k });
+        Some(ms)
+    } else {
+        None
+    };
     let (optim, default_lr) = match args.get("optim").unwrap_or("sgd") {
         "sgd" => (OptimKind::Sgd, 0.2),
         "momentum" => (OptimKind::Momentum { beta: 0.9 }, 0.05),
@@ -228,12 +258,13 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     let cfg = NativeTrainerConfig {
         stack: StackConfig {
             d,
-            depth: args.get_num("depth", 2)?,
+            depth,
             ctx: args.get_num("ctx", 8)?,
             method,
             seed,
             ..Default::default()
         },
+        block_methods,
         optim,
         lr,
         steps: args.get_num("steps", 150)?,
@@ -536,17 +567,30 @@ fn cmd_audit(args: &Args) -> Result<()> {
 /// any number of clients share one deterministic batcher.
 fn cmd_serve(args: &Args) -> Result<()> {
     let d = args.get_num("d", 64)?;
-    let p = args.get_num("p", 16)?;
-    if d % p != 0 {
-        bail!("--d {d} must be a multiple of --p {p}");
-    }
+    let method = match args.get("layer").or_else(|| args.get("method")).unwrap_or("circulant") {
+        "circulant" => {
+            let p = args.get_num("p", 16)?;
+            if d % p != 0 {
+                bail!("--d {d} must be a multiple of --p {p}");
+            }
+            Method::Circulant { backend: Backend::RdFft, p }
+        }
+        "longconv" => {
+            let k = args.get_num("k", 16)?;
+            if k == 0 || k > d {
+                bail!("--k {k} must be in 1..=d (d={d})");
+            }
+            Method::LongConv { k }
+        }
+        other => bail!("unknown serve layer {other:?} (circulant|longconv)"),
+    };
     let window = args.get_num("window", 1)?;
     let threads = args.get_num("threads", 0)?;
     let cfg = StackConfig {
         d,
         depth: args.get_num("depth", 2)?,
         ctx: args.get_num("ctx", 8)?,
-        method: Method::Circulant { backend: Backend::RdFft, p },
+        method,
         seed: args.get_num("seed", 0)? as u64,
         ..Default::default()
     };

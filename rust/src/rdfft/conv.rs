@@ -6,8 +6,24 @@
 //! * [`linear_convolve`] — zero-padded full linear convolution.
 //! * [`OverlapAdd`] — streaming linear convolution with a fixed FIR
 //!   filter: O(log p) per sample, constant memory, suitable for
-//!   arbitrarily long streams. All FFT work is in-place in reused
-//!   buffers; steady-state processing performs **zero** allocations.
+//!   arbitrarily long streams.
+//!
+//! **Allocation contract, per entry point.** The FFT work itself is
+//! always in-place, but convenience wrappers allocate staging buffers;
+//! callers on a zero-allocation budget must pick the right variant:
+//!
+//! * Allocation-free on every call (given caller buffers):
+//!   [`circular_convolve_with_spectrum`],
+//!   [`circular_convolve_inplace_with_scratch`],
+//!   [`linear_convolve_batch_with_scratch`], and
+//!   [`OverlapAdd::process`]/[`OverlapAdd::finish`] after construction
+//!   (the steady-state guarantee the alloc-count tests pin).
+//! * Allocate per call (scratch and/or output): [`circular_convolve_inplace`]
+//!   (a spectrum copy of `b`), [`linear_convolve`] (two padded buffers,
+//!   one of which becomes the returned output), and
+//!   [`linear_convolve_batch`] (filter spectrum + padded row buffer +
+//!   output).
+//! * Allocate at construction only: [`OverlapAdd::new`].
 //!
 //! Every path here is a thin composition of engine batch calls, so the
 //! convolutions inherit the SIMD lane dispatch (and `--force-scalar`)
@@ -28,13 +44,36 @@ pub fn circular_convolve_with_spectrum(plan: &Plan, a: &mut [f32], b_spec: &[f32
 }
 
 /// `a := a ⊛ b` (circular convolution) with both operands in the time
-/// domain; `b` is transformed into a scratch copy.
+/// domain; `b` is transformed into a freshly **allocated** scratch copy
+/// per call. Hot paths that already own a scratch buffer should use
+/// [`circular_convolve_inplace_with_scratch`] instead.
 pub fn circular_convolve_inplace(a: &mut [f32], b: &[f32]) {
-    assert_eq!(a.len(), b.len());
-    let plan = cached(a.len());
     let mut b_spec = b.to_vec();
-    rdfft_inplace(&plan, &mut b_spec);
-    circular_convolve_with_spectrum(&plan, a, &b_spec);
+    circular_convolve_inplace_with_scratch(a, b, &mut b_spec);
+}
+
+/// [`circular_convolve_inplace`] without the per-call allocation:
+/// `scratch` (same length as `b`) receives a copy of `b`, is transformed
+/// in place, and ends holding the packed spectrum `b̂` — which the caller
+/// may reuse with [`circular_convolve_with_spectrum`] for further rows.
+/// Allocation-free once the size's plan exists in the process cache.
+pub fn circular_convolve_inplace_with_scratch(a: &mut [f32], b: &[f32], scratch: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(scratch.len(), b.len(), "scratch must match the operand length");
+    let plan = cached(a.len());
+    scratch.copy_from_slice(b);
+    rdfft_inplace(&plan, scratch);
+    circular_convolve_with_spectrum(&plan, a, scratch);
+}
+
+/// The FFT size the linear-convolution paths pad to for a signal of
+/// `x_len` against a filter of `h_len`: the next power of two ≥ the
+/// `x_len + h_len - 1` output (so the circular product aliases nothing).
+/// Callers of [`linear_convolve_batch_with_scratch`] size their buffers
+/// with this.
+pub fn linear_convolve_fft_size(x_len: usize, h_len: usize) -> usize {
+    assert!(x_len > 0 && h_len > 0);
+    (x_len + h_len - 1).next_power_of_two().max(2)
 }
 
 /// Full linear convolution (`len = x.len() + h.len() - 1`) by zero-padding
@@ -42,13 +81,15 @@ pub fn circular_convolve_inplace(a: &mut [f32], b: &[f32]) {
 /// result is longer than either input).
 pub fn linear_convolve(x: &[f32], h: &[f32]) -> Vec<f32> {
     let out_len = x.len() + h.len() - 1;
-    let n = out_len.next_power_of_two().max(2);
+    let n = linear_convolve_fft_size(x.len(), h.len());
     let plan = cached(n);
     let mut xa = vec![0.0f32; n];
     xa[..x.len()].copy_from_slice(x);
     let mut ha = vec![0.0f32; n];
     ha[..h.len()].copy_from_slice(h);
-    rdfft_inplace(&plan, &mut ha);
+    // Size-dispatched (four-step at large n) — see
+    // [`linear_convolve_batch_with_scratch`] on the tier-crossing seam.
+    engine::forward_batch(&plan, &mut ha);
     circular_convolve_with_spectrum(&plan, &mut xa, &ha);
     xa.truncate(out_len);
     xa
@@ -59,7 +100,10 @@ pub fn linear_convolve(x: &[f32], h: &[f32]) -> Vec<f32> {
 /// fused circulant pipeline — one single-sweep pass per row tile instead
 /// of `rows` independent transform pairs or three full batch passes.
 /// Returns the outputs concatenated row-major, each
-/// `x_len + h.len() - 1` long.
+/// `x_len + h.len() - 1` long. Allocates the filter spectrum, the padded
+/// row buffer, and the output per call; steady-state callers should hold
+/// those buffers themselves and use
+/// [`linear_convolve_batch_with_scratch`].
 pub fn linear_convolve_batch(xs: &[f32], rows: usize, h: &[f32]) -> Vec<f32> {
     assert!(rows > 0, "need at least one signal row");
     assert!(xs.len() % rows == 0, "xs must hold `rows` equal-length signals");
@@ -67,21 +111,57 @@ pub fn linear_convolve_batch(xs: &[f32], rows: usize, h: &[f32]) -> Vec<f32> {
     let x_len = xs.len() / rows;
     assert!(x_len > 0, "signal rows must be non-empty");
     let out_len = x_len + h.len() - 1;
-    let n = out_len.next_power_of_two().max(2);
-    let plan = cached(n);
+    let n = linear_convolve_fft_size(x_len, h.len());
     let mut h_spec = vec![0.0f32; n];
-    h_spec[..h.len()].copy_from_slice(h);
-    rdfft_inplace(&plan, &mut h_spec);
     let mut buf = vec![0.0f32; rows * n];
-    for (r, x) in xs.chunks_exact(x_len).enumerate() {
-        buf[r * n..r * n + x_len].copy_from_slice(x);
-    }
-    engine::circulant_apply_batch(&plan, &mut buf, &h_spec, SpectralOp::Mul);
+    linear_convolve_batch_with_scratch(xs, rows, h, &mut buf, &mut h_spec);
     let mut out = Vec::with_capacity(rows * out_len);
     for r in 0..rows {
         out.extend_from_slice(&buf[r * n..r * n + out_len]);
     }
     out
+}
+
+/// Zero-allocation core of [`linear_convolve_batch`]: the caller owns
+/// both staging buffers. `h_spec` (length
+/// `n = linear_convolve_fft_size(x_len, h.len())`) receives the
+/// zero-padded filter and ends holding its packed spectrum — reusable
+/// across calls with the same filter by pre-transforming once and
+/// calling [`circular_convolve_with_spectrum`] on a padded buffer
+/// directly. `buf` (length `rows · n`) receives the zero-padded signal
+/// rows and ends holding each row's full circular product; the linear
+/// result is the first `x_len + h.len() - 1` samples of each padded row
+/// (the remainder is the zero-padding tail, ≈ 0 to transform precision).
+/// Allocation-free once the size's plan exists in the process cache —
+/// this is the hot-path shape `LongConvLayer` builds on.
+pub fn linear_convolve_batch_with_scratch(
+    xs: &[f32],
+    rows: usize,
+    h: &[f32],
+    buf: &mut [f32],
+    h_spec: &mut [f32],
+) {
+    assert!(rows > 0, "need at least one signal row");
+    assert!(xs.len() % rows == 0, "xs must hold `rows` equal-length signals");
+    assert!(!h.is_empty());
+    let x_len = xs.len() / rows;
+    assert!(x_len > 0, "signal rows must be non-empty");
+    let n = linear_convolve_fft_size(x_len, h.len());
+    assert_eq!(h_spec.len(), n, "h_spec must be linear_convolve_fft_size long");
+    assert_eq!(buf.len(), rows * n, "buf must hold `rows` padded rows");
+    let plan = cached(n);
+    h_spec[..h.len()].copy_from_slice(h);
+    h_spec[h.len()..].fill(0.0);
+    // Size-dispatched forward for the filter: at n ≥ the engine's
+    // four-step threshold the spectrum is produced by the large-n tier
+    // and then consumed by the direct fused sweep below — the
+    // tier-crossing seam the differential tests pin.
+    engine::forward_batch(&plan, h_spec);
+    for (row, x) in buf.chunks_exact_mut(n).zip(xs.chunks_exact(x_len)) {
+        row[..x_len].copy_from_slice(x);
+        row[x_len..].fill(0.0);
+    }
+    engine::circulant_apply_batch(&plan, buf, h_spec, SpectralOp::Mul);
 }
 
 /// Streaming linear convolution with a fixed filter via overlap-add.
@@ -265,6 +345,145 @@ mod tests {
             ola.process(&x, &mut out);
         }
         assert_eq!(crate::memtrack::snapshot().alloc_count, before);
+    }
+
+    #[test]
+    fn circular_convolve_scratch_variant_matches_and_allocates_nothing() {
+        let n = 64;
+        let a0 = rand_vec(n, 21);
+        let b = rand_vec(n, 22);
+        let mut reference = a0.clone();
+        circular_convolve_inplace(&mut reference, &b);
+        let mut got = a0.clone();
+        let mut scratch = vec![0.0f32; n];
+        circular_convolve_inplace_with_scratch(&mut got, &b, &mut scratch);
+        assert_eq!(got, reference, "scratch variant must be bit-identical");
+        // The scratch ends holding b̂ — reusable with the fused sweep.
+        let plan = cached(n);
+        let mut via_spec = a0.clone();
+        circular_convolve_with_spectrum(&plan, &mut via_spec, &scratch);
+        assert_eq!(via_spec, reference);
+        // Warm (plan cached, buffers owned): the hot path must not touch
+        // the allocator at all.
+        crate::memtrack::reset_peak();
+        let before = crate::memtrack::snapshot().alloc_count;
+        for _ in 0..4 {
+            circular_convolve_inplace_with_scratch(&mut got, &b, &mut scratch);
+        }
+        assert_eq!(crate::memtrack::snapshot().alloc_count, before);
+    }
+
+    #[test]
+    fn batch_scratch_variant_matches_and_allocates_nothing() {
+        let (rows, x_len, h_len) = (4usize, 40usize, 9usize);
+        let h = rand_vec(h_len, 200);
+        let xs = rand_vec(rows * x_len, 201);
+        let reference = linear_convolve_batch(&xs, rows, &h);
+        let n = linear_convolve_fft_size(x_len, h_len);
+        let out_len = x_len + h_len - 1;
+        let mut buf = vec![0.0f32; rows * n];
+        let mut h_spec = vec![0.0f32; n];
+        linear_convolve_batch_with_scratch(&xs, rows, &h, &mut buf, &mut h_spec);
+        for r in 0..rows {
+            for i in 0..out_len {
+                assert_eq!(
+                    buf[r * n + i],
+                    reference[r * out_len + i],
+                    "row={r} i={i}: scratch variant must be bit-identical"
+                );
+            }
+        }
+        // Warm: repeated calls with caller-owned buffers allocate nothing.
+        crate::memtrack::reset_peak();
+        let before = crate::memtrack::snapshot().alloc_count;
+        for _ in 0..3 {
+            linear_convolve_batch_with_scratch(&xs, rows, &h, &mut buf, &mut h_spec);
+        }
+        assert_eq!(crate::memtrack::snapshot().alloc_count, before);
+    }
+
+    #[test]
+    fn fft_size_helper_matches_padding_rule() {
+        assert_eq!(linear_convolve_fft_size(1, 1), 2);
+        assert_eq!(linear_convolve_fft_size(10, 4), 16);
+        assert_eq!(linear_convolve_fft_size(33, 33), 128);
+        assert_eq!(linear_convolve_fft_size(16_000, 400), 32_768);
+    }
+
+    #[test]
+    fn tier_crossing_linear_convolution_matches_naive() {
+        // The four-step-produced spectrum consumed by the direct fused
+        // sweep: at n ≥ the default 16 Ki threshold the filter forward
+        // runs the large-n tier while the row sweep stays on the direct
+        // fused kernels. Differential vs the O(n²) oracle at sizes
+        // straddling the threshold, with n-scaled tolerances, plus a
+        // tier-count assertion that the crossing actually happened (the
+        // engaged-tier telemetry this PR adds).
+        use crate::rdfft::engine::tier_counts;
+        for (x_len, h_len) in [(8_000usize, 100usize), (16_000, 400)] {
+            let n = linear_convolve_fft_size(x_len, h_len);
+            let x = rand_vec(x_len, x_len as u64);
+            let h = rand_vec(h_len, h_len as u64 + 3);
+            let t0 = tier_counts();
+            let got = linear_convolve(&x, &h);
+            let d = tier_counts().since(t0);
+            if n >= 16_384 {
+                assert!(d.fourstep >= 1, "n={n}: filter forward must engage four-step");
+            } else {
+                assert_eq!(d.fourstep, 0, "n={n}: below threshold must stay direct");
+            }
+            assert_eq!(d.fallback, 0, "n={n}: no silent fallback on this path");
+            let want = naive_linear(&x, &h);
+            assert_eq!(got.len(), want.len());
+            // Absolute error scales with the intermediate spectral
+            // magnitudes (~ sqrt(n·h_len) for unit-variance inputs).
+            let tol = 2e-5 * (n as f32).sqrt() * (h_len as f32).sqrt();
+            for i in 0..want.len() {
+                assert!(
+                    (got[i] - want[i]).abs() <= tol * (1.0 + want[i].abs()),
+                    "({x_len},{h_len}) i={i}: {} vs {} (tol {tol})",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tier_crossing_spectrum_agrees_with_direct_pinned_leg() {
+        // Same convolution computed twice at a four-step-sized n: once
+        // with the default size dispatch (large-n tier builds the filter
+        // spectrum) and once with the tier pinned off. The direct fused
+        // sweep consumes both spectra; outputs must agree to the
+        // tier-drift tolerance (fused twiddle product, ~1 ulp/late
+        // stage), far tighter than the naive-oracle bound.
+        use crate::rdfft::engine::{self as eng, EngineConfig, SpectralOp};
+        let (x_len, h_len) = (16_000usize, 400usize);
+        let n = linear_convolve_fft_size(x_len, h_len);
+        assert!(n >= 16_384, "case must sit on the four-step leg");
+        let x = rand_vec(x_len, 77);
+        let h = rand_vec(h_len, 78);
+        let plan = cached(n);
+        let direct_cfg = EngineConfig { fourstep_threshold: usize::MAX, ..EngineConfig::new() };
+
+        let fourstep_leg = linear_convolve(&x, &h);
+
+        let mut h_spec = vec![0.0f32; n];
+        h_spec[..h_len].copy_from_slice(&h);
+        eng::forward_batch_with(&plan, &mut h_spec, &direct_cfg);
+        let mut buf = vec![0.0f32; n];
+        buf[..x_len].copy_from_slice(&x);
+        eng::circulant_apply_batch(&plan, &mut buf, &h_spec, SpectralOp::Mul);
+
+        let tol = 1e-5 * (n as f32).sqrt() * (h_len as f32).sqrt();
+        for i in 0..x_len + h_len - 1 {
+            assert!(
+                (fourstep_leg[i] - buf[i]).abs() <= tol * (1.0 + buf[i].abs()),
+                "i={i}: four-step leg {} vs direct leg {}",
+                fourstep_leg[i],
+                buf[i]
+            );
+        }
     }
 
     #[test]

@@ -217,24 +217,127 @@ pub fn inverse_batch_scoped(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig) {
     run_transform(plan, buf, cfg, Dispatch::Scoped, false);
 }
 
+/// Which execution tier a size-dispatched transform actually ran —
+/// the answer to "did the bench row measure what its label claims?".
+/// The silent-fallback bug this fixes: `run_transform` used to route to
+/// the direct sweep with no signal when `n ≥ cfg.fourstep_threshold`
+/// but the plan cannot carry tables (`n < FOURSTEP_MIN_N`), so a bench
+/// grid pinning `fourstep_threshold: 1` at small n would time
+/// direct-vs-direct and report it as a four-step speedup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Four-step (Bailey) large-n path: threshold met, tables engaged.
+    FourStep,
+    /// Direct tile sweep: `n < cfg.fourstep_threshold` (the intended
+    /// small-n route).
+    Direct,
+    /// Direct tile sweep reached as a **fallback**: the threshold asked
+    /// for four-step but `n < FOURSTEP_MIN_N` has no factorization, so
+    /// the call cannot engage the tier it was configured for.
+    DirectFallback,
+}
+
+impl Tier {
+    /// Stable label for bench rows / JSON (`"fourstep"`, `"direct"`,
+    /// `"direct_fallback"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::FourStep => "fourstep",
+            Tier::Direct => "direct",
+            Tier::DirectFallback => "direct_fallback",
+        }
+    }
+}
+
+/// Per-thread tally of which tiers [`run_transform`] dispatched.
+/// Thread-local on purpose: the counters exist so a *measuring* caller
+/// (bench cell, smoke check, test) can assert what ran on its own
+/// thread, without cross-test races or atomic traffic on the hot path.
+/// Note the tier decision happens on the submitting thread before any
+/// pool fan-out, so the submitting thread's tally sees every dispatch
+/// it caused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TierCounts {
+    /// Transforms that ran the four-step tier.
+    pub fourstep: usize,
+    /// Transforms that ran the direct sweep by size choice.
+    pub direct: usize,
+    /// Transforms that *asked* for four-step but fell back to direct.
+    pub fallback: usize,
+}
+
+impl TierCounts {
+    /// Counts accumulated since an `earlier` snapshot.
+    pub fn since(self, earlier: TierCounts) -> TierCounts {
+        TierCounts {
+            fourstep: self.fourstep - earlier.fourstep,
+            direct: self.direct - earlier.direct,
+            fallback: self.fallback - earlier.fallback,
+        }
+    }
+}
+
+thread_local! {
+    static TIERS: std::cell::Cell<TierCounts> = const { std::cell::Cell::new(TierCounts {
+        fourstep: 0,
+        direct: 0,
+        fallback: 0,
+    }) };
+}
+
+/// Snapshot of this thread's tier dispatch tally (monotonic; diff two
+/// snapshots with [`TierCounts::since`] to attribute a measured region).
+pub fn tier_counts() -> TierCounts {
+    TIERS.with(|t| t.get())
+}
+
+#[inline]
+fn note_tier(tier: Tier) {
+    TIERS.with(|t| {
+        let mut c = t.get();
+        match tier {
+            Tier::FourStep => c.fourstep += 1,
+            Tier::Direct => c.direct += 1,
+            Tier::DirectFallback => c.fallback += 1,
+        }
+        t.set(c);
+    });
+}
+
 /// Size-dispatched transform behind every plain batch entry point: the
 /// four-step (Bailey) tier when `n ≥ cfg.fourstep_threshold` and the
-/// plan carries factorization tables, the direct tile sweep otherwise.
+/// plan can carry factorization tables (materialized lazily on this
+/// first dispatch), the direct tile sweep otherwise. Returns — and
+/// tallies, per thread — the [`Tier`] that actually ran, so measuring
+/// callers can detect the threshold-met-but-no-tables fallback instead
+/// of silently timing the wrong kernel.
 /// The fused circulant/block sweeps stay on the direct kernels — they
 /// operate *on* the packed spectra both tiers produce, so the large-n
 /// tier composes with them unchanged.
-fn run_transform(plan: &Plan, buf: &mut [f32], cfg: &EngineConfig, disp: Dispatch<'_>, forward: bool) {
-    if plan.n() >= cfg.fourstep_threshold {
-        if let Some(fs) = plan.fourstep() {
+fn run_transform(
+    plan: &Plan,
+    buf: &mut [f32],
+    cfg: &EngineConfig,
+    disp: Dispatch<'_>,
+    forward: bool,
+) -> Tier {
+    let tier = if plan.n() >= cfg.fourstep_threshold {
+        if let Some(fs) = plan.fourstep_lazy() {
             super::fourstep::run_fourstep(plan, fs, buf, cfg, disp, forward);
-            return;
+            note_tier(Tier::FourStep);
+            return Tier::FourStep;
         }
-    }
+        Tier::DirectFallback
+    } else {
+        Tier::Direct
+    };
     if forward {
         run_batch(plan, buf, cfg, disp, forward_rows_with);
     } else {
         run_batch(plan, buf, cfg, disp, inverse_rows_with);
     }
+    note_tier(tier);
+    tier
 }
 
 // ---------------------------------------------------------------------
@@ -1596,5 +1699,47 @@ mod tests {
         let mut again = x.clone();
         forward_batch_ctx(&plan, &mut again, &ctx4);
         assert_eq!(lanes4, again, "repeat run must be bit-identical");
+    }
+
+    #[test]
+    fn tier_counters_distinguish_fallback_from_fourstep() {
+        use super::super::plan::Plan;
+        // Regression for the silent-mismeasure bug: with
+        // `fourstep_threshold: 1`, a small-n transform *asks* for the
+        // four-step tier but no plan below FOURSTEP_MIN_N can carry
+        // tables — the direct sweep runs, and the tally must record a
+        // FALLBACK (not a clean direct dispatch) so bench cells labelled
+        // "fourstep" can hard-fail instead of timing direct-vs-direct.
+        // Thread-local counters + private plans keep the exact-count
+        // asserts safe under the parallel test runner.
+        let four_cfg = EngineConfig { fourstep_threshold: 1, ..EngineConfig::new() };
+        let small = Plan::new(64);
+        let mut buf = rand_vec(64 * 2, 11);
+        let t0 = tier_counts();
+        forward_batch_with(&small, &mut buf, &four_cfg);
+        let d = tier_counts().since(t0);
+        assert_eq!((d.fourstep, d.direct, d.fallback), (0, 0, 1), "small-n must tally a fallback");
+
+        // n = 1024 under the same config: the tier genuinely engages
+        // (and materializes the lazy tables on this first dispatch).
+        let big = Plan::new(1024);
+        let mut buf = rand_vec(1024 * 2, 12);
+        assert!(big.fourstep().is_none());
+        let t0 = tier_counts();
+        forward_batch_with(&big, &mut buf, &four_cfg);
+        let d = tier_counts().since(t0);
+        assert_eq!((d.fourstep, d.direct, d.fallback), (1, 0, 0), "large-n must tally four-step");
+        assert!(big.fourstep().is_some(), "first four-step dispatch materializes tables");
+
+        // Default config at n = 1024 (< 16 Ki threshold): the intended
+        // direct route — a size choice, not a fallback.
+        let t0 = tier_counts();
+        inverse_batch(&big, &mut buf);
+        let d = tier_counts().since(t0);
+        assert_eq!((d.fourstep, d.direct, d.fallback), (0, 1, 0), "default small-n is direct");
+
+        assert_eq!(Tier::FourStep.name(), "fourstep");
+        assert_eq!(Tier::Direct.name(), "direct");
+        assert_eq!(Tier::DirectFallback.name(), "direct_fallback");
     }
 }

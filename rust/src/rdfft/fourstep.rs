@@ -590,7 +590,7 @@ mod tests {
         // from the direct path (~1 ulp per late stage).
         for n in [1024usize, 2048] {
             let plan = cached(n);
-            assert!(plan.fourstep().is_some());
+            assert!(plan.fourstep_lazy().is_some());
             let x = rand_rows(n, 3, 0xF0F0 + n as u64);
             let mut four = x.clone();
             engine::forward_batch_with(&plan, &mut four, &four_cfg());

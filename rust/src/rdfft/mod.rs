@@ -59,8 +59,8 @@ pub use circulant::{BlockCirculant, Circulant};
 pub use engine::{
     block_circulant_forward_batch, block_circulant_forward_residual_batch,
     block_circulant_transpose_batch, circulant_apply_batch, circulant_apply_batch_ctx,
-    forward_batch, forward_batch_ctx, inverse_batch, inverse_batch_ctx, EngineConfig,
-    SpectralOp,
+    forward_batch, forward_batch_ctx, inverse_batch, inverse_batch_ctx, tier_counts,
+    EngineConfig, SpectralOp, Tier, TierCounts,
 };
 pub use simd::Kernels;
 pub use forward::{rdfft_batch, rdfft_inplace};

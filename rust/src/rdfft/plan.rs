@@ -13,8 +13,10 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
-/// Smallest `n` for which a plan also carries four-step (Bailey)
-/// factorization tables. Deliberately far below the engine's default
+/// Smallest `n` for which a plan *can* carry four-step (Bailey)
+/// factorization tables ([`Plan::fourstep_lazy`] materializes them on
+/// the first four-step dispatch; plans that only ever run the direct
+/// tier never pay for them). Deliberately far below the engine's default
 /// dispatch threshold (`EngineConfig::fourstep_threshold`, ~16k) so
 /// tests can exercise the four-step path at cheap sizes by lowering the
 /// config knob; the tables for a 1k plan cost ~n·8 bytes — noise next to
@@ -181,10 +183,15 @@ pub struct Plan {
     /// Per-stage base offsets into the `lane_*` arrays (stage `s` has
     /// half-block `m = 2^s`); every entry is a multiple of the lane width.
     lane_off: Vec<usize>,
-    /// Four-step factorization tables, built for `n ≥ FOURSTEP_MIN_N`
-    /// (whether the engine *uses* them is the `EngineConfig` threshold's
-    /// call at dispatch time).
-    fourstep: Option<FourStep>,
+    /// Four-step factorization tables, materialized **lazily** on the
+    /// first four-step dispatch (via [`Self::fourstep_lazy`]) and only
+    /// for `n ≥ FOURSTEP_MIN_N`. Eager construction used to charge every
+    /// cached plan at `n ∈ [1 Ki, 16 Ki)` permanent `heap_bytes` for
+    /// tables the default dispatch threshold never runs — a real cost in
+    /// a memory-efficiency repro. `OnceLock` keeps materialization
+    /// race-free across pool workers and `heap_bytes` accurate on both
+    /// sides of the transition.
+    fourstep: OnceLock<FourStep>,
 }
 
 impl Plan {
@@ -239,8 +246,6 @@ impl Plan {
             }
         }
 
-        let fourstep = (n >= FOURSTEP_MIN_N).then(|| FourStep::new(n, log2n));
-
         Plan {
             n,
             log2n,
@@ -254,14 +259,32 @@ impl Plan {
             lane_inv_wr,
             lane_inv_wi,
             lane_off,
-            fourstep,
+            fourstep: OnceLock::new(),
         }
     }
 
-    /// Four-step factorization tables — `Some` for `n ≥ FOURSTEP_MIN_N`.
+    /// Four-step factorization tables — `Some` only once they have been
+    /// materialized by a four-step dispatch ([`Self::fourstep_lazy`]).
+    /// Observational: never triggers construction, so `heap_bytes`
+    /// callers and tests can probe the current state without paying
+    /// for tables.
     #[inline]
     pub fn fourstep(&self) -> Option<&FourStep> {
-        self.fourstep.as_ref()
+        self.fourstep.get()
+    }
+
+    /// Four-step factorization tables, materializing them on first use —
+    /// `Some` for `n ≥ FOURSTEP_MIN_N`, `None` below (the caller must
+    /// fall back to the direct sweep). Concurrent first dispatches race
+    /// benignly: `OnceLock` keeps exactly one table set and the losers'
+    /// work is dropped before publication.
+    #[inline]
+    pub fn fourstep_lazy(&self) -> Option<&FourStep> {
+        if self.n >= FOURSTEP_MIN_N {
+            Some(self.fourstep.get_or_init(|| FourStep::new(self.n, self.log2n)))
+        } else {
+            None
+        }
     }
 
     /// Transform size.
@@ -367,7 +390,9 @@ impl Plan {
     /// Heap bytes consumed by this plan (reported in DESIGN.md's VMEM /
     /// constant-memory estimates; not counted against transform memory).
     /// Includes the four-step factorization tables and their shared `n2`
-    /// sub-plan when present. The four-step *transpose tiles* are not
+    /// sub-plan once a four-step dispatch has materialized them (zero
+    /// before that — lazy tables must not inflate warm plans that only
+    /// ever run the direct tier). The four-step *transpose tiles* are not
     /// here — they are per-worker thread-local scratch
     /// (`fourstep::tile_floats(n1)` f32s per pool thread, grown once on
     /// first large-n use and reused ever after), accounted by the
@@ -384,7 +409,7 @@ impl Plan {
                 + self.lane_inv_wi.len())
                 * 4
             + self.lane_off.len() * 8
-            + self.fourstep.as_ref().map_or(0, FourStep::heap_bytes)
+            + self.fourstep.get().map_or(0, FourStep::heap_bytes)
     }
 }
 
@@ -602,14 +627,54 @@ mod tests {
 
     #[test]
     fn fourstep_tables_built_exactly_from_min_n() {
+        // Below the minimum even a forced materialization yields nothing.
+        assert!(Plan::new(512).fourstep_lazy().is_none());
         assert!(Plan::new(512).fourstep().is_none());
         let plan = Plan::new(FOURSTEP_MIN_N);
-        let fs = plan.fourstep().expect("1024 carries fourstep tables");
+        // Lazy contract: construction alone carries no tables...
+        assert!(plan.fourstep().is_none(), "plans must not build tables eagerly");
+        // ...the first four-step dispatch materializes them...
+        let fs = plan.fourstep_lazy().expect("1024 can carry fourstep tables");
         assert_eq!(fs.n1() * fs.n2(), 1024);
         assert!(fs.n2() >= fs.n1());
         assert_eq!(fs.sub().n(), fs.n2());
         assert_eq!(fs.stages(), fs.n1().trailing_zeros() as usize);
+        // ...and afterwards the observational accessor sees them too.
+        assert!(plan.fourstep().is_some());
         assert!(plan.heap_bytes() > Plan::new(512).heap_bytes());
+    }
+
+    #[test]
+    fn warm_plan_carries_no_fourstep_bytes_until_dispatch() {
+        // Regression (memory contract): a warm n=4096 plan — above
+        // FOURSTEP_MIN_N, below the default 16 Ki dispatch threshold —
+        // must carry zero four-step bytes after arbitrary direct-tier
+        // use, and materialization must grow heap_bytes by exactly the
+        // table cost. Built privately (not via `cached`) so concurrent
+        // tests lowering the threshold on the shared cache cannot
+        // materialize the tables behind our back.
+        let plan = Plan::new(4096);
+        let lean = plan.heap_bytes();
+        // Warm the plan on the direct tier (default config: 4096 < 16 Ki).
+        let mut buf = vec![0.25f32; 2 * 4096];
+        crate::rdfft::engine::forward_batch(&plan, &mut buf);
+        crate::rdfft::engine::inverse_batch(&plan, &mut buf);
+        assert!(plan.fourstep().is_none(), "direct-tier use must not materialize tables");
+        assert_eq!(plan.heap_bytes(), lean, "warm plan gained four-step bytes");
+        // Transforms on a warm plan stay allocation-free — the lazy
+        // tables must not smuggle a per-call cost into the hot path.
+        crate::memtrack::reset_peak();
+        let before = crate::memtrack::snapshot().alloc_count;
+        crate::rdfft::engine::forward_batch(&plan, &mut buf);
+        crate::rdfft::engine::inverse_batch(&plan, &mut buf);
+        assert_eq!(crate::memtrack::snapshot().alloc_count, before);
+        // First four-step dispatch pays exactly the table cost, once.
+        let fs_bytes = plan.fourstep_lazy().expect("4096 >= FOURSTEP_MIN_N").heap_bytes();
+        assert!(fs_bytes > 0);
+        assert_eq!(plan.heap_bytes(), lean + fs_bytes);
+        // Re-dispatch is a no-op on the accounting.
+        let _ = plan.fourstep_lazy();
+        assert_eq!(plan.heap_bytes(), lean + fs_bytes);
     }
 
     #[test]
@@ -617,7 +682,7 @@ mod tests {
         // A_t[q]·B_t[r] must reproduce W_{2m}^{q·n2+r} for m = n2·2^t to
         // within the one extra f32 product rounding.
         let plan = Plan::new(2048);
-        let fs = plan.fourstep().unwrap();
+        let fs = plan.fourstep_lazy().unwrap();
         let (n1, n2) = (fs.n1(), fs.n2());
         assert_eq!((n1, n2), (32, 64));
         for t in 0..fs.stages() {
@@ -648,7 +713,7 @@ mod tests {
     #[test]
     fn fourstep_inner_inv_is_prehalved_inner() {
         let plan = Plan::new(FOURSTEP_MIN_N);
-        let fs = plan.fourstep().unwrap();
+        let fs = plan.fourstep_lazy().unwrap();
         for t in 0..fs.stages() {
             let inner = fs.stage_inner(t);
             let inv = fs.stage_inner_inv(t);

@@ -238,7 +238,7 @@ fn large_n_fourstep_and_direct_tiers_match_golden() {
         }
         saw += 1;
         let plan = cached(g.n);
-        assert!(plan.fourstep().is_some(), "n={} must carry tables", g.n);
+        assert!(plan.fourstep_lazy().is_some(), "n={} must carry tables", g.n);
 
         let mut four = g.input.clone();
         engine::forward_batch_with(&plan, &mut four, &EngineConfig::new());

@@ -6,8 +6,8 @@
 //! replica-free and side-effect-local, and gradients/losses combine via
 //! a deterministic fixed-order tree reduction. `--threads 4` must
 //! reproduce `--threads 1` exactly, bit for bit, on a heterogeneous
-//! 3-layer stack (Dense + LoRA + rdFFT circulant); and the sharded path
-//! must agree with the classic serial step to float noise.
+//! 4-layer stack (Dense + LoRA + rdFFT circulant + long-conv); and the
+//! sharded path must agree with the classic serial step to float noise.
 //!
 //! With the SIMD lane kernels these runs exercise the auto-dispatched
 //! arm (AVX2+FMA where detected): the bitwise-at-any-thread-count
@@ -23,17 +23,21 @@ use rdfft::autograd::train::Method;
 use rdfft::memtrack::{self, Category};
 use rdfft::runtime::pool::ExecCtx;
 
-/// The satellite's heterogeneous tower: Dense + LoRA + rdFFT circulant.
-fn mixed_methods() -> [Method; 3] {
+/// The heterogeneous tower: Dense + LoRA + rdFFT circulant + long-conv.
+/// The long-conv block runs its whole forward/backward in the frequency
+/// domain (shard spectra summed before one inverse), so its presence
+/// here makes the bitwise-at-any-thread-count contract cover that path.
+fn mixed_methods() -> [Method; 4] {
     [
         Method::FullFinetune,
         Method::Lora { rank: 4 },
         Method::Circulant { backend: Backend::RdFft, p: 8 },
+        Method::LongConv { k: 9 },
     ]
 }
 
 fn mixed_cfg() -> StackConfig {
-    StackConfig { d: 32, depth: 3, ctx: 4, seed: 9, ..Default::default() }
+    StackConfig { d: 32, depth: 4, ctx: 4, seed: 9, ..Default::default() }
 }
 
 fn batch(b: usize, ctx: usize, seed: u64) -> (Vec<u8>, Vec<usize>) {

@@ -49,6 +49,16 @@ cargo test -q
   --steps 20 --d 64 --depth 2 --p 16 --batch 8 --eval-every 10 \
   --threads 2 --max-peak-mib 8
 
+# Long-conv smoke: the same 20-step gate on the heterogeneous tower
+# (--layer mixed = circulant blocks + a long-conv top block), sharded,
+# with the same loss-trend gate and a fixed memory budget. The long-conv
+# block's kernel spectrum is FFT'd once per step and applied per row by
+# the fused sweep — this run is the end-to-end proof that the layer
+# trains inside the full stack, not just in unit tests.
+"$REPRO" train-native \
+  --steps 20 --d 64 --depth 2 --layer mixed --p 16 --k 16 --batch 8 \
+  --eval-every 10 --threads 2 --max-peak-mib 8
+
 # Crash-safety smoke: train → kill (abort / torn checkpoint write /
 # worker-pool panic) → resume, asserting the resumed loss and parameter
 # trajectories are bit-identical to an uninterrupted run, that torn and
@@ -67,10 +77,13 @@ cargo test -q
 # Engine grid: writes BENCH_rdfft.json (schema bench_rdfft/v3 —
 # fused/unfused circulant rows, the pool thread grid, the batch_simd /
 # circulant_fused_simd rows with the simd_vs_scalar gate, the
-# batch_simd8-vs-batch_simd4 width-tier pair, and the
+# batch_simd8-vs-batch_simd4 width-tier pair, the longconv_fused /
+# longconv_unfused pair with the longconv_fused_vs_unfused gate, and the
 # batch_fourstep-vs-batch_direct large-n grid with the fourstep_vs_direct
-# gate) and exits non-zero if a hard gate regresses. The workflow uploads
-# the JSON next to the loss-curve CSV.
+# gate plus per-cell fourstep_tier_engaged telemetry gates — a
+# "fourstep" cell that silently ran the direct sweep hard-fails as
+# mismeasured) and exits non-zero if a hard gate regresses. The workflow
+# uploads the JSON next to the loss-curve CSV.
 "$REPRO" engine --fast
 if [[ ! -s BENCH_rdfft.json ]]; then
   echo "ci.sh: ERROR: repro engine did not produce BENCH_rdfft.json" >&2
